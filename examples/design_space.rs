@@ -1,0 +1,10 @@
+//! Design-space exploration: the ablation study behind DESIGN.md's
+//! reconstruction choices plus the Fig 10 PDP-vs-MRED trade-off.
+//!
+//! Run: `cargo run --release --example design_space`
+
+fn main() {
+    print!("{}", sfcmul::tables::ablation_report(42));
+    println!();
+    print!("{}", sfcmul::tables::f10::render(42));
+}

@@ -1,0 +1,53 @@
+//! Quickstart: build the proposed approximate multiplier, multiply some
+//! numbers, inspect its error metrics, compressor statistics and
+//! hardware figures.
+//!
+//! Run: `cargo run --release --example quickstart`
+
+use sfcmul::compressors::{abc1_stats, abcd1_stats};
+use sfcmul::error::error_metrics;
+use sfcmul::hwmodel::raw_hw;
+use sfcmul::multipliers::{build_design, DesignId};
+
+fn main() {
+    // 1. The proposed multiplier as a plain function.
+    let proposed = build_design(DesignId::Proposed, 8);
+    let exact = build_design(DesignId::Exact, 8);
+    println!("a × b: exact vs proposed approximate");
+    for (a, b) in [(13i64, 27), (-100, 90), (127, -128), (7, -7)] {
+        println!(
+            "  {a:>5} × {b:>5} = {:>7} ≈ {:>7}  (err {:+})",
+            exact.multiply(a, b),
+            proposed.multiply(a, b),
+            proposed.multiply(a, b) - exact.multiply(a, b)
+        );
+    }
+
+    // 2. Error metrics over all 65 536 operand pairs (paper Table 4 row).
+    let e = error_metrics(proposed.as_ref());
+    println!(
+        "\nexhaustive error metrics: ER {:.2}%  NMED {:.3}%  MRED {:.2}%  ME {:+.1}",
+        e.er * 100.0,
+        e.nmed * 100.0,
+        e.mred * 100.0,
+        e.me
+    );
+
+    // 3. The sign-focused compressor cells (paper Tables 2/3).
+    let abc1 = abc1_stats(&sfcmul::compressors::proposed::ProposedApproxAbc1);
+    let abcd1 = abcd1_stats(&sfcmul::compressors::proposed::ProposedApproxAbcd1);
+    println!(
+        "compressors: A+B+C+1 P_E={:.4} E_mean={:+.4} | A+B+C+D+1 P_E={:.4} E_mean={:+.4}",
+        abc1.error_probability, abc1.mean_error, abcd1.error_probability, abcd1.mean_error
+    );
+
+    // 4. Hardware figures (unit-gate model; see `sfcmul tables --id t5`
+    //    for the calibrated Table 5).
+    let hw_p = raw_hw(proposed.as_ref(), 42);
+    let hw_e = raw_hw(exact.as_ref(), 42);
+    println!(
+        "hardware: area {:.0} GE (exact {:.0}), delay {:.1} (exact {:.1}), switched-cap {:.1} (exact {:.1})",
+        hw_p.area_ge, hw_e.area_ge, hw_p.delay_units, hw_e.delay_units, hw_p.switched_cap, hw_e.switched_cap
+    );
+    println!("\nnext: `cargo run --release -- tables --id all` regenerates every paper table/figure");
+}

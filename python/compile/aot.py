@@ -1,0 +1,53 @@
+"""AOT lowering: JAX/Pallas -> HLO *text* artifacts for the Rust runtime.
+
+HLO text (not ``.serialize()``): jax >= 0.5 emits HloModuleProto with
+64-bit instruction ids which the xla crate's xla_extension 0.5.1 rejects
+(``proto.id() <= INT_MAX``); the text parser reassigns ids and
+round-trips cleanly. See /opt/xla-example/README.md.
+
+Also exports the proposed/exact product tables (little-endian i32) so the
+Rust test suite can cross-check its bit-level models against this module's
+byte-for-byte.
+
+Usage: python -m compile.aot --out-dir ../artifacts
+"""
+
+from __future__ import annotations
+
+import argparse
+import pathlib
+
+from jax._src.lib import xla_client as xc
+
+from . import model
+from .kernels import approx_mul
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default="../artifacts")
+    args = ap.parse_args()
+    out = pathlib.Path(args.out_dir)
+    out.mkdir(parents=True, exist_ok=True)
+
+    for batch in model.BATCH_SIZES:
+        text = to_hlo_text(model.lowered(batch))
+        path = out / f"edge_conv_b{batch}.hlo.txt"
+        path.write_text(text)
+        print(f"wrote {path} ({len(text)} chars)")
+
+    approx_mul.proposed_product_table().astype("<i4").tofile(out / "proposed_lut.i32")
+    approx_mul.exact_product_table().astype("<i4").tofile(out / "exact_lut.i32")
+    print(f"wrote {out / 'proposed_lut.i32'} and {out / 'exact_lut.i32'}")
+
+
+if __name__ == "__main__":
+    main()

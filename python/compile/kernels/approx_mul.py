@@ -1,0 +1,129 @@
+"""Bit-level functional models of the paper's multipliers (build-time).
+
+This is the Python mirror of ``rust/src/multipliers/approx.rs`` for the
+*shipped proposed configuration* (N = 8, LSP truncation of the lower N-1
+columns, CSP sign-focused compressors, exact third-slot encoder, NAND->1
+replacement, compensation via the CSP constants). The two implementations
+are cross-checked byte-for-byte through the 256x256 product tables
+(``tests/test_lut_crosscheck.py`` against the Rust-exported table).
+
+Everything is plain integer numpy, vectorised over arbitrary operand
+shapes, so the same code serves LUT generation, the pure-jnp reference and
+hypothesis sweeps.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+N = 8
+MASK = (1 << N) - 1
+OUT_BITS = 2 * N
+OUT_MASK = (1 << OUT_BITS) - 1
+
+
+def _bit(x, i):
+    return (x >> i) & 1
+
+
+def _wrap_signed(acc, bits):
+    """Interpret the low ``bits`` of ``acc`` as two's complement."""
+    acc = acc & ((1 << bits) - 1)
+    sign = acc >> (bits - 1)
+    return acc - (sign << bits)
+
+
+def _pp(ua, ub, i, j):
+    """Baugh-Wooley partial product (i, j): NAND iff exactly one operand
+    index is the sign bit."""
+    raw = _bit(ua, i) & _bit(ub, j)
+    if (i == N - 1) ^ (j == N - 1):
+        return 1 - raw
+    return raw
+
+
+def exact_multiply(a, b):
+    """Exact signed product (reference)."""
+    a = np.asarray(a, dtype=np.int64)
+    b = np.asarray(b, dtype=np.int64)
+    return a * b
+
+
+def proposed_multiply(a, b):
+    """The proposed approximate signed multiplier, bit-level.
+
+    Mirrors the Rust plan for the default configuration:
+
+    * columns 0..6 truncated;
+    * column 7: SF4#1 over (+1 comp const; A=~(a0&b7); B,C,D =
+      a1b6, a2b5, a3b4); leftovers ~(a7&b0), a4b3, a5b2, a6b1 loose;
+    * column 8: SF4#2 over (+1 BW const; A=~(a1&b7); B,C,D =
+      a2b6, a3b5, a4b4); ~(a7&b1) replaced by constant 1 fuelling the
+      exact third-slot encoder over (a5b3, a6b2): value = 1 + x + y;
+    * columns 9..14 exact; BW constant at column 15;
+    * SF4 value = 2 + 2*maj(B,C,D) + (A & (B^C^D))  (design "C5").
+    """
+    a = np.asarray(a, dtype=np.int64)
+    b = np.asarray(b, dtype=np.int64)
+    ua = a & MASK
+    ub = b & MASK
+
+    acc = np.zeros(np.broadcast(ua, ub).shape, dtype=np.int64)
+
+    def sf4_value(A, B, C, D):
+        maj = (B & C) | (B & D) | (C & D)
+        parity = B ^ C ^ D
+        return 2 + 2 * maj + (A & parity)
+
+    # ---- column 7 (CSP-lo) ------------------------------------------
+    sf1 = sf4_value(
+        _pp(ua, ub, 0, 7),
+        _pp(ua, ub, 1, 6),
+        _pp(ua, ub, 2, 5),
+        _pp(ua, ub, 3, 4),
+    )
+    acc += sf1 << 7
+    for (i, j) in [(7, 0), (4, 3), (5, 2), (6, 1)]:
+        acc += _pp(ua, ub, i, j) << 7
+
+    # ---- column 8 (CSP-hi) ------------------------------------------
+    sf2 = sf4_value(
+        _pp(ua, ub, 1, 7),
+        _pp(ua, ub, 2, 6),
+        _pp(ua, ub, 3, 5),
+        _pp(ua, ub, 4, 4),
+    )
+    acc += sf2 << 8
+    # ~(a7&b1) -> const 1 absorbed as the encoder's +1; encoder is exact
+    # over the two remaining ANDs.
+    sf3 = 1 + _pp(ua, ub, 5, 3) + _pp(ua, ub, 6, 2)
+    acc += sf3 << 8
+
+    # ---- MSP columns 9..14 ------------------------------------------
+    for w in range(9, 2 * N - 1):
+        for i in range(N):
+            j = w - i
+            if 0 <= j < N:
+                acc += _pp(ua, ub, i, j) << w
+
+    # ---- constants ---------------------------------------------------
+    acc += 1 << (2 * N - 1)
+
+    return _wrap_signed(acc, OUT_BITS)
+
+
+def product_table(multiply):
+    """(256, 256) int32 table: table[a_byte, b_byte] = multiply(a, b)."""
+    bytes_ = np.arange(256, dtype=np.int64)
+    signed = _wrap_signed(bytes_, 8)
+    a = signed[:, None]
+    b = signed[None, :]
+    return multiply(a, b).astype(np.int32)
+
+
+def proposed_product_table():
+    return product_table(proposed_multiply)
+
+
+def exact_product_table():
+    return product_table(exact_multiply)

@@ -1,0 +1,79 @@
+"""L1 Pallas kernel: 3x3 LUT-gather edge-detection convolution.
+
+One grid step processes one image tile: the (TILE_IN, TILE_IN) input
+window lives in VMEM together with the 256x256 i32 product table (256 KiB
+— comfortably within a TPU core's ~16 MiB VMEM), and the nine taps of the
+Laplacian become nine shifted reads of the resident tile, each routed
+through the product table with the pre-scaled kernel byte. This is the
+TPU rethinking of the paper's Fig. 8 row-buffer datapath: BlockSpec
+expresses the HBM->VMEM tile schedule that line buffers expressed in RTL,
+and the combinational approximate multiplier becomes a VMEM table gather
+(see DESIGN.md §Hardware-Adaptation).
+
+``interpret=True`` everywhere: the CPU PJRT client cannot run Mosaic
+custom-calls; correctness is validated against ``ref.py`` by pytest and
+the real-TPU resource budget is estimated in DESIGN.md.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Must mirror rust/src/coordinator/tiler.rs and rust/src/image/conv.rs.
+TILE_CORE = 64
+TILE_HALO = 1
+TILE_IN = TILE_CORE + 2 * TILE_HALO
+PIXEL_SHIFT = 1
+KERNEL_PRESCALE_SHIFT = 3
+OUTPUT_NORM_SHIFT = 3
+POST_SHIFT = KERNEL_PRESCALE_SHIFT - PIXEL_SHIFT + OUTPUT_NORM_SHIFT
+
+LAPLACIAN = ((-1, -1, -1), (-1, 8, -1), (-1, -1, -1))
+
+
+def _kernel_byte(k: int) -> int:
+    """Two's-complement byte of the pre-scaled coefficient (k << 3)."""
+    return (k << KERNEL_PRESCALE_SHIFT) & 0xFF
+
+
+def _conv_kernel(x_ref, lut_ref, o_ref):
+    """Pallas kernel body. x_ref: (B, TILE_IN, TILE_IN) i32 pixels 0..255;
+    lut_ref: (256, 256) i32 product table; o_ref: (B, TILE_CORE, TILE_CORE)
+    i32 edge magnitudes 0..255.
+
+    Perf (EXPERIMENTS.md §Perf, iteration L1-1): the whole batch is one
+    VMEM-resident block (B=8: ~140 KiB tiles + 256 KiB table + 131 KiB
+    out, well inside a TPU core's VMEM). A per-tile grid lowered to a
+    sequential HLO `while` loop under interpret=True, serialising the
+    batch and blocking XLA fusion; the single-block form lowers to pure
+    gather+elementwise HLO that XLA fuses and the CPU backend parallelises.
+    """
+    x = x_ref[...]
+    lut = lut_ref[...]
+    batch = x.shape[0]
+    acc = jnp.zeros((batch, TILE_CORE, TILE_CORE), jnp.int32)
+    for ky in range(3):
+        for kx in range(3):
+            px = x[:, ky : ky + TILE_CORE, kx : kx + TILE_CORE] >> PIXEL_SHIFT
+            kb = _kernel_byte(LAPLACIAN[ky][kx])
+            # product table gather: row = pixel byte (operand A),
+            # column = pre-scaled kernel byte (operand B)
+            acc = acc + lut[px, kb]
+    out = jnp.clip(jnp.abs(acc) >> POST_SHIFT, 0, 255)
+    o_ref[...] = out.astype(jnp.int32)
+
+
+@functools.partial(jax.jit, static_argnames=())
+def edge_conv_tiles(x, lut):
+    """Batched tile convolution: x (B, TILE_IN, TILE_IN) int32,
+    lut (256, 256) int32 -> (B, TILE_CORE, TILE_CORE) int32."""
+    batch = x.shape[0]
+    return pl.pallas_call(
+        _conv_kernel,
+        out_shape=jax.ShapeDtypeStruct((batch, TILE_CORE, TILE_CORE), jnp.int32),
+        interpret=True,
+    )(x.astype(jnp.int32), lut.astype(jnp.int32))

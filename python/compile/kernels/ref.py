@@ -1,0 +1,53 @@
+"""Pure-numpy correctness oracles for the Pallas kernel.
+
+No pallas here -- plain array ops only, so any bug in the kernel's
+BlockSpec/gather plumbing cannot hide in a shared implementation.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from .edge_conv import (
+    LAPLACIAN,
+    PIXEL_SHIFT,
+    POST_SHIFT,
+    TILE_CORE,
+    TILE_IN,
+    _kernel_byte,
+)
+
+__all__ = ["edge_conv_tiles_ref", "edge_detect_image_ref", "TILE_IN"]
+
+
+def edge_conv_tiles_ref(x, lut):
+    """Reference tile convolution. x: (B, TILE_IN, TILE_IN) int array,
+    lut: (256, 256) int32 -> (B, TILE_CORE, TILE_CORE) int32."""
+    x = np.asarray(x, dtype=np.int64)
+    lut = np.asarray(lut, dtype=np.int64)
+    batch = x.shape[0]
+    out = np.zeros((batch, TILE_CORE, TILE_CORE), dtype=np.int64)
+    for ky in range(3):
+        for kx in range(3):
+            px = x[:, ky : ky + TILE_CORE, kx : kx + TILE_CORE] >> PIXEL_SHIFT
+            kb = _kernel_byte(LAPLACIAN[ky][kx])
+            out += lut[px, kb]
+    out = np.clip(np.abs(out) >> POST_SHIFT, 0, 255)
+    return out.astype(np.int32)
+
+
+def edge_detect_image_ref(img, lut):
+    """Whole-image reference (zero padding), for end-to-end checks.
+    img: (H, W) uint8 -> (H, W) uint8."""
+    img = np.asarray(img, dtype=np.int64)
+    h, w = img.shape
+    padded = np.zeros((h + 2, w + 2), dtype=np.int64)
+    padded[1 : h + 1, 1 : w + 1] = img
+    lut = np.asarray(lut, dtype=np.int64)
+    acc = np.zeros((h, w), dtype=np.int64)
+    for ky in range(3):
+        for kx in range(3):
+            px = padded[ky : ky + h, kx : kx + w] >> PIXEL_SHIFT
+            kb = _kernel_byte(LAPLACIAN[ky][kx])
+            acc += lut[px, kb]
+    return np.clip(np.abs(acc) >> POST_SHIFT, 0, 255).astype(np.uint8)

@@ -1,0 +1,34 @@
+"""L2 JAX model: the batched edge-detection tile computation.
+
+The model is a single function over (tile batch, product table); the
+product table input is what makes one AOT artifact serve every multiplier
+design -- the Rust coordinator generates the design's 256x256 table
+in-process and feeds it at execute time, so switching between the
+proposed multiplier, any baseline, or the exact reference never
+recompiles or re-runs Python.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import edge_conv
+from .kernels.edge_conv import TILE_CORE, TILE_IN
+
+# Fixed batch sizes lowered at build time (the PJRT executable has static
+# shapes). The coordinator pads final partial batches with zero tiles.
+BATCH_SIZES = (1, 8)
+
+
+def edge_tiles(x, lut):
+    """(B, TILE_IN, TILE_IN) i32 pixels, (256, 256) i32 products ->
+    (B, TILE_CORE, TILE_CORE) i32 edge magnitudes."""
+    return (edge_conv.edge_conv_tiles(x, lut),)
+
+
+def lowered(batch):
+    """jax.jit-lowered computation for a given static batch size."""
+    x_spec = jax.ShapeDtypeStruct((batch, TILE_IN, TILE_IN), jnp.int32)
+    lut_spec = jax.ShapeDtypeStruct((256, 256), jnp.int32)
+    return jax.jit(edge_tiles).lower(x_spec, lut_spec)

@@ -1,0 +1,53 @@
+"""Cross-language image-level end-to-end check: the Rust edge map (written
+by `make crosscheck` via the Fig-9 generator) must equal the pure-Python
+reference pipeline using the Python bit-level multiplier model, pixel for
+pixel. This closes the loop: rust netlist == rust fast model == python
+model == python kernel == rust-served PJRT output.
+"""
+
+import pathlib
+
+import numpy as np
+import pytest
+
+from compile.kernels.approx_mul import proposed_product_table
+from compile.kernels.ref import edge_detect_image_ref
+
+ROOT = pathlib.Path(__file__).resolve().parents[2]
+
+
+def _read_pgm(path):
+    data = path.read_bytes()
+    # minimal P5 parser (no comments in our own files)
+    parts = data.split(b"\n", 3)
+    assert parts[0] == b"P5"
+    w, h = map(int, parts[1].split())
+    assert parts[2] == b"255"
+    img = np.frombuffer(parts[3][: w * h], dtype=np.uint8).reshape(h, w)
+    return img
+
+
+def test_rust_edge_map_matches_python_pipeline():
+    scene_p = ROOT / "out" / "scene.pgm"
+    edges_p = ROOT / "out" / "edges_proposeddesign.pgm"
+    if not (scene_p.exists() and edges_p.exists()):
+        pytest.skip("run `make crosscheck` first (writes out/scene.pgm etc.)")
+    scene = _read_pgm(scene_p)
+    rust_edges = _read_pgm(edges_p)
+    lut = proposed_product_table()
+    py_edges = edge_detect_image_ref(scene, lut)
+    mismatches = int((py_edges != rust_edges).sum())
+    assert mismatches == 0, f"{mismatches} pixels differ"
+
+
+def test_rust_exact_edge_map_matches_python_pipeline():
+    scene_p = ROOT / "out" / "scene.pgm"
+    edges_p = ROOT / "out" / "edges_exact.pgm"
+    if not (scene_p.exists() and edges_p.exists()):
+        pytest.skip("run `make crosscheck` first")
+    from compile.kernels.approx_mul import exact_product_table
+
+    scene = _read_pgm(scene_p)
+    rust_edges = _read_pgm(edges_p)
+    py_edges = edge_detect_image_ref(scene, exact_product_table())
+    assert (py_edges == rust_edges).all()

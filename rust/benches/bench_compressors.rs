@@ -1,0 +1,43 @@
+//! Bench: compressor machinery behind Tables 2/3 — functional value
+//! sweeps and packed netlist simulation throughput per design.
+
+use sfcmul::compressors::{abc1_stats, abcd1_stats, all_abc1_designs, all_abcd1_designs};
+use sfcmul::netlist::{sim::PackedSim, Netlist};
+use sfcmul::util::bench::Bench;
+
+fn main() {
+    let mut b = Bench::new("bench_compressors");
+
+    b.throughput(8 * 7).bench("table2_stats_all_designs", || {
+        all_abc1_designs()
+            .iter()
+            .map(|d| abc1_stats(d.as_ref()).error_probability)
+            .sum::<f64>()
+    });
+
+    b.throughput(16 * 6).bench("table3_stats_all_designs", || {
+        all_abcd1_designs()
+            .iter()
+            .map(|d| abcd1_stats(d.as_ref()).mean_error)
+            .sum::<f64>()
+    });
+
+    // packed netlist simulation of each ABC1 cell: 64 vectors per call
+    for design in all_abc1_designs() {
+        let mut nl = Netlist::new("cell");
+        let a = nl.input("a");
+        let bb = nl.input("b");
+        let c = nl.input("c");
+        design.build(&mut nl, a, bb, c);
+        let outs: Vec<_> = (0..nl.len() as u32).collect();
+        let _ = outs;
+        let mut sim = PackedSim::new(&nl);
+        let name = format!("netlist_sim64_{}", design.name().replace([' ', '[', ']', '/'], ""));
+        b.throughput(64).bench(&name, || {
+            let v = sim.run(&nl, &[0xAAAA_AAAA_AAAA_AAAA, 0xCCCC_CCCC_CCCC_CCCC, 0xF0F0_F0F0_F0F0_F0F0]);
+            v[v.len() - 1]
+        });
+    }
+
+    b.finish();
+}

@@ -1,0 +1,49 @@
+//! Bench: Fig-9 machinery — every convolution path at 256×256, plus the
+//! PJRT executable path when artifacts are present.
+
+use sfcmul::coordinator::{tile_image, LutTileEngine, ModelTileEngine, TileEngine};
+use sfcmul::image::{conv3x3, conv3x3_lut, conv3x3_rowbuf, synthetic_scene, LAPLACIAN};
+use sfcmul::multipliers::{build_design, lut::product_table, DesignId};
+use sfcmul::runtime::{artifacts_available, artifacts_dir, PjrtTileEngine};
+use sfcmul::util::bench::Bench;
+use std::sync::Arc;
+
+fn main() {
+    let mut b = Bench::new("bench_conv");
+    let img = synthetic_scene(256, 256, 11);
+    let pixels = (img.width * img.height) as u64;
+    let model = build_design(DesignId::Proposed, 8);
+    let lut = product_table(model.as_ref());
+
+    b.throughput(pixels).bench("conv_model_direct_256", || {
+        conv3x3(&img, &LAPLACIAN, model.as_ref()).data[0]
+    });
+    b.throughput(pixels).bench("conv_lut_direct_256", || {
+        conv3x3_lut(&img, &LAPLACIAN, &lut).data[0]
+    });
+    b.throughput(pixels).bench("conv_rowbuf_256", || {
+        conv3x3_rowbuf(&img, &LAPLACIAN, model.as_ref()).data[0]
+    });
+
+    let tiles = tile_image(0, &img);
+    let lut_engine = LutTileEngine::from_table("proposed", lut.clone());
+    b.throughput(pixels).bench("tiles_lut_engine_256", || {
+        lut_engine.process_batch(&tiles).len()
+    });
+    let model_engine = ModelTileEngine::new(model.clone());
+    b.throughput(pixels).bench("tiles_model_engine_256", || {
+        model_engine.process_batch(&tiles).len()
+    });
+
+    let dir = artifacts_dir();
+    if artifacts_available(&dir) {
+        let pjrt = Arc::new(PjrtTileEngine::new(&dir, "proposed", lut).expect("pjrt"));
+        b.throughput(pixels).bench("tiles_pjrt_engine_256", || {
+            pjrt.process_batch(&tiles).len()
+        });
+    } else {
+        println!("  (skipping PJRT bench: run `make artifacts`)");
+    }
+
+    b.finish();
+}

@@ -1,0 +1,51 @@
+//! Bench: E2E coordinator machinery — tiling, queue, batching, and whole
+//! jobs/second under different worker counts.
+
+use sfcmul::coordinator::{tile_image, Coordinator, CoordinatorConfig, LutTileEngine};
+use sfcmul::image::synthetic_scene;
+use sfcmul::multipliers::{build_design, lut::product_table, DesignId};
+use sfcmul::util::bench::Bench;
+use std::sync::Arc;
+
+fn main() {
+    let mut b = Bench::new("bench_coordinator");
+    let img = synthetic_scene(256, 256, 3);
+    let pixels = (img.width * img.height) as u64;
+
+    b.throughput(pixels).bench("tile_image_256", || tile_image(0, &img).len());
+
+    let model = build_design(DesignId::Proposed, 8);
+    let lut = product_table(model.as_ref());
+
+    for workers in [1usize, 2, 4, 8] {
+        let engine = Arc::new(LutTileEngine::from_table("p", lut.clone()));
+        let coord = Coordinator::start(
+            engine,
+            CoordinatorConfig { workers, queue_capacity: 256, max_batch: 8 },
+        );
+        let name = format!("job_roundtrip_256_w{workers}");
+        b.throughput(pixels).bench(&name, || {
+            let r = coord.run(img.clone());
+            r.tiles
+        });
+        drop(coord);
+    }
+
+    // queue throughput: raw channel send/recv
+    b.throughput(10_000).bench("bounded_channel_10k_items", || {
+        let (tx, rx) = sfcmul::util::pool::bounded(1024);
+        let t = std::thread::spawn(move || {
+            for i in 0..10_000u32 {
+                tx.send(i).unwrap();
+            }
+        });
+        let mut sum = 0u64;
+        while let Some(v) = rx.recv() {
+            sum += v as u64;
+        }
+        t.join().unwrap();
+        sum
+    });
+
+    b.finish();
+}

@@ -1,0 +1,25 @@
+//! Bench: Table-4 machinery — exhaustive 65 536-pair error sweeps and raw
+//! fast-model multiply throughput per design.
+
+use sfcmul::error::error_metrics;
+use sfcmul::multipliers::{all_designs, build_design, DesignId};
+use sfcmul::util::bench::Bench;
+
+fn main() {
+    let mut b = Bench::new("bench_error");
+
+    for (id, m) in all_designs(8) {
+        let name = format!("t4_exhaustive_{id:?}");
+        b.throughput(65536).bench(&name, || error_metrics(m.as_ref()).nmed);
+    }
+
+    // single-multiply throughput (hot path of the error sweep)
+    let prop = build_design(DesignId::Proposed, 8);
+    let mut x = 0i64;
+    b.throughput(1).bench("proposed_multiply_scalar", || {
+        x = (x + 17) & 0xFF;
+        prop.multiply((x as u8 as i8) as i64, ((x * 31) as u8 as i8) as i64)
+    });
+
+    b.finish();
+}

@@ -1,0 +1,33 @@
+//! Bench: Table-5 machinery — netlist construction, static timing and
+//! activity-based power per design.
+
+use sfcmul::hwmodel::raw_hw;
+use sfcmul::multipliers::{all_designs_hw, build_design, DesignId};
+use sfcmul::netlist::{power, timing};
+use sfcmul::util::bench::Bench;
+
+fn main() {
+    let mut b = Bench::new("bench_hw");
+
+    let exact = build_design(DesignId::Exact, 8);
+    b.bench("netlist_build_exact", || exact.build_netlist().len());
+
+    let prop = build_design(DesignId::Proposed, 8);
+    b.bench("netlist_build_proposed", || prop.build_netlist().len());
+
+    let nl = exact.build_netlist();
+    b.bench("static_timing_exact", || timing::analyze(&nl).critical_delay);
+
+    b.throughput(8192).bench("power_8192_vectors_exact", || {
+        power::estimate(&nl, 8192, 42).switched_cap
+    });
+
+    b.bench("t5_full_raw_hw_all_designs", || {
+        all_designs_hw(8)
+            .iter()
+            .map(|(_, m)| raw_hw(m.as_ref(), 42).switched_cap)
+            .sum::<f64>()
+    });
+
+    b.finish();
+}

@@ -1,0 +1,200 @@
+//! Adder cells: half adder, full adder, the 3:2 compressor of the paper's
+//! ref. [8] (Krishna et al., VLSID 2025 — an energy-optimised full-adder
+//! realisation), an exact 4:2 compressor, and a ripple-carry adder for the
+//! final summation stage.
+
+use crate::netlist::{Netlist, SigId};
+
+/// Half adder: returns (sum, carry).
+pub fn half_adder(n: &mut Netlist, a: SigId, b: SigId) -> (SigId, SigId) {
+    let sum = n.xor2(a, b);
+    let carry = n.and2(a, b);
+    (sum, carry)
+}
+
+/// Canonical full adder: sum = a⊕b⊕c, carry = maj(a,b,c). Returns
+/// (sum, carry).
+pub fn full_adder(n: &mut Netlist, a: SigId, b: SigId, c: SigId) -> (SigId, SigId) {
+    let sum = n.xor3(a, b, c);
+    let carry = n.maj3(a, b, c);
+    (sum, carry)
+}
+
+/// The 3:2 compressor of ref. [8]: functionally a full adder, implemented
+/// with the XOR/MUX factoring that the reference optimises for energy
+/// (carry through a mux selected by the propagate signal instead of a
+/// majority cell — one less XOR on the carry path).
+pub fn compressor32_ref8(n: &mut Netlist, a: SigId, b: SigId, c: SigId) -> (SigId, SigId) {
+    let p = n.xor2(a, b); // propagate
+    let sum = n.xor2(p, c);
+    // carry = p ? c : a   (classic mux-based carry)
+    let carry = n.mux2(p, a, c);
+    (sum, carry)
+}
+
+/// Exact 4:2 compressor (two chained 3:2 stages): inputs a..d plus carry-in
+/// `cin`; returns (sum, carry, cout) where the column value is
+/// `a+b+c+d+cin = sum + 2·(carry + cout)`.
+pub fn compressor42_exact(
+    n: &mut Netlist,
+    a: SigId,
+    b: SigId,
+    c: SigId,
+    d: SigId,
+    cin: SigId,
+) -> (SigId, SigId, SigId) {
+    let (s1, cout) = compressor32_ref8(n, a, b, c);
+    let (sum, carry) = compressor32_ref8(n, s1, d, cin);
+    (sum, carry, cout)
+}
+
+/// Ripple-carry adder over two LSB-first buses of equal width, with
+/// carry-in. Returns (sum bus of the same width, carry-out).
+pub fn ripple_adder(
+    n: &mut Netlist,
+    a: &[SigId],
+    b: &[SigId],
+    cin: SigId,
+) -> (Vec<SigId>, SigId) {
+    assert_eq!(a.len(), b.len());
+    let mut carry = cin;
+    let mut sums = Vec::with_capacity(a.len());
+    for (&ai, &bi) in a.iter().zip(b.iter()) {
+        let (s, c) = full_adder(n, ai, bi, carry);
+        sums.push(s);
+        carry = c;
+    }
+    (sums, carry)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::netlist::sim::eval_outputs_bool;
+
+    fn check_adder_cell(build: impl Fn(&mut Netlist, &[SigId]) -> Vec<SigId>, arity: usize) {
+        // Exhaustively verify Σinputs == Σ 2^k · output_k
+        let mut n = Netlist::new("cell");
+        let ins = n.input_bus("i", arity);
+        let outs = build(&mut n, &ins);
+        n.output_bus("o", &outs);
+        n.validate().unwrap();
+        for bits in 0..(1u32 << arity) {
+            let input: Vec<bool> = (0..arity).map(|k| bits >> k & 1 == 1).collect();
+            let expect: u32 = input.iter().map(|&b| b as u32).sum();
+            let got: u32 = eval_outputs_bool(&n, &input)
+                .iter()
+                .enumerate()
+                .map(|(k, &b)| (b as u32) << k)
+                .sum();
+            assert_eq!(got, expect, "inputs {bits:0width$b}", width = arity);
+        }
+    }
+
+    #[test]
+    fn half_adder_exhaustive() {
+        check_adder_cell(
+            |n, ins| {
+                let (s, c) = half_adder(n, ins[0], ins[1]);
+                vec![s, c]
+            },
+            2,
+        );
+    }
+
+    #[test]
+    fn full_adder_exhaustive() {
+        check_adder_cell(
+            |n, ins| {
+                let (s, c) = full_adder(n, ins[0], ins[1], ins[2]);
+                vec![s, c]
+            },
+            3,
+        );
+    }
+
+    #[test]
+    fn compressor32_ref8_is_a_full_adder() {
+        check_adder_cell(
+            |n, ins| {
+                let (s, c) = compressor32_ref8(n, ins[0], ins[1], ins[2]);
+                vec![s, c]
+            },
+            3,
+        );
+    }
+
+    #[test]
+    fn compressor32_ref8_cheaper_carry_path_than_canonical_fa() {
+        let mut canon = Netlist::new("fa");
+        let i = canon.input_bus("i", 3);
+        let (s, c) = full_adder(&mut canon, i[0], i[1], i[2]);
+        canon.output("s", s);
+        canon.output("c", c);
+
+        let mut opt = Netlist::new("c32");
+        let i = opt.input_bus("i", 3);
+        let (s, c) = compressor32_ref8(&mut opt, i[0], i[1], i[2]);
+        opt.output("s", s);
+        opt.output("c", c);
+
+        // The ref-[8] cell must not be larger than the canonical FA.
+        assert!(opt.area() <= canon.area());
+    }
+
+    #[test]
+    fn compressor42_exhaustive() {
+        // value = sum + 2*(carry + cout)
+        let mut n = Netlist::new("c42");
+        let ins = n.input_bus("i", 5);
+        let (s, c, co) = compressor42_exact(&mut n, ins[0], ins[1], ins[2], ins[3], ins[4]);
+        n.output("s", s);
+        n.output("c", c);
+        n.output("co", co);
+        for bits in 0..32u32 {
+            let input: Vec<bool> = (0..5).map(|k| bits >> k & 1 == 1).collect();
+            let expect: u32 = input.iter().map(|&b| b as u32).sum();
+            let o = eval_outputs_bool(&n, &input);
+            let got = o[0] as u32 + 2 * (o[1] as u32 + o[2] as u32);
+            assert_eq!(got, expect, "inputs {bits:05b}");
+        }
+    }
+
+    #[test]
+    fn ripple_adder_matches_integer_addition() {
+        let width = 8;
+        let mut n = Netlist::new("rca");
+        let a = n.input_bus("a", width);
+        let b = n.input_bus("b", width);
+        let cin = n.input("cin");
+        let (sums, cout) = ripple_adder(&mut n, &a, &b, cin);
+        n.output_bus("s", &sums);
+        n.output("cout", cout);
+        // spot-check 1000 random and corner cases
+        let cases: Vec<(u32, u32, u32)> = {
+            let mut v = vec![(0, 0, 0), (255, 255, 1), (170, 85, 0), (255, 1, 0)];
+            let mut rng = crate::util::prng::Xoshiro256::seeded(5);
+            for _ in 0..1000 {
+                v.push((rng.next_u32() & 0xFF, rng.next_u32() & 0xFF, rng.next_u32() & 1));
+            }
+            v
+        };
+        for (x, y, ci) in cases {
+            let mut input = Vec::new();
+            for k in 0..width {
+                input.push(x >> k & 1 == 1);
+            }
+            for k in 0..width {
+                input.push(y >> k & 1 == 1);
+            }
+            input.push(ci == 1);
+            let o = eval_outputs_bool(&n, &input);
+            let got: u32 = o
+                .iter()
+                .enumerate()
+                .map(|(k, &bit)| (bit as u32) << k)
+                .sum();
+            assert_eq!(got, x + y + ci, "{x}+{y}+{ci}");
+        }
+    }
+}

@@ -1,0 +1,11 @@
+//! Generic arithmetic building blocks: half/full adders, the energy-
+//! efficient 3:2 compressor of the paper's ref. [8], an exact 4:2
+//! compressor, ripple-carry / carry-save adders, and a Dadda-style
+//! column-reduction engine used by every multiplier in
+//! [`crate::multipliers`].
+
+pub mod adders;
+pub mod reduce;
+
+pub use adders::{full_adder, half_adder, compressor32_ref8, compressor42_exact, ripple_adder};
+pub use reduce::{reduce_columns, Columns};

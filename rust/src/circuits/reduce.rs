@@ -1,0 +1,181 @@
+//! Dadda-style column reduction.
+//!
+//! A partial-product matrix is represented as [`Columns`]: `cols[w]` holds
+//! the signals of weight `2^w`. [`reduce_columns`] compresses every column
+//! to height ≤ 2 using full/half adders (the 3:2 compressor of ref. [8]),
+//! then a final ripple-carry stage produces the LSB-first result bus. This
+//! is the "combination of adders and compressors [8] used in the MSP"
+//! (paper §3.3); the proposed multiplier seeds the CSP columns with
+//! sign-focused compressors first and hands the leftovers to this engine.
+
+use super::adders::{compressor32_ref8, half_adder, ripple_adder};
+use crate::netlist::{Netlist, SigId};
+
+/// Partial-product columns, LSB-first: `cols[w]` = signals of weight 2^w.
+#[derive(Debug, Clone, Default)]
+pub struct Columns {
+    pub cols: Vec<Vec<SigId>>,
+}
+
+impl Columns {
+    pub fn new(width: usize) -> Self {
+        Self { cols: vec![Vec::new(); width] }
+    }
+
+    /// Add a signal at weight `2^w`, growing the matrix as needed.
+    pub fn push(&mut self, w: usize, sig: SigId) {
+        if w >= self.cols.len() {
+            self.cols.resize(w + 1, Vec::new());
+        }
+        self.cols[w].push(sig);
+    }
+
+    pub fn width(&self) -> usize {
+        self.cols.len()
+    }
+
+    pub fn max_height(&self) -> usize {
+        self.cols.iter().map(|c| c.len()).max().unwrap_or(0)
+    }
+
+    /// Total number of partial-product bits.
+    pub fn bit_count(&self) -> usize {
+        self.cols.iter().map(|c| c.len()).sum()
+    }
+}
+
+/// Reduce all columns to height ≤ 2 with 3:2/2:2 counters, then add the two
+/// remaining rows with a ripple-carry adder. Returns the LSB-first product
+/// bus of width `columns.width() + 1` (the +1 absorbs the final carry-out;
+/// callers truncate to their product width).
+///
+/// Reduction policy (Dadda-flavoured): per stage, process columns LSB→MSB;
+/// while a column has ≥ 3 live bits, consume three into a 3:2 compressor
+/// (sum stays, carry promotes); a final pair may go through a half adder
+/// when the column still exceeds the stage target. Stages repeat until all
+/// columns have ≤ 2 bits.
+pub fn reduce_columns(n: &mut Netlist, mut columns: Columns) -> Vec<SigId> {
+    // Iteratively compress. Each pass handles every column once; carries
+    // are injected into the *next* column's pending list for the following
+    // pass (classic carry-save discipline, keeps stages well-defined for
+    // timing).
+    while columns.max_height() > 2 {
+        let width = columns.width();
+        let mut next = Columns::new(width + 1);
+        for w in 0..width {
+            let bits = std::mem::take(&mut columns.cols[w]);
+            let mut queue = bits;
+            // absorb bits carried into this column during this same pass
+            if w < next.cols.len() {
+                queue.extend(std::mem::take(&mut next.cols[w]));
+            }
+            let mut keep: Vec<SigId> = Vec::new();
+            let mut i = 0;
+            while queue.len() - i >= 3 {
+                let (a, b, c) = (queue[i], queue[i + 1], queue[i + 2]);
+                i += 3;
+                let (s, cy) = compressor32_ref8(n, a, b, c);
+                keep.push(s);
+                next.push(w + 1, cy);
+            }
+            let rem = queue.len() - i;
+            if rem == 2 && keep.len() + 2 > 2 {
+                // half-adder the pair only if the column would stay too tall
+                let (s, cy) = half_adder(n, queue[i], queue[i + 1]);
+                keep.push(s);
+                next.push(w + 1, cy);
+            } else {
+                for &q in &queue[i..] {
+                    keep.push(q);
+                }
+            }
+            next.cols[w].extend(keep);
+        }
+        columns = next;
+    }
+
+    // Final stage: two rows → ripple adder.
+    let width = columns.width();
+    let zero = n.const0();
+    let mut row_a = Vec::with_capacity(width);
+    let mut row_b = Vec::with_capacity(width);
+    for w in 0..width {
+        let col = &columns.cols[w];
+        row_a.push(*col.first().unwrap_or(&zero));
+        row_b.push(*col.get(1).unwrap_or(&zero));
+    }
+    let (mut sums, cout) = ripple_adder(n, &row_a, &row_b, zero);
+    sums.push(cout);
+    sums
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::netlist::sim::eval_outputs_bool;
+    use crate::util::prng::Xoshiro256;
+
+    /// Build a reducer over `heights[w]` input bits per column and check the
+    /// weighted sum against direct integer arithmetic for random vectors.
+    fn check_reduction(heights: &[usize], trials: usize, seed: u64) {
+        let mut n = Netlist::new("red");
+        let mut cols = Columns::new(heights.len());
+        let mut input_weights = Vec::new();
+        for (w, &h) in heights.iter().enumerate() {
+            for k in 0..h {
+                let sig = n.input(&format!("c{w}b{k}"));
+                cols.push(w, sig);
+                input_weights.push(w);
+            }
+        }
+        let out = reduce_columns(&mut n, cols);
+        n.output_bus("p", &out);
+        assert_eq!(n.validate().unwrap(), 0, "reducer should not emit dead logic");
+
+        let mut rng = Xoshiro256::seeded(seed);
+        for _ in 0..trials {
+            let bits: Vec<bool> = input_weights.iter().map(|_| rng.chance(0.5)).collect();
+            let expect: u64 = bits
+                .iter()
+                .zip(&input_weights)
+                .map(|(&b, &w)| (b as u64) << w)
+                .sum();
+            let o = eval_outputs_bool(&n, &bits);
+            let got: u64 = o.iter().enumerate().map(|(k, &b)| (b as u64) << k).sum();
+            assert_eq!(got, expect, "heights {heights:?}");
+        }
+    }
+
+    #[test]
+    fn single_tall_column() {
+        check_reduction(&[7], 200, 1);
+    }
+
+    #[test]
+    fn multiplier_shaped_triangle() {
+        // 8x8 unsigned PPM shape: heights 1..8..1
+        let mut h: Vec<usize> = (1..=8).collect();
+        h.extend((1..=7).rev());
+        check_reduction(&h, 300, 2);
+    }
+
+    #[test]
+    fn ragged_columns() {
+        check_reduction(&[3, 0, 5, 1, 4, 0, 2], 200, 3);
+    }
+
+    #[test]
+    fn already_reduced_passthrough() {
+        check_reduction(&[2, 2, 2, 2], 100, 4);
+    }
+
+    #[test]
+    fn empty_matrix_is_zero() {
+        let mut n = Netlist::new("empty");
+        let cols = Columns::new(4);
+        let out = reduce_columns(&mut n, cols);
+        n.output_bus("p", &out);
+        let o = eval_outputs_bool(&n, &[]);
+        assert!(o.iter().all(|&b| !b));
+    }
+}

@@ -1,0 +1,117 @@
+//! Proposed *exact* sign-focused compressors (paper Fig. 3).
+//!
+//! `ExactAbc1` computes `A+B+C+1` exactly into (cout, carry, sum) — the
+//! same function as the exact design of paper ref. [2], but implemented
+//! with the factoring of Fig. 3(a). `ExactAbcd1` computes `A+B+C+D+1`
+//! exactly into (cout, carry, sum); unlike ref. [2]'s design it reduces a
+//! partial product (§3.1).
+//!
+//! Value encodings (including the constant `+1`):
+//!
+//! ```text
+//! A+B+C+1   = 4·cout + 2·carry + sum,  sum = ~(A⊕B⊕C)
+//! A+B+C+D+1 = 4·cout + 2·carry + sum,  sum = ~(A⊕B⊕C⊕D)
+//! ```
+
+use super::traits::{Abc1Compressor, Abcd1Compressor, OutBit};
+use crate::netlist::{Netlist, SigId};
+
+/// Exact `A+B+C+1` (Fig. 3(a)).
+pub struct ExactAbc1;
+
+impl Abc1Compressor for ExactAbc1 {
+    fn name(&self) -> &'static str {
+        "Exact SF [2]/Fig3a"
+    }
+
+    fn value(&self, a: bool, b: bool, c: bool) -> u8 {
+        1 + a as u8 + b as u8 + c as u8
+    }
+
+    fn build(&self, n: &mut Netlist, a: SigId, b: SigId, c: SigId) -> Vec<OutBit> {
+        // value = 1 + a + b + c ∈ [1,4]
+        //   sum   = ~(a⊕b⊕c)
+        //   carry = (n==1 | n==2) = (a|b|c) & ~(a&b&c)
+        //   cout  = a&b&c
+        let sum = n.xnor3(a, b, c);
+        let any = n.or3(a, b, c);
+        let all = n.and3(a, b, c);
+        let nall = n.not(all);
+        let carry = n.and2(any, nall);
+        vec![
+            OutBit { rel_weight: 0, sig: sum },
+            OutBit { rel_weight: 1, sig: carry },
+            OutBit { rel_weight: 2, sig: all },
+        ]
+    }
+}
+
+/// Exact `A+B+C+D+1` (Fig. 3(b)) — reduces one partial product relative to
+/// the exact design of ref. [2].
+pub struct ExactAbcd1;
+
+impl Abcd1Compressor for ExactAbcd1 {
+    fn name(&self) -> &'static str {
+        "Exact SF Fig3b"
+    }
+
+    fn value(&self, a: bool, b: bool, c: bool, d: bool) -> u8 {
+        1 + a as u8 + b as u8 + c as u8 + d as u8
+    }
+
+    fn build(&self, n: &mut Netlist, a: SigId, b: SigId, c: SigId, d: SigId) -> Vec<OutBit> {
+        // value = 1 + n, n = a+b+c+d ∈ [0,4] → value ∈ [1,5]
+        //   sum   = ~parity(n)        (bit 0 of 1+n)
+        //   carry = (n==1 | n==2)     (bit 1 of 1+n: 1+n ∈ {2,3})
+        //   cout  = (n>=3)            (bit 2 of 1+n: 1+n ∈ {4,5})
+        let p_ab = n.xor2(a, b);
+        let p_cd = n.xor2(c, d);
+        let parity = n.xor2(p_ab, p_cd);
+        let sum = n.not(parity);
+        // pair counts
+        let ab = n.and2(a, b);
+        let cd = n.and2(c, d);
+        let any_ab = n.or2(a, b);
+        let any_cd = n.or2(c, d);
+        // n>=3: one pair full and the other non-empty, with at least one
+        // of the cross terms: n>=3 ⇔ (ab & any_cd) | (cd & any_ab)
+        let t1 = n.and2(ab, any_cd);
+        let t2 = n.and2(cd, any_ab);
+        let cout = n.or2(t1, t2);
+        // n>=1
+        let n_ge1 = n.or2(any_ab, any_cd);
+        // carry = n∈{1,2} = n>=1 & ~(n>=3)
+        let ncout = n.not(cout);
+        let carry = n.and2(n_ge1, ncout);
+        vec![
+            OutBit { rel_weight: 0, sig: sum },
+            OutBit { rel_weight: 1, sig: carry },
+            OutBit { rel_weight: 2, sig: cout },
+        ]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compressors::traits::{check_abc1, check_abcd1};
+
+    #[test]
+    fn exact_abc1_is_exact_and_netlist_matches() {
+        assert!(ExactAbc1.is_exact());
+        check_abc1(&ExactAbc1).unwrap();
+    }
+
+    #[test]
+    fn exact_abcd1_is_exact_and_netlist_matches() {
+        assert!(ExactAbcd1.is_exact());
+        check_abcd1(&ExactAbcd1).unwrap();
+    }
+
+    #[test]
+    fn exact_abcd1_covers_full_range() {
+        // value must reach 1 (all zero) and 5 (all one)
+        assert_eq!(ExactAbcd1.value(false, false, false, false), 1);
+        assert_eq!(ExactAbcd1.value(true, true, true, true), 5);
+    }
+}

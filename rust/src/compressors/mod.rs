@@ -1,0 +1,58 @@
+//! Sign-focused compressor library (paper §2.1, §3.1 — Tables 2 and 3).
+//!
+//! A *sign-focused* compressor sums a negative (NAND-generated) partial
+//! product `A`, positive (AND-generated) partial products `B, C(, D)`, and
+//! the constant logic `1` that the Baugh-Wooley matrix places in the CSP
+//! columns: `A+B+C+1` (3:2-shaped) or `A+B+C+D+1` (4:2-shaped).
+//!
+//! Each design exists in two coupled forms that are cross-checked
+//! exhaustively in tests:
+//!
+//! * a **functional model** (`value(..) -> u8`, the column value the
+//!   compressor's outputs encode) used by the fast multiplier models and
+//!   the error harness, and
+//! * a **netlist builder** used by the hardware (area/power/delay) model.
+//!
+//! Input probability model (paper Table 2): `A` is produced by a NAND gate
+//! of two independent uniform bits, so `P(A=1)=3/4`; `B,C,D` by AND gates,
+//! so `P(=1)=1/4`. [`stats`] computes the error probability `P_E` and mean
+//! error `E_mean` of every design under this distribution — reproducing the
+//! bottom rows of Table 2 and the Table 3 analysis.
+
+pub mod traits;
+pub mod exact;
+pub mod proposed;
+pub mod baselines;
+pub mod stats;
+
+pub use stats::{abc1_stats, abcd1_stats, CompressorStats};
+pub use traits::{Abc1Compressor, Abcd1Compressor, OutBit};
+
+use std::sync::Arc;
+
+/// Every `A+B+C+1` design of paper Table 2, in table order.
+pub fn all_abc1_designs() -> Vec<Arc<dyn Abc1Compressor>> {
+    vec![
+        Arc::new(exact::ExactAbc1),
+        Arc::new(baselines::Ac1Esposito4),
+        Arc::new(baselines::Ac2Guo5),
+        Arc::new(baselines::Ac3Strollo12),
+        Arc::new(baselines::Ac4Du3),
+        Arc::new(baselines::Ac5Du2),
+        Arc::new(proposed::ProposedApproxAbc1),
+    ]
+}
+
+/// Every `A+B+C+D+1` design (proposed exact/approx, ablation candidates,
+/// and the 4:2-derived baselines of paper refs. [1] and [7]).
+pub fn all_abcd1_designs() -> Vec<Arc<dyn Abcd1Compressor>> {
+    vec![
+        Arc::new(exact::ExactAbcd1),
+        Arc::new(proposed::ProposedApproxAbcd1),
+        Arc::new(proposed::AblationAbcd1Gated),
+        Arc::new(proposed::AblationAbcd1Parity),
+        Arc::new(proposed::AblationAbcd1OrSum),
+        Arc::new(baselines::DualQuality1Abcd1),
+        Arc::new(baselines::ProbBased7Abcd1),
+    ]
+}

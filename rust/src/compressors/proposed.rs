@@ -1,0 +1,327 @@
+//! Proposed *approximate* sign-focused compressors (paper Fig. 4, Tables
+//! 2 and 3) plus the ablation candidates discussed in DESIGN.md.
+//!
+//! ## `A+B+C+1` (Table 2, "Proposed" columns — fully legible in the paper)
+//!
+//! ```text
+//! Carry = A | B | C
+//! Sum   = ~A | B | C
+//! value = 2·Carry + Sum
+//! ```
+//!
+//! Errors: +1 at {A=0,B⊕C=1} (P = 3/64 each), −1 at {1,1,1} (P = 3/64);
+//! `P_E = 9/64`, `E_mean = +3/64` under the Table-2 input distribution.
+//! (The paper's printed P_E/E_mean summary row disagrees with its own Err
+//! column; we reproduce the truth table, which is self-consistent.)
+//!
+//! ## `A+B+C+D+1` (Table 3 — reconstructed, see DESIGN.md §Reconstruction)
+//!
+//! The paper's design rule: introduce error in the *sum* output only, at
+//! the input combinations with the lowest probability. Because `A` is
+//! NAND-generated (`P(A=1)=3/4`), the low-probability rows are exactly the
+//! `A=0` rows. The shipped design ("C5" of the DESIGN.md candidate sweep):
+//!
+//! ```text
+//! Carry = maj(B,C,D)
+//! Sum   = A & (B⊕C⊕D)
+//! value = 2 + 2·Carry + Sum        (constant +2: the sign-focus carry
+//!                                   kept at logic 1 one column up)
+//! ```
+//!
+//! Every `A=1` row (probability 3/4 of the mass) is exact; errors are
+//! confined to `A=0` rows, are always `+1` (never negative — no large
+//! negative spikes at the CSP weights), and total `P_E = 36/256 ≈ 0.141`,
+//! `E_mean = +36/256`. Among all candidates it gives the multiplier the
+//! lowest MRED (the paper's headline Table-4 property); the alternatives
+//! are retained for the ablation bench (`sfcmul ablate`).
+
+use super::traits::{Abc1Compressor, Abcd1Compressor, OutBit};
+use crate::netlist::{Netlist, SigId};
+
+/// Proposed approximate `A+B+C+1` (paper Fig. 4(a), Table 2 last columns).
+pub struct ProposedApproxAbc1;
+
+impl Abc1Compressor for ProposedApproxAbc1 {
+    fn name(&self) -> &'static str {
+        "Proposed"
+    }
+
+    fn value(&self, a: bool, b: bool, c: bool) -> u8 {
+        let carry = a | b | c;
+        let sum = !a | b | c;
+        2 * carry as u8 + sum as u8
+    }
+
+    fn build(&self, n: &mut Netlist, a: SigId, b: SigId, c: SigId) -> Vec<OutBit> {
+        let carry = n.or3(a, b, c);
+        let na = n.not(a);
+        let sum = n.or3(na, b, c);
+        vec![
+            OutBit { rel_weight: 0, sig: sum },
+            OutBit { rel_weight: 1, sig: carry },
+        ]
+    }
+}
+
+/// Proposed approximate `A+B+C+D+1` (paper Fig. 4(b), Table 3) —
+/// reconstruction "C5" of DESIGN.md: `Carry = maj(B,C,D)`,
+/// `Sum = A & (B⊕C⊕D)`, value offset +2. Exact on every `A=1` row;
+/// all errors are `+1`.
+pub struct ProposedApproxAbcd1;
+
+/// Shared functional core so the multiplier fast models and the netlist
+/// stay in lockstep.
+pub fn proposed_abcd1_value(a: bool, b: bool, c: bool, d: bool) -> u8 {
+    let carry = (b & c) | (b & d) | (c & d);
+    let sum = a & (b ^ c ^ d);
+    2 + 2 * carry as u8 + sum as u8
+}
+
+impl Abcd1Compressor for ProposedApproxAbcd1 {
+    fn name(&self) -> &'static str {
+        "Proposed"
+    }
+
+    fn value(&self, a: bool, b: bool, c: bool, d: bool) -> u8 {
+        proposed_abcd1_value(a, b, c, d)
+    }
+
+    fn build(&self, n: &mut Netlist, a: SigId, b: SigId, c: SigId, d: SigId) -> Vec<OutBit> {
+        let carry = n.maj3(b, c, d);
+        let parity = n.xor3(b, c, d);
+        let sum = n.and2(a, parity);
+        let k1 = n.const1(); // the sign-focus constant carry (value offset +2)
+        vec![
+            OutBit { rel_weight: 0, sig: sum },
+            OutBit { rel_weight: 1, sig: carry },
+            OutBit { rel_weight: 1, sig: k1 },
+        ]
+    }
+}
+
+/// Ablation candidate "C4": both outputs gated by A.
+/// `Carry = A & maj(B,C,D)`, `Sum = A & (B⊕C⊕D)`, value offset +2.
+/// Lowest compressor-level E_mean (+16/256) but errs −2 at `A=0,n=3`,
+/// which costs multiplier-level MRED at the CSP weights.
+pub struct AblationAbcd1Gated;
+
+impl Abcd1Compressor for AblationAbcd1Gated {
+    fn name(&self) -> &'static str {
+        "Ablation-gated"
+    }
+
+    fn value(&self, a: bool, b: bool, c: bool, d: bool) -> u8 {
+        let maj = (b & c) | (b & d) | (c & d);
+        let carry = a & maj;
+        let sum = a & (b ^ c ^ d);
+        2 + 2 * carry as u8 + sum as u8
+    }
+
+    fn build(&self, n: &mut Netlist, a: SigId, b: SigId, c: SigId, d: SigId) -> Vec<OutBit> {
+        let maj = n.maj3(b, c, d);
+        let parity = n.xor3(b, c, d);
+        let carry = n.and2(a, maj);
+        let sum = n.and2(a, parity);
+        let k1 = n.const1();
+        vec![
+            OutBit { rel_weight: 0, sig: sum },
+            OutBit { rel_weight: 1, sig: carry },
+            OutBit { rel_weight: 1, sig: k1 },
+        ]
+    }
+}
+
+/// Ablation candidate "C1": ungated parity sum.
+/// `Carry = A & maj(B,C,D)`, `Sum = B⊕C⊕D`, value offset +2.
+/// `P_E = 64/256`, `E_mean = +44/256 ≈ +0.17`.
+pub struct AblationAbcd1Parity;
+
+impl Abcd1Compressor for AblationAbcd1Parity {
+    fn name(&self) -> &'static str {
+        "Ablation-parity"
+    }
+
+    fn value(&self, a: bool, b: bool, c: bool, d: bool) -> u8 {
+        let maj = (b & c) | (b & d) | (c & d);
+        let carry = a & maj;
+        let sum = b ^ c ^ d;
+        2 + 2 * carry as u8 + sum as u8
+    }
+
+    fn build(&self, n: &mut Netlist, a: SigId, b: SigId, c: SigId, d: SigId) -> Vec<OutBit> {
+        let maj = n.maj3(b, c, d);
+        let sum = n.xor3(b, c, d);
+        let carry = n.and2(a, maj);
+        let k1 = n.const1();
+        vec![
+            OutBit { rel_weight: 0, sig: sum },
+            OutBit { rel_weight: 1, sig: carry },
+            OutBit { rel_weight: 1, sig: k1 },
+        ]
+    }
+}
+
+/// Ablation candidate "C3": XOR-free (cheapest).
+/// `Carry = A & maj(B,C,D)`, `Sum = B|C|D`, value offset +2.
+/// `P_E = 82/256`, `E_mean = +80/256 ≈ +0.31`.
+pub struct AblationAbcd1OrSum;
+
+impl Abcd1Compressor for AblationAbcd1OrSum {
+    fn name(&self) -> &'static str {
+        "Ablation-orsum"
+    }
+
+    fn value(&self, a: bool, b: bool, c: bool, d: bool) -> u8 {
+        let maj = (b & c) | (b & d) | (c & d);
+        let carry = a & maj;
+        let sum = b | c | d;
+        2 + 2 * carry as u8 + sum as u8
+    }
+
+    fn build(&self, n: &mut Netlist, a: SigId, b: SigId, c: SigId, d: SigId) -> Vec<OutBit> {
+        let maj = n.maj3(b, c, d);
+        let sum = n.or3(b, c, d);
+        let carry = n.and2(a, maj);
+        let k1 = n.const1();
+        vec![
+            OutBit { rel_weight: 0, sig: sum },
+            OutBit { rel_weight: 1, sig: carry },
+            OutBit { rel_weight: 1, sig: k1 },
+        ]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compressors::traits::{check_abc1, check_abcd1};
+
+    /// Paper Table 2, "Proposed" columns: Carry, Sum, S_aprx per row
+    /// (rows ordered A,B,C = P2,P1,P0 as printed).
+    #[test]
+    fn proposed_abc1_matches_paper_table2() {
+        // (a, b, c) -> (carry, sum, value)
+        let expect = [
+            ((false, false, false), (0u8, 1u8, 1u8)),
+            ((false, false, true), (1, 1, 3)),
+            ((false, true, false), (1, 1, 3)),
+            ((false, true, true), (1, 1, 3)),
+            ((true, false, false), (1, 0, 2)),
+            ((true, false, true), (1, 1, 3)),
+            ((true, true, false), (1, 1, 3)),
+            ((true, true, true), (1, 1, 3)),
+        ];
+        for ((a, b, c), (carry, sum, value)) in expect {
+            let v = ProposedApproxAbc1.value(a, b, c);
+            assert_eq!(v, value, "value at a={a} b={b} c={c}");
+            assert_eq!(v >> 1, carry, "carry at a={a} b={b} c={c}");
+            assert_eq!(v & 1, sum, "sum at a={a} b={b} c={c}");
+        }
+    }
+
+    /// Err column of Table 2 for the proposed design: +1 at 001 and 010,
+    /// -1 at 111, 0 elsewhere.
+    #[test]
+    fn proposed_abc1_error_pattern() {
+        for bits in 0..8u8 {
+            let (a, b, c) = (bits & 4 != 0, bits & 2 != 0, bits & 1 != 0);
+            let exact = 1 + a as i8 + b as i8 + c as i8;
+            let err = ProposedApproxAbc1.value(a, b, c) as i8 - exact;
+            let expect = match (a, b, c) {
+                (false, false, true) | (false, true, false) => 1,
+                (true, true, true) => -1,
+                _ => 0,
+            };
+            assert_eq!(err, expect, "a={a} b={b} c={c}");
+        }
+    }
+
+    #[test]
+    fn proposed_netlists_match_models() {
+        check_abc1(&ProposedApproxAbc1).unwrap();
+        check_abcd1(&ProposedApproxAbcd1).unwrap();
+        check_abcd1(&AblationAbcd1Gated).unwrap();
+        check_abcd1(&AblationAbcd1Parity).unwrap();
+        check_abcd1(&AblationAbcd1OrSum).unwrap();
+    }
+
+    /// The shipped ABCD1 design must be exact on all A=1 rows — that is the
+    /// design principle (A=1 has probability 3/4).
+    #[test]
+    fn proposed_abcd1_exact_on_a1_rows() {
+        for bits in 0..8u8 {
+            let (b, c, d) = (bits & 1 != 0, bits & 2 != 0, bits & 4 != 0);
+            let exact = 1 + 1 + b as u8 + c as u8 + d as u8;
+            assert_eq!(proposed_abcd1_value(true, b, c, d), exact, "b={b} c={c} d={d}");
+        }
+    }
+
+    /// Error pattern on A=0 rows: +1 at n∈{0,2}, 0 at n∈{1,3} — never
+    /// negative (the property that keeps multiplier-level MRED low).
+    #[test]
+    fn proposed_abcd1_error_pattern_on_a0_rows() {
+        for bits in 0..8u8 {
+            let (b, c, d) = (bits & 1 != 0, bits & 2 != 0, bits & 4 != 0);
+            let n = b as i8 + c as i8 + d as i8;
+            let exact = 1 + n;
+            let err = proposed_abcd1_value(false, b, c, d) as i8 - exact;
+            let expect = match n {
+                0 | 2 => 1,
+                1 | 3 => 0,
+                _ => unreachable!(),
+            };
+            assert_eq!(err, expect, "n={n}");
+            assert!(err >= 0, "never negative");
+        }
+    }
+
+    #[test]
+    fn approximate_designs_are_not_exact() {
+        use crate::compressors::traits::{Abc1Compressor, Abcd1Compressor};
+        assert!(!ProposedApproxAbc1.is_exact());
+        assert!(!ProposedApproxAbcd1.is_exact());
+        assert!(!AblationAbcd1Gated.is_exact());
+        assert!(!AblationAbcd1Parity.is_exact());
+        assert!(!AblationAbcd1OrSum.is_exact());
+    }
+
+    /// Area ordering: approximate < exact (the whole point of the design).
+    #[test]
+    fn approx_is_smaller_than_exact() {
+        use crate::compressors::exact::{ExactAbc1, ExactAbcd1};
+        let area = |f: &dyn Fn(&mut Netlist) -> ()| {
+            let mut n = Netlist::new("t");
+            f(&mut n);
+            n.area()
+        };
+        let a_exact3 = area(&|n: &mut Netlist| {
+            let a = n.input("a");
+            let b = n.input("b");
+            let c = n.input("c");
+            ExactAbc1.build(n, a, b, c);
+        });
+        let a_prop3 = area(&|n: &mut Netlist| {
+            let a = n.input("a");
+            let b = n.input("b");
+            let c = n.input("c");
+            ProposedApproxAbc1.build(n, a, b, c);
+        });
+        assert!(a_prop3 < a_exact3, "approx ABC1 {a_prop3} !< exact {a_exact3}");
+
+        let a_exact4 = area(&|n: &mut Netlist| {
+            let a = n.input("a");
+            let b = n.input("b");
+            let c = n.input("c");
+            let d = n.input("d");
+            ExactAbcd1.build(n, a, b, c, d);
+        });
+        let a_prop4 = area(&|n: &mut Netlist| {
+            let a = n.input("a");
+            let b = n.input("b");
+            let c = n.input("c");
+            let d = n.input("d");
+            ProposedApproxAbcd1.build(n, a, b, c, d);
+        });
+        assert!(a_prop4 < a_exact4, "approx ABCD1 {a_prop4} !< exact {a_exact4}");
+    }
+}

@@ -1,0 +1,113 @@
+//! Compressor interfaces shared by the functional and netlist forms.
+
+use crate::netlist::{Netlist, SigId};
+
+/// One output bit of a compressor, tagged with its weight *relative to the
+/// column the compressor sits in* (0 = same column, 1 = next column, ...).
+///
+/// Constant outputs (the "sign-focus trick" of keeping a carry at logic 1)
+/// are represented as netlist constants by the builders and as part of the
+/// functional `value()` by the models, so both forms stay comparable.
+#[derive(Debug, Clone, Copy)]
+pub struct OutBit {
+    pub rel_weight: u8,
+    pub sig: SigId,
+}
+
+/// An `A + B + C + 1` sign-focused compressor. `A` is the negative
+/// (NAND-generated) partial product; `B`, `C` are positive. The implicit
+/// `+1` is part of the compressor contract — `value()` includes it.
+pub trait Abc1Compressor: Send + Sync {
+    /// Short identifier used in tables ("AC1 [4]", "Proposed", ...).
+    fn name(&self) -> &'static str;
+
+    /// Column value encoded by the outputs for the given inputs,
+    /// including the constant `+1`. Exact designs return `1+a+b+c`.
+    fn value(&self, a: bool, b: bool, c: bool) -> u8;
+
+    /// Whether the design is exact (`value == 1+a+b+c` for all inputs).
+    fn is_exact(&self) -> bool {
+        (0..8).all(|bits| {
+            let (a, b, c) = (bits & 1 != 0, bits & 2 != 0, bits & 4 != 0);
+            self.value(a, b, c) == 1 + a as u8 + b as u8 + c as u8
+        })
+    }
+
+    /// Emit the gate-level implementation. The returned bits must encode
+    /// `value()`: `Σ 2^rel_weight · bit == value(a,b,c)` for all inputs
+    /// (verified exhaustively by the test suite for every design).
+    fn build(&self, n: &mut Netlist, a: SigId, b: SigId, c: SigId) -> Vec<OutBit>;
+}
+
+/// An `A + B + C + D + 1` sign-focused compressor. `A` is the negative
+/// partial product; `B`, `C`, `D` are positive.
+pub trait Abcd1Compressor: Send + Sync {
+    fn name(&self) -> &'static str;
+
+    /// Column value encoded by the outputs, including the constant `+1`.
+    /// Exact designs return `1+a+b+c+d`.
+    fn value(&self, a: bool, b: bool, c: bool, d: bool) -> u8;
+
+    fn is_exact(&self) -> bool {
+        (0..16).all(|bits| {
+            let (a, b, c, d) =
+                (bits & 1 != 0, bits & 2 != 0, bits & 4 != 0, bits & 8 != 0);
+            self.value(a, b, c, d) == 1 + a as u8 + b as u8 + c as u8 + d as u8
+        })
+    }
+
+    fn build(&self, n: &mut Netlist, a: SigId, b: SigId, c: SigId, d: SigId) -> Vec<OutBit>;
+}
+
+/// Exhaustively verify that a built ABC1 netlist encodes the functional
+/// model. Returns an error message on the first mismatch.
+pub fn check_abc1(design: &dyn Abc1Compressor) -> Result<(), String> {
+    let mut n = Netlist::new(design.name());
+    let a = n.input("a");
+    let b = n.input("b");
+    let c = n.input("c");
+    let outs = design.build(&mut n, a, b, c);
+    for bits in 0..8u8 {
+        let (va, vb, vc) = (bits & 1 != 0, bits & 2 != 0, bits & 4 != 0);
+        let values = crate::netlist::sim::eval_bool(&n, &[va, vb, vc]);
+        let got: u8 = outs
+            .iter()
+            .map(|ob| (values[ob.sig as usize] as u8) << ob.rel_weight)
+            .sum();
+        let want = design.value(va, vb, vc);
+        if got != want {
+            return Err(format!(
+                "{}: inputs a={va} b={vb} c={vc}: netlist encodes {got}, model says {want}",
+                design.name()
+            ));
+        }
+    }
+    Ok(())
+}
+
+/// Exhaustively verify a built ABCD1 netlist against its functional model.
+pub fn check_abcd1(design: &dyn Abcd1Compressor) -> Result<(), String> {
+    let mut n = Netlist::new(design.name());
+    let a = n.input("a");
+    let b = n.input("b");
+    let c = n.input("c");
+    let d = n.input("d");
+    let outs = design.build(&mut n, a, b, c, d);
+    for bits in 0..16u8 {
+        let (va, vb, vc, vd) =
+            (bits & 1 != 0, bits & 2 != 0, bits & 4 != 0, bits & 8 != 0);
+        let values = crate::netlist::sim::eval_bool(&n, &[va, vb, vc, vd]);
+        let got: u8 = outs
+            .iter()
+            .map(|ob| (values[ob.sig as usize] as u8) << ob.rel_weight)
+            .sum();
+        let want = design.value(va, vb, vc, vd);
+        if got != want {
+            return Err(format!(
+                "{}: inputs a={va} b={vb} c={vc} d={vd}: netlist encodes {got}, model says {want}",
+                design.name()
+            ));
+        }
+    }
+    Ok(())
+}

@@ -1,0 +1,258 @@
+//! Tile-processing engines.
+//!
+//! [`TileEngine`] is the pluggable compute backend of the coordinator.
+//! Two in-process engines live here; the PJRT engine (AOT-compiled
+//! JAX/Pallas executable) is in [`crate::runtime`] and implements the
+//! same trait.
+
+use super::tiler::{Tile, TileOut, TILE_HALO, TILE_IN};
+use crate::image::conv::{
+    KERNEL_PRESCALE_SHIFT, LAPLACIAN, OUTPUT_NORM_SHIFT, PIXEL_SHIFT,
+};
+use crate::multipliers::MultiplierModel;
+use std::sync::Arc;
+
+/// A batched tile processor.
+pub trait TileEngine: Send + Sync {
+    fn name(&self) -> String;
+
+    /// Process a batch of input tiles into output cores, in order.
+    fn process_batch(&self, tiles: &[Tile]) -> Vec<TileOut>;
+
+    /// Preferred maximum batch size (the PJRT engine compiles a fixed
+    /// batch dimension; in-process engines take anything).
+    fn preferred_batch(&self) -> usize {
+        16
+    }
+}
+
+#[inline]
+fn postprocess(acc: i64) -> u8 {
+    (acc.abs() >> (KERNEL_PRESCALE_SHIFT - PIXEL_SHIFT + OUTPUT_NORM_SHIFT)).clamp(0, 255) as u8
+}
+
+/// Shared tile-convolution core over a product function.
+fn conv_tile(tile: &Tile, product: &dyn Fn(u8, i8) -> i64) -> TileOut {
+    let mut data = vec![0u8; tile.core_w * tile.core_h];
+    for cy in 0..tile.core_h {
+        for cx in 0..tile.core_w {
+            let mut acc = 0i64;
+            for ky in 0..3 {
+                for kx in 0..3 {
+                    let px =
+                        tile.data[(cy + ky) * TILE_IN + cx + kx] >> PIXEL_SHIFT;
+                    let k = (LAPLACIAN[ky][kx] << KERNEL_PRESCALE_SHIFT) as i8;
+                    acc += product(px, k);
+                }
+            }
+            data[cy * tile.core_w + cx] = postprocess(acc);
+        }
+    }
+    debug_assert_eq!(TILE_HALO, 1);
+    TileOut {
+        job_id: tile.job_id,
+        x0: tile.x0,
+        y0: tile.y0,
+        core_w: tile.core_w,
+        core_h: tile.core_h,
+        data,
+    }
+}
+
+/// LUT-backed engine: products come from a 256×256 table generated from a
+/// multiplier design — the production in-process path.
+///
+/// Perf (EXPERIMENTS.md §Perf, iteration L3-1): the 3×3 Laplacian has only
+/// two distinct pre-scaled coefficients (centre +64, ring −8), so the
+/// 256×256 table folds into two 256-entry *tap tables* indexed directly by
+/// the raw pixel byte (the `>> PIXEL_SHIFT` is baked in). The inner loop
+/// is then 9 loads + 8 adds per output pixel with no shifts or muxes.
+pub struct LutTileEngine {
+    name: String,
+    lut: Vec<i32>,
+    /// tap_center[px] = lut[px>>1][byte(+64)]
+    tap_center: [i32; 256],
+    /// tap_ring[px] = lut[px>>1][byte(-8)]
+    tap_ring: [i32; 256],
+}
+
+impl LutTileEngine {
+    pub fn new(model: &dyn MultiplierModel) -> Self {
+        Self::from_table(&format!("lut:{}", model.name()), crate::multipliers::lut::product_table(model))
+    }
+
+    pub fn from_table(name: &str, lut: Vec<i32>) -> Self {
+        assert_eq!(lut.len(), 65536);
+        let kb_center = ((LAPLACIAN[1][1] << KERNEL_PRESCALE_SHIFT) as i8) as u8 as usize;
+        let kb_ring = ((LAPLACIAN[0][0] << KERNEL_PRESCALE_SHIFT) as i8) as u8 as usize;
+        let mut tap_center = [0i32; 256];
+        let mut tap_ring = [0i32; 256];
+        for px in 0..256usize {
+            let row = (px >> PIXEL_SHIFT) << 8;
+            tap_center[px] = lut[row | kb_center];
+            tap_ring[px] = lut[row | kb_ring];
+        }
+        Self { name: name.to_string(), lut, tap_center, tap_ring }
+    }
+
+    pub fn lut(&self) -> &[i32] {
+        &self.lut
+    }
+
+    /// Specialised Laplacian tile convolution over the folded tap tables.
+    fn conv_tile_fast(&self, tile: &Tile) -> TileOut {
+        let mut data = vec![0u8; tile.core_w * tile.core_h];
+        let tc = &self.tap_center;
+        let tr = &self.tap_ring;
+        let src = &tile.data;
+        for cy in 0..tile.core_h {
+            let r0 = &src[cy * TILE_IN..cy * TILE_IN + tile.core_w + 2];
+            let r1 = &src[(cy + 1) * TILE_IN..(cy + 1) * TILE_IN + tile.core_w + 2];
+            let r2 = &src[(cy + 2) * TILE_IN..(cy + 2) * TILE_IN + tile.core_w + 2];
+            let out_row = &mut data[cy * tile.core_w..(cy + 1) * tile.core_w];
+            for (cx, out_px) in out_row.iter_mut().enumerate() {
+                let acc = tr[r0[cx] as usize] as i64
+                    + tr[r0[cx + 1] as usize] as i64
+                    + tr[r0[cx + 2] as usize] as i64
+                    + tr[r1[cx] as usize] as i64
+                    + tc[r1[cx + 1] as usize] as i64
+                    + tr[r1[cx + 2] as usize] as i64
+                    + tr[r2[cx] as usize] as i64
+                    + tr[r2[cx + 1] as usize] as i64
+                    + tr[r2[cx + 2] as usize] as i64;
+                *out_px = postprocess(acc);
+            }
+        }
+        TileOut {
+            job_id: tile.job_id,
+            x0: tile.x0,
+            y0: tile.y0,
+            core_w: tile.core_w,
+            core_h: tile.core_h,
+            data,
+        }
+    }
+}
+
+impl TileEngine for LutTileEngine {
+    fn name(&self) -> String {
+        self.name.clone()
+    }
+
+    fn process_batch(&self, tiles: &[Tile]) -> Vec<TileOut> {
+        tiles.iter().map(|t| self.conv_tile_fast(t)).collect()
+    }
+}
+
+/// Quality classes for dynamically configurable accuracy — the
+/// system-level analogue of ref. [1]'s dual-quality compressors: a job can
+/// request the approximate (low-power) or exact table at runtime without
+/// recompiling anything.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Quality {
+    /// Approximate multiplier (default).
+    Approx = 0,
+    /// Exact multiplier.
+    Exact = 1,
+}
+
+/// Dual-quality engine: holds one product table per quality class and
+/// routes each tile by its job's requested quality.
+pub struct DualModeTileEngine {
+    approx: LutTileEngine,
+    exact: LutTileEngine,
+}
+
+impl DualModeTileEngine {
+    pub fn new(approx: &dyn MultiplierModel, exact: &dyn MultiplierModel) -> Self {
+        Self {
+            approx: LutTileEngine::new(approx),
+            exact: LutTileEngine::new(exact),
+        }
+    }
+}
+
+impl TileEngine for DualModeTileEngine {
+    fn name(&self) -> String {
+        format!("dual[{} | {}]", self.approx.name(), self.exact.name())
+    }
+
+    fn process_batch(&self, tiles: &[Tile]) -> Vec<TileOut> {
+        tiles
+            .iter()
+            .map(|t| {
+                let engine = if t.quality == Quality::Exact as u8 {
+                    &self.exact
+                } else {
+                    &self.approx
+                };
+                engine.process_batch(std::slice::from_ref(t)).pop().unwrap()
+            })
+            .collect()
+    }
+}
+
+/// Model-backed engine: calls the multiplier functional model directly
+/// (slow reference; used to validate the LUT and PJRT engines).
+pub struct ModelTileEngine {
+    model: Arc<dyn MultiplierModel>,
+}
+
+impl ModelTileEngine {
+    pub fn new(model: Arc<dyn MultiplierModel>) -> Self {
+        Self { model }
+    }
+}
+
+impl TileEngine for ModelTileEngine {
+    fn name(&self) -> String {
+        format!("model:{}", self.model.name())
+    }
+
+    fn process_batch(&self, tiles: &[Tile]) -> Vec<TileOut> {
+        tiles
+            .iter()
+            .map(|t| conv_tile(t, &|px, k| self.model.multiply(px as i64, k as i64)))
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::tiler::{reassemble, tile_image};
+    use crate::image::{edge_detect, synthetic_scene, Image};
+    use crate::multipliers::{build_design, DesignId};
+
+    /// Tiled LUT engine output must equal the whole-image convolution —
+    /// halos make tiling invisible.
+    #[test]
+    fn tiled_equals_whole_image() {
+        for id in [DesignId::Exact, DesignId::Proposed] {
+            let model = build_design(id, 8);
+            let img = synthetic_scene(150, 100, 4);
+            let reference = edge_detect(&img, model.as_ref());
+            let engine = LutTileEngine::new(model.as_ref());
+            let tiles = tile_image(0, &img);
+            let mut out = Image::new(150, 100);
+            for to in engine.process_batch(&tiles) {
+                reassemble(&mut out, &to);
+            }
+            assert_eq!(out, reference, "{id:?}");
+        }
+    }
+
+    #[test]
+    fn model_engine_equals_lut_engine() {
+        let model = build_design(DesignId::Proposed, 8);
+        let img = synthetic_scene(70, 70, 8);
+        let tiles = tile_image(1, &img);
+        let lut = LutTileEngine::new(model.as_ref());
+        let slow = ModelTileEngine::new(model);
+        let a = lut.process_batch(&tiles);
+        let b = slow.process_batch(&tiles);
+        for (x, y) in a.iter().zip(b.iter()) {
+            assert_eq!(x.data, y.data);
+        }
+    }
+}

@@ -1,0 +1,22 @@
+//! Job types exchanged with the coordinator.
+
+use crate::image::Image;
+use std::time::Duration;
+
+/// An edge-detection request.
+#[derive(Debug, Clone)]
+pub struct EdgeJob {
+    pub id: u64,
+    pub image: Image,
+}
+
+/// A completed job.
+#[derive(Debug)]
+pub struct JobResult {
+    pub id: u64,
+    pub edges: Image,
+    /// Wall-clock latency from submit to completion.
+    pub latency: Duration,
+    /// Number of tiles the job was split into.
+    pub tiles: usize,
+}

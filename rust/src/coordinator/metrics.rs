@@ -1,0 +1,85 @@
+//! Coordinator metrics: counters and latency/batch-size distributions.
+
+use crate::util::stats;
+use std::sync::Mutex;
+use std::time::Duration;
+
+#[derive(Default)]
+pub struct Metrics {
+    inner: Mutex<Inner>,
+}
+
+#[derive(Default)]
+struct Inner {
+    jobs_completed: u64,
+    tiles_processed: u64,
+    batches: u64,
+    batch_sizes: Vec<f64>,
+    job_latencies_ms: Vec<f64>,
+    busy: Duration,
+}
+
+/// Point-in-time copy of the metrics.
+#[derive(Debug, Clone)]
+pub struct MetricsSnapshot {
+    pub jobs_completed: u64,
+    pub tiles_processed: u64,
+    pub batches: u64,
+    pub mean_batch_size: f64,
+    pub latency_p50_ms: f64,
+    pub latency_p90_ms: f64,
+    pub latency_p99_ms: f64,
+    pub engine_busy: Duration,
+}
+
+impl Metrics {
+    pub fn record_batch(&self, size: usize, busy: Duration) {
+        let mut m = self.inner.lock().unwrap();
+        m.batches += 1;
+        m.tiles_processed += size as u64;
+        m.batch_sizes.push(size as f64);
+        m.busy += busy;
+    }
+
+    pub fn record_job(&self, latency: Duration) {
+        let mut m = self.inner.lock().unwrap();
+        m.jobs_completed += 1;
+        m.job_latencies_ms.push(latency.as_secs_f64() * 1e3);
+    }
+
+    pub fn snapshot(&self) -> MetricsSnapshot {
+        let m = self.inner.lock().unwrap();
+        let (p50, p90, p99) = stats::p50_p90_p99(&m.job_latencies_ms);
+        MetricsSnapshot {
+            jobs_completed: m.jobs_completed,
+            tiles_processed: m.tiles_processed,
+            batches: m.batches,
+            mean_batch_size: stats::mean(&m.batch_sizes),
+            latency_p50_ms: p50,
+            latency_p90_ms: p90,
+            latency_p99_ms: p99,
+            engine_busy: m.busy,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn snapshot_aggregates() {
+        let m = Metrics::default();
+        m.record_batch(4, Duration::from_millis(2));
+        m.record_batch(8, Duration::from_millis(3));
+        m.record_job(Duration::from_millis(10));
+        m.record_job(Duration::from_millis(20));
+        let s = m.snapshot();
+        assert_eq!(s.batches, 2);
+        assert_eq!(s.tiles_processed, 12);
+        assert_eq!(s.jobs_completed, 2);
+        assert!((s.mean_batch_size - 6.0).abs() < 1e-12);
+        assert!(s.latency_p50_ms >= 10.0 && s.latency_p99_ms <= 20.0 + 1e-9);
+        assert_eq!(s.engine_busy, Duration::from_millis(5));
+    }
+}

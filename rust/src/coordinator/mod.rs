@@ -1,0 +1,29 @@
+//! L3 serving coordinator — the hardware-oriented streaming framework of
+//! paper Fig. 8, generalised into a deployable service.
+//!
+//! Images arrive as jobs; the coordinator splits them into fixed-size
+//! tiles with a 1-pixel halo (the receptive field of the 3×3 Laplacian),
+//! pushes them through a *bounded* queue (backpressure, the role the
+//! paper's line buffers play), batches tiles dynamically, and dispatches
+//! batches to a [`engine::TileEngine`] — either the in-process LUT MAC
+//! path or the AOT-compiled JAX/Pallas executable via PJRT
+//! ([`crate::runtime`]). Outputs are reassembled in-place and each job's
+//! latency is recorded.
+//!
+//! ```text
+//!  submit(img) ─┬─ tiler ─▶ [bounded tile queue] ─▶ batcher ─▶ engine ─┐
+//!               │                                   (worker × W)      │
+//!               └──────────────── reassembly ◀──────────────────────── ┘
+//! ```
+
+pub mod engine;
+pub mod job;
+pub mod metrics;
+pub mod service;
+pub mod tiler;
+
+pub use engine::{DualModeTileEngine, LutTileEngine, ModelTileEngine, Quality, TileEngine};
+pub use job::{EdgeJob, JobResult};
+pub use metrics::MetricsSnapshot;
+pub use service::{Coordinator, CoordinatorConfig};
+pub use tiler::{reassemble, tile_image, Tile, TileOut, TILE_CORE, TILE_HALO, TILE_IN};

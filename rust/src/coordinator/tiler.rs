@@ -1,0 +1,175 @@
+//! Halo tiling and reassembly.
+//!
+//! A tile's *core* is the region it produces output for; its *input*
+//! includes a 1-pixel halo on every side (the 3×3 kernel's receptive
+//! field). Halos that fall outside the image are zero — identical to the
+//! zero padding of the whole-image convolution, so tiled results are
+//! bit-exact with the untiled path (verified by tests).
+
+use crate::image::Image;
+
+/// Output pixels per tile side.
+pub const TILE_CORE: usize = 64;
+/// Halo width on each side.
+pub const TILE_HALO: usize = 1;
+/// Input pixels per tile side.
+pub const TILE_IN: usize = TILE_CORE + 2 * TILE_HALO;
+
+/// An input tile: `TILE_IN × TILE_IN` samples centred on the core at
+/// `(x0, y0)` in job `job_id`.
+#[derive(Debug, Clone)]
+pub struct Tile {
+    pub job_id: u64,
+    /// Accuracy class requested by the job (see [`super::engine::Quality`]);
+    /// engines without quality support ignore it.
+    pub quality: u8,
+    pub x0: usize,
+    pub y0: usize,
+    /// Valid core size (edge tiles may be smaller than TILE_CORE).
+    pub core_w: usize,
+    pub core_h: usize,
+    /// Row-major `TILE_IN × TILE_IN` input window (zero outside image).
+    pub data: Vec<u8>,
+}
+
+/// A processed tile: the core output region.
+#[derive(Debug, Clone)]
+pub struct TileOut {
+    pub job_id: u64,
+    pub x0: usize,
+    pub y0: usize,
+    pub core_w: usize,
+    pub core_h: usize,
+    /// Row-major `core_h × core_w` output pixels.
+    pub data: Vec<u8>,
+}
+
+/// Split an image into halo tiles, row-major tile order.
+///
+/// Perf (EXPERIMENTS.md §Perf, iteration L3-3): rows inside the image are
+/// copied as slices (`copy_from_slice`); only rows/columns that cross the
+/// image border fall back to per-pixel zero padding.
+pub fn tile_image(job_id: u64, img: &Image) -> Vec<Tile> {
+    let mut tiles = Vec::new();
+    let (w, h) = (img.width, img.height);
+    let mut y0 = 0;
+    while y0 < h {
+        let core_h = TILE_CORE.min(h - y0);
+        let mut x0 = 0;
+        while x0 < w {
+            let core_w = TILE_CORE.min(w - x0);
+            let mut data = vec![0u8; TILE_IN * TILE_IN];
+            // source window: x in [x0-1, x0-1+TILE_IN), y likewise
+            let sx0 = x0 as isize - TILE_HALO as isize;
+            for ty in 0..TILE_IN {
+                let sy = y0 as isize + ty as isize - TILE_HALO as isize;
+                if sy < 0 || sy as usize >= h {
+                    continue; // stays zero
+                }
+                let row = &img.data[sy as usize * w..sy as usize * w + w];
+                let dst = &mut data[ty * TILE_IN..(ty + 1) * TILE_IN];
+                // clip [sx0, sx0+TILE_IN) to [0, w)
+                let src_lo = sx0.max(0) as usize;
+                let src_hi = ((sx0 + TILE_IN as isize) as usize).min(w);
+                if src_lo < src_hi {
+                    let dst_off = (src_lo as isize - sx0) as usize;
+                    dst[dst_off..dst_off + (src_hi - src_lo)]
+                        .copy_from_slice(&row[src_lo..src_hi]);
+                }
+            }
+            tiles.push(Tile { job_id, quality: 0, x0, y0, core_w, core_h, data });
+            x0 += TILE_CORE;
+        }
+        y0 += TILE_CORE;
+    }
+    tiles
+}
+
+/// Number of tiles [`tile_image`] produces for a `w × h` image.
+pub fn tile_count(w: usize, h: usize) -> usize {
+    w.div_ceil(TILE_CORE) * h.div_ceil(TILE_CORE)
+}
+
+/// Write a processed tile's core into the output image (row slice copies).
+pub fn reassemble(out: &mut Image, tile: &TileOut) {
+    let w = out.width;
+    for ty in 0..tile.core_h {
+        let dst_base = (tile.y0 + ty) * w + tile.x0;
+        out.data[dst_base..dst_base + tile.core_w]
+            .copy_from_slice(&tile.data[ty * tile.core_w..(ty + 1) * tile.core_w]);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::image::synth::synthetic_scene;
+
+    #[test]
+    fn tile_counts() {
+        assert_eq!(tile_count(64, 64), 1);
+        assert_eq!(tile_count(65, 64), 2);
+        assert_eq!(tile_count(128, 128), 4);
+        assert_eq!(tile_count(1, 1), 1);
+    }
+
+    #[test]
+    fn tiles_cover_image_exactly_once() {
+        let img = synthetic_scene(150, 90, 3);
+        let tiles = tile_image(7, &img);
+        assert_eq!(tiles.len(), tile_count(150, 90));
+        let mut covered = vec![0u32; 150 * 90];
+        for t in &tiles {
+            assert_eq!(t.job_id, 7);
+            for ty in 0..t.core_h {
+                for tx in 0..t.core_w {
+                    covered[(t.y0 + ty) * 150 + (t.x0 + tx)] += 1;
+                }
+            }
+        }
+        assert!(covered.iter().all(|&c| c == 1), "every pixel exactly once");
+    }
+
+    #[test]
+    fn halo_matches_padded_source() {
+        let img = synthetic_scene(100, 100, 5);
+        for t in tile_image(0, &img) {
+            for ty in 0..TILE_IN {
+                for tx in 0..TILE_IN {
+                    let sx = t.x0 as isize + tx as isize - 1;
+                    let sy = t.y0 as isize + ty as isize - 1;
+                    assert_eq!(t.data[ty * TILE_IN + tx], img.get_padded(sx, sy));
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn reassembly_roundtrip_identity() {
+        // Tiling then copying cores back must reproduce the image.
+        let img = synthetic_scene(130, 70, 9);
+        let tiles = tile_image(0, &img);
+        let mut out = Image::new(130, 70);
+        for t in tiles {
+            let mut core = vec![0u8; t.core_w * t.core_h];
+            for ty in 0..t.core_h {
+                for tx in 0..t.core_w {
+                    core[ty * t.core_w + tx] =
+                        t.data[(ty + TILE_HALO) * TILE_IN + tx + TILE_HALO];
+                }
+            }
+            reassemble(
+                &mut out,
+                &TileOut {
+                    job_id: t.job_id,
+                    x0: t.x0,
+                    y0: t.y0,
+                    core_w: t.core_w,
+                    core_h: t.core_h,
+                    data: core,
+                },
+            );
+        }
+        assert_eq!(out, img);
+    }
+}

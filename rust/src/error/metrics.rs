@@ -1,0 +1,146 @@
+//! ER / MED / NMED / MRED computation (paper Eqs. 7–8).
+//!
+//! * **ER** — error rate: fraction of input pairs with `approx ≠ exact`.
+//! * **MED** — mean |error distance|.
+//! * **NMED** — MED normalised by `max |exact product|` (= `2^(2N-2)` for
+//!   signed N-bit operands; 16 384 for N=8), as in Eq. (8).
+//! * **MRED** — mean relative error distance, Eq. (7); pairs with
+//!   `exact == 0` are skipped (the relative error is undefined there — the
+//!   convention used throughout the approximate-arithmetic literature).
+//! * **ME** — signed mean error (bias); not printed by the paper but
+//!   essential for diagnosing compensation quality.
+
+use crate::multipliers::MultiplierModel;
+use crate::util::prng::Xoshiro256;
+
+#[derive(Debug, Clone)]
+pub struct ErrorMetrics {
+    pub name: String,
+    /// Fraction in [0,1].
+    pub er: f64,
+    pub med: f64,
+    pub nmed: f64,
+    pub mred: f64,
+    /// Signed mean error (bias).
+    pub me: f64,
+    /// Largest |error| observed.
+    pub max_ed: i64,
+    /// Number of evaluated pairs.
+    pub pairs: usize,
+}
+
+fn accumulate(
+    name: String,
+    n: usize,
+    pairs: impl Iterator<Item = (i64, i64)>,
+    model: &dyn MultiplierModel,
+) -> ErrorMetrics {
+    let max_exact = 1i64 << (2 * n - 2);
+    let mut count = 0usize;
+    let mut errors = 0usize;
+    let mut sum_ed = 0f64;
+    let mut sum_e = 0f64;
+    let mut sum_red = 0f64;
+    let mut red_count = 0usize;
+    let mut max_ed = 0i64;
+    for (a, b) in pairs {
+        let exact = a * b;
+        let approx = model.multiply(a, b);
+        let e = approx - exact;
+        count += 1;
+        if e != 0 {
+            errors += 1;
+        }
+        sum_ed += e.abs() as f64;
+        sum_e += e as f64;
+        max_ed = max_ed.max(e.abs());
+        if exact != 0 {
+            sum_red += e.abs() as f64 / exact.abs() as f64;
+            red_count += 1;
+        }
+    }
+    let med = sum_ed / count as f64;
+    ErrorMetrics {
+        name,
+        er: errors as f64 / count as f64,
+        med,
+        nmed: med / max_exact as f64,
+        mred: sum_red / red_count.max(1) as f64,
+        me: sum_e / count as f64,
+        max_ed,
+        pairs: count,
+    }
+}
+
+/// Exhaustive metrics over all `4^N` signed pairs (use for N ≤ 10).
+pub fn error_metrics(model: &dyn MultiplierModel) -> ErrorMetrics {
+    let n = model.bits();
+    assert!(n <= 10, "exhaustive metrics limited to N<=10; use _sampled");
+    let half = 1i64 << (n - 1);
+    let pairs = (-half..half).flat_map(move |a| (-half..half).map(move |b| (a, b)));
+    accumulate(model.name(), n, pairs, model)
+}
+
+/// Monte-Carlo metrics over `samples` uniform pairs (wide operands).
+pub fn error_metrics_sampled(model: &dyn MultiplierModel, samples: usize, seed: u64) -> ErrorMetrics {
+    let n = model.bits();
+    let half = 1i64 << (n - 1);
+    let mut rng = Xoshiro256::seeded(seed);
+    let pairs = (0..samples).map(move |_| {
+        (rng.range_i64(-half, half - 1), rng.range_i64(-half, half - 1))
+    });
+    accumulate(model.name(), n, pairs, model)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::multipliers::{all_designs, build_design, DesignId};
+
+    #[test]
+    fn exact_multiplier_has_zero_error() {
+        let m = build_design(DesignId::Exact, 8);
+        let e = error_metrics(m.as_ref());
+        assert_eq!(e.er, 0.0);
+        assert_eq!(e.med, 0.0);
+        assert_eq!(e.mred, 0.0);
+        assert_eq!(e.max_ed, 0);
+        assert_eq!(e.pairs, 65536);
+    }
+
+    #[test]
+    fn sampled_converges_to_exhaustive() {
+        let m = build_design(DesignId::Proposed, 8);
+        let full = error_metrics(m.as_ref());
+        let sampled = error_metrics_sampled(m.as_ref(), 40_000, 7);
+        assert!((full.nmed - sampled.nmed).abs() / full.nmed < 0.1,
+            "nmed {} vs sampled {}", full.nmed, sampled.nmed);
+        assert!((full.mred - sampled.mred).abs() / full.mred < 0.15,
+            "mred {} vs sampled {}", full.mred, sampled.mred);
+    }
+
+    /// All approximate designs: ER in the high-90s% (paper Table 4),
+    /// NMED within an order of magnitude of the paper's column, MRED
+    /// between 10% and 80%.
+    #[test]
+    fn approximate_designs_metric_ranges() {
+        for (id, m) in all_designs(8) {
+            if id == DesignId::Exact {
+                continue;
+            }
+            let e = error_metrics(m.as_ref());
+            assert!(e.er > 0.9, "{id:?}: ER {}", e.er);
+            assert!(e.nmed > 0.001 && e.nmed < 0.05, "{id:?}: NMED {}", e.nmed);
+            assert!(e.mred > 0.05 && e.mred < 0.9, "{id:?}: MRED {}", e.mred);
+        }
+    }
+
+    #[test]
+    fn metrics_are_deterministic() {
+        let m = build_design(DesignId::Proposed, 8);
+        let a = error_metrics(m.as_ref());
+        let b = error_metrics(m.as_ref());
+        assert_eq!(a.nmed, b.nmed);
+        assert_eq!(a.er, b.er);
+    }
+}

@@ -1,0 +1,5 @@
+//! Error-metric harness (paper §5.1, Eqs. 7-8, Table 4).
+
+pub mod metrics;
+
+pub use metrics::{error_metrics, error_metrics_sampled, ErrorMetrics};

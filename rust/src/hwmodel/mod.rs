@@ -1,0 +1,175 @@
+//! Hardware (PPA) model — paper §5.2, Table 5 and Fig. 10.
+//!
+//! The paper synthesises Verilog with Synopsys DC on a UMC 90nm library;
+//! we do not have that testbed, so PPA comes from the unit-gate netlist
+//! models ([`crate::netlist`]) *linearly calibrated* to the paper's exact-
+//! multiplier row:
+//!
+//! * area: GE → μm², scale from Exact = 2204.75 μm²;
+//! * delay: unit delays → ns, scale from Exact = 3.28 ns;
+//! * power: switched-capacitance/cycle → μW, scale from Exact = 178.10 μW.
+//!
+//! Only *ratios between designs* are therefore claims of this reproduction
+//! (who is smaller/faster/lower-energy and by roughly what factor); the
+//! absolute numbers are the paper's own scale reflected back.
+
+use crate::multipliers::MultiplierModel;
+use crate::netlist::{power, timing};
+
+/// Paper Table 5, "Exact" row — the calibration anchor.
+pub const PAPER_EXACT_AREA_UM2: f64 = 2204.75;
+pub const PAPER_EXACT_POWER_UW: f64 = 178.10;
+pub const PAPER_EXACT_DELAY_NS: f64 = 3.28;
+
+/// Raw (unit-gate) hardware figures of one design.
+#[derive(Debug, Clone)]
+pub struct RawHw {
+    pub name: String,
+    /// Gate-equivalent area.
+    pub area_ge: f64,
+    /// Critical-path delay in unit delays.
+    pub delay_units: f64,
+    /// Switched capacitance per cycle (arbitrary units).
+    pub switched_cap: f64,
+    /// Logic gate count (diagnostics).
+    pub gates: usize,
+    /// Logic depth along the critical path.
+    pub depth: usize,
+}
+
+/// Calibrated figures in the paper's units.
+#[derive(Debug, Clone)]
+pub struct CalibratedHw {
+    pub name: String,
+    pub area_um2: f64,
+    pub power_uw: f64,
+    pub delay_ns: f64,
+    /// Power-delay product in fJ (μW·ns = fJ), as Table 5 reports.
+    pub pdp_fj: f64,
+}
+
+/// Number of random vectors used for activity estimation (Table 5 runs).
+pub const ACTIVITY_VECTORS: usize = 8192;
+
+/// Evaluate the raw unit-gate figures of a multiplier netlist.
+pub fn raw_hw(model: &dyn MultiplierModel, seed: u64) -> RawHw {
+    let nl = model.build_netlist();
+    let t = timing::analyze(&nl);
+    let p = power::estimate(&nl, ACTIVITY_VECTORS, seed);
+    RawHw {
+        name: model.name(),
+        area_ge: nl.area(),
+        delay_units: t.critical_delay,
+        switched_cap: p.switched_cap,
+        gates: nl.logic_gate_count(),
+        depth: t.depth,
+    }
+}
+
+/// Calibration factors derived from an exact-multiplier raw measurement.
+#[derive(Debug, Clone, Copy)]
+pub struct Calibration {
+    pub area_um2_per_ge: f64,
+    pub uw_per_cap: f64,
+    pub ns_per_unit: f64,
+}
+
+impl Calibration {
+    /// Anchor the scale on the exact design's raw figures.
+    pub fn from_exact(exact: &RawHw) -> Self {
+        Self {
+            area_um2_per_ge: PAPER_EXACT_AREA_UM2 / exact.area_ge,
+            uw_per_cap: PAPER_EXACT_POWER_UW / exact.switched_cap,
+            ns_per_unit: PAPER_EXACT_DELAY_NS / exact.delay_units,
+        }
+    }
+
+    pub fn apply(&self, raw: &RawHw) -> CalibratedHw {
+        let area_um2 = raw.area_ge * self.area_um2_per_ge;
+        let power_uw = raw.switched_cap * self.uw_per_cap;
+        let delay_ns = raw.delay_units * self.ns_per_unit;
+        CalibratedHw {
+            name: raw.name.clone(),
+            area_um2,
+            power_uw,
+            delay_ns,
+            pdp_fj: power_uw * delay_ns,
+        }
+    }
+}
+
+/// Full Table-5 style evaluation over the hardware design variants.
+pub fn evaluate_all(n: usize, seed: u64) -> Vec<(crate::multipliers::DesignId, CalibratedHw)> {
+    let designs = crate::multipliers::all_designs_hw(n);
+    let raws: Vec<_> = designs.iter().map(|(_, m)| raw_hw(m.as_ref(), seed)).collect();
+    let exact_raw = raws
+        .iter()
+        .zip(designs.iter())
+        .find(|(_, (id, _))| *id == crate::multipliers::DesignId::Exact)
+        .map(|(r, _)| r.clone())
+        .expect("exact design present");
+    let cal = Calibration::from_exact(&exact_raw);
+    designs
+        .iter()
+        .zip(raws.iter())
+        .map(|((id, _), raw)| (*id, cal.apply(raw)))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::multipliers::DesignId;
+
+    #[test]
+    fn calibration_reproduces_anchor() {
+        let rows = evaluate_all(8, 42);
+        let exact = rows.iter().find(|(id, _)| *id == DesignId::Exact).unwrap();
+        assert!((exact.1.area_um2 - PAPER_EXACT_AREA_UM2).abs() < 1e-6);
+        assert!((exact.1.power_uw - PAPER_EXACT_POWER_UW).abs() < 1e-6);
+        assert!((exact.1.delay_ns - PAPER_EXACT_DELAY_NS).abs() < 1e-6);
+    }
+
+    /// Table 5's headline shape: proposed has the lowest area, power and
+    /// PDP of all designs; exact the highest area and power.
+    #[test]
+    fn proposed_wins_table5() {
+        let rows = evaluate_all(8, 42);
+        let get = |id: DesignId| rows.iter().find(|(i, _)| *i == id).unwrap().1.clone();
+        let proposed = get(DesignId::Proposed);
+        let exact = get(DesignId::Exact);
+        for (id, hw) in &rows {
+            if *id != DesignId::Proposed {
+                assert!(proposed.area_um2 < hw.area_um2 + 1e-9, "area vs {id:?}");
+                assert!(proposed.power_uw < hw.power_uw + 1e-9, "power vs {id:?}");
+                assert!(proposed.pdp_fj < hw.pdp_fj + 1e-9, "pdp vs {id:?}");
+            }
+            if *id != DesignId::Exact {
+                assert!(hw.area_um2 < exact.area_um2 + 1e-9, "{id:?} area vs exact");
+            }
+        }
+    }
+
+    /// The paper's headline: double-digit percentage power and PDP savings
+    /// vs the best existing design [2] (paper: 14.39% power, 29.21% PDP).
+    #[test]
+    fn proposed_saves_vs_d2() {
+        let rows = evaluate_all(8, 42);
+        let get = |id: DesignId| rows.iter().find(|(i, _)| *i == id).unwrap().1.clone();
+        let proposed = get(DesignId::Proposed);
+        let d2 = get(DesignId::D2);
+        let power_saving = 1.0 - proposed.power_uw / d2.power_uw;
+        let pdp_saving = 1.0 - proposed.pdp_fj / d2.pdp_fj;
+        assert!(power_saving > 0.05, "power saving {power_saving:.3}");
+        assert!(pdp_saving > 0.10, "pdp saving {pdp_saving:.3}");
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let a = evaluate_all(8, 7);
+        let b = evaluate_all(8, 7);
+        for (x, y) in a.iter().zip(b.iter()) {
+            assert_eq!(x.1.power_uw, y.1.power_uw);
+        }
+    }
+}

@@ -1,0 +1,275 @@
+//! 3×3 spatial convolution with a pluggable multiplier (paper §4).
+//!
+//! The multiply in the MAC is the 8-bit *signed* multiplier under test.
+//! Fixed-point operand conditioning (the "custom convolution layer" of
+//! §4): image pixels are 0..255, which does not fit a signed 8-bit
+//! operand, so pixels enter the datapath pre-scaled by one right-shift
+//! (0..127); kernel coefficients are pre-scaled by `KERNEL_PRESCALE` (×8)
+//! so the products are MSB-aligned to the datapath — with the raw
+//! Laplacian coefficients (−1, 8) every product would live almost
+//! entirely inside the truncated LSP columns and any truncating design
+//! would destroy it. MSB-aligning the operands is exactly how a
+//! fixed-point designer integrates a truncated multiplier. The output is
+//! `|acc| >> (KERNEL_PRESCALE_SHIFT + ... )` rescaled back to the
+//! Laplacian response and clamped to 0..255 (edge magnitude). Every
+//! design, including the exact reference that PSNR is computed against,
+//! goes through the identical path, so comparisons are unaffected.
+//!
+//! Two hardware-faithful implementations are provided and tested equal:
+//!
+//! * [`conv3x3`] — direct zero-padded convolution (the Python reference
+//!   path of §4);
+//! * [`conv3x3_rowbuf`] — the streaming row-buffer datapath of Fig. 8:
+//!   two line buffers + a 3×3 window register file, one output per cycle.
+
+use super::pgm::Image;
+use crate::multipliers::MultiplierModel;
+
+/// The Laplacian kernel of Eq. (6).
+pub const LAPLACIAN: [[i64; 3]; 3] = [[-1, -1, -1], [-1, 8, -1], [-1, -1, -1]];
+
+/// Pixel pre-shift to fit the signed 8-bit operand range.
+pub const PIXEL_SHIFT: u32 = 1;
+
+/// Kernel coefficients are fed to the multiplier as `k << 3` (−8 / +64),
+/// MSB-aligning the products to the significant columns.
+pub const KERNEL_PRESCALE_SHIFT: u32 = 3;
+
+#[inline]
+fn prescale_kernel(k: i64) -> i64 {
+    k << KERNEL_PRESCALE_SHIFT
+}
+
+/// Output normalisation: the Laplacian response `Σ k·px` spans ±2040 and
+/// is conventionally displayed as `|response| / 8` (the centre weight), so
+/// the full response range maps exactly onto 0..255.
+pub const OUTPUT_NORM_SHIFT: u32 = 3;
+
+#[inline]
+fn postprocess(acc: i64) -> u8 {
+    // acc = Σ (k<<3)·(px>>1) = 4·Σ k·px; display |Σ k·px| >> 3.
+    (acc.abs() >> (KERNEL_PRESCALE_SHIFT - PIXEL_SHIFT + OUTPUT_NORM_SHIFT)).clamp(0, 255) as u8
+}
+
+/// Direct zero-padded 3×3 convolution using `model` for every multiply.
+pub fn conv3x3(img: &Image, kernel: &[[i64; 3]; 3], model: &dyn MultiplierModel) -> Image {
+    let mut out = Image::new(img.width, img.height);
+    for y in 0..img.height as isize {
+        for x in 0..img.width as isize {
+            let mut acc = 0i64;
+            for ky in -1..=1isize {
+                for kx in -1..=1isize {
+                    let px = (img.get_padded(x + kx, y + ky) >> PIXEL_SHIFT) as i64;
+                    let k = prescale_kernel(kernel[(ky + 1) as usize][(kx + 1) as usize]);
+                    acc += model.multiply(px, k); // pixel = operand A (varying bits)
+                }
+            }
+            out.set(x as usize, y as usize, postprocess(acc));
+        }
+    }
+    out
+}
+
+/// Direct convolution through a 256×256 product table (index =
+/// `(a_byte << 8) | b_byte`) — the fast path used by the coordinator and
+/// mirrored by the Pallas kernel.
+///
+/// Perf (EXPERIMENTS.md §Perf, iteration L3-2): per-coefficient 256-entry
+/// tap tables are folded once (baking in the pixel pre-shift), then the
+/// image interior runs on raw row slices with no padding branches; only
+/// the 1-pixel border uses the padded path.
+pub fn conv3x3_lut(img: &Image, kernel: &[[i64; 3]; 3], lut: &[i32]) -> Image {
+    assert_eq!(lut.len(), 65536);
+    // fold per-tap tables
+    let mut taps = [[0i32; 256]; 9];
+    for (t, tap) in taps.iter_mut().enumerate() {
+        let k = prescale_kernel(kernel[t / 3][t % 3]) as i8 as u8 as usize;
+        for px in 0..256usize {
+            tap[px] = lut[((px >> PIXEL_SHIFT) << 8) | k];
+        }
+    }
+    let (w, h) = (img.width, img.height);
+    let mut out = Image::new(w, h);
+    // border via the padded path
+    let mut border = |x: isize, y: isize, out: &mut Image| {
+        let mut acc = 0i64;
+        for ky in -1..=1isize {
+            for kx in -1..=1isize {
+                let px = img.get_padded(x + kx, y + ky) as usize;
+                acc += taps[((ky + 1) * 3 + kx + 1) as usize][px] as i64;
+            }
+        }
+        out.set(x as usize, y as usize, postprocess(acc));
+    };
+    for x in 0..w as isize {
+        border(x, 0, &mut out);
+        if h > 1 {
+            border(x, h as isize - 1, &mut out);
+        }
+    }
+    for y in 1..h.saturating_sub(1) as isize {
+        border(0, y, &mut out);
+        if w > 1 {
+            border(w as isize - 1, y, &mut out);
+        }
+    }
+    // interior on raw slices
+    if w >= 3 && h >= 3 {
+        for y in 1..h - 1 {
+            let r0 = &img.data[(y - 1) * w..(y - 1) * w + w];
+            let r1 = &img.data[y * w..y * w + w];
+            let r2 = &img.data[(y + 1) * w..(y + 1) * w + w];
+            let out_row = &mut out.data[y * w + 1..y * w + w - 1];
+            for (i, out_px) in out_row.iter_mut().enumerate() {
+                let acc = taps[0][r0[i] as usize] as i64
+                    + taps[1][r0[i + 1] as usize] as i64
+                    + taps[2][r0[i + 2] as usize] as i64
+                    + taps[3][r1[i] as usize] as i64
+                    + taps[4][r1[i + 1] as usize] as i64
+                    + taps[5][r1[i + 2] as usize] as i64
+                    + taps[6][r2[i] as usize] as i64
+                    + taps[7][r2[i + 1] as usize] as i64
+                    + taps[8][r2[i + 2] as usize] as i64;
+                *out_px = postprocess(acc);
+            }
+        }
+    }
+    out
+}
+
+/// Streaming row-buffer convolution (paper Fig. 8).
+///
+/// Pixels arrive in raster order; two line buffers hold the previous two
+/// scanlines and a 3-wide window register file slides across. Output
+/// pixel (x, y) is emitted when input pixel (x+1, y+1) arrives (one-pixel
+/// latency plus one line), with zero padding synthesised at the borders.
+pub fn conv3x3_rowbuf(img: &Image, kernel: &[[i64; 3]; 3], model: &dyn MultiplierModel) -> Image {
+    let (w, h) = (img.width, img.height);
+    let mut out = Image::new(w, h);
+    // line buffers: rows y-1 and y-2 relative to the arriving pixel
+    // (pre-shifted samples, the form they'd be stored in on-chip)
+    let mut line1: Vec<u8> = vec![0; w]; // previous row
+    let mut line2: Vec<u8> = vec![0; w]; // row before that
+    for y in 0..h + 1 {
+        // one extra row to flush the last output line
+        let mut win = [[0u8; 3]; 3]; // window registers [row][col]
+        for x in 0..w + 1 {
+            // shift window left
+            for row in win.iter_mut() {
+                row[0] = row[1];
+                row[1] = row[2];
+            }
+            // load new column: rows y-2, y-1 from line buffers, y from input
+            let (c2, c1, c0) = if x < w {
+                let fresh = if y < h { img.get(x, y) >> PIXEL_SHIFT } else { 0 };
+                let col = (line2[x], line1[x], fresh);
+                // rotate line buffers for this column
+                line2[x] = line1[x];
+                line1[x] = fresh;
+                col
+            } else {
+                (0, 0, 0) // right border flush
+            };
+            win[0][2] = c2;
+            win[1][2] = c1;
+            win[2][2] = c0;
+            // the window is centred on (x-1, y-1)
+            if y >= 1 && x >= 1 {
+                let (ox, oy) = (x - 1, y - 1);
+                if ox < w && oy < h {
+                    let mut acc = 0i64;
+                    for (ky, row) in win.iter().enumerate() {
+                        for (kx, &px) in row.iter().enumerate() {
+                            acc += model.multiply(px as i64, prescale_kernel(kernel[ky][kx]));
+                        }
+                    }
+                    out.set(ox, oy, postprocess(acc));
+                }
+            }
+        }
+    }
+    out
+}
+
+/// Edge detection (paper §4): Laplacian convolution + magnitude.
+pub fn edge_detect(img: &Image, model: &dyn MultiplierModel) -> Image {
+    conv3x3(img, &LAPLACIAN, model)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::image::synth::synthetic_scene;
+    use crate::multipliers::{build_design, DesignId};
+
+    #[test]
+    fn flat_image_has_no_edges() {
+        let mut img = Image::new(16, 16);
+        img.data.fill(100);
+        let exact = build_design(DesignId::Exact, 8);
+        let edges = edge_detect(&img, exact.as_ref());
+        // interior must be exactly zero (Laplacian of constant)
+        for y in 1..15 {
+            for x in 1..15 {
+                assert_eq!(edges.get(x, y), 0, "({x},{y})");
+            }
+        }
+        // borders see zero padding → strong response
+        assert!(edges.get(0, 0) > 0);
+    }
+
+    #[test]
+    fn step_edge_is_detected() {
+        let mut img = Image::new(16, 16);
+        for y in 0..16 {
+            for x in 0..16 {
+                img.set(x, y, if x < 8 { 20 } else { 220 });
+            }
+        }
+        let exact = build_design(DesignId::Exact, 8);
+        let edges = edge_detect(&img, exact.as_ref());
+        // the step column responds, flat interior does not
+        assert!(edges.get(7, 8) > 50, "edge response {}", edges.get(7, 8));
+        assert_eq!(edges.get(3, 8), 0);
+        assert_eq!(edges.get(12, 8), 0);
+    }
+
+    #[test]
+    fn rowbuf_equals_direct_exact() {
+        let img = synthetic_scene(33, 21, 3);
+        let exact = build_design(DesignId::Exact, 8);
+        let a = conv3x3(&img, &LAPLACIAN, exact.as_ref());
+        let b = conv3x3_rowbuf(&img, &LAPLACIAN, exact.as_ref());
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn rowbuf_equals_direct_approximate() {
+        let img = synthetic_scene(40, 27, 9);
+        let m = build_design(DesignId::Proposed, 8);
+        let a = conv3x3(&img, &LAPLACIAN, m.as_ref());
+        let b = conv3x3_rowbuf(&img, &LAPLACIAN, m.as_ref());
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn lut_equals_model_conv() {
+        let img = synthetic_scene(32, 32, 5);
+        let m = build_design(DesignId::Proposed, 8);
+        let lut = crate::multipliers::lut::product_table(m.as_ref());
+        let a = conv3x3(&img, &LAPLACIAN, m.as_ref());
+        let b = conv3x3_lut(&img, &LAPLACIAN, &lut);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn approximate_edges_resemble_exact() {
+        let img = synthetic_scene(64, 64, 11);
+        let exact = build_design(DesignId::Exact, 8);
+        let prop = build_design(DesignId::Proposed, 8);
+        let e = edge_detect(&img, exact.as_ref());
+        let p = edge_detect(&img, prop.as_ref());
+        let psnr = crate::image::psnr::psnr(&e, &p);
+        assert!(psnr > 12.0, "PSNR {psnr} too low — edge structure lost");
+    }
+}

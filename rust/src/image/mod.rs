@@ -1,0 +1,11 @@
+//! Image substrate for the edge-detection application (paper §4, Fig. 9).
+
+pub mod pgm;
+pub mod synth;
+pub mod conv;
+pub mod psnr;
+
+pub use conv::{conv3x3, conv3x3_lut, conv3x3_rowbuf, edge_detect, LAPLACIAN};
+pub use pgm::Image;
+pub use psnr::psnr;
+pub use synth::synthetic_scene;

@@ -1,0 +1,170 @@
+//! 8-bit grayscale images with binary PGM (P5) I/O — the interchange
+//! format the examples and the edge-detection CLI use.
+
+use std::io::{BufRead, Read, Write};
+use std::path::Path;
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct Image {
+    pub width: usize,
+    pub height: usize,
+    /// Row-major, `height * width` bytes.
+    pub data: Vec<u8>,
+}
+
+impl Image {
+    pub fn new(width: usize, height: usize) -> Self {
+        Self { width, height, data: vec![0; width * height] }
+    }
+
+    #[inline]
+    pub fn get(&self, x: usize, y: usize) -> u8 {
+        self.data[y * self.width + x]
+    }
+
+    #[inline]
+    pub fn set(&mut self, x: usize, y: usize, v: u8) {
+        self.data[y * self.width + x] = v;
+    }
+
+    /// Zero-padded access (paper §4: zero padding preserves boundaries).
+    #[inline]
+    pub fn get_padded(&self, x: isize, y: isize) -> u8 {
+        if x < 0 || y < 0 || x as usize >= self.width || y as usize >= self.height {
+            0
+        } else {
+            self.get(x as usize, y as usize)
+        }
+    }
+
+    /// Write binary PGM (P5).
+    pub fn write_pgm(&self, path: &Path) -> std::io::Result<()> {
+        if let Some(parent) = path.parent() {
+            std::fs::create_dir_all(parent)?;
+        }
+        let mut f = std::io::BufWriter::new(std::fs::File::create(path)?);
+        write!(f, "P5\n{} {}\n255\n", self.width, self.height)?;
+        f.write_all(&self.data)?;
+        Ok(())
+    }
+
+    /// Read binary PGM (P5), tolerating comment lines.
+    pub fn read_pgm(path: &Path) -> std::io::Result<Self> {
+        let mut reader = std::io::BufReader::new(std::fs::File::open(path)?);
+        let mut header_fields: Vec<String> = Vec::new();
+        // Parse "P5", width, height, maxval — whitespace/comment tolerant.
+        let mut line = String::new();
+        while header_fields.len() < 4 {
+            line.clear();
+            if reader.read_line(&mut line)? == 0 {
+                return Err(std::io::Error::new(
+                    std::io::ErrorKind::UnexpectedEof,
+                    "truncated PGM header",
+                ));
+            }
+            let no_comment = line.split('#').next().unwrap_or("");
+            header_fields.extend(no_comment.split_whitespace().map(String::from));
+        }
+        if header_fields[0] != "P5" {
+            return Err(std::io::Error::new(
+                std::io::ErrorKind::InvalidData,
+                "not a binary PGM (P5)",
+            ));
+        }
+        let parse = |s: &str| {
+            s.parse::<usize>().map_err(|e| {
+                std::io::Error::new(std::io::ErrorKind::InvalidData, format!("bad header: {e}"))
+            })
+        };
+        let width = parse(&header_fields[1])?;
+        let height = parse(&header_fields[2])?;
+        let maxval = parse(&header_fields[3])?;
+        if maxval != 255 {
+            return Err(std::io::Error::new(
+                std::io::ErrorKind::InvalidData,
+                "only 8-bit PGM supported",
+            ));
+        }
+        let mut data = vec![0u8; width * height];
+        reader.read_exact(&mut data)?;
+        Ok(Self { width, height, data })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pgm_roundtrip() {
+        let mut img = Image::new(13, 7);
+        for (i, px) in img.data.iter_mut().enumerate() {
+            *px = (i * 37 % 256) as u8;
+        }
+        let dir = std::env::temp_dir().join("sfcmul_pgm_test");
+        let path = dir.join("t.pgm");
+        img.write_pgm(&path).unwrap();
+        let back = Image::read_pgm(&path).unwrap();
+        assert_eq!(img, back);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn padded_access() {
+        let mut img = Image::new(2, 2);
+        img.set(0, 0, 9);
+        assert_eq!(img.get_padded(-1, 0), 0);
+        assert_eq!(img.get_padded(0, -1), 0);
+        assert_eq!(img.get_padded(2, 0), 0);
+        assert_eq!(img.get_padded(0, 0), 9);
+    }
+
+    #[test]
+    fn rejects_non_p5() {
+        let dir = std::env::temp_dir().join("sfcmul_pgm_bad");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("bad.pgm");
+        std::fs::write(&path, b"P2\n2 2\n255\n0 1 2 3\n").unwrap();
+        assert!(Image::read_pgm(&path).is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}
+
+#[cfg(test)]
+mod edge_case_tests {
+    use super::*;
+
+    #[test]
+    fn one_pixel_image_roundtrip() {
+        let mut img = Image::new(1, 1);
+        img.set(0, 0, 42);
+        let dir = std::env::temp_dir().join("sfcmul_pgm_1px");
+        let p = dir.join("t.pgm");
+        img.write_pgm(&p).unwrap();
+        assert_eq!(Image::read_pgm(&p).unwrap(), img);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn header_with_comments_parses() {
+        let dir = std::env::temp_dir().join("sfcmul_pgm_comments");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("c.pgm");
+        let mut bytes = b"P5\n# a comment\n2 2\n# another\n255\n".to_vec();
+        bytes.extend_from_slice(&[1, 2, 3, 4]);
+        std::fs::write(&p, &bytes).unwrap();
+        let img = Image::read_pgm(&p).unwrap();
+        assert_eq!(img.data, vec![1, 2, 3, 4]);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn truncated_payload_is_an_error() {
+        let dir = std::env::temp_dir().join("sfcmul_pgm_trunc");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("t.pgm");
+        std::fs::write(&p, b"P5\n4 4\n255\nxx").unwrap();
+        assert!(Image::read_pgm(&p).is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

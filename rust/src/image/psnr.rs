@@ -1,0 +1,64 @@
+//! Peak signal-to-noise ratio (paper §4, Fig. 9's fidelity metric).
+
+use super::pgm::Image;
+
+/// PSNR in dB between two same-sized 8-bit images:
+/// `10·log10(255² / MSE)`. Returns `f64::INFINITY` for identical images.
+pub fn psnr(reference: &Image, test: &Image) -> f64 {
+    assert_eq!(reference.width, test.width);
+    assert_eq!(reference.height, test.height);
+    let mse: f64 = reference
+        .data
+        .iter()
+        .zip(test.data.iter())
+        .map(|(&a, &b)| {
+            let d = a as f64 - b as f64;
+            d * d
+        })
+        .sum::<f64>()
+        / reference.data.len() as f64;
+    if mse == 0.0 {
+        f64::INFINITY
+    } else {
+        10.0 * (255.0f64 * 255.0 / mse).log10()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn identical_images_have_infinite_psnr() {
+        let img = crate::image::synth::synthetic_scene(32, 32, 1);
+        assert_eq!(psnr(&img, &img), f64::INFINITY);
+    }
+
+    #[test]
+    fn known_mse_psnr() {
+        let mut a = Image::new(10, 10);
+        let mut b = Image::new(10, 10);
+        a.data.fill(100);
+        b.data.fill(105); // MSE = 25
+        let expect = 10.0 * (255.0f64 * 255.0 / 25.0).log10();
+        assert!((psnr(&a, &b) - expect).abs() < 1e-12);
+    }
+
+    #[test]
+    fn more_noise_lower_psnr() {
+        let reference = crate::image::synth::synthetic_scene(64, 64, 2);
+        let mut small = reference.clone();
+        let mut big = reference.clone();
+        for (i, px) in small.data.iter_mut().enumerate() {
+            if i % 7 == 0 {
+                *px = px.wrapping_add(4);
+            }
+        }
+        for (i, px) in big.data.iter_mut().enumerate() {
+            if i % 3 == 0 {
+                *px = px.wrapping_add(40);
+            }
+        }
+        assert!(psnr(&reference, &small) > psnr(&reference, &big));
+    }
+}

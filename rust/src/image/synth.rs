@@ -1,0 +1,80 @@
+//! Deterministic synthetic test scenes.
+//!
+//! The paper's Fig. 9 uses camera photographs we do not have; PSNR there is
+//! computed *against the exact-multiplier edge map*, so any image with a
+//! mix of smooth gradients, hard edges and texture exercises the same
+//! comparison. `synthetic_scene` composes all three plus mild deterministic
+//! noise.
+
+use super::pgm::Image;
+use crate::util::prng::Xoshiro256;
+
+/// Composite scene: diagonal gradient background, filled rectangle and
+/// circle (hard edges), concentric sine rings (texture), salt noise.
+pub fn synthetic_scene(width: usize, height: usize, seed: u64) -> Image {
+    let mut img = Image::new(width, height);
+    let mut rng = Xoshiro256::seeded(seed);
+    for y in 0..height {
+        for x in 0..width {
+            // gradient background
+            let mut v = ((x + y) * 160 / (width + height)) as i32 + 40;
+            // rectangle
+            if x > width / 8 && x < width * 3 / 8 && y > height / 6 && y < height / 2 {
+                v = 210;
+            }
+            // circle
+            let (cx, cy) = (width as f64 * 0.68, height as f64 * 0.62);
+            let r = (width.min(height) as f64) * 0.22;
+            let d = ((x as f64 - cx).powi(2) + (y as f64 - cy).powi(2)).sqrt();
+            if d < r {
+                v = 25;
+            }
+            // texture rings in the lower-left quadrant
+            if x < width / 3 && y > height * 2 / 3 {
+                let ring = ((x as f64 * 0.7).sin() * (y as f64 * 0.5).cos() * 40.0) as i32;
+                v += ring;
+            }
+            img.set(x, y, v.clamp(0, 255) as u8);
+        }
+    }
+    // sparse salt-and-pepper noise (1/256 of pixels)
+    let noisy = width * height / 256;
+    for _ in 0..noisy {
+        let x = rng.below(width as u64) as usize;
+        let y = rng.below(height as u64) as usize;
+        img.set(x, y, if rng.chance(0.5) { 255 } else { 0 });
+    }
+    img
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scene_is_deterministic() {
+        let a = synthetic_scene(64, 64, 1);
+        let b = synthetic_scene(64, 64, 1);
+        assert_eq!(a, b);
+        let c = synthetic_scene(64, 64, 2);
+        assert_ne!(a, c);
+    }
+
+    #[test]
+    fn scene_has_dynamic_range_and_edges() {
+        let img = synthetic_scene(128, 128, 7);
+        let min = *img.data.iter().min().unwrap();
+        let max = *img.data.iter().max().unwrap();
+        assert!(min < 30 && max > 200, "range {min}..{max}");
+        // count strong horizontal transitions — edges must exist
+        let mut edges = 0;
+        for y in 0..img.height {
+            for x in 1..img.width {
+                if (img.get(x, y) as i32 - img.get(x - 1, y) as i32).abs() > 60 {
+                    edges += 1;
+                }
+            }
+        }
+        assert!(edges > 50, "expected many hard edges, got {edges}");
+    }
+}

@@ -1,0 +1,52 @@
+//! # sfcmul — Approximate Signed Multiplier with Sign-Focused Compressors
+//!
+//! Full-system reproduction of *"Approximate Signed Multiplier with
+//! Sign-Focused Compressor for Edge Detection Applications"* (CS.AR 2025)
+//! as a three-layer Rust + JAX + Pallas stack.
+//!
+//! The crate is organised bottom-up:
+//!
+//! * [`util`] — self-contained substrates (PRNG, property testing,
+//!   micro-benchmark harness, CLI parsing, JSON emission, thread pool) built
+//!   from scratch because the build environment is fully offline.
+//! * [`netlist`] — a miniature gate-level EDA toolkit: netlist construction,
+//!   bit-parallel functional simulation, static timing, unit-gate area and
+//!   switching-activity power models. This substitutes for the paper's
+//!   Synopsys DC + UMC 90nm flow.
+//! * [`circuits`] — generic adder/compressor building blocks (HA, FA, the
+//!   3:2 compressor of paper ref. [8], exact 4:2, ripple/carry-save adders,
+//!   Dadda-style column reduction).
+//! * [`compressors`] — every sign-focused compressor in the paper:
+//!   the proposed exact/approximate `A+B+C+1` and `A+B+C+D+1`, and the
+//!   baseline designs AC1..AC5 and the 4:2 designs of refs. [1]/[7]
+//!   (paper Tables 2 and 3), with probabilistic error statistics.
+//! * [`multipliers`] — the exact Baugh-Wooley multiplier (generic N), the
+//!   proposed truncated + compensated approximate multiplier, and every
+//!   baseline multiplier of Tables 4/5, each as both a gate-level netlist
+//!   and a fast bit-parallel functional model (cross-checked exhaustively).
+//! * [`error`] — ER / MED / NMED / MRED error-metric harness (Table 4).
+//! * [`hwmodel`] — unit-gate → calibrated area/power/delay/PDP model
+//!   (Table 5, Fig 10).
+//! * [`image`] — PGM I/O, synthetic scenes, Laplacian convolution (direct
+//!   and hardware-oriented row-buffer streaming), PSNR (Fig 9).
+//! * [`coordinator`] — the L3 serving layer: halo tiling, dynamic batching,
+//!   worker pool with backpressure, latency/throughput metrics (Fig 8).
+//! * [`runtime`] — PJRT client wrapper that loads the AOT-compiled JAX/Pallas
+//!   artifacts (`artifacts/*.hlo.txt`) and executes them from the Rust hot
+//!   path. Python never runs at request time.
+//! * [`tables`] — one generator per paper table/figure (T1..T5, F9, F10).
+
+pub mod util;
+pub mod netlist;
+pub mod circuits;
+pub mod compressors;
+pub mod multipliers;
+pub mod error;
+pub mod hwmodel;
+pub mod image;
+pub mod coordinator;
+pub mod runtime;
+pub mod tables;
+
+/// Crate-wide result alias.
+pub type Result<T> = anyhow::Result<T>;

@@ -1,0 +1,238 @@
+//! `sfcmul` — CLI for the approximate signed multiplier reproduction.
+//!
+//! Subcommands:
+//!   tables  --id <t1|t2|t3|t4|t5|f9|f10|all> [--seed S] [--out out/]
+//!   edge    --input img.pgm --output edges.pgm [--design proposed] [--engine lut|pjrt|model|rowbuf]
+//!   serve   --demo [--jobs N] [--workers W] [--engine lut|pjrt] [--design proposed]
+//!   ablate  [--seed S]                      (design-space ablation report)
+//!   dump-lut --design proposed --out artifacts/proposed_lut_rust.i32
+//!   hw      [--seed S]                      (raw unit-gate figures)
+//!   help
+
+use sfcmul::coordinator::{Coordinator, CoordinatorConfig, LutTileEngine, ModelTileEngine, TileEngine};
+use sfcmul::image::{conv3x3_rowbuf, edge_detect, synthetic_scene, Image, LAPLACIAN};
+use sfcmul::multipliers::{build_design, design_by_name, lut, DesignId};
+use sfcmul::runtime::{artifacts_dir, PjrtTileEngine};
+use sfcmul::util::cli::Args;
+use std::path::{Path, PathBuf};
+use std::sync::Arc;
+use std::time::Instant;
+
+const USAGE: &str = "\
+sfcmul — Approximate Signed Multiplier with Sign-Focused Compressors (CS.AR 2025 reproduction)
+
+USAGE: sfcmul <subcommand> [options]
+
+  tables   --id t1|t2|t3|t4|t5|f9|f10|all [--seed S] [--out DIR]
+           regenerate a paper table/figure
+  edge     --input in.pgm --output out.pgm [--design NAME] [--engine lut|model|rowbuf|pjrt]
+           run edge detection on an image (or --demo for the synthetic scene)
+  serve    --demo [--jobs N] [--workers W] [--batch B] [--engine lut|pjrt] [--design NAME]
+           run the streaming coordinator on a synthetic job stream, print metrics
+  ablate   [--seed S]
+           design-space ablation (compressor candidates, compensation, truncation)
+  dump-lut [--design NAME] [--out FILE]
+           export a design's 256x256 product table (cross-check with python)
+  hw       [--seed S]
+           raw unit-gate hardware figures per design
+
+designs: exact, proposed, d1, d2, d4, d5, d7, d12
+";
+
+fn main() {
+    let args = match Args::from_env() {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("argument error: {e}");
+            std::process::exit(2);
+        }
+    };
+    let code = match args.subcommand.as_deref() {
+        Some("tables") => cmd_tables(&args),
+        Some("edge") => cmd_edge(&args),
+        Some("serve") => cmd_serve(&args),
+        Some("ablate") => cmd_ablate(&args),
+        Some("dump-lut") => cmd_dump_lut(&args),
+        Some("hw") => cmd_hw(&args),
+        Some("help") | None => {
+            print!("{USAGE}");
+            0
+        }
+        Some(other) => {
+            eprintln!("unknown subcommand {other:?}\n{USAGE}");
+            2
+        }
+    };
+    std::process::exit(code);
+}
+
+fn seed_of(args: &Args) -> u64 {
+    args.get_parse("seed", 42u64).unwrap_or(42)
+}
+
+fn cmd_tables(args: &Args) -> i32 {
+    let id = args.get_or("id", "all").to_string();
+    let out_dir = PathBuf::from(args.get_or("out", "out"));
+    match sfcmul::tables::generate(&id, seed_of(args), &out_dir) {
+        Ok(text) => {
+            print!("{text}");
+            0
+        }
+        Err(e) => {
+            eprintln!("error: {e}");
+            1
+        }
+    }
+}
+
+fn load_model(args: &Args) -> Arc<dyn sfcmul::multipliers::MultiplierModel> {
+    let name = args.get_or("design", "proposed");
+    design_by_name(name, 8).unwrap_or_else(|| {
+        eprintln!("unknown design {name:?}; using proposed");
+        build_design(DesignId::Proposed, 8)
+    })
+}
+
+fn make_engine(args: &Args, model: &Arc<dyn sfcmul::multipliers::MultiplierModel>) -> Arc<dyn TileEngine> {
+    match args.get_or("engine", "lut") {
+        "pjrt" => {
+            let table = lut::product_table(model.as_ref());
+            match PjrtTileEngine::new(&artifacts_dir(), &model.name(), table) {
+                Ok(e) => Arc::new(e),
+                Err(e) => {
+                    eprintln!("pjrt engine unavailable ({e}); falling back to lut");
+                    Arc::new(LutTileEngine::new(model.as_ref()))
+                }
+            }
+        }
+        "model" => Arc::new(ModelTileEngine::new(model.clone())),
+        _ => Arc::new(LutTileEngine::new(model.as_ref())),
+    }
+}
+
+fn cmd_edge(args: &Args) -> i32 {
+    let model = load_model(args);
+    let img = if args.flag("demo") || args.get("input").is_none() {
+        synthetic_scene(256, 256, seed_of(args))
+    } else {
+        match Image::read_pgm(Path::new(args.get("input").unwrap())) {
+            Ok(i) => i,
+            Err(e) => {
+                eprintln!("cannot read input: {e}");
+                return 1;
+            }
+        }
+    };
+    let t0 = Instant::now();
+    let edges = if args.get_or("engine", "lut") == "rowbuf" {
+        conv3x3_rowbuf(&img, &LAPLACIAN, model.as_ref())
+    } else {
+        let engine = make_engine(args, &model);
+        let coord = Coordinator::start(engine, CoordinatorConfig::default());
+        coord.run(img.clone()).edges
+    };
+    let dt = t0.elapsed();
+    let out = PathBuf::from(args.get_or("output", "out/edges.pgm"));
+    if let Err(e) = edges.write_pgm(&out) {
+        eprintln!("cannot write output: {e}");
+        return 1;
+    }
+    // PSNR vs exact for context
+    let exact = build_design(DesignId::Exact, 8);
+    let reference = edge_detect(&img, exact.as_ref());
+    println!(
+        "{}x{} image, design {}, {:.1} ms -> {} (PSNR vs exact: {:.2} dB)",
+        img.width,
+        img.height,
+        model.name(),
+        dt.as_secs_f64() * 1e3,
+        out.display(),
+        sfcmul::image::psnr(&reference, &edges)
+    );
+    0
+}
+
+fn cmd_serve(args: &Args) -> i32 {
+    let model = load_model(args);
+    let engine = make_engine(args, &model);
+    let workers = args.get_parse("workers", 4usize).unwrap_or(4);
+    let batch = args.get_parse("batch", 8usize).unwrap_or(8);
+    let jobs = args.get_parse("jobs", 64usize).unwrap_or(64);
+    let coord = Coordinator::start(
+        engine,
+        CoordinatorConfig { workers, queue_capacity: 256, max_batch: batch },
+    );
+    println!(
+        "serving {jobs} synthetic jobs through engine {} ({workers} workers, batch {batch})",
+        coord.engine_name()
+    );
+    let t0 = Instant::now();
+    let handles: Vec<_> = (0..jobs)
+        .map(|i| coord.submit(synthetic_scene(256, 256, i as u64)))
+        .collect();
+    let mut px_total = 0usize;
+    for h in handles {
+        let r = h.wait();
+        px_total += r.edges.width * r.edges.height;
+    }
+    let wall = t0.elapsed();
+    let m = coord.shutdown();
+    println!(
+        "completed {} jobs / {} tiles in {:.2} s  ({:.1} Mpix/s, mean batch {:.2})",
+        m.jobs_completed,
+        m.tiles_processed,
+        wall.as_secs_f64(),
+        px_total as f64 / wall.as_secs_f64() / 1e6,
+        m.mean_batch_size
+    );
+    println!(
+        "latency p50/p90/p99 = {:.1} / {:.1} / {:.1} ms; engine busy {:.2} s",
+        m.latency_p50_ms,
+        m.latency_p90_ms,
+        m.latency_p99_ms,
+        m.engine_busy.as_secs_f64()
+    );
+    0
+}
+
+fn cmd_ablate(args: &Args) -> i32 {
+    print!("{}", sfcmul::tables::ablation_report(seed_of(args)));
+    0
+}
+
+fn cmd_dump_lut(args: &Args) -> i32 {
+    let model = load_model(args);
+    let default_out = format!(
+        "artifacts/{}_lut_rust.i32",
+        args.get_or("design", "proposed").to_lowercase()
+    );
+    let out = PathBuf::from(args.get_or("out", &default_out));
+    let table = lut::product_table(model.as_ref());
+    match lut::write_i32_le(&out, &table) {
+        Ok(()) => {
+            println!("wrote {} (design {})", out.display(), model.name());
+            0
+        }
+        Err(e) => {
+            eprintln!("error: {e}");
+            1
+        }
+    }
+}
+
+fn cmd_hw(args: &Args) -> i32 {
+    println!("raw unit-gate figures (seed {}):", seed_of(args));
+    for (id, m) in sfcmul::multipliers::all_designs_hw(8) {
+        let raw = sfcmul::hwmodel::raw_hw(m.as_ref(), seed_of(args));
+        println!(
+            "  {:<17} area {:>6.1} GE  delay {:>5.1}  swcap {:>7.2}  gates {:>4}  depth {:>2}",
+            id.paper_name(),
+            raw.area_ge,
+            raw.delay_units,
+            raw.switched_cap,
+            raw.gates,
+            raw.depth
+        );
+    }
+    0
+}

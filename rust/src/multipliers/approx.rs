@@ -1,0 +1,549 @@
+//! The proposed truncated + compensated approximate signed multiplier
+//! framework (paper §3.2–3.3, Figs 5 and 6), generic over N and over the
+//! compressor designs occupying the CSP slots.
+//!
+//! The architecture is computed once as a *plan* — a list of structural
+//! terms — which both the fast functional model and the netlist builder
+//! interpret. This guarantees the two forms implement the same circuit;
+//! [`crate::multipliers::verify::exhaustive_check`] then proves it
+//! bit-exactly for N=8.
+//!
+//! Plan for width N (default configuration, see DESIGN.md §Reconstruction):
+//!
+//! * columns `0 .. N-2` (LSP, N-1 columns): truncated (paper §3.3);
+//! * compensation: constant product bit at column `N-2` plus the constant
+//!   `1` absorbed by the column-(N-1) sign-focused compressor — together
+//!   `2^(N-1) + 2^(N-2)`, matching `T_T` of Eq. (5);
+//! * column `N-1` (CSP-lo): `A+B+C+D+1` sign-focused compressor over
+//!   (comp const; A=NAND(a0,b_{N-1}); the first three AND products);
+//!   leftovers to the reduction tree;
+//! * column `N` (CSP-hi): `A+B+C+D+1` over (BW const; A=NAND(a1,b_{N-1});
+//!   three ANDs); `NAND(a_{N-1}, b1)` is *replaced by constant 1*
+//!   (§3.2, P(NAND=1)=3/4) which fuels the third sign-focused compressor,
+//!   an `A+B+C+1` over the next two ANDs;
+//! * columns `N+1 .. 2N-2` (MSP): exact partial products reduced with the
+//!   3:2 compressors of ref. [8]; BW constant at column `2N-1`;
+//! * final stage: carry-save/ripple summation (inside `reduce_columns`).
+
+use super::traits::{from_bits, pp_kind, to_bits, MultiplierModel, PpKind};
+use crate::circuits::{reduce_columns, Columns};
+use crate::compressors::{Abc1Compressor, Abcd1Compressor};
+use crate::netlist::{Netlist, SigId};
+use std::sync::Arc;
+
+/// Error-compensation scheme (ablation knob; `Paper` is the default).
+///
+/// Eq. (5) asks for `T_T ≈ 2^(N-1) + 2^(N-2)`. In the shipped
+/// reconstruction the first constant is the `+1` absorbed by the
+/// column-(N-1) sign-focused compressor, and the second is the *expected
+/// surplus* of the §3.2 NAND→1 replacement at column N:
+/// `E[1 − NAND] · 2^N = 2^N/4 = 2^(N-2)` — the two mechanisms the paper
+/// describes compose to exactly the compensation Eq. (5) derives.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Compensation {
+    /// No compensation: no CSP-lo compressor constant, no extra bits.
+    None,
+    /// The shipped scheme: CSP-lo compressor constant (2^(N-1)) +
+    /// replacement surplus (expected 2^(N-2)).
+    Paper,
+    /// Literal §3.3 reading: `Paper` plus a standalone constant bit at
+    /// column N-2 (over-compensates when the replacement is also on;
+    /// kept for the ablation bench).
+    Literal,
+}
+
+/// What occupies the third (A+B+C+1) compressor slot at column N, which
+/// receives the §3.2 NAND→1 constant and the column's leftover AND
+/// products (two of them at N=8 for 4-input CSP designs, three for
+/// 3-input designs).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Sf3Mode {
+    /// The configured `abc1` design cell.
+    DesignCell,
+    /// An exact `x+y(+z)+1` encoder (carry=OR/majority, sum=XNOR) — the
+    /// "few adders" reading of §3.3; zero compressor error in this slot.
+    ExactEncoder,
+    /// No third compressor; the NAND product stays in the reduction tree
+    /// (disables the replacement).
+    Skip,
+}
+
+/// How the low (LSP) columns are handled. `Truncate` is the paper's
+/// proposed scheme; the other modes model the *original* architectures of
+/// the baseline designs for the Table-5 hardware comparison (the baseline
+/// papers do not truncate — they approximate or keep the low half).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum LspMode {
+    /// Drop the partial products of the `truncate_cols` lowest columns.
+    Truncate,
+    /// Keep every LSP column but compress it to a single bit with an OR
+    /// tree (the cheap approximate-lower-half style of refs. [4]/[12]).
+    OrCompress,
+    /// Keep the LSP exact (full reduction) — ref. [1]'s accurate mode.
+    Exact,
+}
+
+/// Configuration of the approximate-multiplier framework. Instantiating it
+/// with each baseline compressor reproduces the paper's §5.1 comparison.
+#[derive(Clone)]
+pub struct ApproxMulConfig {
+    pub name: String,
+    pub n: usize,
+    /// Design for the two `A+B+C+D+1` CSP slots.
+    pub abcd1: Arc<dyn Abcd1Compressor>,
+    /// Design for the `A+B+C+1` CSP slot.
+    pub abc1: Arc<dyn Abc1Compressor>,
+    /// 3-input baselines (Table 2 designs) have no 4-input form: when set,
+    /// the ABCD1 slots run the `abc1` design over (A,B,C) and push D to
+    /// the exact reduction tree.
+    pub abcd_as_abc: bool,
+    /// Number of truncated low columns (paper: N-1). Only meaningful with
+    /// `LspMode::Truncate`.
+    pub truncate_cols: usize,
+    /// Compensation scheme.
+    pub compensation: Compensation,
+    /// LSP handling (Table-5 baseline architecture variants).
+    pub lsp: LspMode,
+    /// Third-compressor slot behaviour.
+    pub sf3: Sf3Mode,
+}
+
+impl ApproxMulConfig {
+    /// Paper-default skeleton; callers fill in the compressor designs.
+    pub fn paper_default(
+        name: &str,
+        n: usize,
+        abcd1: Arc<dyn Abcd1Compressor>,
+        abc1: Arc<dyn Abc1Compressor>,
+        abcd_as_abc: bool,
+    ) -> Self {
+        assert!((4..=32).contains(&n), "supported widths: 4..=32");
+        Self {
+            name: name.to_string(),
+            n,
+            abcd1,
+            abc1,
+            abcd_as_abc,
+            truncate_cols: n - 1,
+            compensation: Compensation::Paper,
+            lsp: LspMode::Truncate,
+            sf3: Sf3Mode::DesignCell,
+        }
+    }
+}
+
+/// A partial product by coordinates; kind derives from Baugh-Wooley rules.
+type Pp = (usize, usize);
+
+/// Structural plan shared by the functional and netlist interpreters.
+struct Plan {
+    /// Plain partial products routed to the reduction tree: (i, j, weight).
+    loose_pps: Vec<(Pp, usize)>,
+    /// Constant one-bits at given weights (compensation, BW constants).
+    const_bits: Vec<usize>,
+    /// `A+B+C+D+1` compressor instances: (column, A, [B, C, D]).
+    sf4: Vec<(usize, Pp, [Option<Pp>; 3])>,
+    /// `A+B+C+1` compressor instances: (column, [A, B, C], use-exact-cell).
+    sf3: Vec<(usize, [Option<Pp>; 3], bool)>,
+    /// OR-compressed columns: (weight, partial products OR-ed together).
+    or_groups: Vec<(usize, Vec<Pp>)>,
+}
+
+fn build_plan(cfg: &ApproxMulConfig) -> Plan {
+    let n = cfg.n;
+    let mut plan = Plan {
+        loose_pps: Vec::new(),
+        const_bits: Vec::new(),
+        sf4: Vec::new(),
+        sf3: Vec::new(),
+        or_groups: Vec::new(),
+    };
+
+    // Partial products by column, ANDs and NANDs separated, in a fixed
+    // deterministic order (increasing i).
+    let mut col_and: Vec<Vec<Pp>> = vec![Vec::new(); 2 * n];
+    let mut col_nand: Vec<Vec<Pp>> = vec![Vec::new(); 2 * n];
+    for i in 0..n {
+        for j in 0..n {
+            let w = i + j;
+            match pp_kind(i, j, n) {
+                PpKind::And => col_and[w].push((i, j)),
+                PpKind::Nand => col_nand[w].push((i, j)),
+            }
+        }
+    }
+
+    let csp_lo = n - 1;
+    let csp_hi = n;
+
+    for w in 0..2 * n {
+        let mut ands = std::mem::take(&mut col_and[w]);
+        let mut nands = std::mem::take(&mut col_nand[w]);
+        if w < n - 1 && w != csp_lo && w != csp_hi {
+            match cfg.lsp {
+                LspMode::Truncate if w < cfg.truncate_cols => continue,
+                LspMode::OrCompress => {
+                    let group: Vec<Pp> = ands.drain(..).chain(nands.drain(..)).collect();
+                    if !group.is_empty() {
+                        plan.or_groups.push((w, group));
+                    }
+                    continue;
+                }
+                _ => {} // Exact, or Truncate columns above truncate_cols
+            }
+        }
+        if w == csp_lo {
+            // CSP-lo: SF4 #1 — A = NAND(a0, b_{n-1}) (first nand), B,C,D =
+            // first three ANDs. Its +1 *is* the column-(N-1) compensation
+            // constant, so this compressor exists only under the paper's
+            // truncate-and-compensate scheme; other LSP modes have no
+            // constant here and route the column to the reduction tree.
+            if cfg.lsp == LspMode::Truncate && cfg.compensation != Compensation::None {
+                let a = remove_pp(&mut nands, (0, n - 1)).expect("csp-lo NAND");
+                let b = take_first(&mut ands);
+                let c = take_first(&mut ands);
+                let d = take_first(&mut ands);
+                push_sf4(cfg, &mut plan, w, a, [b, c, d]);
+            }
+        } else if w == csp_hi {
+            // CSP-hi: SF4 #2 — A = NAND(a1, b_{n-1}), +1 = BW constant.
+            let a = remove_pp(&mut nands, (1, n - 1)).expect("csp-hi NAND");
+            let b = take_first(&mut ands);
+            let c = take_first(&mut ands);
+            let d = take_first(&mut ands);
+            push_sf4(cfg, &mut plan, w, a, [b, c, d]);
+            // NAND(a_{n-1}, b1) → constant 1 feeding SF3 (§3.2), or kept
+            // loose when the third slot is skipped.
+            let low_nand = remove_pp(&mut nands, (n - 1, 1));
+            match cfg.sf3 {
+                Sf3Mode::Skip => {
+                    if let Some(pp) = low_nand {
+                        plan.loose_pps.push((pp, w));
+                    }
+                }
+                mode => {
+                    debug_assert!(low_nand.is_some());
+                    let x = take_first(&mut ands);
+                    let y = take_first(&mut ands);
+                    let z = take_first(&mut ands);
+                    plan.sf3.push((w, [x, y, z], mode == Sf3Mode::ExactEncoder));
+                }
+            }
+        }
+        // Whatever remains in this column goes to the exact reduction tree.
+        for pp in ands.drain(..).chain(nands.drain(..)) {
+            plan.loose_pps.push((pp, w));
+        }
+    }
+
+    // Baugh-Wooley constants: column 2n-1 always; column n only when no
+    // CSP compressor absorbed it (the SF4 at column n *is* that constant).
+    plan.const_bits.push(2 * n - 1);
+
+    // Standalone compensation bit (only in the literal §3.3 reading, and
+    // only when the LSP is actually truncated).
+    if cfg.compensation == Compensation::Literal && cfg.lsp == LspMode::Truncate && n >= 2 {
+        plan.const_bits.push(n - 2);
+    }
+
+    plan
+}
+
+fn take_first(v: &mut Vec<Pp>) -> Option<Pp> {
+    if v.is_empty() {
+        None
+    } else {
+        Some(v.remove(0))
+    }
+}
+
+fn remove_pp(v: &mut Vec<Pp>, pp: Pp) -> Option<Pp> {
+    v.iter().position(|&x| x == pp).map(|idx| v.remove(idx))
+}
+
+fn push_sf4(cfg: &ApproxMulConfig, plan: &mut Plan, w: usize, a: Pp, bcd: [Option<Pp>; 3]) {
+    if cfg.abcd_as_abc {
+        // 3-input design in the 4-input slot: (A, B, C) through the
+        // compressor, D loose.
+        plan.sf3.push((w, [Some(a), bcd[0], bcd[1]], false));
+        if let Some(d) = bcd[2] {
+            plan.loose_pps.push((d, w));
+        }
+        // Mark the SF3 as "has a real negative A" by construction — the
+        // design's value() handles it; nothing else to do.
+    } else {
+        plan.sf4.push((w, a, bcd));
+    }
+}
+
+/// The approximate signed multiplier: fast model + netlist from one plan.
+pub struct ApproxSignedMultiplier {
+    cfg: ApproxMulConfig,
+    plan: Plan,
+}
+
+impl ApproxSignedMultiplier {
+    pub fn new(cfg: ApproxMulConfig) -> Self {
+        let plan = build_plan(&cfg);
+        Self { cfg, plan }
+    }
+
+    pub fn config(&self) -> &ApproxMulConfig {
+        &self.cfg
+    }
+
+    #[inline]
+    fn pp_bit(&self, ua: u64, ub: u64, pp: Pp) -> bool {
+        super::traits::pp_value(ua, ub, pp.0, pp.1, self.cfg.n)
+    }
+
+    #[inline]
+    fn pp_bit_opt(&self, ua: u64, ub: u64, pp: Option<Pp>) -> bool {
+        pp.map(|p| self.pp_bit(ua, ub, p)).unwrap_or(false)
+    }
+}
+
+impl MultiplierModel for ApproxSignedMultiplier {
+    fn name(&self) -> String {
+        self.cfg.name.clone()
+    }
+
+    fn bits(&self) -> usize {
+        self.cfg.n
+    }
+
+    fn multiply(&self, a: i64, b: i64) -> i64 {
+        let n = self.cfg.n;
+        let ua = to_bits(a, n);
+        let ub = to_bits(b, n);
+        let mut acc: u64 = 0;
+        for &(pp, w) in &self.plan.loose_pps {
+            if self.pp_bit(ua, ub, pp) {
+                acc = acc.wrapping_add(1 << w);
+            }
+        }
+        for &w in &self.plan.const_bits {
+            acc = acc.wrapping_add(1 << w);
+        }
+        for &(w, pa, bcd) in &self.plan.sf4 {
+            let va = self.pp_bit(ua, ub, pa);
+            let vb = self.pp_bit_opt(ua, ub, bcd[0]);
+            let vc = self.pp_bit_opt(ua, ub, bcd[1]);
+            let vd = self.pp_bit_opt(ua, ub, bcd[2]);
+            let v = self.cfg.abcd1.value(va, vb, vc, vd) as u64;
+            acc = acc.wrapping_add(v << w);
+        }
+        for &(w, abc, exact_cell) in &self.plan.sf3 {
+            let va = self.pp_bit_opt(ua, ub, abc[0]);
+            let vb = self.pp_bit_opt(ua, ub, abc[1]);
+            let vc = self.pp_bit_opt(ua, ub, abc[2]);
+            let v = if exact_cell {
+                1 + va as u64 + vb as u64 + vc as u64
+            } else {
+                self.cfg.abc1.value(va, vb, vc) as u64
+            };
+            acc = acc.wrapping_add(v << w);
+        }
+        for (w, group) in &self.plan.or_groups {
+            if group.iter().any(|&pp| self.pp_bit(ua, ub, pp)) {
+                acc = acc.wrapping_add(1 << w);
+            }
+        }
+        from_bits(acc, 2 * n)
+    }
+
+    fn build_netlist(&self) -> Netlist {
+        let n = self.cfg.n;
+        let mut nl = Netlist::new(&format!("approx_{}_{n}x{n}", self.cfg.name));
+        let a_bus = nl.input_bus("a", n);
+        let b_bus = nl.input_bus("b", n);
+        let mut cols = Columns::new(2 * n);
+
+        let pp_sig = |nl: &mut Netlist, pp: Pp| -> SigId {
+            match pp_kind(pp.0, pp.1, n) {
+                PpKind::And => nl.and2(a_bus[pp.0], b_bus[pp.1]),
+                PpKind::Nand => nl.nand2(a_bus[pp.0], b_bus[pp.1]),
+            }
+        };
+        let pp_sig_opt = |nl: &mut Netlist, pp: Option<Pp>| -> SigId {
+            match pp {
+                Some(p) => pp_sig(nl, p),
+                None => nl.const0(),
+            }
+        };
+
+        for &(pp, w) in &self.plan.loose_pps {
+            let s = pp_sig_opt(&mut nl, Some(pp));
+            cols.push(w, s);
+        }
+        for &w in &self.plan.const_bits {
+            let k = nl.const1();
+            cols.push(w, k);
+        }
+        for &(w, pa, bcd) in &self.plan.sf4 {
+            let sa = pp_sig_opt(&mut nl, Some(pa));
+            let sb = pp_sig_opt(&mut nl, bcd[0]);
+            let sc = pp_sig_opt(&mut nl, bcd[1]);
+            let sd = pp_sig_opt(&mut nl, bcd[2]);
+            for ob in self.cfg.abcd1.build(&mut nl, sa, sb, sc, sd) {
+                cols.push(w + ob.rel_weight as usize, ob.sig);
+            }
+        }
+        for &(w, abc, exact_cell) in &self.plan.sf3 {
+            let sa = pp_sig_opt(&mut nl, abc[0]);
+            let sb = pp_sig_opt(&mut nl, abc[1]);
+            let sc = pp_sig_opt(&mut nl, abc[2]);
+            let cell: &dyn Abc1Compressor = if exact_cell {
+                &crate::compressors::exact::ExactAbc1
+            } else {
+                self.cfg.abc1.as_ref()
+            };
+            for ob in cell.build(&mut nl, sa, sb, sc) {
+                cols.push(w + ob.rel_weight as usize, ob.sig);
+            }
+        }
+        for (w, group) in &self.plan.or_groups {
+            let sigs: Vec<SigId> =
+                group.iter().map(|&pp| pp_sig_opt(&mut nl, Some(pp))).collect();
+            let or = nl.or_many(&sigs);
+            cols.push(*w, or);
+        }
+
+        let product = reduce_columns(&mut nl, cols);
+        // Low truncated bits are constant zero in the product bus.
+        let zero = nl.const0();
+        let mut out = vec![zero; 2 * n];
+        for (w, &sig) in product.iter().enumerate().take(2 * n) {
+            out[w] = sig;
+        }
+        // Columns below the lowest populated weight never appear in the
+        // reduction result indices — reduce_columns returns a full-width
+        // bus, so just take it (bits for empty low columns are const0 by
+        // construction of the final ripple stage).
+        nl.output_bus("p", &out);
+        nl.fold_constants();
+        nl.prune_dead();
+        nl
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compressors::exact::{ExactAbc1, ExactAbcd1};
+    use crate::compressors::proposed::{ProposedApproxAbc1, ProposedApproxAbcd1};
+    use crate::multipliers::verify::exhaustive_check;
+
+    fn proposed(n: usize) -> ApproxSignedMultiplier {
+        ApproxSignedMultiplier::new(ApproxMulConfig::paper_default(
+            "Proposed",
+            n,
+            Arc::new(ProposedApproxAbcd1),
+            Arc::new(ProposedApproxAbc1),
+            false,
+        ))
+    }
+
+    #[test]
+    fn netlist_matches_model_exhaustively_n8() {
+        exhaustive_check(&proposed(8)).unwrap();
+    }
+
+    #[test]
+    fn netlist_matches_model_exhaustively_n4_n6() {
+        exhaustive_check(&proposed(4)).unwrap();
+        exhaustive_check(&proposed(6)).unwrap();
+    }
+
+    #[test]
+    fn mean_error_is_small_relative_to_scale() {
+        // With compensation the average error over all pairs should be a
+        // tiny fraction of the output scale 2^(2N-2).
+        let m = proposed(8);
+        let mut sum_err = 0f64;
+        for a in -128i64..128 {
+            for b in -128i64..128 {
+                sum_err += (m.multiply(a, b) - a * b) as f64;
+            }
+        }
+        let me = sum_err / 65536.0;
+        assert!(
+            me.abs() < 16384.0 * 0.02,
+            "mean error {me} too large vs scale 16384"
+        );
+    }
+
+    #[test]
+    fn truncation_zeroes_low_bits_statistics() {
+        // Bits 0..N-2 of the product must be zero for every input under
+        // the shipped compensation scheme (no standalone constant bit; the
+        // compensation lives in the CSP compressor constants).
+        let m = proposed(8);
+        for a in [-128i64, -77, -1, 0, 1, 99, 127] {
+            for b in [-128i64, -3, 0, 5, 127] {
+                let p = m.multiply(a, b);
+                let up = to_bits(p, 16);
+                assert_eq!(up & 0x7F, 0, "{a}*{b}: low bits {up:#x}");
+            }
+        }
+        // The Literal ablation keeps the standalone bit at column N-2.
+        let mut cfg = ApproxMulConfig::paper_default(
+            "lit",
+            8,
+            Arc::new(ProposedApproxAbcd1),
+            Arc::new(ProposedApproxAbc1),
+            false,
+        );
+        cfg.compensation = Compensation::Literal;
+        let lit = ApproxSignedMultiplier::new(cfg);
+        let up = to_bits(lit.multiply(3, 5), 16);
+        assert_eq!((up >> 6) & 1, 1, "literal scheme sets the bit");
+    }
+
+    #[test]
+    fn exact_compressors_in_framework_still_approximate_only_by_truncation() {
+        // With exact CSP compressors and no NAND replacement, every error
+        // must come from the truncated LSP (plus compensation): the
+        // product restricted to columns >= N-1 must match exact product's
+        // high part within the truncation bound.
+        let cfg = ApproxMulConfig {
+            name: "ExactCSP".into(),
+            n: 8,
+            abcd1: Arc::new(ExactAbcd1),
+            abc1: Arc::new(ExactAbc1),
+            abcd_as_abc: false,
+            truncate_cols: 7,
+            compensation: Compensation::Paper,
+            lsp: LspMode::Truncate,
+            sf3: Sf3Mode::Skip,
+        };
+        let m = ApproxSignedMultiplier::new(cfg);
+        exhaustive_check(&m).unwrap();
+        let max_trunc: i64 = (0..7).map(|w| (w + 1) << w).sum::<usize>() as i64; // max truncated mass
+        for a in -128i64..128 {
+            for b in [-128i64, -55, 0, 33, 127] {
+                let err = m.multiply(a, b) - a * b;
+                assert!(
+                    err.abs() <= max_trunc + 64 + 128,
+                    "{a}*{b}: err {err} exceeds truncation bound"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn netlist_structure_sane() {
+        let nl = proposed(8).build_netlist();
+        assert_eq!(nl.inputs().len(), 16);
+        assert_eq!(nl.outputs().len(), 16);
+        nl.validate().unwrap();
+        // The proposed multiplier must be substantially smaller than exact.
+        let exact = crate::multipliers::exact::ExactBaughWooley::new(8).build_netlist();
+        assert!(
+            nl.area() < 0.8 * exact.area(),
+            "approx area {} vs exact {}",
+            nl.area(),
+            exact.area()
+        );
+    }
+}

@@ -1,0 +1,173 @@
+//! Exact radix-4 (modified) Booth multiplier — the *other* signed
+//! multiplication algorithm the paper's introduction contrasts with
+//! Baugh-Wooley (ref. [11]). Implemented as a full netlist + fast model so
+//! the repo can quantify the paper's claim that Baugh-Wooley's regular
+//! partial-product matrix suits approximate compressor design better
+//! (`sfcmul tables --id t5` vs the Booth row printed by `examples/design_space`).
+//!
+//! Radix-4 recoding: digit i (i = 0..N/2-1) looks at bits
+//! (b_{2i+1}, b_{2i}, b_{2i-1}) and encodes d ∈ {-2,-1,0,1,2}:
+//!
+//! ```text
+//! one = b_{2i} ⊕ b_{2i-1}          |d| = 1
+//! two = (b_{2i+1} ⊕ b_{2i}) & ~one |d| = 2
+//! neg = b_{2i+1}                   d < 0 (as ones' complement + neg LSB)
+//! ```
+//!
+//! Each partial product is ±a or ±2a at weight 4^i, realised as
+//! mux → conditional invert, with the `+neg` correction bit and full
+//! sign replication into the upper columns (correct mod 2^2N; the
+//! reduction engine handles the repeated sign signal for free).
+
+use super::traits::{from_bits, to_bits, MultiplierModel};
+use crate::circuits::{reduce_columns, Columns};
+use crate::netlist::Netlist;
+
+/// Exact N×N radix-4 Booth multiplier (N even).
+#[derive(Debug, Clone)]
+pub struct BoothRadix4 {
+    pub n: usize,
+}
+
+impl BoothRadix4 {
+    pub fn new(n: usize) -> Self {
+        assert!(n >= 4 && n % 2 == 0 && n <= 32, "N must be even, 4..=32");
+        Self { n }
+    }
+}
+
+impl MultiplierModel for BoothRadix4 {
+    fn name(&self) -> String {
+        "Booth-r4 exact".to_string()
+    }
+
+    fn bits(&self) -> usize {
+        self.n
+    }
+
+    fn multiply(&self, a: i64, b: i64) -> i64 {
+        // Functional model via explicit Booth recoding (not a*b, so the
+        // recoding itself is under test against the netlist AND against
+        // native multiplication).
+        let n = self.n;
+        let ub = to_bits(b, n);
+        let mut acc: i64 = 0;
+        for i in 0..n / 2 {
+            let b_hi = (ub >> (2 * i + 1)) & 1;
+            let b_mid = (ub >> (2 * i)) & 1;
+            let b_lo = if i == 0 { 0 } else { (ub >> (2 * i - 1)) & 1 };
+            let d: i64 = (b_mid + b_lo) as i64 - 2 * b_hi as i64;
+            acc += d * a << (2 * i);
+        }
+        from_bits(to_bits(acc, 2 * n), 2 * n)
+    }
+
+    fn build_netlist(&self) -> Netlist {
+        let n = self.n;
+        let mut nl = Netlist::new(&format!("booth_r4_{n}x{n}"));
+        let a = nl.input_bus("a", n);
+        let b = nl.input_bus("b", n);
+        let zero = nl.const0();
+        let mut cols = Columns::new(2 * n);
+        for i in 0..n / 2 {
+            let b_hi = b[2 * i + 1];
+            let b_mid = b[2 * i];
+            let b_lo = if i == 0 { zero } else { b[2 * i - 1] };
+            let one = nl.xor2(b_mid, b_lo);
+            let hi_ne_mid = nl.xor2(b_hi, b_mid);
+            let none = nl.not(one);
+            let two = nl.and2(hi_ne_mid, none);
+            let neg = b_hi;
+            // partial product bits j = 0..N (N+1 bits covers ±2a)
+            let mut sign_bit = zero;
+            for j in 0..=n {
+                let x1 = if j < n { a[j] } else { a[n - 1] };
+                let x2 = if j == 0 {
+                    zero
+                } else if j <= n {
+                    a[j - 1]
+                } else {
+                    unreachable!()
+                };
+                // mag = one ? x1 : (two ? x2 : 0)
+                let t = nl.mux2(two, zero, x2);
+                let mag = nl.mux2(one, t, x1);
+                let ppb = nl.xor2(mag, neg);
+                let w = 2 * i + j;
+                if w < 2 * n {
+                    cols.push(w, ppb);
+                }
+                if j == n {
+                    sign_bit = ppb;
+                }
+            }
+            // sign replication to the top (two's complement mod 2^2N)
+            for w in (2 * i + n + 1)..(2 * n) {
+                cols.push(w, sign_bit);
+            }
+            // +neg correction (ones' complement -> two's complement)
+            cols.push(2 * i, neg);
+        }
+        let product = reduce_columns(&mut nl, cols);
+        nl.output_bus("p", &product[..2 * n]);
+        nl.fold_constants();
+        nl.prune_dead();
+        nl
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::multipliers::verify::exhaustive_check;
+
+    #[test]
+    fn booth_fast_model_is_exact_n8() {
+        let m = BoothRadix4::new(8);
+        for a in -128i64..128 {
+            for b in -128i64..128 {
+                assert_eq!(m.multiply(a, b), a * b, "{a}*{b}");
+            }
+        }
+    }
+
+    #[test]
+    fn booth_netlist_matches_model_exhaustively() {
+        exhaustive_check(&BoothRadix4::new(4)).unwrap();
+        exhaustive_check(&BoothRadix4::new(6)).unwrap();
+        exhaustive_check(&BoothRadix4::new(8)).unwrap();
+    }
+
+    #[test]
+    fn booth_wide_sampled() {
+        let m = BoothRadix4::new(16);
+        let mut rng = crate::util::prng::Xoshiro256::seeded(5);
+        for _ in 0..500 {
+            let a = rng.range_i64(-32768, 32767);
+            let b = rng.range_i64(-32768, 32767);
+            assert_eq!(m.multiply(a, b), a * b);
+        }
+        let nl = m.build_netlist();
+        for _ in 0..50 {
+            let a = rng.range_i64(-32768, 32767);
+            let b = rng.range_i64(-32768, 32767);
+            assert_eq!(
+                crate::multipliers::verify::netlist_multiply_one(&nl, 16, a, b),
+                a * b
+            );
+        }
+    }
+
+    /// The paper's §1 motivation: Baugh-Wooley's matrix is the better host
+    /// for column-compressor approximation. Quantify: Booth's recoded PPM
+    /// reaches similar area at N=8 but through irregular rows (muxes),
+    /// which the truncation scheme cannot exploit — we assert both exist
+    /// and report the ratio rather than a winner (documented in DESIGN.md).
+    #[test]
+    fn booth_vs_bw_areas_are_comparable() {
+        let booth = BoothRadix4::new(8).build_netlist();
+        let bw = crate::multipliers::ExactBaughWooley::new(8).build_netlist();
+        let ratio = booth.area() / bw.area();
+        assert!((0.5..2.5).contains(&ratio), "area ratio {ratio}");
+    }
+}

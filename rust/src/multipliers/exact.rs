@@ -1,0 +1,129 @@
+//! Exact Baugh-Wooley signed multiplier, generic N (paper §2, Fig. 1,
+//! Table 1).
+//!
+//! Partial products: `AND(a_i, b_j)` everywhere except the mixed sign
+//! terms which are `NAND`ed; constants `1` are injected at columns `N` and
+//! `2N-1`; the matrix is reduced with the 3:2 compressors of ref. [8] and a
+//! final ripple stage ([`crate::circuits::reduce_columns`]).
+
+use super::traits::{from_bits, pp_kind, to_bits, MultiplierModel, PpKind};
+use crate::circuits::{reduce_columns, Columns};
+use crate::netlist::Netlist;
+
+/// Exact N×N Baugh-Wooley multiplier.
+#[derive(Debug, Clone)]
+pub struct ExactBaughWooley {
+    pub n: usize,
+}
+
+impl ExactBaughWooley {
+    pub fn new(n: usize) -> Self {
+        assert!((2..=32).contains(&n), "supported operand widths: 2..=32");
+        Self { n }
+    }
+}
+
+impl MultiplierModel for ExactBaughWooley {
+    fn name(&self) -> String {
+        "Exact".to_string()
+    }
+
+    fn bits(&self) -> usize {
+        self.n
+    }
+
+    fn multiply(&self, a: i64, b: i64) -> i64 {
+        // The fast model *is* exact multiplication; the Baugh-Wooley
+        // identity is separately verified in traits.rs and the netlist
+        // equivalence in verify.rs.
+        let n = self.n;
+        debug_assert_eq!(from_bits(to_bits(a, n), n), a, "operand a out of range");
+        debug_assert_eq!(from_bits(to_bits(b, n), n), b, "operand b out of range");
+        a * b
+    }
+
+    fn build_netlist(&self) -> Netlist {
+        let n = self.n;
+        let mut nl = Netlist::new(&format!("bw_exact_{n}x{n}"));
+        let a = nl.input_bus("a", n);
+        let b = nl.input_bus("b", n);
+        let mut cols = Columns::new(2 * n);
+        for i in 0..n {
+            for j in 0..n {
+                let sig = match pp_kind(i, j, n) {
+                    PpKind::And => nl.and2(a[i], b[j]),
+                    PpKind::Nand => nl.nand2(a[i], b[j]),
+                };
+                cols.push(i + j, sig);
+            }
+        }
+        let k1 = nl.const1();
+        cols.push(n, k1);
+        let k2 = nl.const1();
+        cols.push(2 * n - 1, k2);
+        let product = reduce_columns(&mut nl, cols);
+        nl.output_bus("p", &product[..2 * n]);
+        nl.fold_constants();
+        nl.prune_dead();
+        nl
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::multipliers::verify::netlist_multiply_all;
+
+    /// Netlist equals a*b for all pairs, N=4 (exhaustive, 256 pairs).
+    #[test]
+    fn netlist_exact_n4_exhaustive() {
+        let m = ExactBaughWooley::new(4);
+        let nl = m.build_netlist();
+        let products = netlist_multiply_all(&nl, 4);
+        for (idx, &p) in products.iter().enumerate() {
+            let a = from_bits((idx >> 4) as u64, 4);
+            let b = from_bits((idx & 0xF) as u64, 4);
+            assert_eq!(p, a * b, "{a}*{b}");
+        }
+    }
+
+    /// Netlist equals a*b for all 65 536 pairs, N=8.
+    #[test]
+    fn netlist_exact_n8_exhaustive() {
+        let m = ExactBaughWooley::new(8);
+        let nl = m.build_netlist();
+        let products = netlist_multiply_all(&nl, 8);
+        for (idx, &p) in products.iter().enumerate() {
+            let a = from_bits((idx >> 8) as u64, 8);
+            let b = from_bits((idx & 0xFF) as u64, 8);
+            assert_eq!(p, a * b, "{a}*{b}");
+        }
+    }
+
+    /// Sampled check for wider operands (N=12, N=16).
+    #[test]
+    fn netlist_exact_wide_sampled() {
+        for n in [12usize, 16] {
+            let m = ExactBaughWooley::new(n);
+            let nl = m.build_netlist();
+            let mut rng = crate::util::prng::Xoshiro256::seeded(n as u64);
+            let half = 1i64 << (n - 1);
+            let cases: Vec<(i64, i64)> = (0..200)
+                .map(|_| (rng.range_i64(-half, half - 1), rng.range_i64(-half, half - 1)))
+                .chain([(-half, -half), (half - 1, half - 1), (-half, half - 1), (0, 0)])
+                .collect();
+            for (a, b) in cases {
+                let p = crate::multipliers::verify::netlist_multiply_one(&nl, n, a, b);
+                assert_eq!(p, a * b, "N={n}: {a}*{b}");
+            }
+        }
+    }
+
+    #[test]
+    fn structure_has_no_dead_logic() {
+        let nl = ExactBaughWooley::new(8).build_netlist();
+        assert_eq!(nl.validate().unwrap(), 0);
+        assert_eq!(nl.inputs().len(), 16);
+        assert_eq!(nl.outputs().len(), 16);
+    }
+}

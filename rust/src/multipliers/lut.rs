@@ -1,0 +1,78 @@
+//! Product-table (LUT) generation and export.
+//!
+//! The 256×256 signed product table of a multiplier model is the
+//! interchange format between the Rust fast models and the JAX/Pallas
+//! kernel: `python/compile/kernels/approx_mul.py` computes the same table
+//! from its own bit-level model and `aot.py` embeds it in the lowered HLO;
+//! `make test` cross-checks the two byte-for-byte via
+//! `artifacts/<design>_lut.i32` (see python/tests/test_lut_crosscheck.py
+//! and rust/tests/lut_crosscheck.rs).
+
+use super::traits::MultiplierModel;
+use std::io::Write;
+use std::path::Path;
+
+/// Full product table for an 8-bit design. Index = `(a_byte << 8) | b_byte`
+/// where `a_byte`/`b_byte` are the operands' two's-complement bit patterns.
+pub fn product_table(model: &dyn MultiplierModel) -> Vec<i32> {
+    assert_eq!(model.bits(), 8, "LUT export is defined for N=8");
+    let mut lut = Vec::with_capacity(65536);
+    for a_byte in 0..256u32 {
+        let a = a_byte as u8 as i8 as i64;
+        for b_byte in 0..256u32 {
+            let b = b_byte as u8 as i8 as i64;
+            lut.push(model.multiply(a, b) as i32);
+        }
+    }
+    lut
+}
+
+/// Write a table as little-endian i32, the layout the python side reads
+/// with `np.fromfile(..., dtype='<i4').reshape(256, 256)`.
+pub fn write_i32_le(path: &Path, lut: &[i32]) -> std::io::Result<()> {
+    if let Some(parent) = path.parent() {
+        std::fs::create_dir_all(parent)?;
+    }
+    let mut f = std::io::BufWriter::new(std::fs::File::create(path)?);
+    for &v in lut {
+        f.write_all(&v.to_le_bytes())?;
+    }
+    f.flush()
+}
+
+/// Read a table previously written with [`write_i32_le`].
+pub fn read_i32_le(path: &Path) -> std::io::Result<Vec<i32>> {
+    let bytes = std::fs::read(path)?;
+    Ok(bytes
+        .chunks_exact(4)
+        .map(|c| i32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+        .collect())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::multipliers::designs::{build_design, DesignId};
+
+    #[test]
+    fn exact_table_is_products() {
+        let lut = product_table(build_design(DesignId::Exact, 8).as_ref());
+        assert_eq!(lut.len(), 65536);
+        assert_eq!(lut[0], 0); // 0*0
+        let idx = |a: i8, b: i8| ((a as u8 as usize) << 8) | (b as u8 as usize);
+        assert_eq!(lut[idx(-128, -128)], 16384);
+        assert_eq!(lut[idx(127, -128)], -16256);
+        assert_eq!(lut[idx(3, 7)], 21);
+    }
+
+    #[test]
+    fn proposed_table_io_roundtrip() {
+        let lut = product_table(build_design(DesignId::Proposed, 8).as_ref());
+        let dir = std::env::temp_dir().join("sfcmul_lut_test");
+        let path = dir.join("proposed_lut.i32");
+        write_i32_le(&path, &lut).unwrap();
+        let back = read_i32_le(&path).unwrap();
+        assert_eq!(lut, back);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

@@ -1,0 +1,39 @@
+//! Multiplier architectures (paper §2, §3 — the device under test for
+//! Tables 4 and 5 and Figs 9/10).
+//!
+//! Every multiplier exists in two cross-checked forms:
+//!
+//! * a **fast functional model** ([`traits::MultiplierModel::multiply`])
+//!   used by the error harness, LUT generation and the convolution paths;
+//! * a **gate-level netlist** ([`traits::MultiplierModel::build_netlist`])
+//!   used by the hardware model (area / delay / power).
+//!
+//! For N = 8 the two forms are verified identical over all 65 536 input
+//! pairs (`tests/` + `verify::exhaustive_check`).
+//!
+//! Architecture inventory (see DESIGN.md §Reconstruction for the exact
+//! CSP wiring):
+//!
+//! * [`exact`] — exact Baugh-Wooley multiplier, generic N.
+//! * [`approx`] — the truncated + compensated sign-focused framework
+//!   (paper Fig. 5/6), parameterised by which compressor designs occupy
+//!   the CSP slots — instantiating it with each baseline compressor
+//!   reproduces the paper's Table 4/5 comparison set (§5.1).
+//! * [`designs`] — the named configurations: Proposed, [12], [5], [4],
+//!   [1], [7], [2].
+//! * [`lut`] — 256×256 product-table export shared with the Pallas kernel.
+//! * [`verify`] — exhaustive netlist-vs-model equivalence checking.
+
+pub mod traits;
+pub mod booth;
+pub mod exact;
+pub mod approx;
+pub mod designs;
+pub mod lut;
+pub mod verify;
+
+pub use approx::{ApproxMulConfig, ApproxSignedMultiplier, Compensation, LspMode, Sf3Mode};
+pub use designs::{all_designs, all_designs_hw, build_design, build_design_hw, design_by_name, DesignId};
+pub use booth::BoothRadix4;
+pub use exact::ExactBaughWooley;
+pub use traits::MultiplierModel;

@@ -1,0 +1,150 @@
+//! Multiplier model interface + shared Baugh-Wooley partial-product
+//! helpers.
+
+use crate::netlist::Netlist;
+
+/// A signed N×N multiplier with coupled functional and gate-level forms.
+pub trait MultiplierModel: Send + Sync {
+    /// Display name as used in the paper's tables ("Proposed", "Design
+    /// [2]", "Exact", ...).
+    fn name(&self) -> String;
+
+    /// Operand width N in bits.
+    fn bits(&self) -> usize;
+
+    /// Functional model. Operands are interpreted as signed N-bit values
+    /// (callers pass values in `[-2^(N-1), 2^(N-1))`); the result is the
+    /// (possibly approximate) signed 2N-bit product.
+    fn multiply(&self, a: i64, b: i64) -> i64;
+
+    /// Gate-level implementation with inputs `a0..a{N-1}, b0..b{N-1}`
+    /// (LSB first) and outputs `p0..p{2N-1}`.
+    fn build_netlist(&self) -> Netlist;
+}
+
+/// Kind of a Baugh-Wooley partial product.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PpKind {
+    /// AND(a_i, b_j) — positive.
+    And,
+    /// NAND(a_i, b_j) — negative (exactly one operand is a sign bit).
+    Nand,
+}
+
+/// Classify partial product (i, j) for an N-bit Baugh-Wooley matrix:
+/// NAND iff exactly one of the operands is the sign bit (paper Eq. 3 /
+/// Fig. 1 — black vs blue dots).
+pub fn pp_kind(i: usize, j: usize, n: usize) -> PpKind {
+    if (i == n - 1) ^ (j == n - 1) {
+        PpKind::Nand
+    } else {
+        PpKind::And
+    }
+}
+
+/// Functional value of partial product (i, j) for operands `a`, `b`
+/// (bit-indexed from LSB; operands already wrapped to N bits).
+#[inline]
+pub fn pp_value(a: u64, b: u64, i: usize, j: usize, n: usize) -> bool {
+    let bit = ((a >> i) & 1) & ((b >> j) & 1) != 0;
+    match pp_kind(i, j, n) {
+        PpKind::And => bit,
+        PpKind::Nand => !bit,
+    }
+}
+
+/// Wrap an i64 into N-bit two's complement (as unsigned bits).
+#[inline]
+pub fn to_bits(v: i64, n: usize) -> u64 {
+    (v as u64) & mask(n)
+}
+
+/// Interpret the low `n` bits of `v` as signed two's complement.
+#[inline]
+pub fn from_bits(v: u64, n: usize) -> i64 {
+    let m = mask(n);
+    let v = v & m;
+    if n < 64 && (v >> (n - 1)) & 1 == 1 {
+        (v | !m) as i64
+    } else {
+        v as i64
+    }
+}
+
+#[inline]
+pub fn mask(n: usize) -> u64 {
+    if n >= 64 {
+        !0
+    } else {
+        (1u64 << n) - 1
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pp_kind_matches_bw_rule() {
+        let n = 8;
+        assert_eq!(pp_kind(0, 0, n), PpKind::And);
+        assert_eq!(pp_kind(7, 3, n), PpKind::Nand);
+        assert_eq!(pp_kind(3, 7, n), PpKind::Nand);
+        assert_eq!(pp_kind(7, 7, n), PpKind::And, "sign×sign is positive");
+    }
+
+    #[test]
+    fn bit_roundtrip() {
+        for v in [-128i64, -1, 0, 1, 127] {
+            assert_eq!(from_bits(to_bits(v, 8), 8), v);
+        }
+        for v in [-32768i64, -5, 0, 32767] {
+            assert_eq!(from_bits(to_bits(v, 16), 16), v);
+        }
+    }
+
+    /// The Baugh-Wooley identity: summing all partial products with the two
+    /// constants reproduces the exact signed product for every pair —
+    /// checked exhaustively for N=4 (Table 1's example generalised) and
+    /// sampled for N=8.
+    #[test]
+    fn bw_identity_n4_exhaustive() {
+        let n = 4;
+        for a in -8i64..8 {
+            for b in -8i64..8 {
+                let ua = to_bits(a, n);
+                let ub = to_bits(b, n);
+                let mut acc: u64 = (1 << n) + (1 << (2 * n - 1)); // the two constants
+                for i in 0..n {
+                    for j in 0..n {
+                        if pp_value(ua, ub, i, j, n) {
+                            acc = acc.wrapping_add(1 << (i + j));
+                        }
+                    }
+                }
+                assert_eq!(from_bits(acc, 2 * n), a * b, "{a}*{b}");
+            }
+        }
+    }
+
+    #[test]
+    fn bw_identity_n8_sampled() {
+        let n = 8;
+        let mut rng = crate::util::prng::Xoshiro256::seeded(17);
+        for _ in 0..2000 {
+            let a = rng.next_i8() as i64;
+            let b = rng.next_i8() as i64;
+            let ua = to_bits(a, n);
+            let ub = to_bits(b, n);
+            let mut acc: u64 = (1 << n) + (1 << (2 * n - 1));
+            for i in 0..n {
+                for j in 0..n {
+                    if pp_value(ua, ub, i, j, n) {
+                        acc = acc.wrapping_add(1 << (i + j));
+                    }
+                }
+            }
+            assert_eq!(from_bits(acc, 2 * n), a * b, "{a}*{b}");
+        }
+    }
+}

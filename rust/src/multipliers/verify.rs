@@ -1,0 +1,112 @@
+//! Netlist ↔ functional-model equivalence checking.
+//!
+//! Uses the packed simulator to run 64 operand pairs per netlist pass, so
+//! the exhaustive N=8 sweep (65 536 pairs) is ~1 000 passes.
+
+use super::traits::{from_bits, to_bits, MultiplierModel};
+use crate::netlist::sim::{pack_int_lane, unpack_int_lane, PackedSim};
+use crate::netlist::Netlist;
+
+/// Run one (a, b) pair through a multiplier netlist built with input buses
+/// `a0..`, `b0..` and output bus `p0..p{2N-1}`.
+pub fn netlist_multiply_one(nl: &Netlist, n: usize, a: i64, b: i64) -> i64 {
+    let mut sim = PackedSim::new(nl);
+    let mut inputs = vec![0u64; 2 * n];
+    pack_int_lane(&mut inputs, 0, 0, to_bits(a, n), n);
+    pack_int_lane(&mut inputs, 0, n, to_bits(b, n), n);
+    let outs = sim.run_outputs(nl, &inputs);
+    from_bits(unpack_int_lane(&outs, 0), 2 * n)
+}
+
+/// Run a batch of pairs (up to arbitrary length) and return products in
+/// order.
+pub fn netlist_multiply_batch(nl: &Netlist, n: usize, pairs: &[(i64, i64)]) -> Vec<i64> {
+    let mut sim = PackedSim::new(nl);
+    let mut out = Vec::with_capacity(pairs.len());
+    for chunk in pairs.chunks(64) {
+        let mut inputs = vec![0u64; 2 * n];
+        for (lane, &(a, b)) in chunk.iter().enumerate() {
+            pack_int_lane(&mut inputs, lane, 0, to_bits(a, n), n);
+            pack_int_lane(&mut inputs, lane, n, to_bits(b, n), n);
+        }
+        let outs = sim.run_outputs(nl, &inputs);
+        for lane in 0..chunk.len() {
+            out.push(from_bits(unpack_int_lane(&outs, lane), 2 * n));
+        }
+    }
+    out
+}
+
+/// Exhaustively evaluate an N≤8 multiplier netlist over all `4^N` operand
+/// pairs. Result index = `(a_bits << N) | b_bits` (unsigned bit patterns).
+pub fn netlist_multiply_all(nl: &Netlist, n: usize) -> Vec<i64> {
+    assert!(n <= 8, "exhaustive sweep limited to N<=8");
+    let total = 1usize << (2 * n);
+    let mut sim = PackedSim::new(nl);
+    let mut out = Vec::with_capacity(total);
+    let mut idx = 0usize;
+    while idx < total {
+        let lanes = (total - idx).min(64);
+        let mut inputs = vec![0u64; 2 * n];
+        for lane in 0..lanes {
+            let code = (idx + lane) as u64;
+            let ua = code >> n;
+            let ub = code & super::traits::mask(n);
+            pack_int_lane(&mut inputs, lane, 0, ua, n);
+            pack_int_lane(&mut inputs, lane, n, ub, n);
+        }
+        let outs = sim.run_outputs(nl, &inputs);
+        for lane in 0..lanes {
+            out.push(from_bits(unpack_int_lane(&outs, lane), 2 * n));
+        }
+        idx += lanes;
+    }
+    out
+}
+
+/// Verify that `model.multiply` and the built netlist agree on *every*
+/// operand pair (N ≤ 8). Returns the first mismatch as an error message.
+pub fn exhaustive_check(model: &dyn MultiplierModel) -> Result<(), String> {
+    let n = model.bits();
+    assert!(n <= 8);
+    let nl = model.build_netlist();
+    let hw = netlist_multiply_all(&nl, n);
+    for (idx, &hw_p) in hw.iter().enumerate() {
+        let a = from_bits((idx >> n) as u64, n);
+        let b = from_bits((idx as u64) & super::traits::mask(n), n);
+        let sw_p = model.multiply(a, b);
+        if sw_p != hw_p {
+            return Err(format!(
+                "{}: {a} * {b}: functional model {sw_p}, netlist {hw_p}",
+                model.name()
+            ));
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::multipliers::exact::ExactBaughWooley;
+
+    #[test]
+    fn batch_equals_one_by_one() {
+        let m = ExactBaughWooley::new(6);
+        let nl = m.build_netlist();
+        let mut rng = crate::util::prng::Xoshiro256::seeded(3);
+        let pairs: Vec<(i64, i64)> =
+            (0..150).map(|_| (rng.range_i64(-32, 31), rng.range_i64(-32, 31))).collect();
+        let batch = netlist_multiply_batch(&nl, 6, &pairs);
+        for (i, &(a, b)) in pairs.iter().enumerate() {
+            assert_eq!(batch[i], netlist_multiply_one(&nl, 6, a, b));
+            assert_eq!(batch[i], a * b);
+        }
+    }
+
+    #[test]
+    fn exhaustive_check_passes_for_exact() {
+        exhaustive_check(&ExactBaughWooley::new(4)).unwrap();
+        exhaustive_check(&ExactBaughWooley::new(8)).unwrap();
+    }
+}

@@ -1,0 +1,715 @@
+//! Netlist construction.
+//!
+//! A [`Netlist`] is an append-only DAG: every gate's operands must already
+//! exist when the gate is added, so the gate vector is always in topological
+//! order and simulation/timing are single forward passes. Signals are dense
+//! `u32` ids.
+
+use super::gate::GateKind;
+
+pub type SigId = u32;
+
+#[derive(Debug, Clone, Copy)]
+pub struct Gate {
+    pub kind: GateKind,
+    /// Operands; only the first `kind.arity()` entries are meaningful.
+    pub ins: [SigId; 3],
+}
+
+#[derive(Debug, Clone, Default)]
+pub struct Netlist {
+    pub name: String,
+    gates: Vec<Gate>,
+    input_ids: Vec<SigId>,
+    input_names: Vec<String>,
+    outputs: Vec<(String, SigId)>,
+}
+
+impl Netlist {
+    pub fn new(name: &str) -> Self {
+        Self { name: name.to_string(), ..Default::default() }
+    }
+
+    // ---- introspection ------------------------------------------------
+
+    pub fn len(&self) -> usize {
+        self.gates.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.gates.is_empty()
+    }
+
+    pub fn gates(&self) -> &[Gate] {
+        &self.gates
+    }
+
+    pub fn inputs(&self) -> &[SigId] {
+        &self.input_ids
+    }
+
+    pub fn input_names(&self) -> &[String] {
+        &self.input_names
+    }
+
+    pub fn outputs(&self) -> &[(String, SigId)] {
+        &self.outputs
+    }
+
+    pub fn output_ids(&self) -> Vec<SigId> {
+        self.outputs.iter().map(|&(_, id)| id).collect()
+    }
+
+    /// Total area in gate equivalents.
+    pub fn area(&self) -> f64 {
+        self.gates.iter().map(|g| g.kind.area()).sum()
+    }
+
+    /// Gate count per kind (diagnostics, reports).
+    pub fn kind_histogram(&self) -> Vec<(GateKind, usize)> {
+        let mut hist: Vec<(GateKind, usize)> = Vec::new();
+        for g in &self.gates {
+            match hist.iter_mut().find(|(k, _)| *k == g.kind) {
+                Some((_, n)) => *n += 1,
+                None => hist.push((g.kind, 1)),
+            }
+        }
+        hist
+    }
+
+    /// Count of two-input-equivalent logic gates (excludes inputs/consts).
+    pub fn logic_gate_count(&self) -> usize {
+        self.gates
+            .iter()
+            .filter(|g| !matches!(g.kind, GateKind::Input | GateKind::Const0 | GateKind::Const1))
+            .count()
+    }
+
+    // ---- construction --------------------------------------------------
+
+    fn push(&mut self, kind: GateKind, ins: [SigId; 3]) -> SigId {
+        let arity = kind.arity();
+        let id = self.gates.len() as SigId;
+        for (slot, &op) in ins.iter().enumerate() {
+            if slot < arity {
+                assert!(
+                    op < id,
+                    "netlist {}: gate {id} ({kind:?}) references future signal {op}",
+                    self.name
+                );
+            }
+        }
+        self.gates.push(Gate { kind, ins });
+        id
+    }
+
+    pub fn input(&mut self, name: &str) -> SigId {
+        let id = self.push(GateKind::Input, [0; 3]);
+        self.input_ids.push(id);
+        self.input_names.push(name.to_string());
+        id
+    }
+
+    /// Add `n` inputs named `prefix0..prefix{n-1}`.
+    pub fn input_bus(&mut self, prefix: &str, n: usize) -> Vec<SigId> {
+        (0..n).map(|i| self.input(&format!("{prefix}{i}"))).collect()
+    }
+
+    pub fn const0(&mut self) -> SigId {
+        self.push(GateKind::Const0, [0; 3])
+    }
+
+    pub fn const1(&mut self) -> SigId {
+        self.push(GateKind::Const1, [0; 3])
+    }
+
+    pub fn output(&mut self, name: &str, sig: SigId) {
+        assert!((sig as usize) < self.gates.len(), "output of unknown signal");
+        self.outputs.push((name.to_string(), sig));
+    }
+
+    /// Register a whole bus as outputs `prefix0..`, LSB first.
+    pub fn output_bus(&mut self, prefix: &str, sigs: &[SigId]) {
+        for (i, &s) in sigs.iter().enumerate() {
+            self.output(&format!("{prefix}{i}"), s);
+        }
+    }
+
+    // unary / binary / ternary helpers ------------------------------------
+
+    pub fn not(&mut self, a: SigId) -> SigId {
+        self.push(GateKind::Not, [a, 0, 0])
+    }
+    pub fn buf(&mut self, a: SigId) -> SigId {
+        self.push(GateKind::Buf, [a, 0, 0])
+    }
+    pub fn and2(&mut self, a: SigId, b: SigId) -> SigId {
+        self.push(GateKind::And2, [a, b, 0])
+    }
+    pub fn or2(&mut self, a: SigId, b: SigId) -> SigId {
+        self.push(GateKind::Or2, [a, b, 0])
+    }
+    pub fn nand2(&mut self, a: SigId, b: SigId) -> SigId {
+        self.push(GateKind::Nand2, [a, b, 0])
+    }
+    pub fn nor2(&mut self, a: SigId, b: SigId) -> SigId {
+        self.push(GateKind::Nor2, [a, b, 0])
+    }
+    pub fn xor2(&mut self, a: SigId, b: SigId) -> SigId {
+        self.push(GateKind::Xor2, [a, b, 0])
+    }
+    pub fn xnor2(&mut self, a: SigId, b: SigId) -> SigId {
+        self.push(GateKind::Xnor2, [a, b, 0])
+    }
+    pub fn and3(&mut self, a: SigId, b: SigId, c: SigId) -> SigId {
+        self.push(GateKind::And3, [a, b, c])
+    }
+    pub fn or3(&mut self, a: SigId, b: SigId, c: SigId) -> SigId {
+        self.push(GateKind::Or3, [a, b, c])
+    }
+    pub fn nand3(&mut self, a: SigId, b: SigId, c: SigId) -> SigId {
+        self.push(GateKind::Nand3, [a, b, c])
+    }
+    pub fn nor3(&mut self, a: SigId, b: SigId, c: SigId) -> SigId {
+        self.push(GateKind::Nor3, [a, b, c])
+    }
+    pub fn maj3(&mut self, a: SigId, b: SigId, c: SigId) -> SigId {
+        self.push(GateKind::Maj3, [a, b, c])
+    }
+    pub fn aoi21(&mut self, a: SigId, b: SigId, c: SigId) -> SigId {
+        self.push(GateKind::Aoi21, [a, b, c])
+    }
+    pub fn oai21(&mut self, a: SigId, b: SigId, c: SigId) -> SigId {
+        self.push(GateKind::Oai21, [a, b, c])
+    }
+    /// `if sel { b } else { a }`
+    pub fn mux2(&mut self, sel: SigId, a: SigId, b: SigId) -> SigId {
+        self.push(GateKind::Mux2, [sel, a, b])
+    }
+
+    /// XOR of three (two gate levels).
+    pub fn xor3(&mut self, a: SigId, b: SigId, c: SigId) -> SigId {
+        let ab = self.xor2(a, b);
+        self.xor2(ab, c)
+    }
+
+    /// XNOR of three.
+    pub fn xnor3(&mut self, a: SigId, b: SigId, c: SigId) -> SigId {
+        let ab = self.xor2(a, b);
+        self.xnor2(ab, c)
+    }
+
+    /// OR of a slice (balanced tree).
+    pub fn or_many(&mut self, sigs: &[SigId]) -> SigId {
+        match sigs.len() {
+            0 => self.const0(),
+            1 => sigs[0],
+            2 => self.or2(sigs[0], sigs[1]),
+            3 => self.or3(sigs[0], sigs[1], sigs[2]),
+            n => {
+                let (lo, hi) = sigs.split_at(n / 2);
+                let l = self.or_many(lo);
+                let r = self.or_many(hi);
+                self.or2(l, r)
+            }
+        }
+    }
+
+    /// AND of a slice (balanced tree).
+    pub fn and_many(&mut self, sigs: &[SigId]) -> SigId {
+        match sigs.len() {
+            0 => self.const1(),
+            1 => sigs[0],
+            2 => self.and2(sigs[0], sigs[1]),
+            3 => self.and3(sigs[0], sigs[1], sigs[2]),
+            n => {
+                let (lo, hi) = sigs.split_at(n / 2);
+                let l = self.and_many(lo);
+                let r = self.and_many(hi);
+                self.and2(l, r)
+            }
+        }
+    }
+
+    /// Constant propagation + trivial-identity elimination, one forward
+    /// pass (sufficient because gates are in topological order):
+    /// `AND(x,0)→0`, `AND(x,1)→x`, `XOR(x,1)→NOT x`, `MAJ(x,y,1)→OR(x,y)`,
+    /// `MUX(1,a,b)→b`, `BUF(x)→x`, fully-constant gates → constants, etc.
+    /// Run before [`Self::prune_dead`] so synthesis-style sweeps see the
+    /// real circuit — a truncated multiplier's constant-zero columns must
+    /// not be billed as live full adders.
+    pub fn fold_constants(&mut self) -> usize {
+        #[derive(Clone, Copy, PartialEq)]
+        enum V {
+            Sig(SigId),
+            K0,
+            K1,
+        }
+        let mut out: Netlist = Netlist::new(&self.name);
+        // canonical constants in the new netlist, created lazily
+        let mut k0: Option<SigId> = None;
+        let mut k1: Option<SigId> = None;
+        let mut vals: Vec<V> = Vec::with_capacity(self.gates.len());
+        
+
+        fn materialize(out: &mut Netlist, k0: &mut Option<SigId>, k1: &mut Option<SigId>, v: V) -> SigId {
+            match v {
+                V::Sig(s) => s,
+                V::K0 => *k0.get_or_insert_with(|| out.const0()),
+                V::K1 => *k1.get_or_insert_with(|| out.const1()),
+            }
+        }
+
+        for g in self.gates.clone() {
+            use GateKind::*;
+            let arity = g.kind.arity();
+            let a = if arity > 0 { vals[g.ins[0] as usize] } else { V::K0 };
+            let b = if arity > 1 { vals[g.ins[1] as usize] } else { V::K0 };
+            let c = if arity > 2 { vals[g.ins[2] as usize] } else { V::K0 };
+            let konst = |v: V| matches!(v, V::K0 | V::K1);
+            let as_bool = |v: V| v == V::K1;
+
+            let result: V = match g.kind {
+                Input => {
+                    let id = out.input(&self.input_names[out.inputs().len()]);
+                    V::Sig(id)
+                }
+                Const0 => V::K0,
+                Const1 => V::K1,
+                _ if (0..arity).all(|s| {
+                    konst(match s {
+                        0 => a,
+                        1 => b,
+                        _ => c,
+                    })
+                }) =>
+                {
+                    // fully constant gate
+                    if g.kind.eval_bool(as_bool(a), as_bool(b), as_bool(c)) {
+                        V::K1
+                    } else {
+                        V::K0
+                    }
+                }
+                Not => match a {
+                    V::K0 => V::K1,
+                    V::K1 => V::K0,
+                    V::Sig(s) => {
+                                                V::Sig(out.not(s))
+                    }
+                },
+                Buf => a,
+                And2 | Or2 | Nand2 | Nor2 | Xor2 | Xnor2 => {
+                    let (x, y) = if konst(a) { (b, a) } else { (a, b) };
+                    match (g.kind, y) {
+                        (_, V::Sig(_)) => {
+                            let (sx, sy) = (
+                                materialize(&mut out, &mut k0, &mut k1, x),
+                                materialize(&mut out, &mut k0, &mut k1, y),
+                            );
+                                                        V::Sig(match g.kind {
+                                And2 => out.and2(sx, sy),
+                                Or2 => out.or2(sx, sy),
+                                Nand2 => out.nand2(sx, sy),
+                                Nor2 => out.nor2(sx, sy),
+                                Xor2 => out.xor2(sx, sy),
+                                Xnor2 => out.xnor2(sx, sy),
+                                _ => unreachable!(),
+                            })
+                        }
+                        (And2, V::K0) => V::K0,
+                        (And2, V::K1) => x,
+                        (Or2, V::K1) => V::K1,
+                        (Or2, V::K0) => x,
+                        (Nand2, V::K0) => V::K1,
+                        (Nand2, V::K1) => {
+                            let sx = materialize(&mut out, &mut k0, &mut k1, x);
+                                                        V::Sig(out.not(sx))
+                        }
+                        (Nor2, V::K1) => V::K0,
+                        (Nor2, V::K0) => {
+                            let sx = materialize(&mut out, &mut k0, &mut k1, x);
+                                                        V::Sig(out.not(sx))
+                        }
+                        (Xor2, V::K0) => x,
+                        (Xor2, V::K1) => {
+                            let sx = materialize(&mut out, &mut k0, &mut k1, x);
+                                                        V::Sig(out.not(sx))
+                        }
+                        (Xnor2, V::K1) => x,
+                        (Xnor2, V::K0) => {
+                            let sx = materialize(&mut out, &mut k0, &mut k1, x);
+                                                        V::Sig(out.not(sx))
+                        }
+                        _ => unreachable!(),
+                    }
+                }
+                And3 | Or3 | Nand3 | Nor3 | Maj3 | Aoi21 | Oai21 | Mux2 => {
+                    // Reduce 3-input gates with ≥1 constant operand to
+                    // 2-input equivalents; otherwise re-emit as-is.
+                    let ops = [a, b, c];
+                    if ops.iter().any(|v| konst(*v)) {
+                        // Build the 2-input (or simpler) replacement via
+                        // truth-table residual: find the constant operand.
+                        let (ki, kv) = ops
+                            .iter()
+                            .enumerate()
+                            .find(|(_, v)| konst(**v))
+                            .map(|(i, v)| (i, as_bool(*v)))
+                            .unwrap();
+                        let rest: Vec<V> =
+                            (0..3).filter(|&i| i != ki).map(|i| ops[i]).collect();
+                        // Evaluate the gate as a function of the two
+                        // remaining operands and synthesise the residual.
+                        let f = |p: bool, q: bool| {
+                            let mut abc = [false; 3];
+                            abc[ki] = kv;
+                            let mut it = [p, q].into_iter();
+                            for (i, slot) in abc.iter_mut().enumerate() {
+                                if i != ki {
+                                    *slot = it.next().unwrap();
+                                }
+                            }
+                            g.kind.eval_bool(abc[0], abc[1], abc[2])
+                        };
+                        let tt = (f(false, false), f(false, true), f(true, false), f(true, true));
+                        let sp = rest[0];
+                        let sq = rest[1];
+                        let mat = |out: &mut Netlist, k0: &mut Option<SigId>, k1: &mut Option<SigId>, v: V| {
+                            materialize(out, k0, k1, v)
+                        };
+                        match tt {
+                            (false, false, false, false) => V::K0,
+                            (true, true, true, true) => V::K1,
+                            (false, false, true, true) => sp,
+                            (true, true, false, false) => {
+                                let s = mat(&mut out, &mut k0, &mut k1, sp);
+                                                                V::Sig(out.not(s))
+                            }
+                            (false, true, false, true) => sq,
+                            (true, false, true, false) => {
+                                let s = mat(&mut out, &mut k0, &mut k1, sq);
+                                                                V::Sig(out.not(s))
+                            }
+                            _ => {
+                                let p = mat(&mut out, &mut k0, &mut k1, sp);
+                                let q = mat(&mut out, &mut k0, &mut k1, sq);
+                                                                V::Sig(match tt {
+                                    (false, false, false, true) => out.and2(p, q),
+                                    (false, true, true, true) => out.or2(p, q),
+                                    (true, true, true, false) => out.nand2(p, q),
+                                    (true, false, false, false) => out.nor2(p, q),
+                                    (false, true, true, false) => out.xor2(p, q),
+                                    (true, false, false, true) => out.xnor2(p, q),
+                                    (false, false, true, false) => {
+                                        let nq = out.not(q);
+                                        out.and2(p, nq)
+                                    }
+                                    (false, true, false, false) => {
+                                        let np = out.not(p);
+                                        out.and2(np, q)
+                                    }
+                                    (true, true, false, true) => {
+                                        let np = out.not(p);
+                                        out.or2(np, q)
+                                    }
+                                    (true, false, true, true) => {
+                                        let nq = out.not(q);
+                                        out.or2(p, nq)
+                                    }
+                                    _ => unreachable!("covered above"),
+                                })
+                            }
+                        }
+                    } else {
+                        let sa = materialize(&mut out, &mut k0, &mut k1, a);
+                        let sb = materialize(&mut out, &mut k0, &mut k1, b);
+                        let sc = materialize(&mut out, &mut k0, &mut k1, c);
+                                                V::Sig(match g.kind {
+                            And3 => out.and3(sa, sb, sc),
+                            Or3 => out.or3(sa, sb, sc),
+                            Nand3 => out.nand3(sa, sb, sc),
+                            Nor3 => out.nor3(sa, sb, sc),
+                            Maj3 => out.maj3(sa, sb, sc),
+                            Aoi21 => out.aoi21(sa, sb, sc),
+                            Oai21 => out.oai21(sa, sb, sc),
+                            Mux2 => out.mux2(sa, sb, sc),
+                            _ => unreachable!(),
+                        })
+                    }
+                }
+            };
+            vals.push(result);
+        }
+
+        let removed = self.gates.len().saturating_sub(out.gates.len());
+        // carry over outputs
+        for (name, id) in &self.outputs {
+            let sig = materialize(&mut out, &mut k0, &mut k1, vals[*id as usize]);
+            out.output(name, sig);
+        }
+        *self = out;
+        removed
+    }
+
+    /// Remove gates not reachable from any output (dead logic), remapping
+    /// signal ids. Primary inputs are always kept (interface stability).
+    /// Returns the number of gates removed. Run this after generators that
+    /// may speculatively build logic (e.g. reduction trees whose final
+    /// carry-out is discarded) so area/power/delay reflect the real
+    /// circuit, exactly as synthesis would sweep it.
+    pub fn prune_dead(&mut self) -> usize {
+        let mut live = vec![false; self.gates.len()];
+        for (i, g) in self.gates.iter().enumerate() {
+            if matches!(g.kind, GateKind::Input) {
+                live[i] = true;
+            }
+        }
+        let mut stack: Vec<usize> = self.outputs.iter().map(|&(_, id)| id as usize).collect();
+        while let Some(i) = stack.pop() {
+            if live[i] {
+                continue;
+            }
+            live[i] = true;
+            let g = &self.gates[i];
+            for slot in 0..g.kind.arity() {
+                stack.push(g.ins[slot] as usize);
+            }
+        }
+        // inputs must also mark their own reachability walk (they have no
+        // operands, nothing more to do)
+        let mut remap = vec![u32::MAX; self.gates.len()];
+        let mut kept: Vec<Gate> = Vec::with_capacity(self.gates.len());
+        for (i, g) in self.gates.iter().enumerate() {
+            if live[i] {
+                remap[i] = kept.len() as u32;
+                let mut ng = *g;
+                for slot in 0..g.kind.arity() {
+                    ng.ins[slot] = remap[g.ins[slot] as usize];
+                    debug_assert_ne!(ng.ins[slot], u32::MAX);
+                }
+                kept.push(ng);
+            }
+        }
+        let removed = self.gates.len() - kept.len();
+        self.gates = kept;
+        for id in self.input_ids.iter_mut() {
+            *id = remap[*id as usize];
+        }
+        for (_, id) in self.outputs.iter_mut() {
+            *id = remap[*id as usize];
+        }
+        removed
+    }
+
+    /// Structural validation: operand bounds, arity discipline, outputs
+    /// registered, at least one gate reachable from each output. Returns the
+    /// number of gates *not* reachable from any output (dead logic) — useful
+    /// for catching wasteful generators in tests.
+    pub fn validate(&self) -> Result<usize, String> {
+        for (i, g) in self.gates.iter().enumerate() {
+            for slot in 0..g.kind.arity() {
+                let op = g.ins[slot];
+                if op as usize >= i {
+                    return Err(format!("gate {i} operand {slot} forward-references {op}"));
+                }
+            }
+        }
+        for (name, id) in &self.outputs {
+            if *id as usize >= self.gates.len() {
+                return Err(format!("output {name} references unknown signal {id}"));
+            }
+        }
+        // dead-logic sweep
+        let mut live = vec![false; self.gates.len()];
+        let mut stack: Vec<usize> = self.outputs.iter().map(|&(_, id)| id as usize).collect();
+        while let Some(i) = stack.pop() {
+            if live[i] {
+                continue;
+            }
+            live[i] = true;
+            let g = &self.gates[i];
+            for slot in 0..g.kind.arity() {
+                stack.push(g.ins[slot] as usize);
+            }
+        }
+        let dead = self
+            .gates
+            .iter()
+            .enumerate()
+            .filter(|(i, g)| !live[*i] && !matches!(g.kind, GateKind::Input))
+            .count();
+        Ok(dead)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn build_simple_circuit() {
+        let mut n = Netlist::new("toy");
+        let a = n.input("a");
+        let b = n.input("b");
+        let x = n.xor2(a, b);
+        n.output("x", x);
+        assert_eq!(n.inputs().len(), 2);
+        assert_eq!(n.outputs().len(), 1);
+        assert_eq!(n.validate().unwrap(), 0);
+        assert!(n.area() > 0.0);
+    }
+
+    #[test]
+    #[should_panic(expected = "future signal")]
+    fn forward_reference_panics() {
+        let mut n = Netlist::new("bad");
+        let a = n.input("a");
+        n.push(GateKind::And2, [a, 99, 0]);
+    }
+
+    #[test]
+    fn or_many_and_many_cover_arities() {
+        for k in 0..6 {
+            let mut n = Netlist::new("tree");
+            let ins = n.input_bus("i", k);
+            let o = n.or_many(&ins);
+            let a = n.and_many(&ins);
+            n.output("o", o);
+            n.output("a", a);
+            n.validate().unwrap();
+        }
+    }
+
+    #[test]
+    fn dead_logic_is_counted() {
+        let mut n = Netlist::new("dead");
+        let a = n.input("a");
+        let b = n.input("b");
+        let live = n.and2(a, b);
+        let _dead = n.or2(a, b);
+        n.output("x", live);
+        assert_eq!(n.validate().unwrap(), 1);
+    }
+
+    #[test]
+    fn prune_dead_removes_and_remaps() {
+        let mut n = Netlist::new("p");
+        let a = n.input("a");
+        let b = n.input("b");
+        let live = n.xor2(a, b);
+        let _dead1 = n.and2(a, b);
+        let _dead2 = n.or2(a, b);
+        n.output("x", live);
+        let removed = n.prune_dead();
+        assert_eq!(removed, 2);
+        assert_eq!(n.validate().unwrap(), 0);
+        // circuit still works
+        let o = crate::netlist::sim::eval_outputs_bool(&n, &[true, false]);
+        assert!(o[0]);
+    }
+
+    #[test]
+    fn fold_constants_simplifies_and_preserves_function() {
+        use crate::netlist::sim::eval_outputs_bool;
+        let mut n = Netlist::new("f");
+        let a = n.input("a");
+        let b = n.input("b");
+        let one = n.const1();
+        let zero = n.const0();
+        let x1 = n.and2(a, one); // → a
+        let x2 = n.or2(b, zero); // → b
+        let x3 = n.xor2(x1, one); // → NOT a
+        let fa_s = n.xor3(x1, x2, zero); // → a ⊕ b
+        let fa_c = n.maj3(x1, x2, one); // → a | b
+        let dead = n.and3(a, b, zero); // → 0
+        let out = n.or2(x3, dead); // → NOT a
+        n.output("s", fa_s);
+        n.output("c", fa_c);
+        n.output("o", out);
+        let before: Vec<Vec<bool>> = (0..4)
+            .map(|bits| eval_outputs_bool(&n, &[bits & 1 == 1, bits & 2 == 2]))
+            .collect();
+        n.fold_constants();
+        n.prune_dead();
+        let after: Vec<Vec<bool>> = (0..4)
+            .map(|bits| eval_outputs_bool(&n, &[bits & 1 == 1, bits & 2 == 2]))
+            .collect();
+        assert_eq!(before, after, "folding must preserve function");
+        // all constants and identities folded: expect xor, or(maj3→or2), not
+        assert!(n.logic_gate_count() <= 3, "got {} gates", n.logic_gate_count());
+        assert_eq!(n.validate().unwrap(), 0);
+    }
+
+    #[test]
+    fn fold_constants_random_circuits_preserve_function() {
+        use crate::netlist::sim::eval_outputs_bool;
+        use crate::util::prng::Xoshiro256;
+        let mut rng = Xoshiro256::seeded(2024);
+        for trial in 0..30 {
+            // random DAG over 4 inputs with sprinkled constants
+            let mut n = Netlist::new("r");
+            let mut sigs: Vec<SigId> = (0..4).map(|i| n.input(&format!("i{i}"))).collect();
+            let k0 = n.const0();
+            let k1 = n.const1();
+            sigs.push(k0);
+            sigs.push(k1);
+            for _ in 0..40 {
+                let pick = |rng: &mut Xoshiro256, sigs: &[SigId]| {
+                    sigs[rng.below(sigs.len() as u64) as usize]
+                };
+                let a = pick(&mut rng, &sigs);
+                let b = pick(&mut rng, &sigs);
+                let c = pick(&mut rng, &sigs);
+                let s = match rng.below(10) {
+                    0 => n.and2(a, b),
+                    1 => n.or2(a, b),
+                    2 => n.nand2(a, b),
+                    3 => n.nor2(a, b),
+                    4 => n.xor2(a, b),
+                    5 => n.xnor2(a, b),
+                    6 => n.maj3(a, b, c),
+                    7 => n.mux2(a, b, c),
+                    8 => n.aoi21(a, b, c),
+                    _ => n.not(a),
+                };
+                sigs.push(s);
+            }
+            for (i, &s) in sigs.iter().rev().take(4).enumerate() {
+                n.output(&format!("o{i}"), s);
+            }
+            let before: Vec<Vec<bool>> = (0..16)
+                .map(|bits| {
+                    eval_outputs_bool(
+                        &n,
+                        &[(bits & 1) != 0, (bits & 2) != 0, (bits & 4) != 0, (bits & 8) != 0],
+                    )
+                })
+                .collect();
+            n.fold_constants();
+            let after: Vec<Vec<bool>> = (0..16)
+                .map(|bits| {
+                    eval_outputs_bool(
+                        &n,
+                        &[(bits & 1) != 0, (bits & 2) != 0, (bits & 4) != 0, (bits & 8) != 0],
+                    )
+                })
+                .collect();
+            assert_eq!(before, after, "trial {trial}");
+        }
+    }
+
+    #[test]
+    fn histogram_counts_kinds() {
+        let mut n = Netlist::new("h");
+        let a = n.input("a");
+        let b = n.input("b");
+        let x = n.and2(a, b);
+        let y = n.and2(x, b);
+        n.output("y", y);
+        let hist = n.kind_histogram();
+        let ands = hist.iter().find(|(k, _)| *k == GateKind::And2).unwrap().1;
+        assert_eq!(ands, 2);
+        assert_eq!(n.logic_gate_count(), 2);
+    }
+}

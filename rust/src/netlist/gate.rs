@@ -1,0 +1,232 @@
+//! Cell library: gate kinds and their unit-gate cost model.
+//!
+//! The *unit-gate model* is the standard technology-independent accounting
+//! used in arithmetic-circuit papers (e.g. Zimmermann's adder analyses and
+//! the compressor literature the paper builds on): a 2-input NAND/NOR is
+//! one *gate equivalent* (GE) of area and one unit of delay; an inverter is
+//! half; XOR/XNOR are two (a transmission-gate XOR is ~1.5–2 GE and two
+//! logic levels); compound AOI/OAI cells are 1.5. Dynamic power is modelled
+//! as switching activity × driven capacitance, with capacitance taken
+//! proportional to gate area — exactly the quantity Synopsys reports as
+//! "dynamic power" up to a technology constant. The single technology
+//! constant is calibrated in [`crate::hwmodel`] against the paper's exact
+//! multiplier row (Table 5), so only *ratios* between designs are claimed.
+
+/// Maximum fan-in any gate kind uses.
+pub const MAX_FANIN: usize = 3;
+
+/// Gate kinds. Inputs are ordered; `Mux2`'s operands are `(sel, a, b)` and
+/// it computes `if sel { b } else { a }`. `Aoi21` computes `!((a & b) | c)`;
+/// `Oai21` computes `!((a | b) & c)`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum GateKind {
+    /// Primary input (no operands).
+    Input,
+    Const0,
+    Const1,
+    Not,
+    Buf,
+    And2,
+    Or2,
+    Nand2,
+    Nor2,
+    Xor2,
+    Xnor2,
+    And3,
+    Or3,
+    Nand3,
+    Nor3,
+    /// Majority of three — the carry core of a full adder (single complex
+    /// cell in real libraries).
+    Maj3,
+    /// `!((a & b) | c)`
+    Aoi21,
+    /// `!((a | b) & c)`
+    Oai21,
+    /// `(sel, a, b) -> if sel { b } else { a }`
+    Mux2,
+}
+
+impl GateKind {
+    /// Number of operands.
+    pub fn arity(self) -> usize {
+        use GateKind::*;
+        match self {
+            Input | Const0 | Const1 => 0,
+            Not | Buf => 1,
+            And2 | Or2 | Nand2 | Nor2 | Xor2 | Xnor2 => 2,
+            And3 | Or3 | Nand3 | Nor3 | Maj3 | Aoi21 | Oai21 | Mux2 => 3,
+        }
+    }
+
+    /// Area in gate equivalents (GE). 1 GE = one 2-input NAND.
+    pub fn area(self) -> f64 {
+        use GateKind::*;
+        match self {
+            Input | Const0 | Const1 => 0.0,
+            Not => 0.5,
+            Buf => 1.0,
+            Nand2 | Nor2 => 1.0,
+            And2 | Or2 => 1.5,
+            Xor2 | Xnor2 => 2.0,
+            Nand3 | Nor3 => 1.5,
+            And3 | Or3 => 2.0,
+            Maj3 => 2.5,
+            Aoi21 | Oai21 => 1.5,
+            Mux2 => 2.5,
+        }
+    }
+
+    /// Propagation delay in unit-gate delays.
+    pub fn delay(self) -> f64 {
+        use GateKind::*;
+        match self {
+            Input | Const0 | Const1 => 0.0,
+            Not => 0.5,
+            Buf => 1.0,
+            Nand2 | Nor2 => 1.0,
+            And2 | Or2 => 1.5,
+            Xor2 | Xnor2 => 2.0,
+            Nand3 | Nor3 => 1.4,
+            And3 | Or3 => 1.9,
+            Maj3 => 2.0,
+            Aoi21 | Oai21 => 1.5,
+            Mux2 => 2.0,
+        }
+    }
+
+    /// Switched capacitance per output toggle, in arbitrary units
+    /// (proportional to area — bigger cells drive/present more C).
+    pub fn cap(self) -> f64 {
+        self.area()
+    }
+
+    /// All kinds, for exhaustive tests / iteration.
+    pub fn all() -> &'static [GateKind] {
+        use GateKind::*;
+        &[
+            Input, Const0, Const1, Not, Buf, And2, Or2, Nand2, Nor2, Xor2, Xnor2, And3, Or3,
+            Nand3, Nor3, Maj3, Aoi21, Oai21, Mux2,
+        ]
+    }
+
+    /// Scalar semantics (reference model; the packed simulator must agree).
+    pub fn eval_bool(self, a: bool, b: bool, c: bool) -> bool {
+        use GateKind::*;
+        match self {
+            Input => unreachable!("inputs are driven externally"),
+            Const0 => false,
+            Const1 => true,
+            Not => !a,
+            Buf => a,
+            And2 => a & b,
+            Or2 => a | b,
+            Nand2 => !(a & b),
+            Nor2 => !(a | b),
+            Xor2 => a ^ b,
+            Xnor2 => !(a ^ b),
+            And3 => a & b & c,
+            Or3 => a | b | c,
+            Nand3 => !(a & b & c),
+            Nor3 => !(a | b | c),
+            Maj3 => (a & b) | (a & c) | (b & c),
+            Aoi21 => !((a & b) | c),
+            Oai21 => !((a | b) & c),
+            Mux2 => {
+                if a {
+                    c
+                } else {
+                    b
+                }
+            }
+        }
+    }
+
+    /// Packed semantics over 64 lanes.
+    #[inline(always)]
+    pub fn eval_packed(self, a: u64, b: u64, c: u64) -> u64 {
+        use GateKind::*;
+        match self {
+            Input => unreachable!("inputs are driven externally"),
+            Const0 => 0,
+            Const1 => !0,
+            Not => !a,
+            Buf => a,
+            And2 => a & b,
+            Or2 => a | b,
+            Nand2 => !(a & b),
+            Nor2 => !(a | b),
+            Xor2 => a ^ b,
+            Xnor2 => !(a ^ b),
+            And3 => a & b & c,
+            Or3 => a | b | c,
+            Nand3 => !(a & b & c),
+            Nor3 => !(a | b | c),
+            Maj3 => (a & b) | (a & c) | (b & c),
+            Aoi21 => !((a & b) | c),
+            Oai21 => !((a | b) & c),
+            Mux2 => (a & c) | (!a & b),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// The packed evaluator must agree with the scalar semantics on every
+    /// kind and every operand combination — this is the foundation the
+    /// whole hardware-evaluation stack rests on.
+    #[test]
+    fn packed_matches_scalar_for_all_kinds() {
+        for &kind in GateKind::all() {
+            if kind == GateKind::Input {
+                continue;
+            }
+            for bits in 0..8u8 {
+                let (a, b, c) = (bits & 1 != 0, bits & 2 != 0, bits & 4 != 0);
+                let scalar = kind.eval_bool(a, b, c);
+                let pa = if a { !0u64 } else { 0 };
+                let pb = if b { !0u64 } else { 0 };
+                let pc = if c { !0u64 } else { 0 };
+                let packed = kind.eval_packed(pa, pb, pc);
+                assert_eq!(
+                    packed,
+                    if scalar { !0u64 } else { 0 },
+                    "kind {kind:?} bits {bits:03b}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn mux_semantics() {
+        use GateKind::Mux2;
+        // (sel, a, b): sel=0 -> a, sel=1 -> b
+        assert!(!Mux2.eval_bool(false, false, true));
+        assert!(Mux2.eval_bool(false, true, false));
+        assert!(Mux2.eval_bool(true, false, true));
+        assert!(!Mux2.eval_bool(true, true, false));
+    }
+
+    #[test]
+    fn cost_model_sanity() {
+        // NAND is the unit; XOR costs more than NAND; INV is cheapest
+        // non-free cell; constants and inputs are free.
+        assert_eq!(GateKind::Nand2.area(), 1.0);
+        assert!(GateKind::Xor2.area() > GateKind::Nand2.area());
+        assert!(GateKind::Not.area() < GateKind::Nand2.area());
+        assert_eq!(GateKind::Input.area(), 0.0);
+        assert_eq!(GateKind::Const1.delay(), 0.0);
+        for &k in GateKind::all() {
+            assert!(k.area() >= 0.0 && k.delay() >= 0.0 && k.cap() >= 0.0);
+        }
+    }
+
+    #[test]
+    fn arity_is_consistent_with_eval() {
+        for &k in GateKind::all() {
+            assert!(k.arity() <= MAX_FANIN);
+        }
+    }
+}

@@ -1,0 +1,30 @@
+//! Gate-level netlist EDA toolkit.
+//!
+//! This is the substrate that replaces the paper's Verilog + Synopsys DC +
+//! UMC 90nm evaluation flow (which we do not have). It provides:
+//!
+//! * [`gate`] — the cell library: gate kinds with unit-gate area, delay and
+//!   switching-capacitance figures (documented in `gate.rs`).
+//! * [`builder`] — [`Netlist`] construction: a netlist is an append-only DAG
+//!   of gates; construction order is a topological order by design, so
+//!   simulation and timing are single linear passes.
+//! * [`sim`] — functional simulation. The workhorse is *bit-parallel*
+//!   evaluation: 64 independent test vectors are packed into each `u64`
+//!   word, so an exhaustive 8×8-multiplier sweep (65 536 vectors) costs
+//!   only 1024 netlist passes. A scalar reference evaluator cross-checks it.
+//! * [`timing`] — static timing analysis (longest path by unit delays).
+//! * [`power`] — switching-activity power: toggle counts per net over a
+//!   vector sequence, weighted by driven capacitance.
+//!
+//! All hardware numbers in Tables 5/Fig 10 derive from these models plus a
+//! single linear calibration to the paper's exact-multiplier row (see
+//! [`crate::hwmodel`]).
+
+pub mod gate;
+pub mod builder;
+pub mod sim;
+pub mod timing;
+pub mod power;
+
+pub use builder::{Netlist, SigId};
+pub use gate::GateKind;

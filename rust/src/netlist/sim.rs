@@ -1,0 +1,191 @@
+//! Functional simulation: scalar reference + 64-lane bit-parallel engine.
+
+use super::builder::{Netlist, SigId};
+use super::gate::GateKind;
+
+/// Scalar (one-vector) evaluation. Slow; the reference the packed engine is
+/// validated against.
+pub fn eval_bool(netlist: &Netlist, inputs: &[bool]) -> Vec<bool> {
+    assert_eq!(inputs.len(), netlist.inputs().len(), "input arity mismatch");
+    let mut values = vec![false; netlist.len()];
+    let mut next_input = 0;
+    for (i, g) in netlist.gates().iter().enumerate() {
+        values[i] = match g.kind {
+            GateKind::Input => {
+                let v = inputs[next_input];
+                next_input += 1;
+                v
+            }
+            kind => {
+                let a = values[g.ins[0] as usize];
+                let b = values[g.ins[1] as usize];
+                let c = values[g.ins[2] as usize];
+                kind.eval_bool(a, b, c)
+            }
+        };
+    }
+    values
+}
+
+/// Scalar evaluation returning only registered outputs (LSB-first order of
+/// registration).
+pub fn eval_outputs_bool(netlist: &Netlist, inputs: &[bool]) -> Vec<bool> {
+    let values = eval_bool(netlist, inputs);
+    netlist.outputs().iter().map(|&(_, id)| values[id as usize]).collect()
+}
+
+/// Bit-parallel simulator: each `u64` word carries 64 independent vectors.
+///
+/// Reuses its value buffer across calls — create once, call
+/// [`PackedSim::run`] many times on the hot path.
+pub struct PackedSim {
+    values: Vec<u64>,
+}
+
+impl PackedSim {
+    pub fn new(netlist: &Netlist) -> Self {
+        Self { values: vec![0; netlist.len()] }
+    }
+
+    /// Evaluate 64 vectors at once. `inputs[k]` is the packed word for the
+    /// k-th primary input. Returns the full value vector (one word per
+    /// signal); use [`Netlist::outputs`] ids to extract outputs.
+    pub fn run(&mut self, netlist: &Netlist, inputs: &[u64]) -> &[u64] {
+        assert_eq!(inputs.len(), netlist.inputs().len(), "input arity mismatch");
+        let values = &mut self.values;
+        values.resize(netlist.len(), 0);
+        let mut next_input = 0;
+        for (i, g) in netlist.gates().iter().enumerate() {
+            values[i] = match g.kind {
+                GateKind::Input => {
+                    let v = inputs[next_input];
+                    next_input += 1;
+                    v
+                }
+                kind => {
+                    let a = values[g.ins[0] as usize];
+                    let b = values[g.ins[1] as usize];
+                    let c = values[g.ins[2] as usize];
+                    kind.eval_packed(a, b, c)
+                }
+            };
+        }
+        values
+    }
+
+    /// Convenience: run and extract output words.
+    pub fn run_outputs(&mut self, netlist: &Netlist, inputs: &[u64]) -> Vec<u64> {
+        let out_ids: Vec<SigId> = netlist.output_ids();
+        let values = self.run(netlist, inputs);
+        out_ids.iter().map(|&id| values[id as usize]).collect()
+    }
+}
+
+/// Pack a batch of ≤64 boolean vectors (each `vectors[v][i]` = value of
+/// input `i` in vector `v`) into per-input words: `out[i]` bit `v`.
+pub fn pack_vectors(vectors: &[Vec<bool>], num_inputs: usize) -> Vec<u64> {
+    assert!(vectors.len() <= 64);
+    let mut out = vec![0u64; num_inputs];
+    for (v, vec) in vectors.iter().enumerate() {
+        assert_eq!(vec.len(), num_inputs);
+        for (i, &bit) in vec.iter().enumerate() {
+            if bit {
+                out[i] |= 1 << v;
+            }
+        }
+    }
+    out
+}
+
+/// Helper for integer-operand circuits: pack lane `v`'s operand bits from
+/// an integer, LSB-first, into `words[bit_offset..bit_offset+bits]`.
+#[inline]
+pub fn pack_int_lane(words: &mut [u64], lane: usize, bit_offset: usize, value: u64, bits: usize) {
+    debug_assert!(lane < 64);
+    for b in 0..bits {
+        if (value >> b) & 1 != 0 {
+            words[bit_offset + b] |= 1 << lane;
+        }
+    }
+}
+
+/// Extract lane `v` of packed output words as an integer, LSB-first.
+#[inline]
+pub fn unpack_int_lane(words: &[u64], lane: usize) -> u64 {
+    let mut out = 0u64;
+    for (b, &w) in words.iter().enumerate() {
+        out |= ((w >> lane) & 1) << b;
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prng::Xoshiro256;
+
+    fn toy_netlist() -> Netlist {
+        // f = (a & b) ^ c ; g = maj(a, b, c)
+        let mut n = Netlist::new("toy");
+        let a = n.input("a");
+        let b = n.input("b");
+        let c = n.input("c");
+        let ab = n.and2(a, b);
+        let f = n.xor2(ab, c);
+        let g = n.maj3(a, b, c);
+        n.output("f", f);
+        n.output("g", g);
+        n
+    }
+
+    #[test]
+    fn scalar_eval_truth_table() {
+        let n = toy_netlist();
+        for bits in 0..8u8 {
+            let a = bits & 1 != 0;
+            let b = bits & 2 != 0;
+            let c = bits & 4 != 0;
+            let out = eval_outputs_bool(&n, &[a, b, c]);
+            assert_eq!(out[0], (a & b) ^ c);
+            assert_eq!(out[1], (a & b) | (a & c) | (b & c));
+        }
+    }
+
+    #[test]
+    fn packed_matches_scalar_on_random_vectors() {
+        let n = toy_netlist();
+        let mut rng = Xoshiro256::seeded(1234);
+        let vectors: Vec<Vec<bool>> =
+            (0..64).map(|_| (0..3).map(|_| rng.chance(0.5)).collect()).collect();
+        let packed_in = pack_vectors(&vectors, 3);
+        let mut sim = PackedSim::new(&n);
+        let packed_out = sim.run_outputs(&n, &packed_in);
+        for (v, vec) in vectors.iter().enumerate() {
+            let scalar_out = eval_outputs_bool(&n, vec);
+            for (o, &word) in packed_out.iter().enumerate() {
+                assert_eq!((word >> v) & 1 == 1, scalar_out[o], "vector {v} output {o}");
+            }
+        }
+    }
+
+    #[test]
+    fn int_lane_roundtrip() {
+        let mut words = vec![0u64; 16];
+        pack_int_lane(&mut words, 5, 0, 0xABCD, 16);
+        pack_int_lane(&mut words, 6, 0, 0x1234, 16);
+        assert_eq!(unpack_int_lane(&words, 5), 0xABCD);
+        assert_eq!(unpack_int_lane(&words, 6), 0x1234);
+        assert_eq!(unpack_int_lane(&words, 7), 0);
+    }
+
+    #[test]
+    fn sim_buffer_is_reusable() {
+        let n = toy_netlist();
+        let mut sim = PackedSim::new(&n);
+        let a = sim.run_outputs(&n, &[!0, 0, 0]);
+        let b = sim.run_outputs(&n, &[0, 0, !0]);
+        assert_ne!(a, b);
+        let a2 = sim.run_outputs(&n, &[!0, 0, 0]);
+        assert_eq!(a, a2, "buffer reuse must not leak state");
+    }
+}

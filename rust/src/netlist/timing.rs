@@ -1,0 +1,137 @@
+//! Static timing analysis: longest path under the unit-gate delay model.
+//!
+//! Arrival time of a gate output = max over operands of their arrival +
+//! this gate's propagation delay. Primary inputs arrive at t=0. The
+//! critical path is the maximum arrival over registered outputs — the
+//! quantity the paper reports as "Delay (ns)" (Table 5) up to the
+//! technology calibration constant.
+
+use super::builder::Netlist;
+use super::gate::GateKind;
+
+#[derive(Debug, Clone)]
+pub struct TimingReport {
+    /// Arrival time per signal.
+    pub arrival: Vec<f64>,
+    /// Max arrival over registered outputs.
+    pub critical_delay: f64,
+    /// Signal ids on the critical path, input → output.
+    pub critical_path: Vec<u32>,
+    /// Logic depth (gate count) along the critical path.
+    pub depth: usize,
+}
+
+/// Compute arrival times and the critical path.
+pub fn analyze(netlist: &Netlist) -> TimingReport {
+    let n = netlist.len();
+    let mut arrival = vec![0.0f64; n];
+    let mut pred: Vec<Option<u32>> = vec![None; n];
+    for (i, g) in netlist.gates().iter().enumerate() {
+        match g.kind {
+            GateKind::Input | GateKind::Const0 | GateKind::Const1 => {
+                arrival[i] = 0.0;
+            }
+            kind => {
+                let mut worst = 0.0f64;
+                let mut worst_in = None;
+                for slot in 0..kind.arity() {
+                    let op = g.ins[slot];
+                    let t = arrival[op as usize];
+                    if t >= worst {
+                        worst = t;
+                        worst_in = Some(op);
+                    }
+                }
+                arrival[i] = worst + kind.delay();
+                pred[i] = worst_in;
+            }
+        }
+    }
+    // Critical output
+    let (mut crit_sig, mut crit_t) = (None, -1.0f64);
+    for &(_, id) in netlist.outputs() {
+        if arrival[id as usize] > crit_t {
+            crit_t = arrival[id as usize];
+            crit_sig = Some(id);
+        }
+    }
+    let mut path = Vec::new();
+    let mut cur = crit_sig;
+    while let Some(id) = cur {
+        path.push(id);
+        cur = pred[id as usize];
+    }
+    path.reverse();
+    let depth = path
+        .iter()
+        .filter(|&&id| {
+            !matches!(
+                netlist.gates()[id as usize].kind,
+                GateKind::Input | GateKind::Const0 | GateKind::Const1
+            )
+        })
+        .count();
+    TimingReport {
+        arrival,
+        critical_delay: crit_t.max(0.0),
+        critical_path: path,
+        depth,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn chain_delay_accumulates() {
+        let mut n = Netlist::new("chain");
+        let a = n.input("a");
+        let b = n.input("b");
+        let mut x = n.nand2(a, b); // 1.0
+        for _ in 0..3 {
+            x = n.nand2(x, b); // +3.0
+        }
+        n.output("x", x);
+        let t = analyze(&n);
+        assert!((t.critical_delay - 4.0).abs() < 1e-12);
+        assert_eq!(t.depth, 4);
+    }
+
+    #[test]
+    fn critical_path_picks_longer_branch() {
+        let mut n = Netlist::new("branch");
+        let a = n.input("a");
+        let b = n.input("b");
+        // short branch: one NAND (1.0); long branch: XOR chain (2.0 + 2.0)
+        let short = n.nand2(a, b);
+        let x1 = n.xor2(a, b);
+        let x2 = n.xor2(x1, b);
+        let out = n.or2(short, x2); // +1.5 from arrival 4.0
+        n.output("o", out);
+        let t = analyze(&n);
+        assert!((t.critical_delay - 5.5).abs() < 1e-12);
+        // path should route through the XOR chain
+        assert!(t.critical_path.contains(&x1) && t.critical_path.contains(&x2));
+    }
+
+    #[test]
+    fn constants_have_zero_arrival() {
+        let mut n = Netlist::new("c");
+        let a = n.input("a");
+        let one = n.const1();
+        let x = n.and2(a, one);
+        n.output("x", x);
+        let t = analyze(&n);
+        assert!((t.critical_delay - 1.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn empty_output_set_reports_zero() {
+        let mut n = Netlist::new("noout");
+        let _ = n.input("a");
+        let t = analyze(&n);
+        assert_eq!(t.critical_delay, 0.0);
+        assert_eq!(t.depth, 0);
+    }
+}

@@ -1,0 +1,135 @@
+//! Design-space ablation: quantifies every reconstruction decision that
+//! DESIGN.md documents (compressor candidate, third-slot mode, error
+//! compensation, truncation width) at the multiplier level.
+
+use crate::compressors::exact::{ExactAbc1, ExactAbcd1};
+use crate::compressors::proposed::*;
+use crate::compressors::Abcd1Compressor;
+use crate::error::error_metrics;
+use crate::multipliers::{
+    ApproxMulConfig, ApproxSignedMultiplier, Compensation, MultiplierModel, Sf3Mode,
+};
+use std::sync::Arc;
+
+fn base() -> ApproxMulConfig {
+    let mut cfg = ApproxMulConfig::paper_default(
+        "ablation",
+        8,
+        Arc::new(ProposedApproxAbcd1),
+        Arc::new(ProposedApproxAbc1),
+        false,
+    );
+    cfg.sf3 = Sf3Mode::ExactEncoder;
+    cfg
+}
+
+fn line(name: &str, cfg: ApproxMulConfig) -> String {
+    let m = ApproxSignedMultiplier::new(cfg);
+    let e = error_metrics(&m);
+    let nl = m.build_netlist();
+    format!(
+        "  {:<34} NMED {:>6.3}%  MRED {:>6.2}%  ME {:>+8.2}  max|ED| {:>5}  area {:>5.1} GE\n",
+        name,
+        e.nmed * 100.0,
+        e.mred * 100.0,
+        e.me,
+        e.max_ed,
+        nl.area()
+    )
+}
+
+pub fn report(_seed: u64) -> String {
+    let mut s = String::new();
+    s.push_str("== Ablation: reconstruction design space (N = 8) ==\n");
+
+    s.push_str("-- A+B+C+D+1 candidate (CSP compressor) --\n");
+    let candidates: Vec<(&str, Arc<dyn Abcd1Compressor>)> = vec![
+        ("C5 maj-carry (shipped)", Arc::new(ProposedApproxAbcd1)),
+        ("C4 fully-gated", Arc::new(AblationAbcd1Gated)),
+        ("C1 ungated parity", Arc::new(AblationAbcd1Parity)),
+        ("C3 OR-sum (cheapest)", Arc::new(AblationAbcd1OrSum)),
+        ("exact 4:2 (upper bound)", Arc::new(ExactAbcd1)),
+    ];
+    for (name, c) in candidates {
+        let mut cfg = base();
+        cfg.abcd1 = c;
+        s.push_str(&line(name, cfg));
+    }
+
+    s.push_str("-- third compressor slot --\n");
+    for (name, mode) in [
+        ("exact encoder (shipped)", Sf3Mode::ExactEncoder),
+        ("design cell", Sf3Mode::DesignCell),
+        ("skip (no replacement)", Sf3Mode::Skip),
+    ] {
+        let mut cfg = base();
+        cfg.sf3 = mode;
+        s.push_str(&line(name, cfg));
+    }
+
+    s.push_str("-- error compensation --\n");
+    for (name, comp) in [
+        ("paper (CSP constants, shipped)", Compensation::Paper),
+        ("literal (+ standalone bit)", Compensation::Literal),
+        ("none", Compensation::None),
+    ] {
+        let mut cfg = base();
+        cfg.compensation = comp;
+        s.push_str(&line(name, cfg));
+    }
+
+    s.push_str("-- truncation width (columns dropped) --\n");
+    for t in [0usize, 3, 5, 7] {
+        let mut cfg = base();
+        cfg.truncate_cols = t;
+        if t == 0 {
+            cfg.compensation = Compensation::None;
+        }
+        s.push_str(&line(&format!("truncate {t} columns"), cfg));
+    }
+
+    s.push_str("-- exact CSP everywhere (approximation = truncation only) --\n");
+    let mut cfg = base();
+    cfg.abcd1 = Arc::new(ExactAbcd1);
+    cfg.abc1 = Arc::new(ExactAbc1);
+    s.push_str(&line("all-exact CSP", cfg));
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn report_covers_all_axes() {
+        let s = super::report(1);
+        for needle in [
+            "C5 maj-carry",
+            "C4 fully-gated",
+            "third compressor",
+            "compensation",
+            "truncation width",
+        ] {
+            assert!(s.contains(needle), "{needle} missing");
+        }
+    }
+
+    /// The shipped configuration must be the best candidate on MRED —
+    /// the empirical basis for DESIGN.md's reconstruction choice.
+    #[test]
+    fn shipped_candidate_wins_mred() {
+        use super::*;
+        let shipped = {
+            let m = ApproxSignedMultiplier::new(base());
+            error_metrics(&m).mred
+        };
+        for alt in [
+            Arc::new(AblationAbcd1Gated) as Arc<dyn Abcd1Compressor>,
+            Arc::new(AblationAbcd1Parity),
+            Arc::new(AblationAbcd1OrSum),
+        ] {
+            let mut cfg = base();
+            cfg.abcd1 = alt;
+            let m = ApproxSignedMultiplier::new(cfg);
+            assert!(shipped < error_metrics(&m).mred + 1e-12);
+        }
+    }
+}

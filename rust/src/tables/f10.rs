@@ -1,0 +1,90 @@
+//! Fig. 10: PDP vs MRED scatter — joins Table 5's PDP axis with Table 4's
+//! MRED axis, printed as an aligned series plus an ASCII scatter.
+
+use crate::error::error_metrics;
+use crate::hwmodel::evaluate_all;
+use crate::multipliers::{build_design, DesignId};
+
+pub struct ScatterPoint {
+    pub id: DesignId,
+    pub pdp_fj: f64,
+    pub mred_pct: f64,
+}
+
+pub fn points(seed: u64) -> Vec<ScatterPoint> {
+    let hw = evaluate_all(8, seed);
+    DesignId::table5_order()
+        .into_iter()
+        .filter(|id| *id != DesignId::Exact) // the paper plots approximate designs
+        .map(|id| {
+            let m = build_design(id, 8);
+            let e = error_metrics(m.as_ref());
+            let pdp = hw.iter().find(|(i, _)| *i == id).unwrap().1.pdp_fj;
+            ScatterPoint { id, pdp_fj: pdp, mred_pct: e.mred * 100.0 }
+        })
+        .collect()
+}
+
+pub fn render(seed: u64) -> String {
+    let pts = points(seed);
+    let mut s = String::new();
+    s.push_str("== Fig 10: PDP vs MRED trade-off ==\n");
+    s.push_str("  design            PDP (fJ)   MRED (%)\n");
+    for p in &pts {
+        let star = if p.id == DesignId::Proposed { "  *proposed*" } else { "" };
+        s.push_str(&format!(
+            "  {:<17} {:>8.2}   {:>7.2}{star}\n",
+            p.id.paper_name(),
+            p.pdp_fj,
+            p.mred_pct
+        ));
+    }
+    // ASCII scatter: x = MRED, y = PDP (top = high)
+    let (w, h) = (64usize, 16usize);
+    let max_pdp = pts.iter().map(|p| p.pdp_fj).fold(0.0f64, f64::max) * 1.05;
+    let max_mred = pts.iter().map(|p| p.mred_pct).fold(0.0f64, f64::max) * 1.05;
+    let mut grid = vec![vec![' '; w]; h];
+    for p in &pts {
+        let x = ((p.mred_pct / max_mred) * (w - 1) as f64) as usize;
+        let y = h - 1 - ((p.pdp_fj / max_pdp) * (h - 1) as f64) as usize;
+        grid[y][x] = if p.id == DesignId::Proposed { '*' } else { 'o' };
+    }
+    s.push_str(&format!("  PDP ^ (max {max_pdp:.0} fJ)\n"));
+    for row in grid {
+        s.push_str("      |");
+        s.extend(row);
+        s.push('\n');
+    }
+    s.push_str(&format!(
+        "      +{}> MRED (max {max_mred:.0}%)   (* = proposed, lower-left is better)\n",
+        "-".repeat(w)
+    ));
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// The proposed design must be Pareto-optimal: no design has both
+    /// lower PDP and lower MRED (paper: it is the lower-left corner).
+    #[test]
+    fn proposed_is_pareto_optimal() {
+        let pts = points(42);
+        let prop = pts.iter().find(|p| p.id == DesignId::Proposed).unwrap();
+        for p in &pts {
+            if p.id != DesignId::Proposed {
+                assert!(
+                    !(p.pdp_fj < prop.pdp_fj && p.mred_pct < prop.mred_pct),
+                    "{:?} dominates proposed",
+                    p.id
+                );
+            }
+        }
+        // stronger: the paper claims BOTH axes are best
+        for p in &pts {
+            assert!(prop.pdp_fj <= p.pdp_fj + 1e-9, "PDP vs {:?}", p.id);
+            assert!(prop.mred_pct <= p.mred_pct + 1e-9, "MRED vs {:?}", p.id);
+        }
+    }
+}

@@ -1,0 +1,87 @@
+//! Fig. 9: edge-detection outputs + PSNR per design.
+//!
+//! PSNR is computed against the exact-multiplier edge map on the
+//! deterministic synthetic scene (the paper's photographs are
+//! substituted — see DESIGN.md §Substitutions). Edge maps are written as
+//! PGM files next to the textual report.
+
+use crate::image::{edge_detect, psnr, synthetic_scene};
+use crate::multipliers::{build_design, DesignId};
+use std::path::Path;
+
+/// Paper's headline: the proposed design reaches 20.13 dB, the highest.
+pub const PAPER_PROPOSED_PSNR_DB: f64 = 20.13;
+
+pub fn rows(seed: u64) -> Vec<(DesignId, f64)> {
+    let img = synthetic_scene(256, 256, seed);
+    let exact = build_design(DesignId::Exact, 8);
+    let reference = edge_detect(&img, exact.as_ref());
+    DesignId::table4_order()
+        .into_iter()
+        .map(|id| {
+            let m = build_design(id, 8);
+            let edges = edge_detect(&img, m.as_ref());
+            (id, psnr(&reference, &edges))
+        })
+        .collect()
+}
+
+pub fn render(seed: u64, out_dir: &Path) -> crate::Result<String> {
+    let img = synthetic_scene(256, 256, seed);
+    let exact = build_design(DesignId::Exact, 8);
+    let reference = edge_detect(&img, exact.as_ref());
+    std::fs::create_dir_all(out_dir)?;
+    img.write_pgm(&out_dir.join("scene.pgm"))?;
+    reference.write_pgm(&out_dir.join("edges_exact.pgm"))?;
+
+    let mut s = String::new();
+    s.push_str("== Fig 9: edge detection, PSNR vs exact edge map (synthetic 256x256 scene) ==\n");
+    for id in DesignId::table4_order() {
+        let m = build_design(id, 8);
+        let edges = edge_detect(&img, m.as_ref());
+        let db = psnr(&reference, &edges);
+        let fname = format!(
+            "edges_{}.pgm",
+            id.paper_name().to_lowercase().replace(['[', ']', ' '], "")
+        );
+        edges.write_pgm(&out_dir.join(&fname))?;
+        let marker = if id == DesignId::Proposed {
+            format!("   <-- paper: {PAPER_PROPOSED_PSNR_DB} dB (highest)")
+        } else {
+            String::new()
+        };
+        s.push_str(&format!(
+            "  {:<17}  PSNR = {:>6.2} dB   ({fname}){marker}\n",
+            id.paper_name(),
+            db
+        ));
+    }
+    s.push_str(&format!("  edge maps written to {}\n", out_dir.display()));
+    Ok(s)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Fig 9's shape: the proposed design has the highest PSNR of all
+    /// approximate designs, in the paper's ~20 dB regime.
+    #[test]
+    fn proposed_has_highest_psnr() {
+        let rows = rows(11);
+        let prop = rows
+            .iter()
+            .find(|(id, _)| *id == DesignId::Proposed)
+            .unwrap()
+            .1;
+        for (id, db) in &rows {
+            if *id != DesignId::Proposed {
+                assert!(prop > *db, "proposed {prop:.2} !> {id:?} {db:.2}");
+            }
+        }
+        assert!(
+            (prop - PAPER_PROPOSED_PSNR_DB).abs() < 5.0,
+            "proposed PSNR {prop:.2} far from paper {PAPER_PROPOSED_PSNR_DB}"
+        );
+    }
+}

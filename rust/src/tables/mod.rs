@@ -1,0 +1,40 @@
+//! Paper-table and figure generators (the reproduction harness).
+//!
+//! Every table and figure of the paper's evaluation has a generator here
+//! that prints the same rows/series the paper reports and returns the
+//! data for tests/benches. `sfcmul tables --id <t1|t2|t3|t4|t5|f9|f10|all>`
+//! is the CLI entry.
+
+pub mod t1;
+pub mod t2t3;
+pub mod t4;
+pub mod t5;
+pub mod f9;
+pub mod f10;
+pub mod ablation;
+pub mod sweep;
+
+pub use ablation::report as ablation_report;
+
+/// Generate a table/figure by id; returns its printable text.
+pub fn generate(id: &str, seed: u64, out_dir: &std::path::Path) -> crate::Result<String> {
+    match id {
+        "t1" => Ok(t1::render()),
+        "t2" => Ok(t2t3::render_t2()),
+        "t3" => Ok(t2t3::render_t3()),
+        "t4" => Ok(t4::render()),
+        "t5" => Ok(t5::render(seed)),
+        "f9" => f9::render(seed, out_dir),
+        "f10" => Ok(f10::render(seed)),
+        "sweep" => Ok(sweep::render()),
+        "all" => {
+            let mut s = String::new();
+            for id in ["t1", "t2", "t3", "t4", "t5", "f9", "f10"] {
+                s.push_str(&generate(id, seed, out_dir)?);
+                s.push('\n');
+            }
+            Ok(s)
+        }
+        other => anyhow::bail!("unknown table id {other:?} (t1..t5, f9, f10, sweep, all)"),
+    }
+}

@@ -1,0 +1,90 @@
+//! Tables 2 and 3: sign-focused compressor truth tables with row
+//! probabilities, per-design approximate values, errors, `P_E`, `E_mean`.
+
+use crate::compressors::{abc1_stats, abcd1_stats, all_abc1_designs, all_abcd1_designs};
+
+pub fn render_t2() -> String {
+    let designs = all_abc1_designs();
+    let stats: Vec<_> = designs.iter().map(|d| abc1_stats(d.as_ref())).collect();
+    let mut s = String::new();
+    s.push_str("== Table 2: A+B+C+1 sign-focused compressors (P(A)=3/4, P(B)=P(C)=1/4) ==\n");
+    s.push_str("  A B C   P(row)  exact");
+    for st in &stats {
+        s.push_str(&format!(" | {:>18}", st.name));
+    }
+    s.push('\n');
+    for row in 0..8 {
+        let bits = stats[0].rows[row].0;
+        let (a, b, c) = (bits >> 2 & 1, bits >> 1 & 1, bits & 1);
+        s.push_str(&format!(
+            "  {a} {b} {c}   {:>5.3}   {:>5}",
+            stats[0].rows[row].1, stats[0].rows[row].2
+        ));
+        for st in &stats {
+            let (_, _, _, approx, err) = st.rows[row];
+            s.push_str(&format!(" | {:>8} (err {:+2})", approx, err));
+        }
+        s.push('\n');
+    }
+    s.push_str("  P_E   ");
+    for st in &stats {
+        s.push_str(&format!(" | {:>18.4}", st.error_probability));
+    }
+    s.push_str("\n  E_mean");
+    for st in &stats {
+        s.push_str(&format!(" | {:>18.4}", st.mean_error));
+    }
+    s.push('\n');
+    s.push_str(
+        "  note: paper's printed P_E/E_mean summary row for 'Proposed' (0.0140/-0.0468)\n  \
+         is inconsistent with its own Err column; values above are derived from the\n  \
+         truth table (P_E = 9/64 = 0.1406, E_mean = +3/64). See EXPERIMENTS.md.\n",
+    );
+    s
+}
+
+pub fn render_t3() -> String {
+    let designs = all_abcd1_designs();
+    let mut s = String::new();
+    s.push_str("== Table 3: A+B+C+D+1 compressors (P(A)=3/4, P(B..D)=1/4) ==\n");
+    for d in &designs {
+        let st = abcd1_stats(d.as_ref());
+        s.push_str(&format!(
+            "  {:<18} P_E = {:>6.4}  E_mean = {:>+7.4}  E|err| = {:>6.4}\n",
+            st.name, st.error_probability, st.mean_error, st.mean_abs_error
+        ));
+    }
+    // full truth table for the shipped proposed design
+    let proposed = abcd1_stats(&crate::compressors::proposed::ProposedApproxAbcd1);
+    s.push_str("  proposed (C5) truth table: A B C D | P(row) exact approx err\n");
+    for (bits, p, exact, approx, err) in &proposed.rows {
+        s.push_str(&format!(
+            "    {} {} {} {}  | {:>6.4}  {exact}  {approx}  {err:+}\n",
+            bits >> 3 & 1,
+            bits >> 2 & 1,
+            bits >> 1 & 1,
+            bits & 1,
+            p
+        ));
+    }
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn t2_contains_all_designs_and_sums() {
+        let s = super::render_t2();
+        for name in ["AC1 [4]", "AC2 [5]", "AC3 [12]", "AC4 [3]", "AC5 [2]", "Proposed"] {
+            assert!(s.contains(name), "{name} missing:\n{s}");
+        }
+        assert!(s.contains("0.1406"));
+    }
+
+    #[test]
+    fn t3_contains_proposed_rows() {
+        let s = super::render_t3();
+        assert!(s.contains("truth table"));
+        assert!(s.contains("P_E"));
+    }
+}

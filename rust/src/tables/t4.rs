@@ -1,0 +1,87 @@
+//! Table 4: ER / NMED / MRED of every design, exhaustive over all 65 536
+//! signed 8-bit operand pairs (paper §5.1, Eqs. 7–8).
+
+use crate::error::error_metrics;
+use crate::multipliers::{build_design, DesignId};
+
+/// Paper's Table 4 values, for the side-by-side report.
+pub const PAPER_T4: [(&str, f64, f64, f64); 7] = [
+    ("Design [12]", 98.47, 1.128, 32.80),
+    ("Design [5]", 98.95, 0.829, 30.00),
+    ("Design [4]", 99.42, 0.786, 35.25),
+    ("Design [1]", 97.37, 0.738, 29.02),
+    ("Design [7]", 98.95, 0.542, 33.00),
+    ("Design [2]", 98.15, 0.731, 26.84),
+    ("Proposed Design", 98.04, 0.682, 26.29),
+];
+
+pub fn rows() -> Vec<(DesignId, crate::error::ErrorMetrics)> {
+    DesignId::table4_order()
+        .into_iter()
+        .map(|id| {
+            let m = build_design(id, 8);
+            (id, error_metrics(m.as_ref()))
+        })
+        .collect()
+}
+
+pub fn render() -> String {
+    let mut s = String::new();
+    s.push_str("== Table 4: error metrics (exhaustive, 65536 pairs) ==\n");
+    s.push_str(
+        "  design            |   ER (%)          |  NMED (%)         |  MRED (%)\n  \
+                            |  measured  paper  |  measured  paper  |  measured  paper\n",
+    );
+    for ((id, m), (pname, p_er, p_nmed, p_mred)) in rows().iter().zip(PAPER_T4) {
+        debug_assert_eq!(id.paper_name(), pname);
+        s.push_str(&format!(
+            "  {:<17} |  {:>7.2}  {:>6.2}  |  {:>7.3}  {:>6.3}  |  {:>7.2}  {:>6.2}\n",
+            id.paper_name(),
+            m.er * 100.0,
+            p_er,
+            m.nmed * 100.0,
+            p_nmed,
+            m.mred * 100.0,
+            p_mred,
+        ));
+    }
+    s.push_str("  (ME and max|ED| diagnostics)\n");
+    for (id, m) in rows() {
+        s.push_str(&format!(
+            "  {:<17}   ME = {:>+8.2}   max|ED| = {:>5}\n",
+            id.paper_name(),
+            m.me,
+            m.max_ed
+        ));
+    }
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// The paper's Table-4 shape: proposed has the lowest MRED of all
+    /// designs and a lower NMED than the best truncating baseline [2].
+    #[test]
+    fn proposed_wins_mred_and_beats_d2() {
+        let rows = rows();
+        let get = |id: DesignId| rows.iter().find(|(i, _)| *i == id).unwrap().1.clone();
+        let prop = get(DesignId::Proposed);
+        let d2 = get(DesignId::D2);
+        assert!(prop.nmed < d2.nmed, "NMED {} vs D2 {}", prop.nmed, d2.nmed);
+        assert!(prop.mred < d2.mred, "MRED {} vs D2 {}", prop.mred, d2.mred);
+        for (id, m) in &rows {
+            if *id != DesignId::Proposed {
+                assert!(prop.mred <= m.mred + 1e-12, "MRED vs {id:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn render_includes_both_columns() {
+        let s = render();
+        assert!(s.contains("Proposed Design"));
+        assert!(s.contains("paper"));
+    }
+}

@@ -1,0 +1,61 @@
+//! Table 5: area / power / delay / PDP per design, unit-gate model
+//! calibrated to the paper's exact-multiplier row (see [`crate::hwmodel`]).
+
+use crate::hwmodel::evaluate_all;
+use crate::multipliers::DesignId;
+
+/// Paper's Table 5 (area μm², power μW, delay ns, PDP fJ).
+pub const PAPER_T5: [(&str, f64, f64, f64, f64); 8] = [
+    ("Exact", 2204.75, 178.10, 3.28, 584.17),
+    ("Design [4]", 1242.07, 136.95, 2.17, 297.41),
+    ("Design [1]", 1972.91, 122.19, 2.65, 324.08),
+    ("Design [5]", 1164.34, 116.05, 2.49, 289.15),
+    ("Design [12]", 1386.62, 129.96, 2.32, 302.48),
+    ("Design [7]", 1306.84, 124.89, 2.35, 293.95),
+    ("Design [2]", 1013.07, 110.42, 2.54, 280.48),
+    ("Proposed", 809.23, 94.52, 2.10, 198.54),
+];
+
+pub fn render(seed: u64) -> String {
+    let rows = evaluate_all(8, seed);
+    let mut s = String::new();
+    s.push_str("== Table 5: hardware metrics (unit-gate model, calibrated to paper's Exact row) ==\n");
+    s.push_str(
+        "  design        |  area (µm²)        |  power (µW)       |  delay (ns)      |  PDP (fJ)\n  \
+                        |  measured   paper  |  measured  paper  |  measured paper  |  measured  paper\n",
+    );
+    for ((id, hw), (pname, pa, pp, pd, ppdp)) in rows.iter().zip(PAPER_T5) {
+        let _ = pname;
+        s.push_str(&format!(
+            "  {:<13} | {:>9.2}  {:>7.2} | {:>8.2}  {:>6.2} | {:>7.2}  {:>5.2} | {:>8.2}  {:>6.2}\n",
+            id.paper_name(),
+            hw.area_um2,
+            pa,
+            hw.power_uw,
+            pp,
+            hw.delay_ns,
+            pd,
+            hw.pdp_fj,
+            ppdp,
+        ));
+    }
+    let get = |id: DesignId| rows.iter().find(|(i, _)| *i == id).unwrap().1.clone();
+    let prop = get(DesignId::Proposed);
+    let d2 = get(DesignId::D2);
+    s.push_str(&format!(
+        "  headline: proposed vs best existing [2]: power -{:.2}% (paper -14.39%), PDP -{:.2}% (paper -29.21%)\n",
+        (1.0 - prop.power_uw / d2.power_uw) * 100.0,
+        (1.0 - prop.pdp_fj / d2.pdp_fj) * 100.0,
+    ));
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn renders_with_headline() {
+        let s = super::render(42);
+        assert!(s.contains("headline"));
+        assert!(s.contains("Proposed"));
+    }
+}

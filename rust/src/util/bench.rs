@@ -1,0 +1,180 @@
+//! Micro-benchmark harness (stand-in for `criterion`).
+//!
+//! Usage inside a `harness = false` bench target:
+//!
+//! ```no_run
+//! use sfcmul::util::bench::Bench;
+//! let mut b = Bench::new("bench_example");
+//! b.bench("mul_exact_fast", || {
+//!     // workload under test; return a value to defeat DCE
+//!     std::hint::black_box(3i16 * 4i16)
+//! });
+//! b.finish();
+//! ```
+//!
+//! The harness (1) warms up, (2) calibrates an iteration count so each
+//! sample runs ≥ `sample_target`, (3) collects `samples` timed samples and
+//! reports median / mean ± sd / p90 and derived throughput. Results are
+//! printed in a stable table format and can be appended as JSON lines to
+//! `target/bench-results.jsonl` for the EXPERIMENTS.md record.
+
+use super::stats;
+use std::hint::black_box;
+use std::io::Write;
+use std::time::{Duration, Instant};
+
+pub struct BenchResult {
+    pub name: String,
+    /// nanoseconds per iteration
+    pub median_ns: f64,
+    pub mean_ns: f64,
+    pub sd_ns: f64,
+    pub p90_ns: f64,
+    pub iters_per_sample: u64,
+    pub samples: usize,
+    /// optional elements processed per iteration (for throughput reporting)
+    pub elems: Option<u64>,
+}
+
+impl BenchResult {
+    pub fn throughput_m_elems(&self) -> Option<f64> {
+        self.elems.map(|e| e as f64 / self.median_ns * 1e3)
+    }
+}
+
+pub struct Bench {
+    group: String,
+    warmup: Duration,
+    sample_target: Duration,
+    samples: usize,
+    results: Vec<BenchResult>,
+    /// elements per iteration for the *next* registered bench
+    next_elems: Option<u64>,
+}
+
+impl Bench {
+    pub fn new(group: &str) -> Self {
+        // Quick mode for CI-ish runs: SFCMUL_BENCH_QUICK=1 shrinks budgets.
+        let quick = std::env::var("SFCMUL_BENCH_QUICK").map(|v| v == "1").unwrap_or(false);
+        let header = format!("== bench group: {group} ==");
+        println!("{header}");
+        Self {
+            group: group.to_string(),
+            warmup: if quick { Duration::from_millis(20) } else { Duration::from_millis(150) },
+            sample_target: if quick { Duration::from_millis(5) } else { Duration::from_millis(25) },
+            samples: if quick { 8 } else { 20 },
+            results: Vec::new(),
+            next_elems: None,
+        }
+    }
+
+    /// Declare elements-per-iteration for the next `bench()` call so the
+    /// report includes Melem/s throughput.
+    pub fn throughput(&mut self, elems: u64) -> &mut Self {
+        self.next_elems = Some(elems);
+        self
+    }
+
+    /// Time `f`, which should return a value (passed through `black_box`).
+    pub fn bench<R>(&mut self, name: &str, mut f: impl FnMut() -> R) {
+        // Warmup and calibration.
+        let warm_end = Instant::now() + self.warmup;
+        let mut warm_iters: u64 = 0;
+        let warm_start = Instant::now();
+        while Instant::now() < warm_end {
+            black_box(f());
+            warm_iters += 1;
+        }
+        let per_iter = warm_start.elapsed().as_nanos() as f64 / warm_iters.max(1) as f64;
+        let iters = ((self.sample_target.as_nanos() as f64 / per_iter.max(0.5)).ceil() as u64).max(1);
+
+        let mut sample_ns: Vec<f64> = Vec::with_capacity(self.samples);
+        for _ in 0..self.samples {
+            let t0 = Instant::now();
+            for _ in 0..iters {
+                black_box(f());
+            }
+            sample_ns.push(t0.elapsed().as_nanos() as f64 / iters as f64);
+        }
+        let mut sorted = sample_ns.clone();
+        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let res = BenchResult {
+            name: name.to_string(),
+            median_ns: stats::percentile_sorted(&sorted, 0.5),
+            mean_ns: stats::mean(&sample_ns),
+            sd_ns: stats::stddev(&sample_ns),
+            p90_ns: stats::percentile_sorted(&sorted, 0.9),
+            iters_per_sample: iters,
+            samples: self.samples,
+            elems: self.next_elems.take(),
+        };
+        let tp = res
+            .throughput_m_elems()
+            .map(|t| format!("  {t:10.2} Melem/s"))
+            .unwrap_or_default();
+        println!(
+            "  {:<44} {:>12} median  {:>12} ±{:>10}  p90 {:>12}{tp}",
+            res.name,
+            fmt_ns(res.median_ns),
+            fmt_ns(res.mean_ns),
+            fmt_ns(res.sd_ns),
+            fmt_ns(res.p90_ns),
+        );
+        self.results.push(res);
+    }
+
+    /// Print a footer and append JSONL results under `target/`.
+    pub fn finish(self) {
+        let path = std::path::Path::new("target").join("bench-results.jsonl");
+        if let Some(parent) = path.parent() {
+            let _ = std::fs::create_dir_all(parent);
+        }
+        if let Ok(mut fh) = std::fs::OpenOptions::new().create(true).append(true).open(&path) {
+            for r in &self.results {
+                let elems = r.elems.map(|e| e.to_string()).unwrap_or_else(|| "null".into());
+                let _ = writeln!(
+                    fh,
+                    "{{\"group\":\"{}\",\"name\":\"{}\",\"median_ns\":{:.3},\"mean_ns\":{:.3},\"sd_ns\":{:.3},\"p90_ns\":{:.3},\"iters\":{},\"elems\":{}}}",
+                    self.group, r.name, r.median_ns, r.mean_ns, r.sd_ns, r.p90_ns, r.iters_per_sample, elems
+                );
+            }
+        }
+        println!("== bench group {} done ({} benchmarks) ==", self.group, self.results.len());
+    }
+}
+
+fn fmt_ns(ns: f64) -> String {
+    if ns < 1_000.0 {
+        format!("{ns:8.1} ns")
+    } else if ns < 1_000_000.0 {
+        format!("{:8.2} µs", ns / 1e3)
+    } else if ns < 1e9 {
+        format!("{:8.2} ms", ns / 1e6)
+    } else {
+        format!("{:8.3} s ", ns / 1e9)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_runs_and_records() {
+        std::env::set_var("SFCMUL_BENCH_QUICK", "1");
+        let mut b = Bench::new("selftest");
+        b.throughput(64).bench("noop_sum", || (0..64u64).sum::<u64>());
+        assert_eq!(b.results.len(), 1);
+        assert!(b.results[0].median_ns > 0.0);
+        assert!(b.results[0].throughput_m_elems().unwrap() > 0.0);
+        b.finish();
+    }
+
+    #[test]
+    fn fmt_ns_scales() {
+        assert!(fmt_ns(12.0).contains("ns"));
+        assert!(fmt_ns(12_000.0).contains("µs"));
+        assert!(fmt_ns(12_000_000.0).contains("ms"));
+        assert!(fmt_ns(2e9).contains("s "));
+    }
+}

@@ -1,0 +1,154 @@
+//! Minimal command-line parsing (stand-in for `clap`).
+//!
+//! Supports subcommands, `--flag`, `--key value`, `--key=value`, and
+//! positional arguments, with typed accessors and a generated usage string.
+
+use std::collections::BTreeMap;
+
+/// Option names that are always boolean flags: they never consume the next
+/// token even when followed by a positional argument. Extend when adding
+/// new flags to the binary.
+pub const BOOL_FLAGS: &[&str] = &[
+    "verbose", "quiet", "demo", "help", "quick", "exhaustive", "write-images", "json", "no-pjrt",
+];
+
+#[derive(Debug, Clone)]
+pub struct Args {
+    pub subcommand: Option<String>,
+    pub positional: Vec<String>,
+    options: BTreeMap<String, String>,
+    flags: Vec<String>,
+}
+
+#[derive(Debug, thiserror::Error)]
+pub enum CliError {
+    #[error("missing value for option --{0}")]
+    MissingValue(String),
+    #[error("invalid value for --{key}: {value:?} ({reason})")]
+    InvalidValue { key: String, value: String, reason: String },
+    #[error("missing required option --{0}")]
+    MissingRequired(String),
+}
+
+impl Args {
+    /// Parse from an explicit token list (first token may be a subcommand —
+    /// any leading token that does not start with `-`).
+    ///
+    /// `--name value` binds greedily; names listed in [`BOOL_FLAGS`] are
+    /// always parsed as boolean flags and never consume the next token.
+    pub fn parse_from<I: IntoIterator<Item = String>>(tokens: I) -> Result<Self, CliError> {
+        let mut subcommand = None;
+        let mut positional = Vec::new();
+        let mut options = BTreeMap::new();
+        let mut flags = Vec::new();
+        let mut it = tokens.into_iter().peekable();
+        let mut first = true;
+        while let Some(tok) = it.next() {
+            if let Some(stripped) = tok.strip_prefix("--") {
+                if let Some((k, v)) = stripped.split_once('=') {
+                    options.insert(k.to_string(), v.to_string());
+                } else if BOOL_FLAGS.contains(&stripped) {
+                    flags.push(stripped.to_string());
+                } else {
+                    // `--key value` if the next token exists and is not an
+                    // option; else a boolean flag.
+                    match it.peek() {
+                        Some(next) if !next.starts_with("--") => {
+                            let v = it.next().unwrap();
+                            options.insert(stripped.to_string(), v);
+                        }
+                        _ => flags.push(stripped.to_string()),
+                    }
+                }
+            } else if first {
+                subcommand = Some(tok);
+            } else {
+                positional.push(tok);
+            }
+            first = false;
+        }
+        Ok(Self { subcommand, positional, options, flags })
+    }
+
+    /// Parse from the process arguments (skipping argv[0]).
+    pub fn from_env() -> Result<Self, CliError> {
+        Self::parse_from(std::env::args().skip(1))
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name) || self.options.get(name).map(|v| v == "true").unwrap_or(false)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.options.get(name).map(|s| s.as_str())
+    }
+
+    pub fn get_or<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
+        self.get(name).unwrap_or(default)
+    }
+
+    pub fn require(&self, name: &str) -> Result<&str, CliError> {
+        self.get(name).ok_or_else(|| CliError::MissingRequired(name.to_string()))
+    }
+
+    pub fn get_parse<T: std::str::FromStr>(&self, name: &str, default: T) -> Result<T, CliError>
+    where
+        T::Err: std::fmt::Display,
+    {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v.parse::<T>().map_err(|e| CliError::InvalidValue {
+                key: name.to_string(),
+                value: v.to_string(),
+                reason: e.to_string(),
+            }),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse_from(s.split_whitespace().map(String::from)).unwrap()
+    }
+
+    #[test]
+    fn subcommand_and_options() {
+        let a = parse("tables --id t4 --seed=42 --verbose out.txt");
+        assert_eq!(a.subcommand.as_deref(), Some("tables"));
+        assert_eq!(a.get("id"), Some("t4"));
+        assert_eq!(a.get("seed"), Some("42"));
+        assert!(a.flag("verbose"));
+        assert_eq!(a.positional, vec!["out.txt"]);
+    }
+
+    #[test]
+    fn typed_access_and_defaults() {
+        let a = parse("bench --n 128");
+        assert_eq!(a.get_parse("n", 0usize).unwrap(), 128);
+        assert_eq!(a.get_parse("m", 7usize).unwrap(), 7);
+        assert!(a.get_parse::<usize>("n", 0).is_ok());
+    }
+
+    #[test]
+    fn invalid_value_is_reported() {
+        let a = parse("x --n notanumber");
+        let err = a.get_parse::<usize>("n", 0).unwrap_err();
+        assert!(matches!(err, CliError::InvalidValue { .. }));
+    }
+
+    #[test]
+    fn trailing_flag_without_value() {
+        let a = parse("serve --demo");
+        assert_eq!(a.subcommand.as_deref(), Some("serve"));
+        assert!(a.flag("demo"));
+    }
+
+    #[test]
+    fn required_option_errors_when_absent() {
+        let a = parse("edge");
+        assert!(a.require("input").is_err());
+    }
+}

@@ -1,0 +1,399 @@
+//! Bounded MPMC channel + worker thread pool (stand-in for tokio/rayon).
+//!
+//! The L3 coordinator needs: (1) a bounded queue providing *backpressure*
+//! (senders block when the queue is full — the paper's Fig 8 streaming
+//! pipeline relies on line-buffer backpressure the same way), (2) a pool of
+//! worker threads draining that queue, and (3) graceful shutdown. This is a
+//! small, correct condvar-based implementation.
+
+use std::collections::VecDeque;
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+
+struct ChannelInner<T> {
+    queue: VecDeque<T>,
+    capacity: usize,
+    closed: bool,
+    senders: usize,
+}
+
+struct Shared<T> {
+    inner: Mutex<ChannelInner<T>>,
+    not_full: Condvar,
+    not_empty: Condvar,
+}
+
+/// Sending half of a bounded channel. Cloneable (MPMC).
+pub struct Sender<T> {
+    shared: Arc<Shared<T>>,
+}
+
+/// Receiving half of a bounded channel. Cloneable (MPMC).
+pub struct Receiver<T> {
+    shared: Arc<Shared<T>>,
+}
+
+#[derive(Debug, PartialEq, Eq)]
+pub enum SendError<T> {
+    /// Channel closed by all receivers dropping or an explicit `close()`.
+    Closed(T),
+}
+
+#[derive(Debug, PartialEq, Eq)]
+pub enum TrySendError<T> {
+    Full(T),
+    Closed(T),
+}
+
+/// Create a bounded channel with the given capacity (≥ 1).
+pub fn bounded<T>(capacity: usize) -> (Sender<T>, Receiver<T>) {
+    assert!(capacity >= 1);
+    let shared = Arc::new(Shared {
+        inner: Mutex::new(ChannelInner {
+            queue: VecDeque::with_capacity(capacity),
+            capacity,
+            closed: false,
+            senders: 1,
+        }),
+        not_full: Condvar::new(),
+        not_empty: Condvar::new(),
+    });
+    (Sender { shared: shared.clone() }, Receiver { shared })
+}
+
+impl<T> Clone for Sender<T> {
+    fn clone(&self) -> Self {
+        self.shared.inner.lock().unwrap().senders += 1;
+        Sender { shared: self.shared.clone() }
+    }
+}
+
+impl<T> Drop for Sender<T> {
+    fn drop(&mut self) {
+        let mut inner = self.shared.inner.lock().unwrap();
+        inner.senders -= 1;
+        if inner.senders == 0 {
+            // Last sender gone: wake all receivers so they can observe
+            // drain-then-None.
+            drop(inner);
+            self.shared.not_empty.notify_all();
+        }
+    }
+}
+
+impl<T> Clone for Receiver<T> {
+    fn clone(&self) -> Self {
+        Receiver { shared: self.shared.clone() }
+    }
+}
+
+impl<T> Sender<T> {
+    /// Blocking send; applies backpressure when the queue is full.
+    pub fn send(&self, value: T) -> Result<(), SendError<T>> {
+        let mut inner = self.shared.inner.lock().unwrap();
+        loop {
+            if inner.closed {
+                return Err(SendError::Closed(value));
+            }
+            if inner.queue.len() < inner.capacity {
+                inner.queue.push_back(value);
+                drop(inner);
+                self.shared.not_empty.notify_one();
+                return Ok(());
+            }
+            inner = self.shared.not_full.wait(inner).unwrap();
+        }
+    }
+
+    /// Non-blocking send.
+    pub fn try_send(&self, value: T) -> Result<(), TrySendError<T>> {
+        let mut inner = self.shared.inner.lock().unwrap();
+        if inner.closed {
+            return Err(TrySendError::Closed(value));
+        }
+        if inner.queue.len() >= inner.capacity {
+            return Err(TrySendError::Full(value));
+        }
+        inner.queue.push_back(value);
+        drop(inner);
+        self.shared.not_empty.notify_one();
+        Ok(())
+    }
+
+    /// Close the channel: further sends fail, receivers drain then see None.
+    pub fn close(&self) {
+        self.shared.inner.lock().unwrap().closed = true;
+        self.shared.not_empty.notify_all();
+        self.shared.not_full.notify_all();
+    }
+
+    /// Current queue depth (diagnostic; racy by nature).
+    pub fn len(&self) -> usize {
+        self.shared.inner.lock().unwrap().queue.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+impl<T> Receiver<T> {
+    /// Blocking receive. Returns `None` once the channel is closed (or all
+    /// senders dropped) *and* drained.
+    pub fn recv(&self) -> Option<T> {
+        let mut inner = self.shared.inner.lock().unwrap();
+        loop {
+            if let Some(v) = inner.queue.pop_front() {
+                drop(inner);
+                self.shared.not_full.notify_one();
+                return Some(v);
+            }
+            if inner.closed || inner.senders == 0 {
+                return None;
+            }
+            inner = self.shared.not_empty.wait(inner).unwrap();
+        }
+    }
+
+    /// Non-blocking receive.
+    pub fn try_recv(&self) -> Option<T> {
+        let mut inner = self.shared.inner.lock().unwrap();
+        let v = inner.queue.pop_front();
+        if v.is_some() {
+            drop(inner);
+            self.shared.not_full.notify_one();
+        }
+        v
+    }
+
+    /// Receive up to `max` items, blocking for the first one only — the
+    /// primitive under the coordinator's dynamic batcher.
+    pub fn recv_batch(&self, max: usize) -> Vec<T> {
+        let mut out = Vec::new();
+        if max == 0 {
+            return out;
+        }
+        match self.recv() {
+            Some(first) => out.push(first),
+            None => return out,
+        }
+        while out.len() < max {
+            match self.try_recv() {
+                Some(v) => out.push(v),
+                None => break,
+            }
+        }
+        out
+    }
+}
+
+/// Fixed worker pool executing closures from a bounded queue.
+pub struct ThreadPool {
+    sender: Option<Sender<Box<dyn FnOnce() + Send>>>,
+    workers: Vec<JoinHandle<()>>,
+}
+
+impl ThreadPool {
+    pub fn new(threads: usize, queue_capacity: usize) -> Self {
+        assert!(threads >= 1);
+        let (tx, rx) = bounded::<Box<dyn FnOnce() + Send>>(queue_capacity);
+        let workers = (0..threads)
+            .map(|i| {
+                let rx = rx.clone();
+                std::thread::Builder::new()
+                    .name(format!("sfcmul-worker-{i}"))
+                    .spawn(move || {
+                        while let Some(job) = rx.recv() {
+                            job();
+                        }
+                    })
+                    .expect("spawn worker")
+            })
+            .collect();
+        Self { sender: Some(tx), workers }
+    }
+
+    /// Submit a job; blocks when the queue is full (backpressure).
+    pub fn submit(&self, job: impl FnOnce() + Send + 'static) {
+        self.sender
+            .as_ref()
+            .expect("pool not shut down")
+            .send(Box::new(job))
+            .ok();
+    }
+
+    /// Parallel-map a slice by chunking it across the pool. Results are
+    /// returned in input order. `f` is applied per element.
+    pub fn map<T: Sync, R: Send + 'static>(
+        &self,
+        items: &[T],
+        f: impl Fn(&T) -> R + Sync,
+    ) -> Vec<R> {
+        // Scoped execution: we block until all chunks are done, so borrowing
+        // `items` and `f` is safe via std::thread::scope semantics. We use a
+        // simple two-phase protocol over our channel instead, with results
+        // collected through a mutexed Vec<Option<R>>.
+        let n = items.len();
+        let results: Mutex<Vec<Option<R>>> = Mutex::new((0..n).map(|_| None).collect());
+        let threads = self.workers.len().max(1);
+        let chunk = n.div_ceil(threads).max(1);
+        std::thread::scope(|scope| {
+            for (ci, chunk_items) in items.chunks(chunk).enumerate() {
+                let results = &results;
+                let f = &f;
+                scope.spawn(move || {
+                    let base = ci * chunk;
+                    let mut local: Vec<(usize, R)> = Vec::with_capacity(chunk_items.len());
+                    for (i, item) in chunk_items.iter().enumerate() {
+                        local.push((base + i, f(item)));
+                    }
+                    let mut guard = results.lock().unwrap();
+                    for (idx, r) in local {
+                        guard[idx] = Some(r);
+                    }
+                });
+            }
+        });
+        results.into_inner().unwrap().into_iter().map(|r| r.unwrap()).collect()
+    }
+
+    /// Graceful shutdown: close the queue and join workers.
+    pub fn shutdown(mut self) {
+        self.shutdown_inner();
+    }
+
+    fn shutdown_inner(&mut self) {
+        if let Some(tx) = self.sender.take() {
+            tx.close();
+        }
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+impl Drop for ThreadPool {
+    fn drop(&mut self) {
+        self.shutdown_inner();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+    use std::time::Duration;
+
+    #[test]
+    fn channel_roundtrip_in_order_single_consumer() {
+        let (tx, rx) = bounded(4);
+        std::thread::spawn(move || {
+            for i in 0..100 {
+                tx.send(i).unwrap();
+            }
+        });
+        let got: Vec<i32> = std::iter::from_fn(|| rx.recv()).collect();
+        assert_eq!(got, (0..100).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn try_send_reports_full() {
+        let (tx, _rx) = bounded(2);
+        tx.try_send(1).unwrap();
+        tx.try_send(2).unwrap();
+        assert!(matches!(tx.try_send(3), Err(TrySendError::Full(3))));
+    }
+
+    #[test]
+    fn send_blocks_until_receiver_drains() {
+        let (tx, rx) = bounded(1);
+        tx.send(1).unwrap();
+        let t = std::thread::spawn(move || {
+            tx.send(2).unwrap(); // blocks until rx.recv()
+            true
+        });
+        std::thread::sleep(Duration::from_millis(30));
+        assert_eq!(rx.recv(), Some(1));
+        assert_eq!(rx.recv(), Some(2));
+        assert!(t.join().unwrap());
+    }
+
+    #[test]
+    fn close_wakes_receivers() {
+        let (tx, rx) = bounded::<i32>(1);
+        let t = std::thread::spawn(move || rx.recv());
+        std::thread::sleep(Duration::from_millis(20));
+        tx.close();
+        assert_eq!(t.join().unwrap(), None);
+    }
+
+    #[test]
+    fn dropping_all_senders_ends_stream() {
+        let (tx, rx) = bounded(8);
+        let tx2 = tx.clone();
+        tx.send(1).unwrap();
+        tx2.send(2).unwrap();
+        drop(tx);
+        drop(tx2);
+        assert_eq!(rx.recv(), Some(1));
+        assert_eq!(rx.recv(), Some(2));
+        assert_eq!(rx.recv(), None);
+    }
+
+    #[test]
+    fn recv_batch_takes_available() {
+        let (tx, rx) = bounded(16);
+        for i in 0..5 {
+            tx.send(i).unwrap();
+        }
+        let batch = rx.recv_batch(10);
+        assert_eq!(batch, vec![0, 1, 2, 3, 4]);
+    }
+
+    #[test]
+    fn pool_map_preserves_order() {
+        let pool = ThreadPool::new(4, 16);
+        let items: Vec<u64> = (0..1000).collect();
+        let out = pool.map(&items, |&x| x * 2);
+        assert_eq!(out, items.iter().map(|x| x * 2).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn pool_submit_executes_everything() {
+        let pool = ThreadPool::new(3, 4);
+        let counter = Arc::new(AtomicUsize::new(0));
+        for _ in 0..50 {
+            let c = counter.clone();
+            pool.submit(move || {
+                c.fetch_add(1, Ordering::SeqCst);
+            });
+        }
+        pool.shutdown();
+        assert_eq!(counter.load(Ordering::SeqCst), 50);
+    }
+
+    #[test]
+    fn mpmc_multiple_consumers_see_all_items() {
+        let (tx, rx) = bounded(8);
+        let total = Arc::new(AtomicUsize::new(0));
+        let consumers: Vec<_> = (0..3)
+            .map(|_| {
+                let rx = rx.clone();
+                let total = total.clone();
+                std::thread::spawn(move || {
+                    while let Some(v) = rx.recv() {
+                        total.fetch_add(v, Ordering::SeqCst);
+                    }
+                })
+            })
+            .collect();
+        for _ in 0..300 {
+            tx.send(1usize).unwrap();
+        }
+        drop(tx);
+        for c in consumers {
+            c.join().unwrap();
+        }
+        assert_eq!(total.load(Ordering::SeqCst), 300);
+    }
+}

@@ -1,0 +1,208 @@
+//! Miniature property-based testing harness (stand-in for `proptest`).
+//!
+//! A property is a predicate over values drawn from a [`Gen`]. The runner
+//! draws `cases` inputs; on the first failure it greedily *shrinks* the
+//! counterexample (using the generator's shrink function) before panicking
+//! with the minimal failing input, pretty-printed via `Debug`.
+//!
+//! ```
+//! use sfcmul::util::prop::{forall, Gen};
+//! forall("add commutes", 256, Gen::i8_pair(), |&(a, b)| {
+//!     (a as i32 + b as i32) == (b as i32 + a as i32)
+//! });
+//! ```
+
+use super::prng::Xoshiro256;
+use std::fmt::Debug;
+
+/// A generator bundles a sampling function and a shrinking function.
+pub struct Gen<T> {
+    sample: Box<dyn Fn(&mut Xoshiro256) -> T>,
+    shrink: Box<dyn Fn(&T) -> Vec<T>>,
+}
+
+impl<T: Clone + 'static> Gen<T> {
+    pub fn new(
+        sample: impl Fn(&mut Xoshiro256) -> T + 'static,
+        shrink: impl Fn(&T) -> Vec<T> + 'static,
+    ) -> Self {
+        Self { sample: Box::new(sample), shrink: Box::new(shrink) }
+    }
+
+    /// Generator without shrinking support.
+    pub fn no_shrink(sample: impl Fn(&mut Xoshiro256) -> T + 'static) -> Self {
+        Self::new(sample, |_| Vec::new())
+    }
+
+    pub fn sample(&self, rng: &mut Xoshiro256) -> T {
+        (self.sample)(rng)
+    }
+
+    pub fn shrinks(&self, v: &T) -> Vec<T> {
+        (self.shrink)(v)
+    }
+
+    /// Map the generated value (loses shrinking unless `f` is cheapish to
+    /// re-apply; shrinks are mapped through `f` of shrunk *inputs* is not
+    /// possible without an inverse, so mapped generators do not shrink).
+    pub fn map<U: Clone + 'static>(self, f: impl Fn(T) -> U + 'static) -> Gen<U> {
+        Gen::no_shrink(move |rng| f(self.sample(rng)))
+    }
+}
+
+fn shrink_i64(v: i64) -> Vec<i64> {
+    let mut out = Vec::new();
+    if v != 0 {
+        out.push(0);
+        out.push(v / 2);
+        if v > 0 {
+            out.push(v - 1);
+        } else {
+            out.push(v + 1);
+        }
+        out.dedup();
+        out.retain(|&x| x != v);
+    }
+    out
+}
+
+impl Gen<i64> {
+    pub fn i64_range(lo: i64, hi: i64) -> Gen<i64> {
+        Gen::new(
+            move |rng| rng.range_i64(lo, hi),
+            move |&v| shrink_i64(v).into_iter().filter(|&x| x >= lo && x <= hi).collect(),
+        )
+    }
+}
+
+impl Gen<i8> {
+    pub fn i8_any() -> Gen<i8> {
+        Gen::new(
+            |rng| rng.next_i8(),
+            |&v| shrink_i64(v as i64).into_iter().map(|x| x as i8).collect(),
+        )
+    }
+}
+
+impl Gen<(i8, i8)> {
+    pub fn i8_pair() -> Gen<(i8, i8)> {
+        Gen::new(
+            |rng| (rng.next_i8(), rng.next_i8()),
+            |&(a, b)| {
+                let mut out: Vec<(i8, i8)> = Vec::new();
+                for sa in shrink_i64(a as i64) {
+                    out.push((sa as i8, b));
+                }
+                for sb in shrink_i64(b as i64) {
+                    out.push((a, sb as i8));
+                }
+                out
+            },
+        )
+    }
+}
+
+impl Gen<Vec<u8>> {
+    /// Byte vectors with length in `[0, max_len]`; shrinks by halving length
+    /// and zeroing elements.
+    pub fn bytes(max_len: usize) -> Gen<Vec<u8>> {
+        Gen::new(
+            move |rng| {
+                let n = rng.below(max_len as u64 + 1) as usize;
+                (0..n).map(|_| rng.next_u64() as u8).collect()
+            },
+            |v: &Vec<u8>| {
+                let mut out = Vec::new();
+                if !v.is_empty() {
+                    out.push(v[..v.len() / 2].to_vec());
+                    out.push(v[1..].to_vec());
+                    if v.iter().any(|&b| b != 0) {
+                        out.push(vec![0; v.len()]);
+                    }
+                }
+                out
+            },
+        )
+    }
+}
+
+/// Run `cases` random trials of `prop`; shrink and panic on failure.
+///
+/// The seed is derived from the property name so that failures are
+/// reproducible run-to-run but distinct properties get distinct streams.
+pub fn forall<T: Clone + Debug + 'static>(name: &str, cases: usize, gen: Gen<T>, prop: impl Fn(&T) -> bool) {
+    let seed = name.bytes().fold(0xC0FF_EEu64, |h, b| {
+        h.wrapping_mul(0x100_0000_01B3).wrapping_add(b as u64)
+    });
+    let mut rng = Xoshiro256::seeded(seed);
+    for case in 0..cases {
+        let input = gen.sample(&mut rng);
+        if !prop(&input) {
+            let minimal = shrink_failure(&gen, input, &prop);
+            panic!(
+                "property '{name}' failed at case {case}/{cases}; minimal counterexample: {minimal:?}"
+            );
+        }
+    }
+}
+
+fn shrink_failure<T: Clone + 'static>(gen: &Gen<T>, mut failing: T, prop: &impl Fn(&T) -> bool) -> T {
+    // Greedy shrink: repeatedly take the first shrink candidate that still
+    // fails, up to a budget to guarantee termination on cyclic shrinkers.
+    let mut budget = 1000;
+    'outer: while budget > 0 {
+        for cand in gen.shrinks(&failing) {
+            budget -= 1;
+            if !prop(&cand) {
+                failing = cand;
+                continue 'outer;
+            }
+            if budget == 0 {
+                break;
+            }
+        }
+        break;
+    }
+    failing
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        forall("i8 square nonneg in i32", 512, Gen::i8_any(), |&a| {
+            (a as i32) * (a as i32) >= 0
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "minimal counterexample")]
+    fn failing_property_panics_with_counterexample() {
+        forall("all i8 are small", 512, Gen::i8_any(), |&a| a.abs() < 5);
+    }
+
+    #[test]
+    fn shrinker_reaches_small_values() {
+        // The minimal |a| failing `a.abs() < 5` under our shrinker is 5 or -5
+        // (shrink steps: 0, v/2, v∓1 — all monotonically decreasing in |v|).
+        let gen = Gen::i8_any();
+        let mut rng = Xoshiro256::seeded(99);
+        let mut start = gen.sample(&mut rng);
+        while (start as i32).abs() < 5 {
+            start = gen.sample(&mut rng);
+        }
+        let minimal = shrink_failure(&gen, start, &|&a: &i8| (a as i32).abs() < 5);
+        assert_eq!((minimal as i32).abs(), 5, "greedy shrink should reach the boundary");
+    }
+
+    #[test]
+    fn bytes_generator_respects_max_len() {
+        let gen = Gen::bytes(16);
+        let mut rng = Xoshiro256::seeded(5);
+        for _ in 0..200 {
+            assert!(gen.sample(&mut rng).len() <= 16);
+        }
+    }
+}

@@ -1,0 +1,36 @@
+//! Cross-language product-table checks: the Python bit-level model
+//! (python/compile/kernels/approx_mul.py) and the Rust fast models must
+//! agree byte-for-byte. `make artifacts` exports the Python tables.
+
+use sfcmul::multipliers::{build_design, lut, DesignId};
+use sfcmul::runtime::artifacts_dir;
+
+fn check(file: &str, id: DesignId) {
+    let path = artifacts_dir().join(file);
+    if !path.exists() {
+        eprintln!("SKIP: {path:?} missing (run `make artifacts`)");
+        return;
+    }
+    let py = lut::read_i32_le(&path).expect("read python LUT");
+    let rs = lut::product_table(build_design(id, 8).as_ref());
+    assert_eq!(py.len(), rs.len());
+    for (i, (a, b)) in py.iter().zip(rs.iter()).enumerate() {
+        assert_eq!(
+            a,
+            b,
+            "mismatch at a={} b={}: python {a}, rust {b}",
+            (i >> 8) as u8 as i8,
+            (i & 0xFF) as u8 as i8
+        );
+    }
+}
+
+#[test]
+fn python_proposed_table_matches_rust() {
+    check("proposed_lut.i32", DesignId::Proposed);
+}
+
+#[test]
+fn python_exact_table_matches_rust() {
+    check("exact_lut.i32", DesignId::Exact);
+}

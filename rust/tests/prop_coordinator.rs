@@ -1,0 +1,54 @@
+//! Property tests over the tiling/reassembly/coordinator invariants for
+//! arbitrary image geometries.
+
+use sfcmul::coordinator::{tile_image, Coordinator, CoordinatorConfig, LutTileEngine};
+use sfcmul::image::{edge_detect, synthetic_scene};
+use sfcmul::multipliers::{build_design, DesignId};
+use sfcmul::util::prop::{forall, Gen};
+use std::sync::Arc;
+
+#[test]
+fn tiling_covers_any_geometry_exactly_once() {
+    forall(
+        "tiling covers",
+        60,
+        Gen::no_shrink(|rng| {
+            (1 + rng.below(300) as usize, 1 + rng.below(200) as usize, rng.next_u64())
+        }),
+        |&(w, h, seed)| {
+            let img = synthetic_scene(w, h, seed);
+            let tiles = tile_image(0, &img);
+            let mut covered = vec![0u8; w * h];
+            for t in &tiles {
+                for ty in 0..t.core_h {
+                    for tx in 0..t.core_w {
+                        covered[(t.y0 + ty) * w + t.x0 + tx] += 1;
+                    }
+                }
+            }
+            covered.iter().all(|&c| c == 1)
+        },
+    );
+}
+
+#[test]
+fn coordinator_equals_direct_path_for_any_geometry() {
+    let model = build_design(DesignId::Proposed, 8);
+    let engine = Arc::new(LutTileEngine::new(model.as_ref()));
+    let coord = Coordinator::start(
+        engine,
+        CoordinatorConfig { workers: 3, queue_capacity: 64, max_batch: 8 },
+    );
+    forall(
+        "coordinator == direct",
+        25,
+        Gen::no_shrink(|rng| {
+            (1 + rng.below(200) as usize, 1 + rng.below(150) as usize, rng.next_u64())
+        }),
+        |&(w, h, seed)| {
+            let img = synthetic_scene(w, h, seed);
+            let expect = edge_detect(&img, model.as_ref());
+            coord.run(img).edges == expect
+        },
+    );
+}

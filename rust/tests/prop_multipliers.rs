@@ -1,0 +1,78 @@
+//! Property-based tests over the multiplier suite (coordinator-level
+//! invariants are in rust/tests/system_tables.rs).
+
+use sfcmul::multipliers::{all_designs, build_design, traits, DesignId};
+use sfcmul::util::prop::{forall, Gen};
+
+#[test]
+fn exact_matches_native_multiplication() {
+    let m = build_design(DesignId::Exact, 8);
+    forall("exact == i64 mul", 4096, Gen::i8_pair(), |&(a, b)| {
+        m.multiply(a as i64, b as i64) == a as i64 * b as i64
+    });
+}
+
+#[test]
+fn all_designs_produce_valid_16bit_products() {
+    for (id, m) in all_designs(8) {
+        forall(
+            &format!("{id:?} output in i16 range"),
+            2048,
+            Gen::i8_pair(),
+            |&(a, b)| {
+                let p = m.multiply(a as i64, b as i64);
+                p >= i16::MIN as i64 && p <= i16::MAX as i64
+            },
+        );
+    }
+}
+
+#[test]
+fn approximation_error_is_bounded() {
+    // Truncation mass (769) + compensation + compressor spikes; anything
+    // beyond 2^11 would indicate a structural bug, not an approximation.
+    for (id, m) in all_designs(8) {
+        forall(
+            &format!("{id:?} error bound"),
+            2048,
+            Gen::i8_pair(),
+            |&(a, b)| (m.multiply(a as i64, b as i64) - a as i64 * b as i64).abs() <= 2048,
+        );
+    }
+}
+
+#[test]
+fn operands_are_byte_pattern_functions() {
+    // The hardware sees 8-bit patterns: the model must not depend on the
+    // i64 container beyond the low byte.
+    for (id, m) in all_designs(8) {
+        forall(
+            &format!("{id:?} byte-pattern function"),
+            1024,
+            Gen::i8_pair(),
+            |&(a, b)| {
+                let v = m.multiply(a as i64, b as i64);
+                let ua = traits::to_bits(a as i64, 8);
+                let ub = traits::to_bits(b as i64, 8);
+                v == m.multiply(traits::from_bits(ua, 8), traits::from_bits(ub, 8))
+            },
+        );
+    }
+}
+
+#[test]
+fn wide_exact_multipliers_are_exact() {
+    for n in [10usize, 12, 16] {
+        let m = sfcmul::multipliers::ExactBaughWooley::new(n);
+        let half = 1i64 << (n - 1);
+        forall(
+            &format!("exact N={n}"),
+            2048,
+            Gen::<i64>::i64_range(-half, half - 1).map(move |a| a),
+            |&a| {
+                use sfcmul::multipliers::MultiplierModel;
+                m.multiply(a, a / 3 + 1) == a * (a / 3 + 1)
+            },
+        );
+    }
+}

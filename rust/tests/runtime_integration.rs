@@ -1,0 +1,85 @@
+//! Integration tests: the PJRT engine (AOT-compiled JAX/Pallas artifact)
+//! must agree bit-for-bit with the in-process LUT engine, and compose
+//! with the coordinator end-to-end.
+//!
+//! Requires `make artifacts`; tests are skipped (pass vacuously, with a
+//! note) when the artifacts are absent so `cargo test` works standalone.
+
+use sfcmul::coordinator::{
+    tile_image, Coordinator, CoordinatorConfig, LutTileEngine, TileEngine,
+};
+use sfcmul::image::{edge_detect, synthetic_scene};
+use sfcmul::multipliers::{build_design, lut::product_table, DesignId};
+use sfcmul::runtime::{artifacts_available, artifacts_dir, PjrtTileEngine};
+use std::sync::Arc;
+
+fn engine_for(id: DesignId) -> Option<(PjrtTileEngine, LutTileEngine)> {
+    let dir = artifacts_dir();
+    if !artifacts_available(&dir) {
+        eprintln!("SKIP: artifacts missing in {dir:?} (run `make artifacts`)");
+        return None;
+    }
+    let model = build_design(id, 8);
+    let lut = product_table(model.as_ref());
+    let pjrt = PjrtTileEngine::new(&dir, &model.name(), lut.clone()).expect("pjrt engine");
+    let inproc = LutTileEngine::from_table("ref", lut);
+    Some((pjrt, inproc))
+}
+
+#[test]
+fn pjrt_engine_matches_lut_engine_proposed() {
+    let Some((pjrt, inproc)) = engine_for(DesignId::Proposed) else { return };
+    let img = synthetic_scene(200, 140, 5);
+    let tiles = tile_image(0, &img);
+    let a = pjrt.process_batch(&tiles);
+    let b = inproc.process_batch(&tiles);
+    assert_eq!(a.len(), b.len());
+    for (x, y) in a.iter().zip(b.iter()) {
+        assert_eq!(x.data, y.data, "tile at ({},{})", x.x0, x.y0);
+    }
+}
+
+#[test]
+fn pjrt_engine_matches_lut_engine_exact() {
+    let Some((pjrt, inproc)) = engine_for(DesignId::Exact) else { return };
+    let img = synthetic_scene(130, 66, 9);
+    let tiles = tile_image(0, &img);
+    let a = pjrt.process_batch(&tiles);
+    let b = inproc.process_batch(&tiles);
+    for (x, y) in a.iter().zip(b.iter()) {
+        assert_eq!(x.data, y.data);
+    }
+}
+
+#[test]
+fn pjrt_single_tile_path() {
+    let Some((pjrt, inproc)) = engine_for(DesignId::Proposed) else { return };
+    let img = synthetic_scene(64, 64, 3);
+    let tiles = tile_image(0, &img);
+    assert_eq!(tiles.len(), 1);
+    let a = pjrt.process_batch(&tiles);
+    let b = inproc.process_batch(&tiles);
+    assert_eq!(a[0].data, b[0].data);
+}
+
+#[test]
+fn coordinator_over_pjrt_end_to_end() {
+    let dir = artifacts_dir();
+    if !artifacts_available(&dir) {
+        eprintln!("SKIP: artifacts missing");
+        return;
+    }
+    let model = build_design(DesignId::Proposed, 8);
+    let lut = product_table(model.as_ref());
+    let engine = Arc::new(PjrtTileEngine::new(&dir, "proposed", lut).unwrap());
+    let coord = Coordinator::start(
+        engine,
+        CoordinatorConfig { workers: 2, queue_capacity: 64, max_batch: 8 },
+    );
+    let img = synthetic_scene(256, 192, 12);
+    let expect = edge_detect(&img, model.as_ref());
+    let res = coord.run(img);
+    assert_eq!(res.edges, expect, "PJRT path must equal the direct model path");
+    let m = coord.shutdown();
+    assert_eq!(m.jobs_completed, 1);
+}

@@ -1,0 +1,47 @@
+//! System-level integration: the full reproduction harness must generate
+//! every paper table/figure with the expected headline shapes.
+
+use sfcmul::tables;
+
+#[test]
+fn all_tables_generate() {
+    let dir = std::env::temp_dir().join("sfcmul_tables_test");
+    let text = tables::generate("all", 42, &dir).expect("generate all");
+    for needle in [
+        "Table 1",
+        "Table 2",
+        "Table 3",
+        "Table 4",
+        "Table 5",
+        "Fig 9",
+        "Fig 10",
+        "Proposed",
+    ] {
+        assert!(text.contains(needle), "{needle} missing from the report");
+    }
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn unknown_table_id_is_an_error() {
+    let dir = std::env::temp_dir();
+    assert!(tables::generate("t9", 42, &dir).is_err());
+}
+
+#[test]
+fn table5_headline_savings_hold() {
+    let text = tables::generate("t5", 42, std::path::Path::new("/tmp")).unwrap();
+    assert!(text.contains("headline"));
+    // extract the measured PDP saving percentage and require double digits
+    let line = text.lines().find(|l| l.contains("headline")).unwrap();
+    let pdp_part = line.split("PDP -").nth(1).unwrap();
+    let pct: f64 = pdp_part.split('%').next().unwrap().parse().unwrap();
+    assert!(pct > 10.0, "PDP saving {pct}% should be double-digit (paper: 29.21%)");
+}
+
+#[test]
+fn ablation_report_generates() {
+    let text = tables::ablation_report(42);
+    assert!(text.contains("C5 maj-carry (shipped)"));
+    assert!(text.contains("truncate 7 columns"));
+}
