@@ -1,0 +1,45 @@
+#!/usr/bin/env bash
+# Repo CI: format check, lints, tests. Run from anywhere.
+#
+# * `cargo fmt --check` is advisory (non-fatal): the tree predates rustfmt
+#   enforcement and carries hand-aligned tables/diagrams; drift is printed
+#   so it stays visible without blocking merges.
+# * clippy runs with -D warnings plus a small documented allow-list of
+#   style lints the codebase deliberately does not follow:
+#     - needless_range_loop: index loops mirror the hardware column/lane
+#       structure and are clearer than iterator chains there;
+#     - too_many_arguments: netlist builder helpers take per-signal args;
+#     - type_complexity: engine/factory types are spelled out once;
+#     - new_without_default: `new()` constructors without Default impls.
+# * `cargo test -q` is the tier-1 gate and must pass.
+
+set -uo pipefail
+cd "$(dirname "$0")"
+
+status=0
+
+echo "== cargo fmt --check (advisory) =="
+if ! cargo fmt --check 2>/dev/null; then
+    echo "warning: rustfmt differences found (advisory only)"
+fi
+
+echo "== cargo clippy =="
+if ! cargo clippy --all-targets -- -D warnings \
+    -A clippy::needless_range_loop \
+    -A clippy::too_many_arguments \
+    -A clippy::type_complexity \
+    -A clippy::new_without_default; then
+    echo "FAIL: clippy"
+    status=1
+fi
+
+echo "== cargo test =="
+if ! cargo test -q; then
+    echo "FAIL: tests"
+    status=1
+fi
+
+if [ "$status" -eq 0 ]; then
+    echo "CI OK"
+fi
+exit "$status"

@@ -1,9 +1,74 @@
-//! Design-space exploration: the ablation study behind DESIGN.md's
-//! reconstruction choices plus the Fig 10 PDP-vs-MRED trade-off.
+//! Design-space exploration driven entirely by spec strings: every point
+//! is named in the `family[@bits][:trunc=...][:comp=...]` grammar and
+//! built through the registry — no hardcoded constructor list. Prints
+//! error metrics and unit-gate hardware figures per spec, then the
+//! classic ablation report and the Fig 10 PDP-vs-MRED trade-off.
 //!
 //! Run: `cargo run --release --example design_space`
 
+use sfcmul::error::{error_metrics, error_metrics_sampled};
+use sfcmul::hwmodel::raw_hw_for_spec;
+use sfcmul::multipliers::{registry, DesignSpec};
+
+/// The sweep: canonical paper designs, compensation/truncation variants,
+/// and 16-bit scale-ups — all as plain strings.
+const SWEEP: &[&str] = &[
+    // paper comparison set (canonical)
+    "exact@8",
+    "d12@8",
+    "d5@8",
+    "d4@8",
+    "d1@8",
+    "d7@8",
+    "d2@8",
+    "proposed@8",
+    // compensation ablation on the proposed design
+    "proposed@8:comp=none",
+    "proposed@8:comp=const",
+    // truncation depth ablation (trunc=none auto-degenerates comp=paper)
+    "proposed@8:trunc=none",
+    "proposed@8:trunc=3",
+    "proposed@8:trunc=5",
+    // truncation-only reference (exact CSP compressors)
+    "exact@8:trunc=7",
+    // wider operands
+    "proposed@16",
+    "proposed@16:comp=const",
+    "d2@16",
+];
+
 fn main() {
+    println!("== Design-space sweep over spec strings ==");
+    println!(
+        "  {:<34} {:>8}  {:>8}  {:>9}  {:>7}",
+        "spec", "NMED(%)", "MRED(%)", "area(GE)", "delay"
+    );
+    for s in SWEEP {
+        let spec: DesignSpec = s.parse().expect("sweep entries are valid specs");
+        let model = match registry().build(&spec) {
+            Ok(m) => m,
+            Err(e) => {
+                println!("  {s:<34} unbuildable: {e}");
+                continue;
+            }
+        };
+        // exhaustive metrics to N=10; sampled beyond
+        let e = if model.bits() <= 10 {
+            error_metrics(model.as_ref())
+        } else {
+            error_metrics_sampled(model.as_ref(), 200_000, 42)
+        };
+        let hw = raw_hw_for_spec(&spec, 42).expect("buildable spec has hw figures");
+        println!(
+            "  {:<34} {:>8.3}  {:>8.2}  {:>9.1}  {:>7.1}",
+            s,
+            e.nmed * 100.0,
+            e.mred * 100.0,
+            hw.area_ge,
+            hw.delay_units
+        );
+    }
+    println!();
     print!("{}", sfcmul::tables::ablation_report(42));
     println!();
     print!("{}", sfcmul::tables::f10::render(42));

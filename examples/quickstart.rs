@@ -1,5 +1,5 @@
-//! Quickstart: build the proposed approximate multiplier, multiply some
-//! numbers, inspect its error metrics, compressor statistics and
+//! Quickstart: build multipliers through the spec/registry API, multiply
+//! some numbers, inspect error metrics, compressor statistics and
 //! hardware figures.
 //!
 //! Run: `cargo run --release --example quickstart`
@@ -7,13 +7,14 @@
 use sfcmul::compressors::{abc1_stats, abcd1_stats};
 use sfcmul::error::error_metrics;
 use sfcmul::hwmodel::raw_hw;
-use sfcmul::multipliers::{build_design, DesignId};
+use sfcmul::multipliers::{registry, DesignSpec};
 
 fn main() {
-    // 1. The proposed multiplier as a plain function.
-    let proposed = build_design(DesignId::Proposed, 8);
-    let exact = build_design(DesignId::Exact, 8);
-    println!("a × b: exact vs proposed approximate");
+    // 1. Designs are built from declarative spec strings
+    //    (`family[@bits][:trunc=...][:comp=...]`) through the registry.
+    let proposed = registry().build_str("proposed@8").expect("registered design");
+    let exact = registry().build_str("exact@8").expect("registered design");
+    println!("a × b: exact vs proposed approximate (specs proposed@8 / exact@8)");
     for (a, b) in [(13i64, 27), (-100, 90), (127, -128), (7, -7)] {
         println!(
             "  {a:>5} × {b:>5} = {:>7} ≈ {:>7}  (err {:+})",
@@ -22,6 +23,18 @@ fn main() {
             proposed.multiply(a, b) - exact.multiply(a, b)
         );
     }
+
+    // Specs round-trip their string form, so they can live in configs,
+    // job payloads, CLI flags...
+    let spec: DesignSpec = "proposed@16:comp=const".parse().unwrap();
+    println!(
+        "\nparsed spec {spec}: {} bits, family {:?}, roundtrip {}",
+        spec.bits,
+        spec.compressors,
+        spec.to_string().parse::<DesignSpec>().unwrap() == spec
+    );
+    let wide = registry().build(&spec).expect("16-bit variant");
+    println!("  {} at N=16: 1000 × -999 ≈ {}", wide.name(), wide.multiply(1000, -999));
 
     // 2. Error metrics over all 65 536 operand pairs (paper Table 4 row).
     let e = error_metrics(proposed.as_ref());
@@ -49,5 +62,7 @@ fn main() {
         "hardware: area {:.0} GE (exact {:.0}), delay {:.1} (exact {:.1}), switched-cap {:.1} (exact {:.1})",
         hw_p.area_ge, hw_e.area_ge, hw_p.delay_units, hw_e.delay_units, hw_p.switched_cap, hw_e.switched_cap
     );
-    println!("\nnext: `cargo run --release -- tables --id all` regenerates every paper table/figure");
+    println!(
+        "\nnext: `cargo run --release --example design_space` sweeps the spec space;\n      `cargo run --release -- tables --id all` regenerates every paper table/figure"
+    );
 }

@@ -1,43 +1,48 @@
 //! End-to-end driver (EXPERIMENTS.md §E2E): streams a batch of synthetic
-//! camera frames through the full three-layer stack — L3 tokio-style
-//! coordinator (tiling, dynamic batching, backpressure) dispatching to
-//! the AOT-compiled JAX/Pallas executable via PJRT when artifacts are
-//! present (in-process LUT engine otherwise) — and reports throughput,
-//! latency percentiles and output fidelity.
+//! camera frames through the full three-layer stack — the L3 coordinator
+//! (tiling, dynamic batching, backpressure) serving *two named designs at
+//! once* (`proposed@8` A/B'd against `exact@8`), each dispatched to the
+//! AOT-compiled JAX/Pallas executable via PJRT when artifacts are present
+//! (in-process LUT engine otherwise) — and reports aggregate plus
+//! per-design throughput/latency and output fidelity.
 //!
 //! Run: `make artifacts && cargo run --release --example streaming_service`
 
-use sfcmul::coordinator::{Coordinator, CoordinatorConfig, LutTileEngine, TileEngine};
+use sfcmul::coordinator::{engines, Coordinator, CoordinatorConfig, EngineSpec, TileEngine};
 use sfcmul::image::{edge_detect, psnr, synthetic_scene};
-use sfcmul::multipliers::{build_design, lut::product_table, DesignId};
-use sfcmul::runtime::{artifacts_available, artifacts_dir, PjrtTileEngine};
+use sfcmul::multipliers::{registry, DesignSpec};
 use std::sync::Arc;
 use std::time::Instant;
 
+const DESIGNS: [&str; 2] = ["proposed@8", "exact@8"];
+
 fn main() {
-    let model = build_design(DesignId::Proposed, 8);
-    let table = product_table(model.as_ref());
-
-    let dir = artifacts_dir();
-    let engine: Arc<dyn TileEngine> = if artifacts_available(&dir) {
-        println!("engine: PJRT (AOT JAX/Pallas artifact from {dir:?})");
-        Arc::new(PjrtTileEngine::new(&dir, "proposed", table.clone()).expect("pjrt"))
-    } else {
-        println!("engine: in-process LUT (run `make artifacts` for the PJRT path)");
-        Arc::new(LutTileEngine::from_table("proposed", table.clone()))
-    };
-
-    let coord = Coordinator::start(
-        engine,
+    // Resolve each design through the one engines::resolve() path,
+    // preferring PJRT and falling back to the in-process LUT engine.
+    let mut named: Vec<(String, Arc<dyn TileEngine>)> = Vec::new();
+    for design in DESIGNS {
+        let spec: DesignSpec = design.parse().expect("valid spec");
+        let (engine, backend) =
+            engines::resolve_with_fallback(EngineSpec::Pjrt, &spec).expect("engine");
+        println!("engine[{design}]: {backend}");
+        named.push((design.to_string(), engine));
+    }
+    let coord = Coordinator::start_named(
+        named,
         CoordinatorConfig { workers: 4, queue_capacity: 256, max_batch: 8 },
     );
 
     const JOBS: usize = 64;
     const SIZE: usize = 256;
-    println!("streaming {JOBS} frames of {SIZE}x{SIZE} ...");
+    println!("streaming {JOBS} frames of {SIZE}x{SIZE}, round-robin across {DESIGNS:?} ...");
     let t0 = Instant::now();
     let handles: Vec<_> = (0..JOBS)
-        .map(|i| coord.submit(synthetic_scene(SIZE, SIZE, i as u64)))
+        .map(|i| {
+            let design = DESIGNS[i % DESIGNS.len()];
+            coord
+                .submit_to(synthetic_scene(SIZE, SIZE, i as u64), Some(design))
+                .expect("registered design")
+        })
         .collect();
     let mut results = Vec::new();
     for h in handles {
@@ -45,13 +50,15 @@ fn main() {
     }
     let wall = t0.elapsed();
 
-    // fidelity check on one frame against the direct model path
-    let check_img = synthetic_scene(SIZE, SIZE, 0);
-    let direct = edge_detect(&check_img, model.as_ref());
-    let served = &results[0].edges;
-    assert_eq!(served, &direct, "served output must equal the direct path bit-for-bit");
-    let exact = build_design(DesignId::Exact, 8);
-    let reference = edge_detect(&check_img, exact.as_ref());
+    // fidelity check: job 0 (proposed) and job 1 (exact) against the
+    // direct model paths
+    let proposed = registry().build_str(DESIGNS[0]).unwrap();
+    let exact = registry().build_str(DESIGNS[1]).unwrap();
+    let direct_p = edge_detect(&synthetic_scene(SIZE, SIZE, 0), proposed.as_ref());
+    let direct_e = edge_detect(&synthetic_scene(SIZE, SIZE, 1), exact.as_ref());
+    assert_eq!(&results[0].edges, &direct_p, "served proposed == direct path");
+    assert_eq!(&results[1].edges, &direct_e, "served exact == direct path");
+    let reference = edge_detect(&synthetic_scene(SIZE, SIZE, 0), exact.as_ref());
 
     let m = coord.shutdown();
     let mpix = (JOBS * SIZE * SIZE) as f64 / wall.as_secs_f64() / 1e6;
@@ -63,12 +70,24 @@ fn main() {
         JOBS as f64 / wall.as_secs_f64()
     );
     println!(
-        "latency p50/p90/p99 = {:.1}/{:.1}/{:.1} ms, mean batch {:.2}, engine busy {:.2} s",
+        "aggregate latency p50/p90/p99 = {:.1}/{:.1}/{:.1} ms, mean batch {:.2}, engine busy {:.2} s",
         m.latency_p50_ms, m.latency_p90_ms, m.latency_p99_ms, m.mean_batch_size,
         m.engine_busy.as_secs_f64()
     );
+    for row in &m.per_engine {
+        println!(
+            "  {:<12} jobs {:>3}  tiles {:>5}  p50/p99 {:>6.1}/{:>6.1} ms  busy {:.2} s",
+            row.name,
+            row.jobs_completed,
+            row.tiles_processed,
+            row.latency_p50_ms,
+            row.latency_p99_ms,
+            row.engine_busy.as_secs_f64()
+        );
+    }
     println!(
-        "fidelity: served == direct model path (bit-exact); PSNR vs exact multiplier: {:.2} dB",
-        psnr(&reference, served)
+        "fidelity: served == direct model path (bit-exact per design); \
+         proposed PSNR vs exact multiplier: {:.2} dB",
+        psnr(&reference, &results[0].edges)
     );
 }

@@ -1,10 +1,10 @@
 //! Bench: Fig-9 machinery — every convolution path at 256×256, plus the
 //! PJRT executable path when artifacts are present.
 
-use sfcmul::coordinator::{tile_image, LutTileEngine, ModelTileEngine, TileEngine};
+use sfcmul::coordinator::{tile_image, LutTileEngine, ModelTileEngine, RowbufTileEngine, TileEngine};
 use sfcmul::image::{conv3x3, conv3x3_lut, conv3x3_rowbuf, synthetic_scene, LAPLACIAN};
-use sfcmul::multipliers::{build_design, lut::product_table, DesignId};
-use sfcmul::runtime::{artifacts_available, artifacts_dir, PjrtTileEngine};
+use sfcmul::multipliers::{lut::product_table, registry};
+use sfcmul::runtime::{artifacts_available, artifacts_dir, pjrt_enabled, PjrtTileEngine};
 use sfcmul::util::bench::Bench;
 use std::sync::Arc;
 
@@ -12,7 +12,7 @@ fn main() {
     let mut b = Bench::new("bench_conv");
     let img = synthetic_scene(256, 256, 11);
     let pixels = (img.width * img.height) as u64;
-    let model = build_design(DesignId::Proposed, 8);
+    let model = registry().build_str("proposed@8").expect("registered design");
     let lut = product_table(model.as_ref());
 
     b.throughput(pixels).bench("conv_model_direct_256", || {
@@ -34,9 +34,13 @@ fn main() {
     b.throughput(pixels).bench("tiles_model_engine_256", || {
         model_engine.process_batch(&tiles).len()
     });
+    let rowbuf_engine = RowbufTileEngine::new(model.clone());
+    b.throughput(pixels).bench("tiles_rowbuf_engine_256", || {
+        rowbuf_engine.process_batch(&tiles).len()
+    });
 
     let dir = artifacts_dir();
-    if artifacts_available(&dir) {
+    if pjrt_enabled() && artifacts_available(&dir) {
         let pjrt = Arc::new(PjrtTileEngine::new(&dir, "proposed", lut).expect("pjrt"));
         b.throughput(pixels).bench("tiles_pjrt_engine_256", || {
             pjrt.process_batch(&tiles).len()

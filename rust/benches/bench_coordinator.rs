@@ -3,7 +3,7 @@
 
 use sfcmul::coordinator::{tile_image, Coordinator, CoordinatorConfig, LutTileEngine};
 use sfcmul::image::synthetic_scene;
-use sfcmul::multipliers::{build_design, lut::product_table, DesignId};
+use sfcmul::multipliers::{lut::product_table, registry};
 use sfcmul::util::bench::Bench;
 use std::sync::Arc;
 
@@ -14,7 +14,7 @@ fn main() {
 
     b.throughput(pixels).bench("tile_image_256", || tile_image(0, &img).len());
 
-    let model = build_design(DesignId::Proposed, 8);
+    let model = registry().build_str("proposed@8").expect("registered design");
     let lut = product_table(model.as_ref());
 
     for workers in [1usize, 2, 4, 8] {

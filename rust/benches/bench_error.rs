@@ -2,7 +2,7 @@
 //! fast-model multiply throughput per design.
 
 use sfcmul::error::error_metrics;
-use sfcmul::multipliers::{all_designs, build_design, DesignId};
+use sfcmul::multipliers::{all_designs, registry};
 use sfcmul::util::bench::Bench;
 
 fn main() {
@@ -14,7 +14,7 @@ fn main() {
     }
 
     // single-multiply throughput (hot path of the error sweep)
-    let prop = build_design(DesignId::Proposed, 8);
+    let prop = registry().build_str("proposed@8").expect("registered design");
     let mut x = 0i64;
     b.throughput(1).bench("proposed_multiply_scalar", || {
         x = (x + 17) & 0xFF;

@@ -2,17 +2,17 @@
 //! activity-based power per design.
 
 use sfcmul::hwmodel::raw_hw;
-use sfcmul::multipliers::{all_designs_hw, build_design, DesignId};
+use sfcmul::multipliers::{all_designs_hw, registry};
 use sfcmul::netlist::{power, timing};
 use sfcmul::util::bench::Bench;
 
 fn main() {
     let mut b = Bench::new("bench_hw");
 
-    let exact = build_design(DesignId::Exact, 8);
+    let exact = registry().build_str("exact@8").expect("registered design");
     b.bench("netlist_build_exact", || exact.build_netlist().len());
 
-    let prop = build_design(DesignId::Proposed, 8);
+    let prop = registry().build_str("proposed@8").expect("registered design");
     b.bench("netlist_build_proposed", || prop.build_netlist().len());
 
     let nl = exact.build_netlist();

@@ -1,0 +1,182 @@
+//! Engine specification + resolution — the one path every call site
+//! (CLI, examples, serving) goes through to turn a *design* spec and an
+//! *engine* spec into a running [`TileEngine`].
+//!
+//! # Engine grammar
+//!
+//! ```text
+//! engine := 'lut' | 'model' | 'rowbuf' | 'pjrt'
+//! ```
+//!
+//! * `lut` — in-process 256×256 product-table engine (8-bit designs only;
+//!   the production default).
+//! * `model` — calls the multiplier functional model per MAC (any width;
+//!   the reference path).
+//! * `rowbuf` — the Fig. 8 streaming line-buffer datapath (any width).
+//! * `pjrt` — the AOT-compiled JAX/Pallas executable via PJRT (8-bit
+//!   designs; requires artifacts and the `pjrt` cargo feature).
+
+use super::engine::{LutTileEngine, ModelTileEngine, RowbufTileEngine, TileEngine};
+use crate::multipliers::spec::{registry, DesignSpec};
+use crate::multipliers::lut::product_table;
+use crate::runtime::{artifacts_available, artifacts_dir, pjrt_enabled, PjrtTileEngine};
+use crate::util::error::Error;
+use std::fmt;
+use std::str::FromStr;
+use std::sync::Arc;
+
+/// Which tile-engine backend serves a design.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum EngineSpec {
+    /// In-process product-table engine.
+    Lut,
+    /// Functional-model engine (reference).
+    Model,
+    /// Streaming row-buffer engine (paper Fig. 8 datapath).
+    Rowbuf,
+    /// AOT JAX/Pallas executable via PJRT.
+    Pjrt,
+}
+
+impl EngineSpec {
+    pub fn key(self) -> &'static str {
+        match self {
+            EngineSpec::Lut => "lut",
+            EngineSpec::Model => "model",
+            EngineSpec::Rowbuf => "rowbuf",
+            EngineSpec::Pjrt => "pjrt",
+        }
+    }
+
+    pub fn all() -> [EngineSpec; 4] {
+        [EngineSpec::Lut, EngineSpec::Model, EngineSpec::Rowbuf, EngineSpec::Pjrt]
+    }
+}
+
+impl fmt::Display for EngineSpec {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.key())
+    }
+}
+
+impl FromStr for EngineSpec {
+    type Err = Error;
+
+    fn from_str(s: &str) -> Result<Self, Error> {
+        match s.trim().to_lowercase().as_str() {
+            "lut" => Ok(EngineSpec::Lut),
+            "model" => Ok(EngineSpec::Model),
+            "rowbuf" => Ok(EngineSpec::Rowbuf),
+            "pjrt" => Ok(EngineSpec::Pjrt),
+            other => Err(Error::msg(format!(
+                "unknown engine {other:?} (lut | model | rowbuf | pjrt)"
+            ))),
+        }
+    }
+}
+
+/// Build the design a spec describes (through the global registry) and
+/// wrap it in the requested engine backend.
+pub fn resolve(engine: EngineSpec, design: &DesignSpec) -> crate::Result<Arc<dyn TileEngine>> {
+    let model = registry().build(design)?;
+    match engine {
+        EngineSpec::Lut => {
+            if design.bits != 8 {
+                return Err(Error::msg(format!(
+                    "engine lut requires an 8-bit design (got {design}); use engine model"
+                )));
+            }
+            Ok(Arc::new(LutTileEngine::new(model.as_ref())))
+        }
+        EngineSpec::Model => Ok(Arc::new(ModelTileEngine::new(model))),
+        EngineSpec::Rowbuf => Ok(Arc::new(RowbufTileEngine::new(model))),
+        EngineSpec::Pjrt => {
+            if design.bits != 8 {
+                return Err(Error::msg(format!(
+                    "engine pjrt requires an 8-bit design (got {design})"
+                )));
+            }
+            let table = product_table(model.as_ref());
+            let engine = PjrtTileEngine::new(&artifacts_dir(), &model.name(), table)?;
+            Ok(Arc::new(engine))
+        }
+    }
+}
+
+/// Parse both spec strings and resolve in one step — a convenience for
+/// library/embedding callers holding raw strings. (The CLI itself parses
+/// specs up front and goes through [`resolve_with_fallback`].)
+pub fn resolve_str(engine: &str, design: &str) -> crate::Result<Arc<dyn TileEngine>> {
+    let engine: EngineSpec = engine.parse()?;
+    let design: DesignSpec = design.parse()?;
+    resolve(engine, &design)
+}
+
+/// Resolve with the serving-path fallback: a PJRT request that cannot be
+/// satisfied because the backend is genuinely unavailable (build without
+/// the `pjrt` feature, or missing AOT artifacts) degrades to the
+/// in-process LUT engine with a note on stderr. Returns the engine
+/// together with the backend actually used. Every other failure — bad
+/// design spec, wrong width, a real PJRT compile error — propagates.
+pub fn resolve_with_fallback(
+    engine: EngineSpec,
+    design: &DesignSpec,
+) -> crate::Result<(Arc<dyn TileEngine>, EngineSpec)> {
+    let pjrt_unavailable = !pjrt_enabled() || !artifacts_available(&artifacts_dir());
+    match resolve(engine, design) {
+        Ok(e) => Ok((e, engine)),
+        Err(err) if engine == EngineSpec::Pjrt && pjrt_unavailable => {
+            eprintln!("pjrt engine unavailable for {design} ({err}); falling back to lut");
+            Ok((resolve(EngineSpec::Lut, design)?, EngineSpec::Lut))
+        }
+        Err(err) => Err(err),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::tiler::tile_image;
+    use crate::image::synthetic_scene;
+
+    #[test]
+    fn engine_spec_roundtrips() {
+        for e in EngineSpec::all() {
+            assert_eq!(e.key().parse::<EngineSpec>().unwrap(), e);
+        }
+        assert!("turbo".parse::<EngineSpec>().is_err());
+    }
+
+    #[test]
+    fn resolve_builds_equivalent_engines() {
+        let design: DesignSpec = "proposed@8".parse().unwrap();
+        let img = synthetic_scene(100, 70, 3);
+        let tiles = tile_image(0, &img);
+        let lut = resolve(EngineSpec::Lut, &design).unwrap();
+        let model = resolve(EngineSpec::Model, &design).unwrap();
+        let rowbuf = resolve(EngineSpec::Rowbuf, &design).unwrap();
+        let a = lut.process_batch(&tiles);
+        let b = model.process_batch(&tiles);
+        let c = rowbuf.process_batch(&tiles);
+        for ((x, y), z) in a.iter().zip(b.iter()).zip(c.iter()) {
+            assert_eq!(x.data, y.data, "lut vs model");
+            assert_eq!(x.data, z.data, "lut vs rowbuf");
+        }
+    }
+
+    #[test]
+    fn lut_rejects_wide_designs_model_accepts_them() {
+        let wide: DesignSpec = "proposed@16".parse().unwrap();
+        assert!(resolve(EngineSpec::Lut, &wide).is_err());
+        let engine = resolve(EngineSpec::Model, &wide).unwrap();
+        assert!(engine.name().contains("Proposed"));
+    }
+
+    #[test]
+    fn resolve_str_parses_both_specs() {
+        let engine = resolve_str("model", "d2@8:trunc=none").unwrap();
+        assert!(engine.name().starts_with("model:"));
+        assert!(resolve_str("turbo", "proposed@8").is_err());
+        assert!(resolve_str("lut", "nonsense spec").is_err());
+    }
+}

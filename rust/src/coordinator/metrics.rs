@@ -1,16 +1,18 @@
-//! Coordinator metrics: counters and latency/batch-size distributions.
+//! Coordinator metrics: counters and latency/batch-size distributions,
+//! kept per named engine (per design) and aggregated across the fleet.
 
 use crate::util::stats;
 use std::sync::Mutex;
 use std::time::Duration;
 
-#[derive(Default)]
+/// Live metrics of a running coordinator. One row per named engine;
+/// the aggregate view sums/merges across rows.
 pub struct Metrics {
-    inner: Mutex<Inner>,
+    inner: Mutex<Vec<EngineInner>>,
 }
 
-#[derive(Default)]
-struct Inner {
+struct EngineInner {
+    name: String,
     jobs_completed: u64,
     tiles_processed: u64,
     batches: u64,
@@ -19,9 +21,25 @@ struct Inner {
     busy: Duration,
 }
 
-/// Point-in-time copy of the metrics.
+impl EngineInner {
+    fn new(name: String) -> Self {
+        Self {
+            name,
+            jobs_completed: 0,
+            tiles_processed: 0,
+            batches: 0,
+            batch_sizes: Vec::new(),
+            job_latencies_ms: Vec::new(),
+            busy: Duration::ZERO,
+        }
+    }
+}
+
+/// Point-in-time copy of one engine's metrics.
 #[derive(Debug, Clone)]
-pub struct MetricsSnapshot {
+pub struct EngineMetricsSnapshot {
+    /// The engine's registered name (the design/engine key jobs select).
+    pub name: String,
     pub jobs_completed: u64,
     pub tiles_processed: u64,
     pub batches: u64,
@@ -32,33 +50,81 @@ pub struct MetricsSnapshot {
     pub engine_busy: Duration,
 }
 
+/// Point-in-time copy of the metrics: fleet-wide aggregates plus one
+/// [`EngineMetricsSnapshot`] row per named engine.
+#[derive(Debug, Clone)]
+pub struct MetricsSnapshot {
+    pub jobs_completed: u64,
+    pub tiles_processed: u64,
+    pub batches: u64,
+    pub mean_batch_size: f64,
+    pub latency_p50_ms: f64,
+    pub latency_p90_ms: f64,
+    pub latency_p99_ms: f64,
+    pub engine_busy: Duration,
+    /// Per-design/engine rows, in engine registration order.
+    pub per_engine: Vec<EngineMetricsSnapshot>,
+}
+
 impl Metrics {
-    pub fn record_batch(&self, size: usize, busy: Duration) {
-        let mut m = self.inner.lock().unwrap();
+    /// Metrics tracking one row per engine name.
+    pub fn new(engine_names: Vec<String>) -> Self {
+        assert!(!engine_names.is_empty());
+        Self {
+            inner: Mutex::new(engine_names.into_iter().map(EngineInner::new).collect()),
+        }
+    }
+
+    pub fn record_batch(&self, engine: usize, size: usize, busy: Duration) {
+        let mut rows = self.inner.lock().unwrap();
+        let m = &mut rows[engine];
         m.batches += 1;
         m.tiles_processed += size as u64;
         m.batch_sizes.push(size as f64);
         m.busy += busy;
     }
 
-    pub fn record_job(&self, latency: Duration) {
-        let mut m = self.inner.lock().unwrap();
+    pub fn record_job(&self, engine: usize, latency: Duration) {
+        let mut rows = self.inner.lock().unwrap();
+        let m = &mut rows[engine];
         m.jobs_completed += 1;
         m.job_latencies_ms.push(latency.as_secs_f64() * 1e3);
     }
 
     pub fn snapshot(&self) -> MetricsSnapshot {
-        let m = self.inner.lock().unwrap();
-        let (p50, p90, p99) = stats::p50_p90_p99(&m.job_latencies_ms);
+        let rows = self.inner.lock().unwrap();
+        let per_engine: Vec<EngineMetricsSnapshot> = rows
+            .iter()
+            .map(|m| {
+                let (p50, p90, p99) = stats::p50_p90_p99(&m.job_latencies_ms);
+                EngineMetricsSnapshot {
+                    name: m.name.clone(),
+                    jobs_completed: m.jobs_completed,
+                    tiles_processed: m.tiles_processed,
+                    batches: m.batches,
+                    mean_batch_size: stats::mean(&m.batch_sizes),
+                    latency_p50_ms: p50,
+                    latency_p90_ms: p90,
+                    latency_p99_ms: p99,
+                    engine_busy: m.busy,
+                }
+            })
+            .collect();
+        let all_batches: Vec<f64> =
+            rows.iter().flat_map(|m| m.batch_sizes.iter().copied()).collect();
+        let all_latencies: Vec<f64> =
+            rows.iter().flat_map(|m| m.job_latencies_ms.iter().copied()).collect();
+        let (p50, p90, p99) = stats::p50_p90_p99(&all_latencies);
         MetricsSnapshot {
-            jobs_completed: m.jobs_completed,
-            tiles_processed: m.tiles_processed,
-            batches: m.batches,
-            mean_batch_size: stats::mean(&m.batch_sizes),
+            jobs_completed: rows.iter().map(|m| m.jobs_completed).sum(),
+            tiles_processed: rows.iter().map(|m| m.tiles_processed).sum(),
+            batches: rows.iter().map(|m| m.batches).sum(),
+            mean_batch_size: stats::mean(&all_batches),
             latency_p50_ms: p50,
             latency_p90_ms: p90,
             latency_p99_ms: p99,
-            engine_busy: m.busy,
+            engine_busy: rows.iter().map(|m| m.busy).sum(),
+            per_engine,
         }
     }
 }
@@ -69,11 +135,11 @@ mod tests {
 
     #[test]
     fn snapshot_aggregates() {
-        let m = Metrics::default();
-        m.record_batch(4, Duration::from_millis(2));
-        m.record_batch(8, Duration::from_millis(3));
-        m.record_job(Duration::from_millis(10));
-        m.record_job(Duration::from_millis(20));
+        let m = Metrics::new(vec!["only".into()]);
+        m.record_batch(0, 4, Duration::from_millis(2));
+        m.record_batch(0, 8, Duration::from_millis(3));
+        m.record_job(0, Duration::from_millis(10));
+        m.record_job(0, Duration::from_millis(20));
         let s = m.snapshot();
         assert_eq!(s.batches, 2);
         assert_eq!(s.tiles_processed, 12);
@@ -81,5 +147,30 @@ mod tests {
         assert!((s.mean_batch_size - 6.0).abs() < 1e-12);
         assert!(s.latency_p50_ms >= 10.0 && s.latency_p99_ms <= 20.0 + 1e-9);
         assert_eq!(s.engine_busy, Duration::from_millis(5));
+        assert_eq!(s.per_engine.len(), 1);
+        assert_eq!(s.per_engine[0].name, "only");
+    }
+
+    #[test]
+    fn per_engine_rows_stay_separate() {
+        let m = Metrics::new(vec!["approx".into(), "exact".into()]);
+        m.record_batch(0, 4, Duration::from_millis(1));
+        m.record_batch(1, 2, Duration::from_millis(5));
+        m.record_job(0, Duration::from_millis(10));
+        m.record_job(0, Duration::from_millis(30));
+        m.record_job(1, Duration::from_millis(20));
+        let s = m.snapshot();
+        assert_eq!(s.jobs_completed, 3);
+        assert_eq!(s.tiles_processed, 6);
+        let approx = &s.per_engine[0];
+        let exact = &s.per_engine[1];
+        assert_eq!(approx.name, "approx");
+        assert_eq!(approx.jobs_completed, 2);
+        assert_eq!(approx.tiles_processed, 4);
+        assert_eq!(exact.name, "exact");
+        assert_eq!(exact.jobs_completed, 1);
+        assert_eq!(exact.batches, 1);
+        assert!((exact.mean_batch_size - 2.0).abs() < 1e-12);
+        assert_eq!(exact.engine_busy, Duration::from_millis(5));
     }
 }

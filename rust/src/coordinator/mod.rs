@@ -1,29 +1,39 @@
 //! L3 serving coordinator — the hardware-oriented streaming framework of
-//! paper Fig. 8, generalised into a deployable service.
+//! paper Fig. 8, generalised into a deployable multi-design service.
 //!
 //! Images arrive as jobs; the coordinator splits them into fixed-size
 //! tiles with a 1-pixel halo (the receptive field of the 3×3 Laplacian),
 //! pushes them through a *bounded* queue (backpressure, the role the
 //! paper's line buffers play), batches tiles dynamically, and dispatches
-//! batches to a [`engine::TileEngine`] — either the in-process LUT MAC
-//! path or the AOT-compiled JAX/Pallas executable via PJRT
-//! ([`crate::runtime`]). Outputs are reassembled in-place and each job's
-//! latency is recorded.
+//! batches to [`engine::TileEngine`]s — the in-process LUT MAC path, the
+//! functional-model and row-buffer reference paths, or the AOT-compiled
+//! JAX/Pallas executable via PJRT ([`crate::runtime`]). Outputs are
+//! reassembled in-place and each job's latency is recorded.
+//!
+//! One coordinator serves a *set of named engines* (typically one per
+//! multiplier design, resolved from spec strings through
+//! [`engines::resolve`]); each job may select its engine by name at
+//! submit time and [`MetricsSnapshot`] carries per-design rows — a single
+//! service instance A/B-tests exact vs. approximate designs under load.
 //!
 //! ```text
-//!  submit(img) ─┬─ tiler ─▶ [bounded tile queue] ─▶ batcher ─▶ engine ─┐
-//!               │                                   (worker × W)      │
-//!               └──────────────── reassembly ◀──────────────────────── ┘
+//!  submit(img, key?) ─┬─ tiler ─▶ [bounded tile queue] ─▶ batcher ─▶ engine[key] ─┐
+//!                     │                                   (worker × W)            │
+//!                     └──────────────── reassembly ◀─────────────────────────────┘
 //! ```
 
 pub mod engine;
+pub mod engines;
 pub mod job;
 pub mod metrics;
 pub mod service;
 pub mod tiler;
 
-pub use engine::{DualModeTileEngine, LutTileEngine, ModelTileEngine, Quality, TileEngine};
+pub use engine::{
+    DualModeTileEngine, LutTileEngine, ModelTileEngine, Quality, RowbufTileEngine, TileEngine,
+};
+pub use engines::{resolve, resolve_str, resolve_with_fallback, EngineSpec};
 pub use job::{EdgeJob, JobResult};
-pub use metrics::MetricsSnapshot;
-pub use service::{Coordinator, CoordinatorConfig};
+pub use metrics::{EngineMetricsSnapshot, MetricsSnapshot};
+pub use service::{Coordinator, CoordinatorConfig, JobHandle};
 pub use tiler::{reassemble, tile_image, Tile, TileOut, TILE_CORE, TILE_HALO, TILE_IN};

@@ -1,11 +1,21 @@
 //! The coordinator service: intake → bounded tile queue → dynamic batcher
 //! → worker pool → reassembly.
+//!
+//! A coordinator serves a *set of named engines* — typically one per
+//! multiplier design (e.g. `proposed@8` next to `exact@8`), each resolved
+//! through [`super::engines::resolve`]. Jobs pick an engine by name at
+//! submit time ([`Coordinator::submit_to`]); [`Coordinator::submit`]
+//! keeps the classic single-engine behaviour by routing to the default
+//! (first) engine. Metrics are kept per engine, so one service instance
+//! can A/B exact vs. approximate designs under load (the Fig. 8 serving
+//! story scaled up).
 
 use super::engine::TileEngine;
 use super::job::JobResult;
 use super::metrics::{Metrics, MetricsSnapshot};
 use super::tiler::{reassemble, tile_image, Tile};
 use crate::image::Image;
+use crate::util::error::Error;
 use crate::util::pool::{bounded, Receiver, Sender};
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, Ordering};
@@ -21,7 +31,7 @@ pub struct CoordinatorConfig {
     /// block when the fleet is saturated, exactly like the line-buffer
     /// stall in the paper's Fig. 8 datapath.
     pub queue_capacity: usize,
-    /// Maximum tiles per engine batch (clamped to the engine's
+    /// Maximum tiles per engine batch (clamped to the engines'
     /// preference).
     pub max_batch: usize,
 }
@@ -37,6 +47,8 @@ struct JobState {
     remaining: usize,
     started: Instant,
     tiles: usize,
+    /// Index of the engine serving this job (metrics attribution).
+    engine: usize,
     reply: Sender<JobResult>,
 }
 
@@ -65,27 +77,54 @@ pub struct Coordinator {
     tile_tx: Option<Sender<Tile>>,
     workers: Vec<JoinHandle<()>>,
     next_job: AtomicU64,
-    engine_name: String,
+    engine_names: Vec<String>,
 }
 
 impl Coordinator {
+    /// Single-engine service (the classic entry): the engine is
+    /// registered under its own reported name and serves every job.
     pub fn start(engine: Arc<dyn TileEngine>, cfg: CoordinatorConfig) -> Self {
+        let name = engine.name();
+        Self::start_named(vec![(name, engine)], cfg)
+    }
+
+    /// Multi-design service: a set of named engines. The first entry is
+    /// the default; [`Coordinator::submit_to`] routes jobs to any of them
+    /// by name. Panics on an empty set, duplicate names, or more than 256
+    /// engines (tile routing is a `u8`).
+    pub fn start_named(
+        engines: Vec<(String, Arc<dyn TileEngine>)>,
+        cfg: CoordinatorConfig,
+    ) -> Self {
         assert!(cfg.workers >= 1 && cfg.max_batch >= 1);
+        assert!(!engines.is_empty(), "coordinator needs at least one engine");
+        assert!(engines.len() <= 256, "at most 256 named engines");
+        let engine_names: Vec<String> = engines.iter().map(|(n, _)| n.clone()).collect();
+        {
+            let mut sorted = engine_names.clone();
+            sorted.sort();
+            sorted.dedup();
+            assert_eq!(sorted.len(), engine_names.len(), "duplicate engine names");
+        }
+        let fleet: Arc<Vec<Arc<dyn TileEngine>>> =
+            Arc::new(engines.into_iter().map(|(_, e)| e).collect());
         let (tile_tx, tile_rx) = bounded::<Tile>(cfg.queue_capacity);
         let shared = Arc::new(Shared {
             jobs: Mutex::new(HashMap::new()),
-            metrics: Metrics::default(),
+            metrics: Metrics::new(engine_names.clone()),
         });
-        let max_batch = cfg.max_batch.min(engine.preferred_batch()).max(1);
-        let engine_name = engine.name();
+        let max_batch = cfg
+            .max_batch
+            .min(fleet.iter().map(|e| e.preferred_batch()).min().unwrap_or(1))
+            .max(1);
         let workers = (0..cfg.workers)
             .map(|i| {
                 let rx = tile_rx.clone();
-                let engine = engine.clone();
+                let fleet = fleet.clone();
                 let shared = shared.clone();
                 std::thread::Builder::new()
                     .name(format!("sfcmul-coord-{i}"))
-                    .spawn(move || worker_loop(rx, engine, shared, max_batch))
+                    .spawn(move || worker_loop(rx, fleet, shared, max_batch))
                     .expect("spawn coordinator worker")
             })
             .collect();
@@ -94,26 +133,58 @@ impl Coordinator {
             tile_tx: Some(tile_tx),
             workers,
             next_job: AtomicU64::new(1),
-            engine_name,
+            engine_names,
         }
     }
 
+    /// Name of the default engine (the routing target of [`submit`]).
+    ///
+    /// [`submit`]: Coordinator::submit
     pub fn engine_name(&self) -> &str {
-        &self.engine_name
+        &self.engine_names[0]
     }
 
-    /// Submit an image; returns a handle to wait on. Blocks (backpressure)
-    /// when the tile queue is full.
+    /// All registered engine names, in registration order.
+    pub fn engine_names(&self) -> &[String] {
+        &self.engine_names
+    }
+
+    /// Submit an image to the default engine; returns a handle to wait
+    /// on. Blocks (backpressure) when the tile queue is full.
     pub fn submit(&self, image: Image) -> JobHandle {
-        self.submit_with_quality(image, 0)
+        self.submit_inner(image, 0, 0)
+    }
+
+    /// Submit to a named engine (per-job design selection). `None` routes
+    /// to the default engine; an unknown name is an error.
+    pub fn submit_to(&self, image: Image, engine: Option<&str>) -> crate::Result<JobHandle> {
+        let idx = match engine {
+            None => 0,
+            Some(name) => self
+                .engine_names
+                .iter()
+                .position(|n| n == name)
+                .ok_or_else(|| {
+                    Error::msg(format!(
+                        "unknown engine {name:?} (registered: {})",
+                        self.engine_names.join(", ")
+                    ))
+                })?,
+        };
+        Ok(self.submit_inner(image, idx, 0))
     }
 
     /// Submit with an explicit quality class (dual-quality serving; see
     /// [`crate::coordinator::engine::Quality`]).
     pub fn submit_with_quality(&self, image: Image, quality: u8) -> JobHandle {
+        self.submit_inner(image, 0, quality)
+    }
+
+    fn submit_inner(&self, image: Image, engine: usize, quality: u8) -> JobHandle {
         let id = self.next_job.fetch_add(1, Ordering::Relaxed);
         let mut tiles = tile_image(id, &image);
         for t in &mut tiles {
+            t.engine = engine as u8;
             t.quality = quality;
         }
         let (reply_tx, reply_rx) = bounded::<JobResult>(1);
@@ -126,6 +197,7 @@ impl Coordinator {
                     remaining: tiles.len(),
                     started: Instant::now(),
                     tiles: tiles.len(),
+                    engine,
                     reply: reply_tx,
                 },
             );
@@ -137,7 +209,7 @@ impl Coordinator {
         JobHandle { id, rx: reply_rx }
     }
 
-    /// Convenience: submit and wait.
+    /// Convenience: submit to the default engine and wait.
     pub fn run(&self, image: Image) -> JobResult {
         self.submit(image).wait()
     }
@@ -169,8 +241,8 @@ impl Drop for Coordinator {
 }
 
 fn worker_loop(
-    rx: crate::util::pool::Receiver<Tile>,
-    engine: Arc<dyn TileEngine>,
+    rx: Receiver<Tile>,
+    fleet: Arc<Vec<Arc<dyn TileEngine>>>,
     shared: Arc<Shared>,
     max_batch: usize,
 ) {
@@ -179,28 +251,47 @@ fn worker_loop(
         if batch.is_empty() {
             return; // queue closed and drained
         }
-        let t0 = Instant::now();
-        let outs = engine.process_batch(&batch);
-        shared.metrics.record_batch(batch.len(), t0.elapsed());
-        debug_assert_eq!(outs.len(), batch.len());
-        for to in outs {
-            let mut jobs = shared.jobs.lock().unwrap();
-            let done = {
-                let st = jobs.get_mut(&to.job_id).expect("job state");
-                reassemble(&mut st.out, &to);
-                st.remaining -= 1;
-                st.remaining == 0
-            };
-            if done {
-                let st = jobs.remove(&to.job_id).unwrap();
-                let latency = st.started.elapsed();
-                shared.metrics.record_job(latency);
-                let _ = st.reply.send(JobResult {
-                    id: to.job_id,
-                    edges: st.out,
-                    latency,
-                    tiles: st.tiles,
-                });
+        // Regroup the batch by engine (stable: queue order kept within
+        // each group). Concurrent submitters interleave tiles of
+        // different jobs in the shared queue, so coalescing — not
+        // run-splitting — keeps engine batches large; batching across
+        // designs is never correct, and reassembly is position-keyed so
+        // cross-engine reordering is safe.
+        let mut groups: Vec<(u8, Vec<Tile>)> = Vec::new();
+        for t in batch {
+            if let Some(pos) = groups.iter().position(|(e, _)| *e == t.engine) {
+                groups[pos].1.push(t);
+            } else {
+                groups.push((t.engine, vec![t]));
+            }
+        }
+        for (engine_idx, tiles) in groups {
+            let engine = &fleet[engine_idx as usize];
+            let t0 = Instant::now();
+            let outs = engine.process_batch(&tiles);
+            shared
+                .metrics
+                .record_batch(engine_idx as usize, tiles.len(), t0.elapsed());
+            debug_assert_eq!(outs.len(), tiles.len());
+            for to in outs {
+                let mut jobs = shared.jobs.lock().unwrap();
+                let done = {
+                    let st = jobs.get_mut(&to.job_id).expect("job state");
+                    reassemble(&mut st.out, &to);
+                    st.remaining -= 1;
+                    st.remaining == 0
+                };
+                if done {
+                    let st = jobs.remove(&to.job_id).unwrap();
+                    let latency = st.started.elapsed();
+                    shared.metrics.record_job(st.engine, latency);
+                    let _ = st.reply.send(JobResult {
+                        id: to.job_id,
+                        edges: st.out,
+                        latency,
+                        tiles: st.tiles,
+                    });
+                }
             }
         }
     }
@@ -299,6 +390,97 @@ mod tests {
         assert_eq!(metrics.jobs_completed, 1);
         let res = handle.wait();
         assert_eq!(res.edges.width, 256);
+    }
+}
+
+#[cfg(test)]
+mod multi_design_tests {
+    use super::*;
+    use crate::coordinator::engine::{LutTileEngine, TileEngine};
+    use crate::image::{edge_detect, synthetic_scene};
+    use crate::multipliers::registry;
+
+    fn two_design_coordinator(workers: usize) -> Coordinator {
+        let approx = registry().build_str("proposed@8").unwrap();
+        let exact = registry().build_str("exact@8").unwrap();
+        let engines: Vec<(String, Arc<dyn TileEngine>)> = vec![
+            (
+                "proposed@8".to_string(),
+                Arc::new(LutTileEngine::new(approx.as_ref())),
+            ),
+            (
+                "exact@8".to_string(),
+                Arc::new(LutTileEngine::new(exact.as_ref())),
+            ),
+        ];
+        Coordinator::start_named(
+            engines,
+            CoordinatorConfig { workers, queue_capacity: 64, max_batch: 8 },
+        )
+    }
+
+    /// Jobs routed to different designs get bit-exact results from their
+    /// respective multiplier — concurrently, through one worker fleet —
+    /// and the metrics report one row per design.
+    #[test]
+    fn jobs_route_by_engine_name_with_per_design_metrics() {
+        let approx = registry().build_str("proposed@8").unwrap();
+        let exact = registry().build_str("exact@8").unwrap();
+        let coord = two_design_coordinator(3);
+        assert_eq!(coord.engine_name(), "proposed@8");
+        let img = synthetic_scene(192, 128, 21);
+        let want_approx = edge_detect(&img, approx.as_ref());
+        let want_exact = edge_detect(&img, exact.as_ref());
+        let h1 = coord.submit_to(img.clone(), Some("proposed@8")).unwrap();
+        let h2 = coord.submit_to(img.clone(), Some("exact@8")).unwrap();
+        let h3 = coord.submit_to(img.clone(), None).unwrap(); // default
+        let h4 = coord.submit(img.clone()); // also default
+        assert_eq!(h1.wait().edges, want_approx);
+        assert_eq!(h2.wait().edges, want_exact);
+        assert_eq!(h3.wait().edges, want_approx);
+        assert_eq!(h4.wait().edges, want_approx);
+        assert_ne!(want_approx, want_exact, "the two designs genuinely differ");
+
+        let m = coord.shutdown();
+        assert_eq!(m.jobs_completed, 4);
+        assert_eq!(m.per_engine.len(), 2);
+        assert_eq!(m.per_engine[0].name, "proposed@8");
+        assert_eq!(m.per_engine[0].jobs_completed, 3);
+        assert_eq!(m.per_engine[1].name, "exact@8");
+        assert_eq!(m.per_engine[1].jobs_completed, 1);
+        assert_eq!(
+            m.per_engine[0].tiles_processed + m.per_engine[1].tiles_processed,
+            m.tiles_processed
+        );
+    }
+
+    #[test]
+    fn unknown_engine_name_is_an_error() {
+        let coord = two_design_coordinator(1);
+        let img = synthetic_scene(64, 64, 3);
+        let err = coord.submit_to(img, Some("d2@8")).unwrap_err();
+        assert!(format!("{err}").contains("unknown engine"));
+    }
+
+    #[test]
+    fn ab_load_across_designs_from_many_threads() {
+        let coord = Arc::new(two_design_coordinator(4));
+        let names = ["proposed@8", "exact@8"];
+        let mut joins = Vec::new();
+        for t in 0..8u64 {
+            let coord = coord.clone();
+            let name = names[(t % 2) as usize];
+            joins.push(std::thread::spawn(move || {
+                let img = synthetic_scene(100, 90, t);
+                coord.submit_to(img, Some(name)).unwrap().wait().tiles
+            }));
+        }
+        for j in joins {
+            assert_eq!(j.join().unwrap(), 4);
+        }
+        let m = coord.metrics();
+        assert_eq!(m.per_engine[0].jobs_completed, 4);
+        assert_eq!(m.per_engine[1].jobs_completed, 4);
     }
 }
 

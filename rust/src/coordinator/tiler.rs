@@ -20,6 +20,10 @@ pub const TILE_IN: usize = TILE_CORE + 2 * TILE_HALO;
 #[derive(Debug, Clone)]
 pub struct Tile {
     pub job_id: u64,
+    /// Index of the named engine this tile is routed to (see
+    /// [`super::service::Coordinator::start_named`]); 0 is the default
+    /// engine, so single-engine coordinators ignore it.
+    pub engine: u8,
     /// Accuracy class requested by the job (see [`super::engine::Quality`]);
     /// engines without quality support ignore it.
     pub quality: u8,
@@ -77,7 +81,7 @@ pub fn tile_image(job_id: u64, img: &Image) -> Vec<Tile> {
                         .copy_from_slice(&row[src_lo..src_hi]);
                 }
             }
-            tiles.push(Tile { job_id, quality: 0, x0, y0, core_w, core_h, data });
+            tiles.push(Tile { job_id, engine: 0, quality: 0, x0, y0, core_w, core_h, data });
             x0 += TILE_CORE;
         }
         y0 += TILE_CORE;

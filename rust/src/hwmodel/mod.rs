@@ -98,6 +98,16 @@ impl Calibration {
     }
 }
 
+/// Raw figures for any registry-buildable [`crate::multipliers::DesignSpec`]
+/// — the hardware axis of spec-string design-space sweeps.
+pub fn raw_hw_for_spec(
+    spec: &crate::multipliers::DesignSpec,
+    seed: u64,
+) -> crate::Result<RawHw> {
+    let model = crate::multipliers::registry().build(spec)?;
+    Ok(raw_hw(model.as_ref(), seed))
+}
+
 /// Full Table-5 style evaluation over the hardware design variants.
 pub fn evaluate_all(n: usize, seed: u64) -> Vec<(crate::multipliers::DesignId, CalibratedHw)> {
     let designs = crate::multipliers::all_designs_hw(n);

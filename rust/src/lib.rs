@@ -7,8 +7,9 @@
 //! The crate is organised bottom-up:
 //!
 //! * [`util`] — self-contained substrates (PRNG, property testing,
-//!   micro-benchmark harness, CLI parsing, JSON emission, thread pool) built
-//!   from scratch because the build environment is fully offline.
+//!   micro-benchmark harness, CLI parsing, error type, JSON emission,
+//!   thread pool) built from scratch because the build environment is
+//!   fully offline.
 //! * [`netlist`] — a miniature gate-level EDA toolkit: netlist construction,
 //!   bit-parallel functional simulation, static timing, unit-gate area and
 //!   switching-activity power models. This substitutes for the paper's
@@ -20,10 +21,17 @@
 //!   the proposed exact/approximate `A+B+C+1` and `A+B+C+D+1`, and the
 //!   baseline designs AC1..AC5 and the 4:2 designs of refs. [1]/[7]
 //!   (paper Tables 2 and 3), with probabilistic error statistics.
-//! * [`multipliers`] — the exact Baugh-Wooley multiplier (generic N), the
-//!   proposed truncated + compensated approximate multiplier, and every
-//!   baseline multiplier of Tables 4/5, each as both a gate-level netlist
-//!   and a fast bit-parallel functional model (cross-checked exhaustively).
+//! * [`multipliers`] — the construction layer. [`multipliers::spec`]
+//!   defines the declarative [`multipliers::DesignSpec`] (compressor
+//!   family × bitwidth × truncation × compensation, round-tripping a
+//!   compact string form such as `proposed@16:comp=const`) and the
+//!   [`multipliers::Registry`] that maps design names to factories —
+//!   every multiplier in the system is built through it. The paper's
+//!   comparison set (Tables 4/5) is registered out of the box;
+//!   [`multipliers::DesignId`] remains as a thin alias over canonical
+//!   specs for the paper-table call sites. Each design exists as both a
+//!   gate-level netlist and a fast bit-parallel functional model,
+//!   cross-checked exhaustively at N=8 and by sampling at wider widths.
 //! * [`error`] — ER / MED / NMED / MRED error-metric harness (Table 4).
 //! * [`hwmodel`] — unit-gate → calibrated area/power/delay/PDP model
 //!   (Table 5, Fig 10).
@@ -31,9 +39,17 @@
 //!   and hardware-oriented row-buffer streaming), PSNR (Fig 9).
 //! * [`coordinator`] — the L3 serving layer: halo tiling, dynamic batching,
 //!   worker pool with backpressure, latency/throughput metrics (Fig 8).
-//! * [`runtime`] — PJRT client wrapper that loads the AOT-compiled JAX/Pallas
-//!   artifacts (`artifacts/*.hlo.txt`) and executes them from the Rust hot
-//!   path. Python never runs at request time.
+//!   A [`coordinator::Coordinator`] now serves a *set of named engines*
+//!   (one per design/backend pair, resolved through
+//!   [`coordinator::engines::resolve`]); each job may select its engine by
+//!   key, and [`coordinator::MetricsSnapshot`] reports per-design rows —
+//!   one service instance can A/B exact vs. approximate designs under
+//!   load.
+//! * [`runtime`] — PJRT client wrapper that loads the AOT-compiled
+//!   JAX/Pallas artifacts (`artifacts/*.hlo.txt`) and executes them from
+//!   the Rust hot path (feature `pjrt`; a stub that reports the feature as
+//!   unavailable ships by default so the offline build needs no XLA
+//!   dependency). Python never runs at request time.
 //! * [`tables`] — one generator per paper table/figure (T1..T5, F9, F10).
 
 pub mod util;
@@ -48,5 +64,5 @@ pub mod coordinator;
 pub mod runtime;
 pub mod tables;
 
-/// Crate-wide result alias.
-pub type Result<T> = anyhow::Result<T>;
+/// Crate-wide result alias (see [`util::error::Error`]).
+pub type Result<T> = std::result::Result<T, util::error::Error>;

@@ -1,18 +1,24 @@
 //! `sfcmul` — CLI for the approximate signed multiplier reproduction.
 //!
 //! Subcommands:
-//!   tables  --id <t1|t2|t3|t4|t5|f9|f10|all> [--seed S] [--out out/]
-//!   edge    --input img.pgm --output edges.pgm [--design proposed] [--engine lut|pjrt|model|rowbuf]
-//!   serve   --demo [--jobs N] [--workers W] [--engine lut|pjrt] [--design proposed]
-//!   ablate  [--seed S]                      (design-space ablation report)
-//!   dump-lut --design proposed --out artifacts/proposed_lut_rust.i32
-//!   hw      [--seed S]                      (raw unit-gate figures)
+//!   tables   --id <t1|t2|t3|t4|t5|f9|f10|all> [--seed S] [--out out/]
+//!   edge     --input img.pgm --output edges.pgm [--design SPEC] [--engine SPEC]
+//!   serve    --demo [--jobs N] [--workers W] [--designs SPEC,SPEC,...] [--engine SPEC]
+//!   ablate   [--seed S]                      (design-space ablation report)
+//!   designs                                  (list the design registry)
+//!   dump-lut --design proposed@8 --out artifacts/proposed_lut_rust.i32
+//!   hw       [--seed S]                      (raw unit-gate figures)
 //!   help
+//!
+//! Design specs (`--design` / `--designs`) follow the grammar of
+//! `multipliers::spec`: `family[@bits][:trunc=...][:comp=...]`, e.g.
+//! `proposed@8`, `proposed@16:comp=const`, `d2@8:trunc=none`. Engine
+//! specs (`--engine`) are one of `lut | model | rowbuf | pjrt`, resolved
+//! through `coordinator::engines::resolve`.
 
-use sfcmul::coordinator::{Coordinator, CoordinatorConfig, LutTileEngine, ModelTileEngine, TileEngine};
-use sfcmul::image::{conv3x3_rowbuf, edge_detect, synthetic_scene, Image, LAPLACIAN};
-use sfcmul::multipliers::{build_design, design_by_name, lut, DesignId};
-use sfcmul::runtime::{artifacts_dir, PjrtTileEngine};
+use sfcmul::coordinator::{engines, Coordinator, CoordinatorConfig, EngineSpec, TileEngine};
+use sfcmul::image::{edge_detect, synthetic_scene, Image};
+use sfcmul::multipliers::{lut, registry, DesignSpec};
 use sfcmul::util::cli::Args;
 use std::path::{Path, PathBuf};
 use std::sync::Arc;
@@ -25,18 +31,24 @@ USAGE: sfcmul <subcommand> [options]
 
   tables   --id t1|t2|t3|t4|t5|f9|f10|all [--seed S] [--out DIR]
            regenerate a paper table/figure
-  edge     --input in.pgm --output out.pgm [--design NAME] [--engine lut|model|rowbuf|pjrt]
+  edge     --input in.pgm --output out.pgm [--design SPEC] [--engine SPEC]
            run edge detection on an image (or --demo for the synthetic scene)
-  serve    --demo [--jobs N] [--workers W] [--batch B] [--engine lut|pjrt] [--design NAME]
-           run the streaming coordinator on a synthetic job stream, print metrics
+  serve    --demo [--jobs N] [--workers W] [--batch B] [--designs SPEC,SPEC,...] [--engine SPEC]
+           run the streaming coordinator on a synthetic job stream, round-robin
+           across the listed designs, print aggregate + per-design metrics
+           (default designs: proposed@8,exact@8 — an exact-vs-approximate A/B)
   ablate   [--seed S]
            design-space ablation (compressor candidates, compensation, truncation)
-  dump-lut [--design NAME] [--out FILE]
-           export a design's 256x256 product table (cross-check with python)
+  designs  list every registered design family and example spec strings
+  dump-lut [--design SPEC] [--out FILE]
+           export an 8-bit design's 256x256 product table (cross-check with python)
   hw       [--seed S]
            raw unit-gate hardware figures per design
 
-designs: exact, proposed, d1, d2, d4, d5, d7, d12
+design SPEC grammar:  family[@bits][:trunc=paper|none|K][:comp=paper|none|const]
+  families: exact, proposed, d1, d2, d4, d5, d7, d12   (default bits: 8)
+  examples: proposed@8   proposed@16:comp=const   d2@8:trunc=none   exact@16
+engine SPEC: lut (8-bit table, default) | model (any width) | rowbuf | pjrt
 ";
 
 fn main() {
@@ -52,6 +64,7 @@ fn main() {
         Some("edge") => cmd_edge(&args),
         Some("serve") => cmd_serve(&args),
         Some("ablate") => cmd_ablate(&args),
+        Some("designs") => cmd_designs(),
         Some("dump-lut") => cmd_dump_lut(&args),
         Some("hw") => cmd_hw(&args),
         Some("help") | None => {
@@ -85,33 +98,44 @@ fn cmd_tables(args: &Args) -> i32 {
     }
 }
 
-fn load_model(args: &Args) -> Arc<dyn sfcmul::multipliers::MultiplierModel> {
-    let name = args.get_or("design", "proposed");
-    design_by_name(name, 8).unwrap_or_else(|| {
-        eprintln!("unknown design {name:?}; using proposed");
-        build_design(DesignId::Proposed, 8)
+/// Parse `--design` into a spec (exits with a message on bad input).
+fn design_spec_of(args: &Args) -> Result<DesignSpec, i32> {
+    let raw = args.get_or("design", "proposed@8");
+    raw.parse::<DesignSpec>().map_err(|e| {
+        eprintln!("invalid --design {raw:?}: {e}");
+        2
     })
 }
 
-fn make_engine(args: &Args, model: &Arc<dyn sfcmul::multipliers::MultiplierModel>) -> Arc<dyn TileEngine> {
-    match args.get_or("engine", "lut") {
-        "pjrt" => {
-            let table = lut::product_table(model.as_ref());
-            match PjrtTileEngine::new(&artifacts_dir(), &model.name(), table) {
-                Ok(e) => Arc::new(e),
-                Err(e) => {
-                    eprintln!("pjrt engine unavailable ({e}); falling back to lut");
-                    Arc::new(LutTileEngine::new(model.as_ref()))
-                }
-            }
-        }
-        "model" => Arc::new(ModelTileEngine::new(model.clone())),
-        _ => Arc::new(LutTileEngine::new(model.as_ref())),
-    }
+/// Resolve one design × engine pair through the shared fallback path
+/// (PJRT degrades to the LUT engine when unavailable); reports the
+/// backend actually used.
+fn engine_for(
+    engine: EngineSpec,
+    design: &DesignSpec,
+) -> Result<(Arc<dyn TileEngine>, EngineSpec), String> {
+    engines::resolve_with_fallback(engine, design).map_err(|e| e.to_string())
 }
 
 fn cmd_edge(args: &Args) -> i32 {
-    let model = load_model(args);
+    let spec = match design_spec_of(args) {
+        Ok(s) => s,
+        Err(code) => return code,
+    };
+    let engine_spec: EngineSpec = match args.get_or("engine", "lut").parse() {
+        Ok(e) => e,
+        Err(e) => {
+            eprintln!("invalid --engine: {e}");
+            return 2;
+        }
+    };
+    let engine = match engine_for(engine_spec, &spec) {
+        Ok((e, _actual)) => e,
+        Err(e) => {
+            eprintln!("error: {e}");
+            return 1;
+        }
+    };
     let img = if args.flag("demo") || args.get("input").is_none() {
         synthetic_scene(256, 256, seed_of(args))
     } else {
@@ -124,27 +148,26 @@ fn cmd_edge(args: &Args) -> i32 {
         }
     };
     let t0 = Instant::now();
-    let edges = if args.get_or("engine", "lut") == "rowbuf" {
-        conv3x3_rowbuf(&img, &LAPLACIAN, model.as_ref())
-    } else {
-        let engine = make_engine(args, &model);
-        let coord = Coordinator::start(engine, CoordinatorConfig::default());
-        coord.run(img.clone()).edges
-    };
+    let coord = Coordinator::start(engine, CoordinatorConfig::default());
+    let result = coord.run(img.clone());
+    let edges = result.edges;
     let dt = t0.elapsed();
     let out = PathBuf::from(args.get_or("output", "out/edges.pgm"));
     if let Err(e) = edges.write_pgm(&out) {
         eprintln!("cannot write output: {e}");
         return 1;
     }
-    // PSNR vs exact for context
-    let exact = build_design(DesignId::Exact, 8);
+    // PSNR vs the exact multiplier at the same width, for context
+    let exact = registry()
+        .build_str(&format!("exact@{}", spec.bits))
+        .expect("exact design");
     let reference = edge_detect(&img, exact.as_ref());
     println!(
-        "{}x{} image, design {}, {:.1} ms -> {} (PSNR vs exact: {:.2} dB)",
+        "{}x{} image, design {} via {}, {:.1} ms -> {} (PSNR vs exact: {:.2} dB)",
         img.width,
         img.height,
-        model.name(),
+        spec,
+        coord.engine_name(),
         dt.as_secs_f64() * 1e3,
         out.display(),
         sfcmul::image::psnr(&reference, &edges)
@@ -153,22 +176,73 @@ fn cmd_edge(args: &Args) -> i32 {
 }
 
 fn cmd_serve(args: &Args) -> i32 {
-    let model = load_model(args);
-    let engine = make_engine(args, &model);
+    let engine_spec: EngineSpec = match args.get_or("engine", "lut").parse() {
+        Ok(e) => e,
+        Err(e) => {
+            eprintln!("invalid --engine: {e}");
+            return 2;
+        }
+    };
+    // --designs a,b,c; a lone --design is honoured; the default A/Bs the
+    // proposed approximate design against the exact multiplier.
+    let designs_raw = args
+        .get("designs")
+        .or_else(|| args.get("design"))
+        .unwrap_or("proposed@8,exact@8")
+        .to_string();
+    let mut named: Vec<(String, Arc<dyn TileEngine>)> = Vec::new();
+    let mut backends: Vec<EngineSpec> = Vec::new();
+    for part in designs_raw.split(',').map(str::trim).filter(|s| !s.is_empty()) {
+        let spec: DesignSpec = match part.parse() {
+            Ok(s) => s,
+            Err(e) => {
+                eprintln!("invalid design spec {part:?}: {e}");
+                return 2;
+            }
+        };
+        let key = spec.to_string();
+        if named.iter().any(|(n, _)| *n == key) {
+            continue; // duplicate spec in the list
+        }
+        match engine_for(engine_spec, &spec) {
+            Ok((engine, actual)) => {
+                backends.push(actual);
+                named.push((key, engine));
+            }
+            Err(e) => {
+                eprintln!("error resolving {part:?}: {e}");
+                return 1;
+            }
+        }
+    }
+    if named.is_empty() {
+        eprintln!("no designs given");
+        return 2;
+    }
+    let keys: Vec<String> = named.iter().map(|(n, _)| n.clone()).collect();
     let workers = args.get_parse("workers", 4usize).unwrap_or(4);
     let batch = args.get_parse("batch", 8usize).unwrap_or(8);
     let jobs = args.get_parse("jobs", 64usize).unwrap_or(64);
-    let coord = Coordinator::start(
-        engine,
+    let coord = Coordinator::start_named(
+        named,
         CoordinatorConfig { workers, queue_capacity: 256, max_batch: batch },
     );
+    backends.sort_by_key(|e| e.key());
+    backends.dedup();
+    let backend_list =
+        backends.iter().map(|e| e.key()).collect::<Vec<_>>().join("+");
     println!(
-        "serving {jobs} synthetic jobs through engine {} ({workers} workers, batch {batch})",
-        coord.engine_name()
+        "serving {jobs} synthetic jobs round-robin across [{}] via engine {backend_list} ({workers} workers, batch {batch})",
+        keys.join(", "),
     );
     let t0 = Instant::now();
     let handles: Vec<_> = (0..jobs)
-        .map(|i| coord.submit(synthetic_scene(256, 256, i as u64)))
+        .map(|i| {
+            let key = keys[i % keys.len()].as_str();
+            coord
+                .submit_to(synthetic_scene(256, 256, i as u64), Some(key))
+                .expect("registered engine")
+        })
         .collect();
     let mut px_total = 0usize;
     for h in handles {
@@ -192,6 +266,18 @@ fn cmd_serve(args: &Args) -> i32 {
         m.latency_p99_ms,
         m.engine_busy.as_secs_f64()
     );
+    println!("per-design metrics:");
+    for row in &m.per_engine {
+        println!(
+            "  {:<24} jobs {:>4}  tiles {:>6}  p50/p99 {:>6.1}/{:>6.1} ms  busy {:.2} s",
+            row.name,
+            row.jobs_completed,
+            row.tiles_processed,
+            row.latency_p50_ms,
+            row.latency_p99_ms,
+            row.engine_busy.as_secs_f64()
+        );
+    }
     0
 }
 
@@ -200,12 +286,46 @@ fn cmd_ablate(args: &Args) -> i32 {
     0
 }
 
+fn cmd_designs() -> i32 {
+    println!("registered design families (canonical spec @ 8 and 16 bit):");
+    for spec in registry().specs(8) {
+        let wide = DesignSpec { bits: 16, ..spec.clone() };
+        println!(
+            "  {:<12} {:<14} e.g. {}  |  {}",
+            spec.compressors.key(),
+            spec.compressors.paper_name(),
+            spec,
+            wide
+        );
+    }
+    println!("options: :trunc=paper|none|K  :comp=paper|none|const");
+    0
+}
+
 fn cmd_dump_lut(args: &Args) -> i32 {
-    let model = load_model(args);
-    let default_out = format!(
-        "artifacts/{}_lut_rust.i32",
-        args.get_or("design", "proposed").to_lowercase()
-    );
+    let spec = match design_spec_of(args) {
+        Ok(s) => s,
+        Err(code) => return code,
+    };
+    if spec.bits != 8 {
+        eprintln!("dump-lut exports 256x256 tables; need an 8-bit design (got {spec})");
+        return 2;
+    }
+    let model = match registry().build(&spec) {
+        Ok(m) => m,
+        Err(e) => {
+            eprintln!("error: {e}");
+            return 1;
+        }
+    };
+    // Canonical specs keep the historical short stem ("proposed_lut_rust");
+    // variant specs encode their options so they never clobber it.
+    let stem = if spec.is_canonical() {
+        spec.compressors.key().to_string()
+    } else {
+        spec.to_string().replace(['@', ':', '='], "_")
+    };
+    let default_out = format!("artifacts/{stem}_lut_rust.i32");
     let out = PathBuf::from(args.get_or("out", &default_out));
     let table = lut::product_table(model.as_ref());
     match lut::write_i32_le(&out, &table) {

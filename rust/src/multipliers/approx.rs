@@ -39,7 +39,7 @@ use std::sync::Arc;
 /// surplus* of the §3.2 NAND→1 replacement at column N:
 /// `E[1 − NAND] · 2^N = 2^N/4 = 2^(N-2)` — the two mechanisms the paper
 /// describes compose to exactly the compensation Eq. (5) derives.
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub enum Compensation {
     /// No compensation: no CSP-lo compressor constant, no extra bits.
     None,

@@ -4,13 +4,21 @@
 //! Per paper §5.1, every baseline compressor is integrated into the *same*
 //! truncated + compensated framework; only the CSP compressor designs
 //! differ. Rows are named exactly as the paper prints them.
+//!
+//! [`DesignId`] is a thin alias over canonical [`DesignSpec`]s for the
+//! paper-table call sites: construction goes through the
+//! [`super::spec::registry`] (`build_design(id, n)` ≡
+//! `registry().build(&id.spec(n))`). The Table-5 *hardware* variants
+//! ([`build_design_hw`]) model the baselines' original architectures with
+//! knobs (LSP mode, third-slot mode) outside the spec grammar, so they
+//! stay as explicit configurations here.
 
 use super::approx::{ApproxMulConfig, ApproxSignedMultiplier, Compensation, LspMode, Sf3Mode};
 use super::exact::ExactBaughWooley;
+use super::spec::{registry, CompressorChoice, DesignSpec};
 use super::traits::MultiplierModel;
 use crate::compressors::baselines::*;
 use crate::compressors::exact::{ExactAbc1, ExactAbcd1};
-use crate::compressors::proposed::{ProposedApproxAbc1, ProposedApproxAbcd1};
 use std::sync::Arc;
 
 /// Stable identifiers for the designs of the paper's evaluation.
@@ -72,64 +80,39 @@ impl DesignId {
             DesignId::Proposed,
         ]
     }
-}
 
-/// Instantiate a design at width `n`.
-pub fn build_design(id: DesignId, n: usize) -> Arc<dyn MultiplierModel> {
-    match id {
-        DesignId::Exact => Arc::new(ExactBaughWooley::new(n)),
-        DesignId::D12 => approx(id, n, |c| {
-            c.abc1 = Arc::new(Ac3Strollo12);
-            c.abcd_as_abc = true;
-        }),
-        DesignId::D5 => approx(id, n, |c| {
-            c.abc1 = Arc::new(Ac2Guo5);
-            c.abcd_as_abc = true;
-        }),
-        DesignId::D4 => approx(id, n, |c| {
-            c.abc1 = Arc::new(Ac1Esposito4);
-            c.abcd_as_abc = true;
-        }),
-        DesignId::D1 => approx(id, n, |c| {
-            // Table 4 evaluates the dual-quality cell in its low-quality
-            // (approximate) configuration — the accurate mode would be
-            // error-free in the CSP and indistinguishable from ExactCSP.
-            c.abcd1 = Arc::new(DualQualityApprox1Abcd1);
-            c.abc1 = Arc::new(ExactAbc1);
-        }),
-        DesignId::D7 => approx(id, n, |c| {
-            c.abcd1 = Arc::new(ProbBased7Abcd1);
-            c.abc1 = Arc::new(ExactAbc1);
-        }),
-        DesignId::D2 => approx(id, n, |c| {
-            c.abc1 = Arc::new(Ac5Du2);
-            c.abcd_as_abc = true;
-        }),
-        DesignId::Proposed => approx(id, n, |c| {
-            c.abcd1 = Arc::new(ProposedApproxAbcd1);
-            c.abc1 = Arc::new(ProposedApproxAbc1);
-        }),
+    /// The registry family this id aliases.
+    pub fn family(self) -> CompressorChoice {
+        match self {
+            DesignId::Exact => CompressorChoice::Exact,
+            DesignId::D12 => CompressorChoice::D12,
+            DesignId::D5 => CompressorChoice::D5,
+            DesignId::D4 => CompressorChoice::D4,
+            DesignId::D1 => CompressorChoice::D1,
+            DesignId::D7 => CompressorChoice::D7,
+            DesignId::D2 => CompressorChoice::D2,
+            DesignId::Proposed => CompressorChoice::Proposed,
+        }
+    }
+
+    /// The canonical spec of this design at width `n`.
+    pub fn spec(self, n: usize) -> DesignSpec {
+        DesignSpec::canonical(self.family(), n)
+    }
+
+    /// The id aliasing a registry family, if it is one of the paper's.
+    pub fn from_family(family: &CompressorChoice) -> Option<DesignId> {
+        DesignId::table5_order()
+            .into_iter()
+            .find(|id| id.family() == *family)
     }
 }
 
-fn approx(
-    id: DesignId,
-    n: usize,
-    tweak: impl FnOnce(&mut ApproxMulConfig),
-) -> Arc<dyn MultiplierModel> {
-    let mut cfg = ApproxMulConfig::paper_default(
-        id.paper_name(),
-        n,
-        Arc::new(ExactAbcd1),
-        Arc::new(ExactAbc1),
-        false,
-    );
-    // The third compressor slot is the exact x+y+z+1 encoder ("a few
-    // adders", §3.3) for every design — the §5.1 comparison swaps only the
-    // CSP sign-focused compressors.
-    cfg.sf3 = Sf3Mode::ExactEncoder;
-    tweak(&mut cfg);
-    Arc::new(ApproxSignedMultiplier::new(cfg))
+/// Instantiate a design at width `n` (through the [`registry`]).
+pub fn build_design(id: DesignId, n: usize) -> Arc<dyn MultiplierModel> {
+    registry()
+        .build(&id.spec(n))
+        .unwrap_or_else(|e| panic!("paper design {id:?} at N={n}: {e}"))
 }
 
 /// All designs in Table-5 order at width `n`.
@@ -224,22 +207,21 @@ pub fn all_designs_hw(n: usize) -> Vec<(DesignId, Arc<dyn MultiplierModel>)> {
         .collect()
 }
 
-/// Lookup by (case-insensitive) name fragment, for CLI use:
-/// "exact", "proposed", "d2"/"design [2]", ...
+/// Lookup by (case-insensitive) name or full spec string, for CLI use:
+/// "exact", "proposed", "d2"/"design [2]", "proposed@16:comp=const", ...
+/// A bare family name (no `@bits`) is built at width `n` — the width is
+/// spliced into the string *before* parsing so option validation (e.g.
+/// the `trunc=K < bits` bound) sees the width that will actually build.
 pub fn design_by_name(name: &str, n: usize) -> Option<Arc<dyn MultiplierModel>> {
-    let lower = name.to_lowercase();
-    let id = match lower.as_str() {
-        "exact" => DesignId::Exact,
-        "proposed" => DesignId::Proposed,
-        "d12" | "design [12]" | "12" => DesignId::D12,
-        "d5" | "design [5]" | "5" => DesignId::D5,
-        "d4" | "design [4]" | "4" => DesignId::D4,
-        "d1" | "design [1]" | "1" => DesignId::D1,
-        "d7" | "design [7]" | "7" => DesignId::D7,
-        "d2" | "design [2]" | "2" => DesignId::D2,
-        _ => return None,
+    let spec_str = if name.contains('@') {
+        name.to_string()
+    } else {
+        match name.split_once(':') {
+            Some((family, opts)) => format!("{family}@{n}:{opts}"),
+            None => format!("{name}@{n}"),
+        }
     };
-    Some(build_design(id, n))
+    registry().build_str(&spec_str).ok()
 }
 
 #[cfg(test)]
@@ -262,6 +244,19 @@ mod tests {
         assert!(design_by_name("Exact", 8).is_some());
         assert!(design_by_name("d2", 8).is_some());
         assert!(design_by_name("nope", 8).is_none());
+    }
+
+    /// Options on a bare family name are validated against the *caller's*
+    /// width, not the parser's default of 8.
+    #[test]
+    fn design_lookup_validates_options_at_caller_width() {
+        // trunc=10 is legal at 16 bits (would be rejected at the default 8)
+        let m = design_by_name("proposed:trunc=10", 16).expect("valid at N=16");
+        assert_eq!(m.bits(), 16);
+        // trunc=7 is out of range at 4 bits (would pass at the default 8)
+        assert!(design_by_name("proposed:trunc=7", 4).is_none());
+        // explicit @bits in the string wins over the width argument
+        assert_eq!(design_by_name("proposed@16", 8).unwrap().bits(), 16);
     }
 
     /// Area ordering from the paper's Table 5 (hardware variants):

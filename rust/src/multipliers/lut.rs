@@ -52,11 +52,11 @@ pub fn read_i32_le(path: &Path) -> std::io::Result<Vec<i32>> {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::multipliers::designs::{build_design, DesignId};
+    use crate::multipliers::spec::registry;
 
     #[test]
     fn exact_table_is_products() {
-        let lut = product_table(build_design(DesignId::Exact, 8).as_ref());
+        let lut = product_table(registry().build_str("exact@8").unwrap().as_ref());
         assert_eq!(lut.len(), 65536);
         assert_eq!(lut[0], 0); // 0*0
         let idx = |a: i8, b: i8| ((a as u8 as usize) << 8) | (b as u8 as usize);
@@ -67,7 +67,7 @@ mod tests {
 
     #[test]
     fn proposed_table_io_roundtrip() {
-        let lut = product_table(build_design(DesignId::Proposed, 8).as_ref());
+        let lut = product_table(registry().build_str("proposed@8").unwrap().as_ref());
         let dir = std::env::temp_dir().join("sfcmul_lut_test");
         let path = dir.join("proposed_lut.i32");
         write_i32_le(&path, &lut).unwrap();

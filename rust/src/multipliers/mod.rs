@@ -19,15 +19,22 @@
 //!   (paper Fig. 5/6), parameterised by which compressor designs occupy
 //!   the CSP slots — instantiating it with each baseline compressor
 //!   reproduces the paper's Table 4/5 comparison set (§5.1).
-//! * [`designs`] — the named configurations: Proposed, [12], [5], [4],
-//!   [1], [7], [2].
+//! * [`spec`] — the construction API: [`DesignSpec`] (compressor family ×
+//!   bitwidth × truncation × compensation, round-tripping a compact
+//!   string form) and the name → factory [`Registry`] every multiplier is
+//!   built through.
+//! * [`designs`] — the named paper configurations (Proposed, [12], [5],
+//!   [4], [1], [7], [2]) as thin [`DesignId`] aliases over canonical
+//!   specs, plus the Table-5 hardware variants.
 //! * [`lut`] — 256×256 product-table export shared with the Pallas kernel.
-//! * [`verify`] — exhaustive netlist-vs-model equivalence checking.
+//! * [`verify`] — netlist-vs-model equivalence checking (exhaustive for
+//!   N ≤ 8, sampled for wider widths).
 
 pub mod traits;
 pub mod booth;
 pub mod exact;
 pub mod approx;
+pub mod spec;
 pub mod designs;
 pub mod lut;
 pub mod verify;
@@ -36,4 +43,5 @@ pub use approx::{ApproxMulConfig, ApproxSignedMultiplier, Compensation, LspMode,
 pub use designs::{all_designs, all_designs_hw, build_design, build_design_hw, design_by_name, DesignId};
 pub use booth::BoothRadix4;
 pub use exact::ExactBaughWooley;
+pub use spec::{registry, CompressorChoice, DesignSpec, Registry, TruncMode};
 pub use traits::MultiplierModel;

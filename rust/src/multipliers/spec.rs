@@ -1,0 +1,668 @@
+//! Declarative design specification + registry — the construction API
+//! every multiplier in the system is built through.
+//!
+//! The paper's proposed multiplier is one point in a design space spanned
+//! by compressor choice × truncation depth × compensation × bitwidth. A
+//! [`DesignSpec`] names such a point declaratively and round-trips a
+//! compact string form; the [`Registry`] maps design-family names to
+//! factories and builds any spec'd configuration. New baselines register
+//! without touching core files.
+//!
+//! # Spec grammar
+//!
+//! ```text
+//! spec    := family [ '@' bits ] ( ':' option )*
+//! family  := 'exact' | 'proposed' | 'd1' | 'd2' | 'd4' | 'd5' | 'd7'
+//!          | 'd12' | IDENT                 (IDENT: custom registered family)
+//! bits    := integer in 2..=32 (approximate families: 4..=32); default 8
+//! option  := 'trunc=' ( 'paper' | 'none' | COLS )   -- truncated LSP columns
+//!          | 'comp='  ( 'paper' | 'none' | 'const' )-- error compensation
+//! ```
+//!
+//! `trunc=paper` (default) truncates the paper's `N-1` low columns;
+//! `trunc=none` keeps every column; `trunc=K` (K ≤ N-1) truncates exactly
+//! `K` columns. `comp=paper` (default) is the CSP-constant scheme of
+//! Eq. (5) — when nothing is truncated it degenerates to no compensation,
+//! since the constant it injects exists only to cancel truncation loss;
+//! `comp=const` additionally places the literal §3.3 constant bit at
+//! column `N-2` ([`Compensation::Literal`]); `comp=none` disables
+//! compensation. Options at their defaults are omitted from the canonical
+//! string form, so `Display` → `FromStr` round-trips exactly.
+//!
+//! Examples: `proposed@8`, `exact@16`, `d2@8:trunc=none`,
+//! `proposed@16:comp=const`, `exact@8:trunc=7:comp=none`.
+//!
+//! The `exact` family is special-cased: at its canonical spec it builds
+//! the plain [`ExactBaughWooley`] multiplier; with non-default options it
+//! builds the shared truncated framework with *exact* CSP compressors
+//! (approximation error comes from truncation alone).
+
+use super::approx::{ApproxMulConfig, ApproxSignedMultiplier, Compensation, Sf3Mode};
+use super::exact::ExactBaughWooley;
+use super::traits::MultiplierModel;
+use crate::compressors::baselines::{
+    Ac1Esposito4, Ac2Guo5, Ac3Strollo12, Ac5Du2, DualQualityApprox1Abcd1, ProbBased7Abcd1,
+};
+use crate::compressors::exact::{ExactAbc1, ExactAbcd1};
+use crate::compressors::proposed::{ProposedApproxAbc1, ProposedApproxAbcd1};
+use crate::util::error::Error;
+use std::collections::BTreeMap;
+use std::fmt;
+use std::sync::{Arc, OnceLock};
+
+/// Which compressor family occupies the CSP slots of the truncated +
+/// compensated framework (paper §5.1 swaps exactly this).
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+pub enum CompressorChoice {
+    /// Exact CSP compressors (canonical form: plain Baugh-Wooley).
+    Exact,
+    /// The paper's proposed approximate sign-focused compressors.
+    Proposed,
+    /// Strollo et al. TCAS-I 2020 — "Design [12]".
+    D12,
+    /// Guo et al. SOCC 2019 — "Design [5]".
+    D5,
+    /// Esposito et al. TCAS-I 2018 — "Design [4]".
+    D4,
+    /// Akbari et al. TVLSI 2017 dual-quality 4:2 — "Design [1]".
+    D1,
+    /// Krishna et al. ESL 2024 probability-based 4:2 — "Design [7]".
+    D7,
+    /// Du et al. APCCAS 2022 — "Design [2]" (best existing).
+    D2,
+    /// A custom family registered at runtime under this name.
+    Named(String),
+}
+
+impl CompressorChoice {
+    /// Canonical registry key (`exact`, `proposed`, `d1`..`d12`, or the
+    /// custom name).
+    pub fn key(&self) -> &str {
+        match self {
+            CompressorChoice::Exact => "exact",
+            CompressorChoice::Proposed => "proposed",
+            CompressorChoice::D12 => "d12",
+            CompressorChoice::D5 => "d5",
+            CompressorChoice::D4 => "d4",
+            CompressorChoice::D1 => "d1",
+            CompressorChoice::D7 => "d7",
+            CompressorChoice::D2 => "d2",
+            CompressorChoice::Named(name) => name,
+        }
+    }
+
+    /// Row name as the paper prints it.
+    pub fn paper_name(&self) -> &str {
+        match self {
+            CompressorChoice::Exact => "Exact",
+            CompressorChoice::Proposed => "Proposed Design",
+            CompressorChoice::D12 => "Design [12]",
+            CompressorChoice::D5 => "Design [5]",
+            CompressorChoice::D4 => "Design [4]",
+            CompressorChoice::D1 => "Design [1]",
+            CompressorChoice::D7 => "Design [7]",
+            CompressorChoice::D2 => "Design [2]",
+            CompressorChoice::Named(name) => name,
+        }
+    }
+
+    /// The built-in families, Table-5 row order.
+    pub fn builtin() -> [CompressorChoice; 8] {
+        [
+            CompressorChoice::Exact,
+            CompressorChoice::D4,
+            CompressorChoice::D1,
+            CompressorChoice::D5,
+            CompressorChoice::D12,
+            CompressorChoice::D7,
+            CompressorChoice::D2,
+            CompressorChoice::Proposed,
+        ]
+    }
+
+    /// Parse a family name (case-insensitive; accepts CLI aliases such as
+    /// `design [2]` or a bare `2`). Unknown identifiers become
+    /// [`CompressorChoice::Named`], resolved against the registry at build
+    /// time.
+    fn from_key(s: &str) -> Result<Self, Error> {
+        let lower = s.trim().to_lowercase();
+        Ok(match lower.as_str() {
+            "exact" => CompressorChoice::Exact,
+            "proposed" | "prop" => CompressorChoice::Proposed,
+            "d12" | "design [12]" | "12" => CompressorChoice::D12,
+            "d5" | "design [5]" | "5" => CompressorChoice::D5,
+            "d4" | "design [4]" | "4" => CompressorChoice::D4,
+            "d1" | "design [1]" | "1" => CompressorChoice::D1,
+            "d7" | "design [7]" | "7" => CompressorChoice::D7,
+            "d2" | "design [2]" | "2" => CompressorChoice::D2,
+            _ => {
+                if lower.is_empty()
+                    || !lower.chars().all(|c| c.is_ascii_alphanumeric() || c == '_' || c == '-')
+                {
+                    return Err(Error::msg(format!("invalid design family {s:?}")));
+                }
+                CompressorChoice::Named(lower)
+            }
+        })
+    }
+}
+
+/// How many low (LSP) columns are truncated.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum TruncMode {
+    /// The paper's scheme: truncate the `N-1` lowest columns.
+    Paper,
+    /// Keep every column (no truncation).
+    None,
+    /// Truncate exactly this many columns.
+    Cols(u8),
+}
+
+impl TruncMode {
+    /// Concrete truncated-column count at width `n`.
+    pub fn columns(self, n: usize) -> usize {
+        match self {
+            TruncMode::Paper => n - 1,
+            TruncMode::None => 0,
+            TruncMode::Cols(k) => k as usize,
+        }
+    }
+}
+
+/// A point in the multiplier design space. `Display` renders the compact
+/// canonical string form; `FromStr` parses it back (see the module docs
+/// for the grammar).
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+pub struct DesignSpec {
+    /// Operand width N in bits.
+    pub bits: usize,
+    /// Compressor family in the CSP slots.
+    pub compressors: CompressorChoice,
+    /// LSP truncation depth.
+    pub truncation: TruncMode,
+    /// Error-compensation scheme (paper Eq. (5) ablation knob).
+    pub compensation: Compensation,
+}
+
+impl DesignSpec {
+    /// The canonical (paper-default) spec of a family at width `bits`.
+    pub fn canonical(compressors: CompressorChoice, bits: usize) -> Self {
+        Self {
+            bits,
+            compressors,
+            truncation: TruncMode::Paper,
+            compensation: Compensation::Paper,
+        }
+    }
+
+    /// True when every option is at its paper default — such specs build
+    /// the exact Table-4/5 configurations and carry the paper row names.
+    pub fn is_canonical(&self) -> bool {
+        self.truncation == TruncMode::Paper && self.compensation == Compensation::Paper
+    }
+
+    /// Model display name: the paper's row name for canonical specs, the
+    /// spec string otherwise.
+    pub fn display_name(&self) -> String {
+        if self.is_canonical() {
+            self.compressors.paper_name().to_string()
+        } else {
+            self.to_string()
+        }
+    }
+}
+
+impl fmt::Display for DesignSpec {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}@{}", self.compressors.key(), self.bits)?;
+        match self.truncation {
+            TruncMode::Paper => {}
+            TruncMode::None => write!(f, ":trunc=none")?,
+            TruncMode::Cols(k) => write!(f, ":trunc={k}")?,
+        }
+        match self.compensation {
+            Compensation::Paper => {}
+            Compensation::None => write!(f, ":comp=none")?,
+            Compensation::Literal => write!(f, ":comp=const")?,
+        }
+        Ok(())
+    }
+}
+
+impl std::str::FromStr for DesignSpec {
+    type Err = Error;
+
+    fn from_str(s: &str) -> Result<Self, Error> {
+        let s = s.trim();
+        let mut parts = s.split(':');
+        let head = parts.next().unwrap_or_default();
+        if head.is_empty() {
+            return Err(Error::msg(format!("empty design spec {s:?}")));
+        }
+        let (family_s, bits) = match head.split_once('@') {
+            Some((f, b)) => {
+                let bits: usize = b
+                    .parse()
+                    .map_err(|_| Error::msg(format!("invalid bitwidth {b:?} in spec {s:?}")))?;
+                (f, bits)
+            }
+            None => (head, 8),
+        };
+        if !(2..=32).contains(&bits) {
+            return Err(Error::msg(format!(
+                "unsupported bitwidth {bits} in spec {s:?} (supported: 2..=32)"
+            )));
+        }
+        let compressors = CompressorChoice::from_key(family_s)?;
+        let mut spec = DesignSpec::canonical(compressors, bits);
+        for opt in parts {
+            let (key, value) = opt
+                .split_once('=')
+                .ok_or_else(|| Error::msg(format!("malformed option {opt:?} in spec {s:?}")))?;
+            match key {
+                "trunc" => {
+                    spec.truncation = match value {
+                        "paper" => TruncMode::Paper,
+                        "none" => TruncMode::None,
+                        _ => {
+                            let k: u8 = value.parse().map_err(|_| {
+                                Error::msg(format!(
+                                    "invalid truncation {value:?} in spec {s:?} \
+                                     (paper | none | column count)"
+                                ))
+                            })?;
+                            // Only columns below N-1 are in the truncated
+                            // LSP region; deeper K would silently alias
+                            // K = N-1 and fake distinct design points.
+                            if k as usize >= bits {
+                                return Err(Error::msg(format!(
+                                    "truncation {k} out of range for {bits}-bit operands \
+                                     (max {})",
+                                    bits - 1
+                                )));
+                            }
+                            TruncMode::Cols(k)
+                        }
+                    };
+                }
+                "comp" => {
+                    spec.compensation = match value {
+                        "paper" => Compensation::Paper,
+                        "none" => Compensation::None,
+                        "const" | "literal" => Compensation::Literal,
+                        _ => {
+                            return Err(Error::msg(format!(
+                                "invalid compensation {value:?} in spec {s:?} \
+                                 (paper | none | const)"
+                            )))
+                        }
+                    };
+                }
+                _ => {
+                    return Err(Error::msg(format!(
+                        "unknown option {key:?} in spec {s:?} (trunc, comp)"
+                    )))
+                }
+            }
+        }
+        Ok(spec)
+    }
+}
+
+/// A design factory: builds a model from a spec (the spec's family is
+/// guaranteed to match the entry the factory was registered under).
+pub type DesignFactory =
+    Box<dyn Fn(&DesignSpec) -> crate::Result<Arc<dyn MultiplierModel>> + Send + Sync>;
+
+struct Entry {
+    family: CompressorChoice,
+    factory: DesignFactory,
+}
+
+/// Name → factory registry. Construction of *every* multiplier goes
+/// through here; [`registry`] returns the process-wide instance with the
+/// paper's comparison set pre-registered.
+pub struct Registry {
+    /// Insertion order (drives [`Registry::specs`] listing order).
+    entries: Vec<Entry>,
+    /// Lowercased key → entry index.
+    index: BTreeMap<String, usize>,
+}
+
+impl Registry {
+    /// An empty registry (custom setups; most callers want
+    /// [`Registry::with_paper_designs`] or the global [`registry`]).
+    pub fn new() -> Self {
+        Self { entries: Vec::new(), index: BTreeMap::new() }
+    }
+
+    /// A registry with every design of the paper's evaluation registered
+    /// (Table-5 row order), each buildable at any supported bitwidth.
+    pub fn with_paper_designs() -> Self {
+        let mut reg = Self::new();
+        for family in CompressorChoice::builtin() {
+            let fam = family.clone();
+            reg.register(family, move |spec| build_builtin(&fam, spec));
+        }
+        reg
+    }
+
+    /// Register a family under its canonical key. Custom
+    /// [`CompressorChoice::Named`] families are normalised to lowercase —
+    /// parsing lowercases family names, so this keeps the registered spec
+    /// equal to its re-parsed string form (the Display → FromStr
+    /// round-trip). Panics on a duplicate key (registration is static
+    /// configuration).
+    pub fn register(
+        &mut self,
+        family: CompressorChoice,
+        factory: impl Fn(&DesignSpec) -> crate::Result<Arc<dyn MultiplierModel>>
+            + Send
+            + Sync
+            + 'static,
+    ) {
+        let family = match family {
+            CompressorChoice::Named(name) => CompressorChoice::Named(name.to_lowercase()),
+            builtin => builtin,
+        };
+        let key = family.key().to_lowercase();
+        assert!(
+            !self.index.contains_key(&key),
+            "design family {key:?} registered twice"
+        );
+        self.index.insert(key, self.entries.len());
+        self.entries.push(Entry { family, factory: Box::new(factory) });
+    }
+
+    /// Canonical family keys in registration order.
+    pub fn names(&self) -> Vec<&str> {
+        self.entries.iter().map(|e| e.family.key()).collect()
+    }
+
+    /// True when `name` is a registered family key.
+    pub fn contains(&self, name: &str) -> bool {
+        self.index.contains_key(&name.to_lowercase())
+    }
+
+    /// The canonical spec of every registered family at width `bits`,
+    /// in registration order.
+    pub fn specs(&self, bits: usize) -> Vec<DesignSpec> {
+        self.entries
+            .iter()
+            .map(|e| DesignSpec::canonical(e.family.clone(), bits))
+            .collect()
+    }
+
+    /// Build the multiplier a spec describes.
+    pub fn build(&self, spec: &DesignSpec) -> crate::Result<Arc<dyn MultiplierModel>> {
+        // Re-validate width-dependent options: hand-constructed specs (or
+        // parsed-then-mutated ones) never went through FromStr's checks.
+        if let TruncMode::Cols(k) = spec.truncation {
+            if k as usize >= spec.bits {
+                return Err(Error::msg(format!(
+                    "truncation {k} out of range for {}-bit operands (max {})",
+                    spec.bits,
+                    spec.bits - 1
+                )));
+            }
+        }
+        let key = spec.compressors.key().to_lowercase();
+        let idx = self.index.get(&key).ok_or_else(|| {
+            Error::msg(format!(
+                "unknown design family {key:?} (registered: {})",
+                self.names().join(", ")
+            ))
+        })?;
+        (self.entries[*idx].factory)(spec)
+    }
+
+    /// Parse a spec string and build it in one step.
+    pub fn build_str(&self, spec: &str) -> crate::Result<Arc<dyn MultiplierModel>> {
+        self.build(&spec.parse::<DesignSpec>()?)
+    }
+}
+
+impl Default for Registry {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+/// The process-wide registry, paper designs pre-registered.
+pub fn registry() -> &'static Registry {
+    static REGISTRY: OnceLock<Registry> = OnceLock::new();
+    REGISTRY.get_or_init(Registry::with_paper_designs)
+}
+
+/// Factory behind every built-in family. Reproduces the seed's
+/// `build_design` configurations exactly for canonical specs (paper
+/// Tables 4/5 are byte-identical), then applies the spec's truncation and
+/// compensation knobs.
+fn build_builtin(
+    family: &CompressorChoice,
+    spec: &DesignSpec,
+) -> crate::Result<Arc<dyn MultiplierModel>> {
+    let n = spec.bits;
+    if *family == CompressorChoice::Exact && spec.is_canonical() {
+        // Plain exact Baugh-Wooley (no truncated framework around it).
+        return Ok(Arc::new(ExactBaughWooley::new(n)));
+    }
+    if !(4..=32).contains(&n) {
+        return Err(Error::msg(format!(
+            "the truncated framework supports widths 4..=32 (spec {spec})"
+        )));
+    }
+    let name = spec.display_name();
+    let mut cfg = ApproxMulConfig::paper_default(
+        &name,
+        n,
+        Arc::new(ExactAbcd1),
+        Arc::new(ExactAbc1),
+        false,
+    );
+    // The third compressor slot is the exact x+y+z+1 encoder ("a few
+    // adders", §3.3) for every design — the §5.1 comparison swaps only the
+    // CSP sign-focused compressors.
+    cfg.sf3 = Sf3Mode::ExactEncoder;
+    match family {
+        CompressorChoice::Exact => {
+            // Exact CSP cells stay; no §3.2 NAND→1 replacement, so the only
+            // approximation left is the truncation the spec asks for.
+            cfg.sf3 = Sf3Mode::Skip;
+        }
+        CompressorChoice::Proposed => {
+            cfg.abcd1 = Arc::new(ProposedApproxAbcd1);
+            cfg.abc1 = Arc::new(ProposedApproxAbc1);
+        }
+        CompressorChoice::D12 => {
+            cfg.abc1 = Arc::new(Ac3Strollo12);
+            cfg.abcd_as_abc = true;
+        }
+        CompressorChoice::D5 => {
+            cfg.abc1 = Arc::new(Ac2Guo5);
+            cfg.abcd_as_abc = true;
+        }
+        CompressorChoice::D4 => {
+            cfg.abc1 = Arc::new(Ac1Esposito4);
+            cfg.abcd_as_abc = true;
+        }
+        CompressorChoice::D1 => {
+            // Table 4 evaluates the dual-quality cell in its low-quality
+            // (approximate) configuration — the accurate mode would be
+            // error-free in the CSP and indistinguishable from exact CSP.
+            cfg.abcd1 = Arc::new(DualQualityApprox1Abcd1);
+            cfg.abc1 = Arc::new(ExactAbc1);
+        }
+        CompressorChoice::D7 => {
+            cfg.abcd1 = Arc::new(ProbBased7Abcd1);
+            cfg.abc1 = Arc::new(ExactAbc1);
+        }
+        CompressorChoice::D2 => {
+            cfg.abc1 = Arc::new(Ac5Du2);
+            cfg.abcd_as_abc = true;
+        }
+        CompressorChoice::Named(other) => {
+            return Err(Error::msg(format!(
+                "design family {other:?} has no built-in factory"
+            )))
+        }
+    }
+    cfg.truncate_cols = spec.truncation.columns(n);
+    cfg.compensation = spec.compensation;
+    // The paper's compensation constant exists solely to cancel truncation
+    // loss (Eq. (5)); with nothing truncated it would inject a spurious
+    // +2^(N-1) bias into every product, so `comp=paper` degenerates to no
+    // compensation (mirroring the seed ablation's `truncate 0 columns`
+    // row). An explicit `comp=const` is honoured as written.
+    if cfg.truncate_cols == 0 && cfg.compensation == Compensation::Paper {
+        cfg.compensation = Compensation::None;
+    }
+    Ok(Arc::new(ApproxSignedMultiplier::new(cfg)))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> DesignSpec {
+        s.parse().unwrap_or_else(|e| panic!("{s:?}: {e}"))
+    }
+
+    #[test]
+    fn parses_canonical_and_defaults() {
+        assert_eq!(
+            parse("proposed@8"),
+            DesignSpec::canonical(CompressorChoice::Proposed, 8)
+        );
+        // bare family defaults to 8 bits
+        assert_eq!(parse("exact"), DesignSpec::canonical(CompressorChoice::Exact, 8));
+        // CLI aliases still resolve
+        assert_eq!(parse("design [2]").compressors, CompressorChoice::D2);
+        assert_eq!(parse("12@16").compressors, CompressorChoice::D12);
+    }
+
+    #[test]
+    fn parses_options() {
+        let s = parse("d2@8:trunc=none");
+        assert_eq!(s.truncation, TruncMode::None);
+        assert_eq!(s.compensation, Compensation::Paper);
+        let s = parse("proposed@16:comp=const");
+        assert_eq!(s.bits, 16);
+        assert_eq!(s.compensation, Compensation::Literal);
+        let s = parse("exact@8:trunc=7:comp=none");
+        assert_eq!(s.truncation, TruncMode::Cols(7));
+        assert_eq!(s.compensation, Compensation::None);
+    }
+
+    #[test]
+    fn rejects_malformed_specs() {
+        for bad in [
+            "",
+            "@8",
+            "proposed@99",
+            "proposed@x",
+            "d2@8:trunc=nope",
+            "d2@8:comp=wat",
+            "d2@8:frob=1",
+            "d2@8:trunc",
+            "proposed@8:trunc=16", // beyond the LSP region
+            "proposed@8:trunc=8",  // == bits: would alias trunc=7
+            "we!rd@8",
+        ] {
+            assert!(bad.parse::<DesignSpec>().is_err(), "{bad:?} should not parse");
+        }
+    }
+
+    #[test]
+    fn display_roundtrips_every_variant() {
+        let variants = [
+            "proposed@8",
+            "exact@16",
+            "d2@8:trunc=none",
+            "proposed@16:comp=const",
+            "d5@12:trunc=3:comp=none",
+            "exact@8:trunc=7",
+        ];
+        for s in variants {
+            let spec = parse(s);
+            assert_eq!(spec.to_string(), s, "canonical form");
+            assert_eq!(parse(&spec.to_string()), spec, "roundtrip");
+        }
+    }
+
+    #[test]
+    fn registry_builds_all_paper_designs_at_8_and_16() {
+        for bits in [8usize, 16] {
+            for spec in registry().specs(bits) {
+                let m = registry().build(&spec).unwrap_or_else(|e| panic!("{spec}: {e}"));
+                assert_eq!(m.bits(), bits, "{spec}");
+                // canonical specs carry the paper row names
+                assert_eq!(m.name(), spec.compressors.paper_name(), "{spec}");
+            }
+        }
+    }
+
+    #[test]
+    fn unknown_family_is_a_build_error_not_a_parse_error() {
+        let spec = parse("mystery@8");
+        assert_eq!(
+            spec.compressors,
+            CompressorChoice::Named("mystery".into())
+        );
+        assert!(registry().build(&spec).is_err());
+    }
+
+    #[test]
+    fn custom_family_registration() {
+        let mut reg = Registry::new();
+        reg.register(CompressorChoice::Named("wallace".into()), |spec| {
+            Ok(Arc::new(ExactBaughWooley::new(spec.bits)))
+        });
+        assert!(reg.contains("wallace"));
+        let m = reg.build_str("wallace@8").unwrap();
+        assert_eq!(m.multiply(-3, 5), -15);
+        assert!(reg.build_str("proposed@8").is_err(), "paper set not registered here");
+    }
+
+    /// Registration keys are case-normalised: a family registered under a
+    /// mixed-case name is reachable from (lowercased) parsed specs.
+    #[test]
+    fn mixed_case_registration_is_reachable() {
+        let mut reg = Registry::new();
+        reg.register(CompressorChoice::Named("Wallace".into()), |spec| {
+            Ok(Arc::new(ExactBaughWooley::new(spec.bits)))
+        });
+        assert!(reg.contains("wallace"));
+        assert!(reg.contains("Wallace"));
+        assert_eq!(reg.build_str("wallace@8").unwrap().multiply(6, 7), 42);
+    }
+
+    #[test]
+    fn variant_specs_change_behaviour() {
+        let canonical = registry().build_str("proposed@8").unwrap();
+        let no_trunc = registry().build_str("proposed@8:trunc=none:comp=none").unwrap();
+        // with every column kept, small products survive untruncated
+        assert_ne!(canonical.multiply(3, 5), no_trunc.multiply(3, 5));
+        assert_eq!(no_trunc.multiply(1, 1), 1);
+        // exact CSP + full truncation == the truncation-only configuration
+        let trunc_only = registry().build_str("exact@8:trunc=7").unwrap();
+        let err = trunc_only.multiply(3, 5) - 15;
+        assert!(err.abs() <= 769 + 192, "truncation-bound error, got {err}");
+    }
+
+    /// With nothing truncated, the default paper compensation degenerates
+    /// to none — no spurious bias constant — and the exact family is
+    /// genuinely exact.
+    #[test]
+    fn paper_compensation_degenerates_without_truncation() {
+        let e = registry().build_str("exact@8:trunc=none").unwrap();
+        let p = registry().build_str("proposed@8:trunc=none").unwrap();
+        for (a, b) in [(1i64, 1), (0, 0), (3, 5), (-7, 9), (127, -128)] {
+            assert_eq!(e.multiply(a, b), a * b, "exact {a}*{b}");
+        }
+        assert_eq!(p.multiply(1, 1), 1, "no +2^(N-1) bias on untruncated proposed");
+        // an explicit comp=const is honoured as written
+        let lit = registry().build_str("proposed@8:trunc=none:comp=const").unwrap();
+        assert_ne!(lit.multiply(1, 1), 1, "literal constant stays by request");
+    }
+}

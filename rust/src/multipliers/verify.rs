@@ -1,11 +1,14 @@
 //! Netlist ↔ functional-model equivalence checking.
 //!
 //! Uses the packed simulator to run 64 operand pairs per netlist pass, so
-//! the exhaustive N=8 sweep (65 536 pairs) is ~1 000 passes.
+//! the exhaustive N=8 sweep (65 536 pairs) is ~1 000 passes. Widths above
+//! 8 are checked by random sampling ([`sampled_check`]) — 10 000 pairs is
+//! ~160 passes.
 
 use super::traits::{from_bits, to_bits, MultiplierModel};
 use crate::netlist::sim::{pack_int_lane, unpack_int_lane, PackedSim};
 use crate::netlist::Netlist;
+use crate::util::prng::Xoshiro256;
 
 /// Run one (a, b) pair through a multiplier netlist built with input buses
 /// `a0..`, `b0..` and output bus `p0..p{2N-1}`.
@@ -85,10 +88,51 @@ pub fn exhaustive_check(model: &dyn MultiplierModel) -> Result<(), String> {
     Ok(())
 }
 
+/// Verify that `model.multiply` and the built netlist agree on `samples`
+/// uniformly random operand pairs — the width-generic companion of
+/// [`exhaustive_check`] for N > 8 (any N ≤ 31: the 2N-bit product must
+/// fit the simulator's 64-bit integer lanes with sign headroom).
+/// Returns the first mismatch as an error message.
+pub fn sampled_check(
+    model: &dyn MultiplierModel,
+    samples: usize,
+    seed: u64,
+) -> Result<(), String> {
+    let n = model.bits();
+    assert!(n <= 31, "sampled check supports N<=31");
+    let nl = model.build_netlist();
+    let mut rng = Xoshiro256::seeded(seed);
+    let half = 1i64 << (n - 1);
+    let pairs: Vec<(i64, i64)> = (0..samples)
+        .map(|_| (rng.range_i64(-half, half - 1), rng.range_i64(-half, half - 1)))
+        .collect();
+    let hw = netlist_multiply_batch(&nl, n, &pairs);
+    for (&(a, b), &hw_p) in pairs.iter().zip(hw.iter()) {
+        let sw_p = model.multiply(a, b);
+        if sw_p != hw_p {
+            return Err(format!(
+                "{}: {a} * {b}: functional model {sw_p}, netlist {hw_p}",
+                model.name()
+            ));
+        }
+    }
+    Ok(())
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::multipliers::exact::ExactBaughWooley;
+
+    #[test]
+    fn sampled_check_agrees_with_exhaustive_at_n8() {
+        sampled_check(&ExactBaughWooley::new(8), 2000, 11).unwrap();
+    }
+
+    #[test]
+    fn sampled_check_passes_for_wide_exact() {
+        sampled_check(&ExactBaughWooley::new(12), 1500, 5).unwrap();
+    }
 
     #[test]
     fn batch_equals_one_by_one() {

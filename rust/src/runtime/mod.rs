@@ -3,20 +3,24 @@
 //! `make artifacts` runs `python -m compile.aot` once, producing
 //! `artifacts/edge_conv_b{1,8}.hlo.txt` (HLO *text* — see aot.py for why
 //! not serialized protos). This module compiles them on the PJRT CPU
-//! client and exposes them as a [`TileEngine`], so the coordinator can
-//! dispatch tile batches to the XLA executable exactly as it does to the
-//! in-process LUT path. Python never runs at request time.
+//! client and exposes them as a [`crate::coordinator::TileEngine`], so the
+//! coordinator can dispatch tile batches to the XLA executable exactly as
+//! it does to the in-process LUT path. Python never runs at request time.
 //!
-//! The `xla` crate's handles wrap raw C pointers and are not `Send`, so
-//! the engine owns a dedicated executor thread; `process_batch` ships
-//! work to it over a channel. One executable per compiled batch size
-//! (1 and 8); larger batches are chunked, partial chunks padded.
+//! The XLA-backed implementation is gated behind the `pjrt` cargo feature
+//! because the `xla` crate is not available in the offline build image.
+//! Without the feature a stub [`PjrtTileEngine`] ships whose constructor
+//! returns an error, so every caller's fallback path (usually the
+//! in-process LUT engine) engages; [`pjrt_enabled`] reports which build
+//! this is.
+//!
+//! With the feature on: the `xla` crate's handles wrap raw C pointers and
+//! are not `Send`, so the engine owns a dedicated executor thread;
+//! `process_batch` ships work to it over a channel. One executable per
+//! compiled batch size (1 and 8); larger batches are chunked, partial
+//! chunks padded.
 
-use crate::coordinator::{Tile, TileEngine, TileOut, TILE_CORE, TILE_IN};
-use crate::util::pool::{bounded, Receiver, Sender};
-use anyhow::{anyhow, Context, Result};
 use std::path::{Path, PathBuf};
-use std::thread::JoinHandle;
 
 /// Compiled batch sizes (must match python/compile/model.py BATCH_SIZES).
 pub const BATCH_SIZES: [usize; 2] = [1, 8];
@@ -35,198 +39,260 @@ pub fn artifacts_available(dir: &Path) -> bool {
         .all(|b| dir.join(format!("edge_conv_b{b}.hlo.txt")).exists())
 }
 
-enum Request {
-    Batch(Vec<Tile>, Sender<Result<Vec<TileOut>>>),
-    Stop,
+/// True when this binary was built with the XLA-backed PJRT engine
+/// (cargo feature `pjrt`).
+pub const fn pjrt_enabled() -> bool {
+    cfg!(feature = "pjrt")
 }
 
-/// Tile engine backed by the PJRT-compiled JAX/Pallas executable.
-pub struct PjrtTileEngine {
-    name: String,
-    tx: Sender<Request>,
-    worker: Option<JoinHandle<()>>,
-}
+#[cfg(not(feature = "pjrt"))]
+mod stub {
+    use super::*;
+    use crate::coordinator::{Tile, TileEngine, TileOut};
 
-impl PjrtTileEngine {
-    /// Compile the artifacts and hold the design's product table (fed to
-    /// the executable at every call — one artifact serves all designs).
-    pub fn new(dir: &Path, design_name: &str, lut: Vec<i32>) -> Result<Self> {
-        anyhow::ensure!(lut.len() == 65536, "product table must be 256x256");
-        anyhow::ensure!(
-            artifacts_available(dir),
-            "missing HLO artifacts in {dir:?}; run `make artifacts`"
-        );
-        let (tx, rx) = bounded::<Request>(4);
-        let (init_tx, init_rx) = bounded::<Result<()>>(1);
-        let dir = dir.to_path_buf();
-        let worker = std::thread::Builder::new()
-            .name("sfcmul-pjrt".into())
-            .spawn(move || executor_thread(dir, lut, rx, init_tx))
-            .context("spawn pjrt executor")?;
-        init_rx
-            .recv()
-            .ok_or_else(|| anyhow!("pjrt executor died during init"))??;
-        Ok(Self {
-            name: format!("pjrt:{design_name}"),
-            tx,
-            worker: Some(worker),
-        })
+    /// Stub tile engine for builds without the `pjrt` feature. The
+    /// constructor always fails, so no instance ever exists; callers hit
+    /// their LUT-engine fallback instead.
+    pub struct PjrtTileEngine {
+        _unconstructible: std::convert::Infallible,
     }
-}
 
-impl Drop for PjrtTileEngine {
-    fn drop(&mut self) {
-        if self.tx.send(Request::Stop).is_err() {
-            // executor already gone
+    impl PjrtTileEngine {
+        pub fn new(_dir: &Path, _design_name: &str, _lut: Vec<i32>) -> crate::Result<Self> {
+            Err(crate::util::error::Error::msg(
+                "PJRT runtime not compiled in: rebuild with `--features pjrt` \
+                 (requires the `xla` crate, unavailable in the offline image)",
+            ))
         }
-        if let Some(w) = self.worker.take() {
-            let _ = w.join();
+    }
+
+    impl TileEngine for PjrtTileEngine {
+        fn name(&self) -> String {
+            match self._unconstructible {}
+        }
+
+        fn process_batch(&self, _tiles: &[Tile]) -> Vec<TileOut> {
+            match self._unconstructible {}
         }
     }
 }
 
-impl TileEngine for PjrtTileEngine {
-    fn name(&self) -> String {
-        self.name.clone()
+#[cfg(not(feature = "pjrt"))]
+pub use stub::PjrtTileEngine;
+
+#[cfg(feature = "pjrt")]
+mod xla_impl {
+    use super::*;
+    use crate::coordinator::{Tile, TileEngine, TileOut, TILE_CORE, TILE_IN};
+    use crate::util::error::Error;
+    use crate::util::pool::{bounded, Receiver, Sender};
+    use crate::Result;
+    use std::thread::JoinHandle;
+
+    enum Request {
+        Batch(Vec<Tile>, Sender<Result<Vec<TileOut>>>),
+        Stop,
     }
 
-    fn preferred_batch(&self) -> usize {
-        *BATCH_SIZES.iter().max().unwrap()
+    /// Tile engine backed by the PJRT-compiled JAX/Pallas executable.
+    pub struct PjrtTileEngine {
+        name: String,
+        tx: Sender<Request>,
+        worker: Option<JoinHandle<()>>,
     }
 
-    fn process_batch(&self, tiles: &[Tile]) -> Vec<TileOut> {
-        let (reply_tx, reply_rx) = bounded(1);
-        if self.tx.send(Request::Batch(tiles.to_vec(), reply_tx)).is_err() {
-            panic!("pjrt executor gone");
+    impl PjrtTileEngine {
+        /// Compile the artifacts and hold the design's product table (fed
+        /// to the executable at every call — one artifact serves all
+        /// designs).
+        pub fn new(dir: &Path, design_name: &str, lut: Vec<i32>) -> Result<Self> {
+            if lut.len() != 65536 {
+                return Err(Error::msg("product table must be 256x256"));
+            }
+            if !artifacts_available(dir) {
+                return Err(Error::msg(format!(
+                    "missing HLO artifacts in {dir:?}; run `make artifacts`"
+                )));
+            }
+            let (tx, rx) = bounded::<Request>(4);
+            let (init_tx, init_rx) = bounded::<Result<()>>(1);
+            let dir = dir.to_path_buf();
+            let worker = std::thread::Builder::new()
+                .name("sfcmul-pjrt".into())
+                .spawn(move || executor_thread(dir, lut, rx, init_tx))
+                .map_err(|e| Error::wrap("spawn pjrt executor", e))?;
+            init_rx
+                .recv()
+                .ok_or_else(|| Error::msg("pjrt executor died during init"))??;
+            Ok(Self {
+                name: format!("pjrt:{design_name}"),
+                tx,
+                worker: Some(worker),
+            })
         }
-        reply_rx
-            .recv()
-            .expect("pjrt executor dropped reply")
-            .expect("pjrt execution failed")
     }
-}
 
-struct Compiled {
-    exe: xla::PjRtLoadedExecutable,
-    batch: usize,
-}
-
-fn executor_thread(
-    dir: PathBuf,
-    lut: Vec<i32>,
-    rx: Receiver<Request>,
-    init_tx: Sender<Result<()>>,
-) {
-    // Perf (EXPERIMENTS.md §Perf, iteration RT-1): the design's product
-    // table is uploaded to a device buffer *once*; per batch only the tile
-    // pixels cross the host→device boundary and execution uses the
-    // zero-copy `execute_b` buffer path (previously the 256 KiB LUT
-    // literal was cloned and re-uploaded on every chunk).
-    let setup = || -> Result<(xla::PjRtClient, Vec<Compiled>, xla::PjRtBuffer)> {
-        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("pjrt cpu client: {e:?}"))?;
-        let mut compiled = Vec::new();
-        for &batch in &BATCH_SIZES {
-            let path = dir.join(format!("edge_conv_b{batch}.hlo.txt"));
-            let proto = xla::HloModuleProto::from_text_file(
-                path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
-            )
-            .map_err(|e| anyhow!("parse {path:?}: {e:?}"))?;
-            let comp = xla::XlaComputation::from_proto(&proto);
-            let exe = client
-                .compile(&comp)
-                .map_err(|e| anyhow!("compile b{batch}: {e:?}"))?;
-            compiled.push(Compiled { exe, batch });
-        }
-        let lut_buf = client
-            .buffer_from_host_buffer::<i32>(&lut, &[256, 256], None)
-            .map_err(|e| anyhow!("lut upload: {e:?}"))?;
-        compiled.sort_by_key(|c| std::cmp::Reverse(c.batch));
-        Ok((client, compiled, lut_buf))
-    };
-    let (client, compiled, lut_buf) = match setup() {
-        Ok(x) => {
-            let _ = init_tx.send(Ok(()));
-            x
-        }
-        Err(e) => {
-            let _ = init_tx.send(Err(e));
-            return;
-        }
-    };
-
-    // reusable input staging buffer (host side)
-    let mut flat: Vec<i32> = Vec::new();
-    while let Some(req) = rx.recv() {
-        match req {
-            Request::Stop => return,
-            Request::Batch(tiles, reply) => {
-                let _ = reply.send(run_batch(&client, &compiled, &lut_buf, &tiles, &mut flat));
+    impl Drop for PjrtTileEngine {
+        fn drop(&mut self) {
+            if self.tx.send(Request::Stop).is_err() {
+                // executor already gone
+            }
+            if let Some(w) = self.worker.take() {
+                let _ = w.join();
             }
         }
     }
-}
 
-fn run_batch(
-    client: &xla::PjRtClient,
-    compiled: &[Compiled],
-    lut_buf: &xla::PjRtBuffer,
-    tiles: &[Tile],
-    flat: &mut Vec<i32>,
-) -> Result<Vec<TileOut>> {
-    let mut outs = Vec::with_capacity(tiles.len());
-    let mut idx = 0;
-    while idx < tiles.len() {
-        let remaining = tiles.len() - idx;
-        // biggest compiled batch ≤ remaining, else smallest (with padding)
-        let c = compiled
-            .iter()
-            .find(|c| c.batch <= remaining)
-            .unwrap_or_else(|| compiled.last().unwrap());
-        let take = remaining.min(c.batch);
-        let chunk = &tiles[idx..idx + take];
-        // pack (batch, TILE_IN, TILE_IN) i32, padding with zero tiles
-        flat.clear();
-        flat.resize(c.batch * TILE_IN * TILE_IN, 0);
-        for (t, tile) in chunk.iter().enumerate() {
-            let base = t * TILE_IN * TILE_IN;
-            for (k, &px) in tile.data.iter().enumerate() {
-                flat[base + k] = px as i32;
-            }
+    impl TileEngine for PjrtTileEngine {
+        fn name(&self) -> String {
+            self.name.clone()
         }
-        let x_buf = client
-            .buffer_from_host_buffer::<i32>(flat, &[c.batch, TILE_IN, TILE_IN], None)
-            .map_err(|e| anyhow!("input upload: {e:?}"))?;
-        let result = c
-            .exe
-            .execute_b::<&xla::PjRtBuffer>(&[&x_buf, lut_buf])
-            .map_err(|e| anyhow!("execute: {e:?}"))?[0][0]
-            .to_literal_sync()
-            .map_err(|e| anyhow!("fetch: {e:?}"))?;
-        let out_flat: Vec<i32> = result
-            .to_tuple1()
-            .map_err(|e| anyhow!("untuple: {e:?}"))?
-            .to_vec()
-            .map_err(|e| anyhow!("to_vec: {e:?}"))?;
-        anyhow::ensure!(out_flat.len() == c.batch * TILE_CORE * TILE_CORE);
-        for (t, tile) in chunk.iter().enumerate() {
-            let base = t * TILE_CORE * TILE_CORE;
-            let mut data = vec![0u8; tile.core_w * tile.core_h];
-            for cy in 0..tile.core_h {
-                for cx in 0..tile.core_w {
-                    data[cy * tile.core_w + cx] =
-                        out_flat[base + cy * TILE_CORE + cx] as u8;
+
+        fn preferred_batch(&self) -> usize {
+            *BATCH_SIZES.iter().max().unwrap()
+        }
+
+        fn process_batch(&self, tiles: &[Tile]) -> Vec<TileOut> {
+            let (reply_tx, reply_rx) = bounded(1);
+            if self.tx.send(Request::Batch(tiles.to_vec(), reply_tx)).is_err() {
+                panic!("pjrt executor gone");
+            }
+            reply_rx
+                .recv()
+                .expect("pjrt executor dropped reply")
+                .expect("pjrt execution failed")
+        }
+    }
+
+    struct Compiled {
+        exe: xla::PjRtLoadedExecutable,
+        batch: usize,
+    }
+
+    fn executor_thread(
+        dir: PathBuf,
+        lut: Vec<i32>,
+        rx: Receiver<Request>,
+        init_tx: Sender<Result<()>>,
+    ) {
+        // Perf (EXPERIMENTS.md §Perf, iteration RT-1): the design's product
+        // table is uploaded to a device buffer *once*; per batch only the
+        // tile pixels cross the host→device boundary and execution uses the
+        // zero-copy `execute_b` buffer path (previously the 256 KiB LUT
+        // literal was cloned and re-uploaded on every chunk).
+        let setup = || -> Result<(xla::PjRtClient, Vec<Compiled>, xla::PjRtBuffer)> {
+            let client = xla::PjRtClient::cpu()
+                .map_err(|e| Error::msg(format!("pjrt cpu client: {e:?}")))?;
+            let mut compiled = Vec::new();
+            for &batch in &BATCH_SIZES {
+                let path = dir.join(format!("edge_conv_b{batch}.hlo.txt"));
+                let proto = xla::HloModuleProto::from_text_file(
+                    path.to_str().ok_or_else(|| Error::msg("non-utf8 path"))?,
+                )
+                .map_err(|e| Error::msg(format!("parse {path:?}: {e:?}")))?;
+                let comp = xla::XlaComputation::from_proto(&proto);
+                let exe = client
+                    .compile(&comp)
+                    .map_err(|e| Error::msg(format!("compile b{batch}: {e:?}")))?;
+                compiled.push(Compiled { exe, batch });
+            }
+            let lut_buf = client
+                .buffer_from_host_buffer::<i32>(&lut, &[256, 256], None)
+                .map_err(|e| Error::msg(format!("lut upload: {e:?}")))?;
+            compiled.sort_by_key(|c| std::cmp::Reverse(c.batch));
+            Ok((client, compiled, lut_buf))
+        };
+        let (client, compiled, lut_buf) = match setup() {
+            Ok(x) => {
+                let _ = init_tx.send(Ok(()));
+                x
+            }
+            Err(e) => {
+                let _ = init_tx.send(Err(e));
+                return;
+            }
+        };
+
+        // reusable input staging buffer (host side)
+        let mut flat: Vec<i32> = Vec::new();
+        while let Some(req) = rx.recv() {
+            match req {
+                Request::Stop => return,
+                Request::Batch(tiles, reply) => {
+                    let _ =
+                        reply.send(run_batch(&client, &compiled, &lut_buf, &tiles, &mut flat));
                 }
             }
-            outs.push(TileOut {
-                job_id: tile.job_id,
-                x0: tile.x0,
-                y0: tile.y0,
-                core_w: tile.core_w,
-                core_h: tile.core_h,
-                data,
-            });
         }
-        idx += take;
     }
-    Ok(outs)
+
+    fn run_batch(
+        client: &xla::PjRtClient,
+        compiled: &[Compiled],
+        lut_buf: &xla::PjRtBuffer,
+        tiles: &[Tile],
+        flat: &mut Vec<i32>,
+    ) -> Result<Vec<TileOut>> {
+        let mut outs = Vec::with_capacity(tiles.len());
+        let mut idx = 0;
+        while idx < tiles.len() {
+            let remaining = tiles.len() - idx;
+            // biggest compiled batch ≤ remaining, else smallest (with padding)
+            let c = compiled
+                .iter()
+                .find(|c| c.batch <= remaining)
+                .unwrap_or_else(|| compiled.last().unwrap());
+            let take = remaining.min(c.batch);
+            let chunk = &tiles[idx..idx + take];
+            // pack (batch, TILE_IN, TILE_IN) i32, padding with zero tiles
+            flat.clear();
+            flat.resize(c.batch * TILE_IN * TILE_IN, 0);
+            for (t, tile) in chunk.iter().enumerate() {
+                let base = t * TILE_IN * TILE_IN;
+                for (k, &px) in tile.data.iter().enumerate() {
+                    flat[base + k] = px as i32;
+                }
+            }
+            let x_buf = client
+                .buffer_from_host_buffer::<i32>(flat, &[c.batch, TILE_IN, TILE_IN], None)
+                .map_err(|e| Error::msg(format!("input upload: {e:?}")))?;
+            let result = c
+                .exe
+                .execute_b::<&xla::PjRtBuffer>(&[&x_buf, lut_buf])
+                .map_err(|e| Error::msg(format!("execute: {e:?}")))?[0][0]
+                .to_literal_sync()
+                .map_err(|e| Error::msg(format!("fetch: {e:?}")))?;
+            let out_flat: Vec<i32> = result
+                .to_tuple1()
+                .map_err(|e| Error::msg(format!("untuple: {e:?}")))?
+                .to_vec()
+                .map_err(|e| Error::msg(format!("to_vec: {e:?}")))?;
+            if out_flat.len() != c.batch * TILE_CORE * TILE_CORE {
+                return Err(Error::msg("unexpected output shape from pjrt executable"));
+            }
+            for (t, tile) in chunk.iter().enumerate() {
+                let base = t * TILE_CORE * TILE_CORE;
+                let mut data = vec![0u8; tile.core_w * tile.core_h];
+                for cy in 0..tile.core_h {
+                    for cx in 0..tile.core_w {
+                        data[cy * tile.core_w + cx] =
+                            out_flat[base + cy * TILE_CORE + cx] as u8;
+                    }
+                }
+                outs.push(TileOut {
+                    job_id: tile.job_id,
+                    x0: tile.x0,
+                    y0: tile.y0,
+                    core_w: tile.core_w,
+                    core_h: tile.core_h,
+                    data,
+                });
+            }
+            idx += take;
+        }
+        Ok(outs)
+    }
 }
+
+#[cfg(feature = "pjrt")]
+pub use xla_impl::PjrtTileEngine;

@@ -35,6 +35,8 @@ pub fn generate(id: &str, seed: u64, out_dir: &std::path::Path) -> crate::Result
             }
             Ok(s)
         }
-        other => anyhow::bail!("unknown table id {other:?} (t1..t5, f9, f10, sweep, all)"),
+        other => Err(crate::util::error::Error::msg(format!(
+            "unknown table id {other:?} (t1..t5, f9, f10, sweep, all)"
+        ))),
     }
 }

@@ -5,7 +5,7 @@
 
 use crate::error::{error_metrics, error_metrics_sampled};
 use crate::hwmodel::raw_hw;
-use crate::multipliers::{build_design, BoothRadix4, DesignId, MultiplierModel};
+use crate::multipliers::{registry, BoothRadix4, MultiplierModel};
 
 pub struct SweepRow {
     pub n: usize,
@@ -20,8 +20,8 @@ pub fn rows() -> Vec<SweepRow> {
     [4usize, 6, 8, 10, 12, 16]
         .into_iter()
         .map(|n| {
-            let prop = build_design(DesignId::Proposed, n);
-            let exact = build_design(DesignId::Exact, n);
+            let prop = registry().build_str(&format!("proposed@{n}")).expect("registered");
+            let exact = registry().build_str(&format!("exact@{n}")).expect("registered");
             let e = if n <= 10 {
                 error_metrics(prop.as_ref())
             } else {

@@ -20,15 +20,26 @@ pub struct Args {
     flags: Vec<String>,
 }
 
-#[derive(Debug, thiserror::Error)]
+#[derive(Debug)]
 pub enum CliError {
-    #[error("missing value for option --{0}")]
     MissingValue(String),
-    #[error("invalid value for --{key}: {value:?} ({reason})")]
     InvalidValue { key: String, value: String, reason: String },
-    #[error("missing required option --{0}")]
     MissingRequired(String),
 }
+
+impl std::fmt::Display for CliError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            CliError::MissingValue(name) => write!(f, "missing value for option --{name}"),
+            CliError::InvalidValue { key, value, reason } => {
+                write!(f, "invalid value for --{key}: {value:?} ({reason})")
+            }
+            CliError::MissingRequired(name) => write!(f, "missing required option --{name}"),
+        }
+    }
+}
+
+impl std::error::Error for CliError {}
 
 impl Args {
     /// Parse from an explicit token list (first token may be a subcommand —

@@ -1,0 +1,120 @@
+//! Minimal chained error type (stand-in for `anyhow` — the build
+//! environment is offline, so the crate carries its own).
+//!
+//! [`Error`] is a message plus an optional boxed source. It converts from
+//! `String`, `&str` and `std::io::Error`, so fallible code can write
+//! `Err(format!("...").into())` and use `?` on I/O results inside
+//! functions returning [`crate::Result`].
+
+use std::fmt;
+
+/// Crate-wide error: a human-readable message with an optional cause.
+pub struct Error {
+    msg: String,
+    source: Option<Box<dyn std::error::Error + Send + Sync + 'static>>,
+}
+
+impl Error {
+    /// Error from a plain message.
+    pub fn msg(msg: impl Into<String>) -> Self {
+        Self { msg: msg.into(), source: None }
+    }
+
+    /// Error wrapping a cause with added context.
+    pub fn wrap(
+        context: impl Into<String>,
+        source: impl std::error::Error + Send + Sync + 'static,
+    ) -> Self {
+        Self { msg: context.into(), source: Some(Box::new(source)) }
+    }
+
+    /// Add context, keeping `self` as the cause.
+    pub fn context(self, context: impl Into<String>) -> Self {
+        Self { msg: context.into(), source: Some(Box::new(self)) }
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.msg)?;
+        let mut cause = self.source.as_deref();
+        while let Some(c) = cause {
+            write!(f, ": {c}")?;
+            cause = c.source();
+        }
+        Ok(())
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        // `unwrap()`/`expect()` print Debug; show the full chain there too.
+        fmt::Display::fmt(self, f)
+    }
+}
+
+impl std::error::Error for Error {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        self.source
+            .as_ref()
+            .map(|s| s.as_ref() as &(dyn std::error::Error + 'static))
+    }
+}
+
+impl From<String> for Error {
+    fn from(msg: String) -> Self {
+        Error::msg(msg)
+    }
+}
+
+impl From<&str> for Error {
+    fn from(msg: &str) -> Self {
+        Error::msg(msg)
+    }
+}
+
+impl From<std::io::Error> for Error {
+    fn from(e: std::io::Error) -> Self {
+        Error::wrap("I/O error", e)
+    }
+}
+
+impl From<super::cli::CliError> for Error {
+    fn from(e: super::cli::CliError) -> Self {
+        Error::wrap("argument error", e)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn display_shows_chain() {
+        let io = std::io::Error::new(std::io::ErrorKind::NotFound, "gone");
+        let e = Error::wrap("reading config", io);
+        let s = format!("{e}");
+        assert!(s.contains("reading config"));
+        assert!(s.contains("gone"));
+    }
+
+    #[test]
+    fn conversions_work() {
+        fn fails() -> crate::Result<()> {
+            Err(format!("bad {}", 7).into())
+        }
+        assert!(format!("{}", fails().unwrap_err()).contains("bad 7"));
+
+        fn io_fails() -> crate::Result<Vec<u8>> {
+            Ok(std::fs::read("/definitely/not/a/path/sfcmul")?)
+        }
+        assert!(io_fails().is_err());
+    }
+
+    #[test]
+    fn context_keeps_cause() {
+        let e = Error::msg("inner").context("outer");
+        assert_eq!(format!("{e}"), "outer: inner");
+        assert!(std::error::Error::source(&e).is_some());
+    }
+}

@@ -1,22 +1,24 @@
 //! Self-contained infrastructure substrates.
 //!
-//! The build environment is fully offline with only the `xla` crate and its
-//! transitive dependencies vendored, so the usual ecosystem crates
-//! (`rand`, `proptest`, `criterion`, `clap`, `serde`, `tokio`, `rayon`) are
-//! unavailable. Everything this crate needs from them is implemented here
-//! from scratch, small and auditable:
+//! The build environment is fully offline, so the usual ecosystem crates
+//! (`rand`, `proptest`, `criterion`, `clap`, `serde`, `anyhow`, `tokio`,
+//! `rayon`) are unavailable. Everything this crate needs from them is
+//! implemented here from scratch, small and auditable:
 //!
 //! * [`prng`] — SplitMix64 / xoshiro256** pseudo-random generators.
 //! * [`prop`] — a miniature property-based testing harness with shrinking.
 //! * [`bench`] — a micro-benchmark harness (warmup, calibrated iteration
 //!   counts, robust statistics) used by `cargo bench`.
 //! * [`cli`] — a flag/option command-line parser.
+//! * [`error`] — the chained error type behind [`crate::Result`]
+//!   (stands in for anyhow).
 //! * [`json`] — a tiny JSON value builder/serialiser for machine-readable
 //!   reports.
 //! * [`pool`] — a bounded-queue thread pool plus MPMC channel used by the
 //!   L3 coordinator (stands in for tokio).
 //! * [`stats`] — mean/percentile/stddev helpers shared by bench + metrics.
 
+pub mod error;
 pub mod prng;
 pub mod prop;
 pub mod bench;

@@ -10,10 +10,14 @@ use sfcmul::coordinator::{
 };
 use sfcmul::image::{edge_detect, synthetic_scene};
 use sfcmul::multipliers::{build_design, lut::product_table, DesignId};
-use sfcmul::runtime::{artifacts_available, artifacts_dir, PjrtTileEngine};
+use sfcmul::runtime::{artifacts_available, artifacts_dir, pjrt_enabled, PjrtTileEngine};
 use std::sync::Arc;
 
 fn engine_for(id: DesignId) -> Option<(PjrtTileEngine, LutTileEngine)> {
+    if !pjrt_enabled() {
+        eprintln!("SKIP: built without the `pjrt` feature");
+        return None;
+    }
     let dir = artifacts_dir();
     if !artifacts_available(&dir) {
         eprintln!("SKIP: artifacts missing in {dir:?} (run `make artifacts`)");
@@ -65,8 +69,8 @@ fn pjrt_single_tile_path() {
 #[test]
 fn coordinator_over_pjrt_end_to_end() {
     let dir = artifacts_dir();
-    if !artifacts_available(&dir) {
-        eprintln!("SKIP: artifacts missing");
+    if !pjrt_enabled() || !artifacts_available(&dir) {
+        eprintln!("SKIP: pjrt feature off or artifacts missing");
         return;
     }
     let model = build_design(DesignId::Proposed, 8);

@@ -1,0 +1,98 @@
+//! Property tests over the DesignSpec string form and the registry:
+//! every spec round-trips Display → FromStr, and registry-built designs
+//! are identical to the legacy `build_design(DesignId)` construction.
+
+use sfcmul::multipliers::{
+    build_design, registry, Compensation, CompressorChoice, DesignId, DesignSpec, TruncMode,
+};
+use sfcmul::util::prop::{forall, Gen};
+
+#[test]
+fn every_registry_entry_roundtrips_at_8_and_16() {
+    for bits in [8usize, 16] {
+        for spec in registry().specs(bits) {
+            let s = spec.to_string();
+            let back: DesignSpec = s.parse().unwrap_or_else(|e| panic!("{s:?}: {e}"));
+            assert_eq!(back, spec, "{s:?}");
+            // and the spec is buildable
+            registry().build(&spec).unwrap_or_else(|e| panic!("{s}: {e}"));
+        }
+    }
+}
+
+/// Random specs over the whole option space round-trip exactly.
+#[test]
+fn arbitrary_specs_roundtrip() {
+    let families = CompressorChoice::builtin();
+    let spec_gen = Gen::no_shrink(move |rng| {
+        let family = families[rng.below(families.len() as u64) as usize].clone();
+        let bits = [4usize, 6, 8, 10, 12, 16, 24, 32][rng.below(8) as usize];
+        let truncation = match rng.below(3) {
+            0 => TruncMode::Paper,
+            1 => TruncMode::None,
+            // parse accepts only the LSP region: 0..=bits-1
+            _ => TruncMode::Cols(rng.below(bits as u64) as u8),
+        };
+        let compensation = match rng.below(3) {
+            0 => Compensation::Paper,
+            1 => Compensation::None,
+            _ => Compensation::Literal,
+        };
+        DesignSpec { bits, compressors: family, truncation, compensation }
+    });
+    forall("spec Display/FromStr roundtrip", 512, spec_gen, |spec| {
+        spec.to_string().parse::<DesignSpec>().ok().as_ref() == Some(spec)
+    });
+}
+
+/// The registry path and the legacy DesignId path must agree exhaustively
+/// over all 256×256 operand pairs for the designs the acceptance pins.
+#[test]
+fn registry_matches_design_id_exhaustively() {
+    for (id, spec_str) in [(DesignId::Proposed, "proposed@8"), (DesignId::Exact, "exact@8")] {
+        let legacy = build_design(id, 8);
+        let from_spec = registry().build_str(spec_str).unwrap();
+        assert_eq!(legacy.name(), from_spec.name(), "{spec_str}");
+        for a in -128i64..128 {
+            for b in -128i64..128 {
+                assert_eq!(
+                    legacy.multiply(a, b),
+                    from_spec.multiply(a, b),
+                    "{spec_str}: {a} * {b}"
+                );
+            }
+        }
+    }
+}
+
+/// Every paper design id aliases a canonical spec whose string parses
+/// back to the same family.
+#[test]
+fn design_ids_are_thin_spec_aliases() {
+    for id in DesignId::table5_order() {
+        let spec = id.spec(8);
+        assert!(spec.is_canonical());
+        let back: DesignSpec = spec.to_string().parse().unwrap();
+        assert_eq!(back.compressors, id.family());
+        assert_eq!(DesignId::from_family(&back.compressors), Some(id));
+    }
+}
+
+#[test]
+fn registry_names_cover_the_paper_set() {
+    let names = registry().names();
+    for expect in ["exact", "proposed", "d1", "d2", "d4", "d5", "d7", "d12"] {
+        assert!(names.contains(&expect), "{expect} missing from {names:?}");
+        assert!(registry().contains(expect));
+    }
+}
+
+/// Canonical option values are omitted from the string form; explicit
+/// defaults normalise to the same spec.
+#[test]
+fn explicit_defaults_normalise() {
+    let a: DesignSpec = "proposed@8".parse().unwrap();
+    let b: DesignSpec = "proposed@8:trunc=paper:comp=paper".parse().unwrap();
+    assert_eq!(a, b);
+    assert_eq!(b.to_string(), "proposed@8");
+}

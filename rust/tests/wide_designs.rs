@@ -1,0 +1,51 @@
+//! Wider-than-8-bit designs: the functional model and the gate-level
+//! netlist must agree on sampled random operand pairs (the width-generic
+//! companion of the exhaustive N=8 verification).
+
+use sfcmul::multipliers::registry;
+use sfcmul::multipliers::verify::sampled_check;
+
+#[test]
+fn proposed16_netlist_matches_model_on_10k_pairs() {
+    let m = registry().build_str("proposed@16").unwrap();
+    assert_eq!(m.bits(), 16);
+    sampled_check(m.as_ref(), 10_000, 20250731).unwrap();
+}
+
+#[test]
+fn exact16_netlist_matches_model_sampled() {
+    let m = registry().build_str("exact@16").unwrap();
+    sampled_check(m.as_ref(), 4_096, 7).unwrap();
+}
+
+#[test]
+fn proposed16_variants_netlist_matches_model_sampled() {
+    for spec in ["proposed@16:comp=const", "proposed@16:comp=none", "d2@16"] {
+        let m = registry().build_str(spec).unwrap();
+        sampled_check(m.as_ref(), 2_048, 99).unwrap_or_else(|e| panic!("{spec}: {e}"));
+    }
+}
+
+/// The 16-bit proposed design keeps the paper's shape: low truncated
+/// columns are zero and the relative error stays small.
+#[test]
+fn proposed16_truncation_and_error_shape() {
+    let m = registry().build_str("proposed@16").unwrap();
+    let mut rng = sfcmul::util::prng::Xoshiro256::seeded(5);
+    let mut sum_rel = 0.0f64;
+    let mut count = 0usize;
+    for _ in 0..20_000 {
+        let a = rng.range_i64(-32768, 32767);
+        let b = rng.range_i64(-32768, 32767);
+        let p = m.multiply(a, b);
+        // truncated low columns (bits 0..N-2 inclusive) must be zero
+        let low = (p as u64) & ((1u64 << 15) - 1);
+        assert_eq!(low, 0, "{a}*{b}: low bits set in {p:#x}");
+        if a * b != 0 {
+            sum_rel += (p - a * b).abs() as f64 / (a * b).abs() as f64;
+            count += 1;
+        }
+    }
+    let mred = sum_rel / count as f64;
+    assert!(mred < 0.40, "sampled MRED {mred} out of the paper's regime");
+}
