@@ -1,5 +1,8 @@
 #!/usr/bin/env bash
-# Repo CI: format check, lints, tests. Run from anywhere.
+# Repo CI: format check, lints, build, tests. Run from anywhere.
+#
+# Mirrors the ROADMAP tier-1 gate: `cargo build --release && cargo test -q`
+# (both fatal), with lints and compile-only bench smoke around it.
 #
 # * `cargo fmt --check` is advisory (non-fatal): the tree predates rustfmt
 #   enforcement and carries hand-aligned tables/diagrams; drift is printed
@@ -11,7 +14,12 @@
 #     - too_many_arguments: netlist builder helpers take per-signal args;
 #     - type_complexity: engine/factory types are spelled out once;
 #     - new_without_default: `new()` constructors without Default impls.
-# * `cargo test -q` is the tier-1 gate and must pass.
+# * `cargo build --release` is the first half of the tier-1 gate and must
+#   succeed before tests run.
+# * `cargo bench --no-run` compile-checks every bench target (the bench
+#   harness is `harness = false`, so nothing executes) — benches stay
+#   buildable without spending CI minutes running them.
+# * `cargo test -q` is the second half of the tier-1 gate and must pass.
 
 set -uo pipefail
 cd "$(dirname "$0")"
@@ -33,10 +41,22 @@ if ! cargo clippy --all-targets -- -D warnings \
     status=1
 fi
 
-echo "== cargo test =="
-if ! cargo test -q; then
-    echo "FAIL: tests"
+echo "== cargo build --release (tier-1) =="
+if ! cargo build --release; then
+    echo "FAIL: release build (skipping bench smoke and tests: they would re-hit the same compile errors)"
     status=1
+else
+    echo "== cargo bench --no-run (compile smoke) =="
+    if ! cargo bench --no-run; then
+        echo "FAIL: bench targets do not compile"
+        status=1
+    fi
+
+    echo "== cargo test (tier-1) =="
+    if ! cargo test -q; then
+        echo "FAIL: tests"
+        status=1
+    fi
 fi
 
 if [ "$status" -eq 0 ]; then

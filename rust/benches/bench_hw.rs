@@ -1,8 +1,12 @@
 //! Bench: Table-5 machinery — netlist construction, static timing and
-//! activity-based power per design.
+//! activity-based power per design — plus the bitsliced-vs-scalar sweep
+//! comparison (the PR-2 tentpole speedup, in directly comparable Melem/s).
 
 use sfcmul::hwmodel::raw_hw;
+use sfcmul::multipliers::verify::{bitsim_multiply_batch, netlist_multiply_all};
 use sfcmul::multipliers::{all_designs_hw, registry};
+use sfcmul::netlist::bitslice::BitSim;
+use sfcmul::netlist::sim::eval_outputs_bool;
 use sfcmul::netlist::{power, timing};
 use sfcmul::util::bench::Bench;
 
@@ -17,6 +21,36 @@ fn main() {
 
     let nl = exact.build_netlist();
     b.bench("static_timing_exact", || timing::analyze(&nl).critical_delay);
+
+    // Bitsliced vs scalar operand sweep on the proposed netlist. The two
+    // report the same units (operand pairs per second), so the Melem/s
+    // columns give the tentpole speedup directly. The scalar side runs a
+    // 1/16 stratified subset to keep calibration sane; its throughput is
+    // per-pair either way.
+    let prop_nl = prop.build_netlist();
+    b.throughput(65536).bench("sweep8_bitsliced_exhaustive_proposed", || {
+        netlist_multiply_all(&prop_nl, 8).len()
+    });
+    let mut reused = BitSim::new(&prop_nl);
+    let pairs: Vec<(i64, i64)> = (-128i64..128)
+        .flat_map(|a| (-128i64..128).map(move |bb| (a, bb)))
+        .collect();
+    b.throughput(65536).bench("sweep8_bitsliced_reused_sim_proposed", || {
+        bitsim_multiply_batch(&mut reused, 8, &pairs).len()
+    });
+    b.throughput(4096).bench("sweep8_scalar_subset_proposed", || {
+        let mut ones = 0usize;
+        for idx in (0..65536usize).step_by(16) {
+            let mut inputs = [false; 16];
+            for k in 0..8 {
+                inputs[k] = (idx >> (8 + k)) & 1 != 0;
+                inputs[8 + k] = (idx >> k) & 1 != 0;
+            }
+            let outs = eval_outputs_bool(&prop_nl, &inputs);
+            ones += outs.iter().filter(|&&bit| bit).count();
+        }
+        ones
+    });
 
     b.throughput(8192).bench("power_8192_vectors_exact", || {
         power::estimate(&nl, 8192, 42).switched_cap

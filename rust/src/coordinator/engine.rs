@@ -32,6 +32,42 @@ fn postprocess(acc: i64) -> u8 {
     (acc.abs() >> (KERNEL_PRESCALE_SHIFT - PIXEL_SHIFT + OUTPUT_NORM_SHIFT)).clamp(0, 255) as u8
 }
 
+/// Shared folded-tap Laplacian tile convolution: the 3×3 kernel has only
+/// two distinct pre-scaled coefficients (centre / ring), so a tap table
+/// per coefficient — indexed by the raw pixel byte, pixel pre-shift baked
+/// in — turns the inner loop into 9 loads + 8 adds per output pixel.
+/// Used by every table-backed engine (LUT and bitsim).
+fn conv_tile_taps(tile: &Tile, tc: &[i64; 256], tr: &[i64; 256]) -> TileOut {
+    let mut data = vec![0u8; tile.core_w * tile.core_h];
+    let src = &tile.data;
+    for cy in 0..tile.core_h {
+        let r0 = &src[cy * TILE_IN..cy * TILE_IN + tile.core_w + 2];
+        let r1 = &src[(cy + 1) * TILE_IN..(cy + 1) * TILE_IN + tile.core_w + 2];
+        let r2 = &src[(cy + 2) * TILE_IN..(cy + 2) * TILE_IN + tile.core_w + 2];
+        let out_row = &mut data[cy * tile.core_w..(cy + 1) * tile.core_w];
+        for (cx, out_px) in out_row.iter_mut().enumerate() {
+            let acc = tr[r0[cx] as usize]
+                + tr[r0[cx + 1] as usize]
+                + tr[r0[cx + 2] as usize]
+                + tr[r1[cx] as usize]
+                + tc[r1[cx + 1] as usize]
+                + tr[r1[cx + 2] as usize]
+                + tr[r2[cx] as usize]
+                + tr[r2[cx + 1] as usize]
+                + tr[r2[cx + 2] as usize];
+            *out_px = postprocess(acc);
+        }
+    }
+    TileOut {
+        job_id: tile.job_id,
+        x0: tile.x0,
+        y0: tile.y0,
+        core_w: tile.core_w,
+        core_h: tile.core_h,
+        data,
+    }
+}
+
 /// Shared tile-convolution core over a product function.
 fn conv_tile(tile: &Tile, product: &dyn Fn(u8, i8) -> i64) -> TileOut {
     let mut data = vec![0u8; tile.core_w * tile.core_h];
@@ -71,10 +107,10 @@ fn conv_tile(tile: &Tile, product: &dyn Fn(u8, i8) -> i64) -> TileOut {
 pub struct LutTileEngine {
     name: String,
     lut: Vec<i32>,
-    /// tap_center[px] = lut[px>>1][byte(+64)]
-    tap_center: [i32; 256],
-    /// tap_ring[px] = lut[px>>1][byte(-8)]
-    tap_ring: [i32; 256],
+    /// tap_center[px] = lut[px >> PIXEL_SHIFT][byte(+64)]
+    tap_center: Box<[i64; 256]>,
+    /// tap_ring[px] = lut[px >> PIXEL_SHIFT][byte(-8)]
+    tap_ring: Box<[i64; 256]>,
 }
 
 impl LutTileEngine {
@@ -86,52 +122,18 @@ impl LutTileEngine {
         assert_eq!(lut.len(), 65536);
         let kb_center = ((LAPLACIAN[1][1] << KERNEL_PRESCALE_SHIFT) as i8) as u8 as usize;
         let kb_ring = ((LAPLACIAN[0][0] << KERNEL_PRESCALE_SHIFT) as i8) as u8 as usize;
-        let mut tap_center = [0i32; 256];
-        let mut tap_ring = [0i32; 256];
+        let mut tap_center = Box::new([0i64; 256]);
+        let mut tap_ring = Box::new([0i64; 256]);
         for px in 0..256usize {
             let row = (px >> PIXEL_SHIFT) << 8;
-            tap_center[px] = lut[row | kb_center];
-            tap_ring[px] = lut[row | kb_ring];
+            tap_center[px] = lut[row | kb_center] as i64;
+            tap_ring[px] = lut[row | kb_ring] as i64;
         }
         Self { name: name.to_string(), lut, tap_center, tap_ring }
     }
 
     pub fn lut(&self) -> &[i32] {
         &self.lut
-    }
-
-    /// Specialised Laplacian tile convolution over the folded tap tables.
-    fn conv_tile_fast(&self, tile: &Tile) -> TileOut {
-        let mut data = vec![0u8; tile.core_w * tile.core_h];
-        let tc = &self.tap_center;
-        let tr = &self.tap_ring;
-        let src = &tile.data;
-        for cy in 0..tile.core_h {
-            let r0 = &src[cy * TILE_IN..cy * TILE_IN + tile.core_w + 2];
-            let r1 = &src[(cy + 1) * TILE_IN..(cy + 1) * TILE_IN + tile.core_w + 2];
-            let r2 = &src[(cy + 2) * TILE_IN..(cy + 2) * TILE_IN + tile.core_w + 2];
-            let out_row = &mut data[cy * tile.core_w..(cy + 1) * tile.core_w];
-            for (cx, out_px) in out_row.iter_mut().enumerate() {
-                let acc = tr[r0[cx] as usize] as i64
-                    + tr[r0[cx + 1] as usize] as i64
-                    + tr[r0[cx + 2] as usize] as i64
-                    + tr[r1[cx] as usize] as i64
-                    + tc[r1[cx + 1] as usize] as i64
-                    + tr[r1[cx + 2] as usize] as i64
-                    + tr[r2[cx] as usize] as i64
-                    + tr[r2[cx + 1] as usize] as i64
-                    + tr[r2[cx + 2] as usize] as i64;
-                *out_px = postprocess(acc);
-            }
-        }
-        TileOut {
-            job_id: tile.job_id,
-            x0: tile.x0,
-            y0: tile.y0,
-            core_w: tile.core_w,
-            core_h: tile.core_h,
-            data,
-        }
     }
 }
 
@@ -141,7 +143,10 @@ impl TileEngine for LutTileEngine {
     }
 
     fn process_batch(&self, tiles: &[Tile]) -> Vec<TileOut> {
-        tiles.iter().map(|t| self.conv_tile_fast(t)).collect()
+        tiles
+            .iter()
+            .map(|t| conv_tile_taps(t, &self.tap_center, &self.tap_ring))
+            .collect()
     }
 }
 
@@ -244,6 +249,63 @@ impl TileEngine for RowbufTileEngine {
     }
 }
 
+/// Gate-level serving engine: the design's per-coefficient tap tables are
+/// computed by running its *netlist* through the bitsliced 64-lane
+/// simulator ([`crate::netlist::bitslice::BitSim`]) at construction — 256
+/// operand pairs in 4 netlist passes — so the serving path computes what
+/// the hardware computes, not what the functional model claims. Works for
+/// any design width in `8..=31` (the LUT engine is 8-bit only); the
+/// per-tile convolution then matches the LUT engine's folded-tap fast
+/// path.
+pub struct BitsimTileEngine {
+    name: String,
+    tap_center: Box<[i64; 256]>,
+    tap_ring: Box<[i64; 256]>,
+}
+
+impl BitsimTileEngine {
+    /// Width bounds: the pre-shifted pixel (0..=127) must fit the signed
+    /// operand range (N ≥ 8) and the 2N-bit product bus must fit one
+    /// 64-bit simulator code (N ≤ 31).
+    pub fn new(model: &dyn MultiplierModel) -> Self {
+        let n = model.bits();
+        assert!((8..=31).contains(&n), "bitsim engine supports 8..=31-bit designs");
+        let nl = model.build_netlist();
+        let k_center = ((LAPLACIAN[1][1] << KERNEL_PRESCALE_SHIFT) as i8) as i64;
+        let k_ring = ((LAPLACIAN[0][0] << KERNEL_PRESCALE_SHIFT) as i8) as i64;
+        // All distinct MAC operand pairs of the Laplacian datapath: every
+        // pre-shifted pixel value × the two pre-scaled coefficients. The
+        // domain is derived from PIXEL_SHIFT so the tap fold below can
+        // never index past the product list.
+        let dom = 256usize >> PIXEL_SHIFT;
+        let pairs: Vec<(i64, i64)> = (0..dom as i64)
+            .flat_map(|px| [(px, k_center), (px, k_ring)])
+            .collect();
+        let products = crate::multipliers::verify::netlist_multiply_batch(&nl, n, &pairs);
+        let mut tap_center = Box::new([0i64; 256]);
+        let mut tap_ring = Box::new([0i64; 256]);
+        for px in 0..256usize {
+            let shifted = px >> PIXEL_SHIFT;
+            tap_center[px] = products[2 * shifted];
+            tap_ring[px] = products[2 * shifted + 1];
+        }
+        Self { name: format!("bitsim:{}", model.name()), tap_center, tap_ring }
+    }
+}
+
+impl TileEngine for BitsimTileEngine {
+    fn name(&self) -> String {
+        self.name.clone()
+    }
+
+    fn process_batch(&self, tiles: &[Tile]) -> Vec<TileOut> {
+        tiles
+            .iter()
+            .map(|t| conv_tile_taps(t, &self.tap_center, &self.tap_ring))
+            .collect()
+    }
+}
+
 /// Model-backed engine: calls the multiplier functional model directly
 /// (slow reference; used to validate the LUT and PJRT engines).
 pub struct ModelTileEngine {
@@ -305,6 +367,41 @@ mod tests {
         let b = slow.process_batch(&tiles);
         for (x, y) in a.iter().zip(b.iter()) {
             assert_eq!(x.data, y.data);
+        }
+    }
+
+    /// The gate-level bitsim engine is bit-exact with the LUT engine for
+    /// 8-bit designs (netlist ≡ model is proved exhaustively elsewhere),
+    /// including on partial edge tiles.
+    #[test]
+    fn bitsim_engine_equals_lut_engine() {
+        for id in [DesignId::Exact, DesignId::Proposed] {
+            let model = build_design(id, 8);
+            let img = synthetic_scene(150, 90, 17);
+            let tiles = tile_image(3, &img);
+            let lut = LutTileEngine::new(model.as_ref());
+            let bitsim = BitsimTileEngine::new(model.as_ref());
+            let a = lut.process_batch(&tiles);
+            let b = bitsim.process_batch(&tiles);
+            for (x, y) in a.iter().zip(b.iter()) {
+                assert_eq!(x.data, y.data, "{id:?} tile at ({},{})", x.x0, x.y0);
+            }
+        }
+    }
+
+    /// For wide designs (no LUT possible) the bitsim engine must agree
+    /// with the functional-model engine.
+    #[test]
+    fn bitsim_engine_equals_model_engine_wide() {
+        let model = crate::multipliers::registry().build_str("proposed@16").unwrap();
+        let img = synthetic_scene(96, 70, 23);
+        let tiles = tile_image(4, &img);
+        let bitsim = BitsimTileEngine::new(model.as_ref());
+        let slow = ModelTileEngine::new(model);
+        let a = bitsim.process_batch(&tiles);
+        let b = slow.process_batch(&tiles);
+        for (x, y) in a.iter().zip(b.iter()) {
+            assert_eq!(x.data, y.data, "tile at ({},{})", x.x0, x.y0);
         }
     }
 

@@ -5,7 +5,7 @@
 //! # Engine grammar
 //!
 //! ```text
-//! engine := 'lut' | 'model' | 'rowbuf' | 'pjrt'
+//! engine := 'lut' | 'model' | 'rowbuf' | 'bitsim' | 'pjrt'
 //! ```
 //!
 //! * `lut` — in-process 256×256 product-table engine (8-bit designs only;
@@ -13,10 +13,15 @@
 //! * `model` — calls the multiplier functional model per MAC (any width;
 //!   the reference path).
 //! * `rowbuf` — the Fig. 8 streaming line-buffer datapath (any width).
+//! * `bitsim` — gate-level serving: tap tables swept out of the design's
+//!   netlist by the bitsliced 64-lane simulator at engine construction
+//!   (widths 8..=31) — batch jobs observe hardware truth.
 //! * `pjrt` — the AOT-compiled JAX/Pallas executable via PJRT (8-bit
 //!   designs; requires artifacts and the `pjrt` cargo feature).
 
-use super::engine::{LutTileEngine, ModelTileEngine, RowbufTileEngine, TileEngine};
+use super::engine::{
+    BitsimTileEngine, LutTileEngine, ModelTileEngine, RowbufTileEngine, TileEngine,
+};
 use crate::multipliers::spec::{registry, DesignSpec};
 use crate::multipliers::lut::product_table;
 use crate::runtime::{artifacts_available, artifacts_dir, pjrt_enabled, PjrtTileEngine};
@@ -34,6 +39,9 @@ pub enum EngineSpec {
     Model,
     /// Streaming row-buffer engine (paper Fig. 8 datapath).
     Rowbuf,
+    /// Gate-level engine: netlist products swept by the bitsliced
+    /// simulator (widths 8..=31).
+    Bitsim,
     /// AOT JAX/Pallas executable via PJRT.
     Pjrt,
 }
@@ -44,12 +52,19 @@ impl EngineSpec {
             EngineSpec::Lut => "lut",
             EngineSpec::Model => "model",
             EngineSpec::Rowbuf => "rowbuf",
+            EngineSpec::Bitsim => "bitsim",
             EngineSpec::Pjrt => "pjrt",
         }
     }
 
-    pub fn all() -> [EngineSpec; 4] {
-        [EngineSpec::Lut, EngineSpec::Model, EngineSpec::Rowbuf, EngineSpec::Pjrt]
+    pub fn all() -> [EngineSpec; 5] {
+        [
+            EngineSpec::Lut,
+            EngineSpec::Model,
+            EngineSpec::Rowbuf,
+            EngineSpec::Bitsim,
+            EngineSpec::Pjrt,
+        ]
     }
 }
 
@@ -67,9 +82,10 @@ impl FromStr for EngineSpec {
             "lut" => Ok(EngineSpec::Lut),
             "model" => Ok(EngineSpec::Model),
             "rowbuf" => Ok(EngineSpec::Rowbuf),
+            "bitsim" => Ok(EngineSpec::Bitsim),
             "pjrt" => Ok(EngineSpec::Pjrt),
             other => Err(Error::msg(format!(
-                "unknown engine {other:?} (lut | model | rowbuf | pjrt)"
+                "unknown engine {other:?} (lut | model | rowbuf | bitsim | pjrt)"
             ))),
         }
     }
@@ -90,6 +106,14 @@ pub fn resolve(engine: EngineSpec, design: &DesignSpec) -> crate::Result<Arc<dyn
         }
         EngineSpec::Model => Ok(Arc::new(ModelTileEngine::new(model))),
         EngineSpec::Rowbuf => Ok(Arc::new(RowbufTileEngine::new(model))),
+        EngineSpec::Bitsim => {
+            if !(8..=31).contains(&design.bits) {
+                return Err(Error::msg(format!(
+                    "engine bitsim requires an 8..=31-bit design (got {design})"
+                )));
+            }
+            Ok(Arc::new(BitsimTileEngine::new(model.as_ref())))
+        }
         EngineSpec::Pjrt => {
             if design.bits != 8 {
                 return Err(Error::msg(format!(
@@ -155,12 +179,15 @@ mod tests {
         let lut = resolve(EngineSpec::Lut, &design).unwrap();
         let model = resolve(EngineSpec::Model, &design).unwrap();
         let rowbuf = resolve(EngineSpec::Rowbuf, &design).unwrap();
+        let bitsim = resolve(EngineSpec::Bitsim, &design).unwrap();
         let a = lut.process_batch(&tiles);
         let b = model.process_batch(&tiles);
         let c = rowbuf.process_batch(&tiles);
-        for ((x, y), z) in a.iter().zip(b.iter()).zip(c.iter()) {
+        let d = bitsim.process_batch(&tiles);
+        for (((x, y), z), w) in a.iter().zip(b.iter()).zip(c.iter()).zip(d.iter()) {
             assert_eq!(x.data, y.data, "lut vs model");
             assert_eq!(x.data, z.data, "lut vs rowbuf");
+            assert_eq!(x.data, w.data, "lut vs bitsim");
         }
     }
 
@@ -170,6 +197,17 @@ mod tests {
         assert!(resolve(EngineSpec::Lut, &wide).is_err());
         let engine = resolve(EngineSpec::Model, &wide).unwrap();
         assert!(engine.name().contains("Proposed"));
+    }
+
+    /// The bitsim engine serves any width in 8..=31 and rejects the rest
+    /// (a 4-bit design cannot carry the pre-shifted pixel operand).
+    #[test]
+    fn bitsim_width_bounds() {
+        let wide: DesignSpec = "proposed@16".parse().unwrap();
+        let engine = resolve(EngineSpec::Bitsim, &wide).unwrap();
+        assert!(engine.name().starts_with("bitsim:"));
+        let narrow: DesignSpec = "proposed@4".parse().unwrap();
+        assert!(resolve(EngineSpec::Bitsim, &narrow).is_err());
     }
 
     #[test]

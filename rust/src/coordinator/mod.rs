@@ -30,7 +30,8 @@ pub mod service;
 pub mod tiler;
 
 pub use engine::{
-    DualModeTileEngine, LutTileEngine, ModelTileEngine, Quality, RowbufTileEngine, TileEngine,
+    BitsimTileEngine, DualModeTileEngine, LutTileEngine, ModelTileEngine, Quality,
+    RowbufTileEngine, TileEngine,
 };
 pub use engines::{resolve, resolve_str, resolve_with_fallback, EngineSpec};
 pub use job::{EdgeJob, JobResult};

@@ -9,7 +9,14 @@
 //!   convention used throughout the approximate-arithmetic literature).
 //! * **ME** — signed mean error (bias); not printed by the paper but
 //!   essential for diagnosing compensation quality.
+//!
+//! Two exhaustive entry points share one accumulator: [`error_metrics`]
+//! sweeps the functional model, [`error_metrics_netlist`] sweeps the
+//! gate-level netlist through the bitsliced 64-lane simulator
+//! ([`crate::netlist::bitslice::BitSim`]) — the paper-table path.
 
+use crate::multipliers::traits::{from_bits, mask};
+use crate::multipliers::verify::netlist_multiply_all;
 use crate::multipliers::MultiplierModel;
 use crate::util::prng::Xoshiro256;
 
@@ -29,11 +36,12 @@ pub struct ErrorMetrics {
     pub pairs: usize,
 }
 
+/// Accumulate metrics over `(a, b, approx)` triples — the shared core of
+/// the functional-model and netlist-backed entry points.
 fn accumulate(
     name: String,
     n: usize,
-    pairs: impl Iterator<Item = (i64, i64)>,
-    model: &dyn MultiplierModel,
+    triples: impl Iterator<Item = (i64, i64, i64)>,
 ) -> ErrorMetrics {
     let max_exact = 1i64 << (2 * n - 2);
     let mut count = 0usize;
@@ -43,9 +51,8 @@ fn accumulate(
     let mut sum_red = 0f64;
     let mut red_count = 0usize;
     let mut max_ed = 0i64;
-    for (a, b) in pairs {
+    for (a, b, approx) in triples {
         let exact = a * b;
-        let approx = model.multiply(a, b);
         let e = approx - exact;
         count += 1;
         if e != 0 {
@@ -72,13 +79,42 @@ fn accumulate(
     }
 }
 
-/// Exhaustive metrics over all `4^N` signed pairs (use for N ≤ 10).
+/// Exhaustive metrics over all `4^N` signed pairs (use for N ≤ 10),
+/// computed from the *functional model*.
 pub fn error_metrics(model: &dyn MultiplierModel) -> ErrorMetrics {
     let n = model.bits();
     assert!(n <= 10, "exhaustive metrics limited to N<=10; use _sampled");
     let half = 1i64 << (n - 1);
     let pairs = (-half..half).flat_map(move |a| (-half..half).map(move |b| (a, b)));
-    accumulate(model.name(), n, pairs, model)
+    accumulate(
+        model.name(),
+        n,
+        pairs.map(|(a, b)| (a, b, model.multiply(a, b))),
+    )
+}
+
+/// Exhaustive metrics over all `4^N` signed pairs (N ≤ 10) measured on
+/// the *gate-level netlist*: products come from a bitsliced sweep
+/// ([`netlist_multiply_all`], 64 operand pairs per netlist pass) rather
+/// than the functional model. This is the path the paper tables run
+/// through — the reported numbers are hardware truth by construction,
+/// independent of the model/netlist equivalence the test suite proves
+/// separately.
+pub fn error_metrics_netlist(model: &dyn MultiplierModel) -> ErrorMetrics {
+    let n = model.bits();
+    assert!(n <= 10, "exhaustive netlist metrics limited to N<=10");
+    let nl = model.build_netlist();
+    let products = netlist_multiply_all(&nl, n);
+    let m = mask(n);
+    accumulate(
+        model.name(),
+        n,
+        products.into_iter().enumerate().map(move |(idx, p)| {
+            let a = from_bits((idx >> n) as u64, n);
+            let b = from_bits(idx as u64 & m, n);
+            (a, b, p)
+        }),
+    )
 }
 
 /// Monte-Carlo metrics over `samples` uniform pairs (wide operands).
@@ -89,7 +125,11 @@ pub fn error_metrics_sampled(model: &dyn MultiplierModel, samples: usize, seed: 
     let pairs = (0..samples).map(move |_| {
         (rng.range_i64(-half, half - 1), rng.range_i64(-half, half - 1))
     });
-    accumulate(model.name(), n, pairs, model)
+    accumulate(
+        model.name(),
+        n,
+        pairs.map(|(a, b)| (a, b, model.multiply(a, b))),
+    )
 }
 
 #[cfg(test)]
@@ -132,6 +172,33 @@ mod tests {
             assert!(e.er > 0.9, "{id:?}: ER {}", e.er);
             assert!(e.nmed > 0.001 && e.nmed < 0.05, "{id:?}: NMED {}", e.nmed);
             assert!(e.mred > 0.05 && e.mred < 0.9, "{id:?}: MRED {}", e.mred);
+        }
+    }
+
+    /// The netlist-backed (bitsliced) metrics must agree field-for-field
+    /// with the functional-model metrics: the two forms are proved
+    /// bit-exact at N=8, so any divergence here is a sweep-plumbing bug.
+    #[test]
+    fn netlist_metrics_equal_model_metrics() {
+        for id in [DesignId::Proposed, DesignId::Exact, DesignId::D2] {
+            let m = build_design(id, 8);
+            let via_model = error_metrics(m.as_ref());
+            let via_netlist = error_metrics_netlist(m.as_ref());
+            assert_eq!(via_model.pairs, via_netlist.pairs, "{id:?}");
+            assert_eq!(via_model.er, via_netlist.er, "{id:?}");
+            assert_eq!(via_model.med, via_netlist.med, "{id:?}");
+            assert_eq!(via_model.nmed, via_netlist.nmed, "{id:?}");
+            // MRED sums non-integer ratios, so the different sweep orders
+            // may accumulate rounding differently; everything else is
+            // integer-exact in f64 and must match bit-for-bit.
+            assert!(
+                (via_model.mred - via_netlist.mred).abs() < 1e-9,
+                "{id:?}: mred {} vs {}",
+                via_model.mred,
+                via_netlist.mred
+            );
+            assert_eq!(via_model.me, via_netlist.me, "{id:?}");
+            assert_eq!(via_model.max_ed, via_netlist.max_ed, "{id:?}");
         }
     }
 

@@ -11,9 +11,11 @@
 //!   thread pool) built from scratch because the build environment is
 //!   fully offline.
 //! * [`netlist`] — a miniature gate-level EDA toolkit: netlist construction,
-//!   bit-parallel functional simulation, static timing, unit-gate area and
-//!   switching-activity power models. This substitutes for the paper's
-//!   Synopsys DC + UMC 90nm flow.
+//!   functional simulation (scalar reference, word-level packed, and the
+//!   bitsliced 64-lane batch engine [`netlist::bitslice::BitSim`] with its
+//!   bit-matrix transposition layer — the substrate of every operand-space
+//!   sweep), static timing, unit-gate area and switching-activity power
+//!   models. This substitutes for the paper's Synopsys DC + UMC 90nm flow.
 //! * [`circuits`] — generic adder/compressor building blocks (HA, FA, the
 //!   3:2 compressor of paper ref. [8], exact 4:2, ripple/carry-save adders,
 //!   Dadda-style column reduction).

@@ -13,8 +13,8 @@
 //! Design specs (`--design` / `--designs`) follow the grammar of
 //! `multipliers::spec`: `family[@bits][:trunc=...][:comp=...]`, e.g.
 //! `proposed@8`, `proposed@16:comp=const`, `d2@8:trunc=none`. Engine
-//! specs (`--engine`) are one of `lut | model | rowbuf | pjrt`, resolved
-//! through `coordinator::engines::resolve`.
+//! specs (`--engine`) are one of `lut | model | rowbuf | bitsim | pjrt`,
+//! resolved through `coordinator::engines::resolve`.
 
 use sfcmul::coordinator::{engines, Coordinator, CoordinatorConfig, EngineSpec, TileEngine};
 use sfcmul::image::{edge_detect, synthetic_scene, Image};
@@ -48,7 +48,8 @@ USAGE: sfcmul <subcommand> [options]
 design SPEC grammar:  family[@bits][:trunc=paper|none|K][:comp=paper|none|const]
   families: exact, proposed, d1, d2, d4, d5, d7, d12   (default bits: 8)
   examples: proposed@8   proposed@16:comp=const   d2@8:trunc=none   exact@16
-engine SPEC: lut (8-bit table, default) | model (any width) | rowbuf | pjrt
+engine SPEC: lut (8-bit table, default) | model (any width) | rowbuf
+             | bitsim (gate-level netlist via bitsliced sim, widths 8..=31) | pjrt
 ";
 
 fn main() {

@@ -57,7 +57,7 @@ impl MultiplierModel for BoothRadix4 {
             let b_mid = (ub >> (2 * i)) & 1;
             let b_lo = if i == 0 { 0 } else { (ub >> (2 * i - 1)) & 1 };
             let d: i64 = (b_mid + b_lo) as i64 - 2 * b_hi as i64;
-            acc += d * a << (2 * i);
+            acc += (d * a) << (2 * i);
         }
         from_bits(to_bits(acc, 2 * n), 2 * n)
     }

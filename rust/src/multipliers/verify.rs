@@ -1,66 +1,71 @@
 //! Netlist ↔ functional-model equivalence checking.
 //!
-//! Uses the packed simulator to run 64 operand pairs per netlist pass, so
-//! the exhaustive N=8 sweep (65 536 pairs) is ~1 000 passes. Widths above
-//! 8 are checked by random sampling ([`sampled_check`]) — 10 000 pairs is
+//! All netlist evaluation routes through the bitsliced engine
+//! ([`crate::netlist::bitslice::BitSim`]): operand pairs are encoded as
+//! input codes (`a` in bits `0..N`, `b` in bits `N..2N` — the netlists'
+//! `a0..a{N-1}, b0..b{N-1}` input order), transposed into bit-planes 64
+//! lanes at a time, and simulated in one pass per 64 pairs. The
+//! exhaustive N=8 sweep (65 536 pairs) is ~1 000 passes; widths above 10
+//! are checked by random sampling ([`sampled_check`]) — 10 000 pairs is
 //! ~160 passes.
 
-use super::traits::{from_bits, to_bits, MultiplierModel};
-use crate::netlist::sim::{pack_int_lane, unpack_int_lane, PackedSim};
+use super::traits::{from_bits, mask, to_bits, MultiplierModel};
+use crate::netlist::bitslice::BitSim;
 use crate::netlist::Netlist;
 use crate::util::prng::Xoshiro256;
+
+/// Concatenated input code of an operand pair for an N-bit multiplier
+/// netlist (inputs `a0..a{N-1}, b0..b{N-1}`, LSB first): bit `i` drives
+/// `a_i`, bit `N+j` drives `b_j`.
+#[inline]
+pub fn operand_code(a: i64, b: i64, n: usize) -> u64 {
+    debug_assert!(2 * n <= 64, "2N-bit code must fit one u64");
+    to_bits(a, n) | (to_bits(b, n) << n)
+}
 
 /// Run one (a, b) pair through a multiplier netlist built with input buses
 /// `a0..`, `b0..` and output bus `p0..p{2N-1}`.
 pub fn netlist_multiply_one(nl: &Netlist, n: usize, a: i64, b: i64) -> i64 {
-    let mut sim = PackedSim::new(nl);
-    let mut inputs = vec![0u64; 2 * n];
-    pack_int_lane(&mut inputs, 0, 0, to_bits(a, n), n);
-    pack_int_lane(&mut inputs, 0, n, to_bits(b, n), n);
-    let outs = sim.run_outputs(nl, &inputs);
-    from_bits(unpack_int_lane(&outs, 0), 2 * n)
+    let mut sim = BitSim::new(nl);
+    bitsim_multiply_batch(&mut sim, n, &[(a, b)])[0]
+}
+
+/// Run a batch of pairs through a caller-held simulator (amortises the
+/// [`BitSim`] construction across many batches on the hot path).
+pub fn bitsim_multiply_batch(sim: &mut BitSim, n: usize, pairs: &[(i64, i64)]) -> Vec<i64> {
+    let codes: Vec<u64> = pairs.iter().map(|&(a, b)| operand_code(a, b, n)).collect();
+    sim.run_code_batch(&codes).into_iter().map(|c| from_bits(c, 2 * n)).collect()
 }
 
 /// Run a batch of pairs (up to arbitrary length) and return products in
 /// order.
 pub fn netlist_multiply_batch(nl: &Netlist, n: usize, pairs: &[(i64, i64)]) -> Vec<i64> {
-    let mut sim = PackedSim::new(nl);
-    let mut out = Vec::with_capacity(pairs.len());
-    for chunk in pairs.chunks(64) {
-        let mut inputs = vec![0u64; 2 * n];
-        for (lane, &(a, b)) in chunk.iter().enumerate() {
-            pack_int_lane(&mut inputs, lane, 0, to_bits(a, n), n);
-            pack_int_lane(&mut inputs, lane, n, to_bits(b, n), n);
-        }
-        let outs = sim.run_outputs(nl, &inputs);
-        for lane in 0..chunk.len() {
-            out.push(from_bits(unpack_int_lane(&outs, lane), 2 * n));
-        }
-    }
-    out
+    let mut sim = BitSim::new(nl);
+    bitsim_multiply_batch(&mut sim, n, pairs)
 }
 
-/// Exhaustively evaluate an N≤8 multiplier netlist over all `4^N` operand
+/// Exhaustively evaluate an N≤10 multiplier netlist over all `4^N` operand
 /// pairs. Result index = `(a_bits << N) | b_bits` (unsigned bit patterns).
 pub fn netlist_multiply_all(nl: &Netlist, n: usize) -> Vec<i64> {
-    assert!(n <= 8, "exhaustive sweep limited to N<=8");
+    assert!(n <= 10, "exhaustive sweep limited to N<=10");
     let total = 1usize << (2 * n);
-    let mut sim = PackedSim::new(nl);
+    let m = mask(n);
+    let mut sim = BitSim::new(nl);
     let mut out = Vec::with_capacity(total);
+    let mut codes = [0u64; 64];
+    let mut products = [0u64; 64];
     let mut idx = 0usize;
     while idx < total {
         let lanes = (total - idx).min(64);
-        let mut inputs = vec![0u64; 2 * n];
-        for lane in 0..lanes {
+        for (lane, c) in codes.iter_mut().take(lanes).enumerate() {
             let code = (idx + lane) as u64;
-            let ua = code >> n;
-            let ub = code & super::traits::mask(n);
-            pack_int_lane(&mut inputs, lane, 0, ua, n);
-            pack_int_lane(&mut inputs, lane, n, ub, n);
+            // result index is (a << N) | b; the input code carries a in
+            // its low N bits and b above
+            *c = (code >> n) | ((code & m) << n);
         }
-        let outs = sim.run_outputs(nl, &inputs);
-        for lane in 0..lanes {
-            out.push(from_bits(unpack_int_lane(&outs, lane), 2 * n));
+        sim.run_codes_into(&codes[..lanes], &mut products[..lanes]);
+        for &p in &products[..lanes] {
+            out.push(from_bits(p, 2 * n));
         }
         idx += lanes;
     }
@@ -68,10 +73,10 @@ pub fn netlist_multiply_all(nl: &Netlist, n: usize) -> Vec<i64> {
 }
 
 /// Verify that `model.multiply` and the built netlist agree on *every*
-/// operand pair (N ≤ 8). Returns the first mismatch as an error message.
+/// operand pair (N ≤ 10). Returns the first mismatch as an error message.
 pub fn exhaustive_check(model: &dyn MultiplierModel) -> Result<(), String> {
     let n = model.bits();
-    assert!(n <= 8);
+    assert!(n <= 10);
     let nl = model.build_netlist();
     let hw = netlist_multiply_all(&nl, n);
     for (idx, &hw_p) in hw.iter().enumerate() {

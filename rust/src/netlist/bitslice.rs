@@ -1,0 +1,273 @@
+//! Bitsliced batch simulation: 64 independent vectors per netlist pass,
+//! with a word-level transposition layer for operand marshalling.
+//!
+//! [`super::sim::PackedSim`] evaluates 64 lanes per pass but leaves lane
+//! packing to its callers, which assemble the per-input planes one bit at
+//! a time ([`super::sim::pack_int_lane`] — O(lanes × bits) single-bit
+//! stores per batch, plus a re-borrowed gate walk per call). [`BitSim`]
+//! is the batch engine the operand-sweep hot paths run on. It keeps the
+//! exact topological-order semantics of the scalar simulator
+//! ([`super::sim::eval_bool`]) and adds:
+//!
+//! * an owned, compact copy of the gate program, so one instance streams
+//!   arbitrarily many batches without touching the source [`Netlist`];
+//! * a transposition layer that moves whole *input codes* — one `u64`
+//!   per lane whose bit `i` drives primary input `i` — between
+//!   lane-major and plane-major layout via a 64×64 bit-matrix transpose
+//!   ([`transpose64`], O(64·log 64) word ops per batch);
+//! * ragged-batch handling: batch lengths that are not a multiple of 64
+//!   zero-pad the spare lanes and discard their outputs.
+//!
+//! The exhaustive and sampled multiplier sweeps
+//! ([`crate::multipliers::verify`]), the error-metric tables and the
+//! `bitsim` serving engine all route through this module.
+
+use super::builder::{Gate, Netlist, SigId};
+use super::gate::GateKind;
+
+/// In-place transpose of a 64×64 bit matrix, LSB-first convention:
+/// element `(r, c)` lives at bit `c` of `m[r]`, and after the call
+/// `m[r]` bit `c` holds the old `m[c]` bit `r`.
+///
+/// Classic recursive block-swap (Hacker's Delight §7-3, mirrored for the
+/// LSB-first layout): log2(64) = 6 rounds, each exchanging the
+/// off-diagonal halves of progressively smaller blocks.
+pub fn transpose64(m: &mut [u64; 64]) {
+    let mut j = 32usize;
+    let mut mask: u64 = 0x0000_0000_FFFF_FFFF;
+    while j != 0 {
+        let mut k = 0usize;
+        while k < 64 {
+            let t = ((m[k] >> j) ^ m[k | j]) & mask;
+            m[k | j] ^= t;
+            m[k] ^= t << j;
+            k = ((k | j) + 1) & !j;
+        }
+        j >>= 1;
+        mask ^= mask << j;
+    }
+}
+
+/// Bitsliced netlist simulator: one `u64` bit-plane per signal, 64 lanes
+/// per pass. Create once per netlist and reuse across batches — the gate
+/// program is copied out of the [`Netlist`] at construction and the plane
+/// buffer is recycled call to call.
+pub struct BitSim {
+    name: String,
+    gates: Vec<Gate>,
+    input_ids: Vec<SigId>,
+    output_ids: Vec<SigId>,
+    planes: Vec<u64>,
+}
+
+impl BitSim {
+    pub fn new(netlist: &Netlist) -> Self {
+        Self {
+            name: netlist.name.clone(),
+            gates: netlist.gates().to_vec(),
+            input_ids: netlist.inputs().to_vec(),
+            output_ids: netlist.output_ids(),
+            planes: vec![0; netlist.len()],
+        }
+    }
+
+    /// Name of the netlist this simulator was compiled from.
+    pub fn name(&self) -> &str {
+        &self.name
+    }
+
+    /// Number of primary inputs.
+    pub fn num_inputs(&self) -> usize {
+        self.input_ids.len()
+    }
+
+    /// Number of registered outputs.
+    pub fn num_outputs(&self) -> usize {
+        self.output_ids.len()
+    }
+
+    /// One forward pass over the gate list: `inputs[k]` is the 64-lane
+    /// plane driving the k-th primary input. Returns the full plane
+    /// vector (one word per signal); index with the netlist's signal ids.
+    /// Identical semantics to [`super::sim::PackedSim::run`].
+    pub fn run_planes(&mut self, inputs: &[u64]) -> &[u64] {
+        assert_eq!(inputs.len(), self.input_ids.len(), "input arity mismatch");
+        let gates = &self.gates;
+        let planes = &mut self.planes;
+        for (k, &id) in self.input_ids.iter().enumerate() {
+            planes[id as usize] = inputs[k];
+        }
+        for (i, g) in gates.iter().enumerate() {
+            if matches!(g.kind, GateKind::Input) {
+                continue; // plane pre-filled above
+            }
+            let a = planes[g.ins[0] as usize];
+            let b = planes[g.ins[1] as usize];
+            let c = planes[g.ins[2] as usize];
+            planes[i] = g.kind.eval_packed(a, b, c);
+        }
+        &self.planes
+    }
+
+    /// Evaluate up to 64 lanes given *input codes*: `codes[lane]` bit `i`
+    /// drives primary input `i` of lane `lane`. Writes one *output code*
+    /// per lane into `out` (bit `j` = registered output `j`). Spare lanes
+    /// are driven with all-zero inputs. Requires ≤ 64 inputs and ≤ 64
+    /// outputs (a 2N-bit multiplier bus fits for any N ≤ 32).
+    pub fn run_codes_into(&mut self, codes: &[u64], out: &mut [u64]) {
+        assert!(codes.len() <= 64, "at most 64 lanes per pass");
+        assert_eq!(codes.len(), out.len());
+        assert!(
+            self.input_ids.len() <= 64 && self.output_ids.len() <= 64,
+            "code interface requires <=64 inputs and outputs"
+        );
+        let mut lanes = [0u64; 64];
+        lanes[..codes.len()].copy_from_slice(codes);
+        transpose64(&mut lanes);
+        // planes: lanes[i] bit l = codes[l] bit i — exactly input i's plane
+        let num_inputs = self.input_ids.len();
+        self.run_planes(&lanes[..num_inputs]);
+        let mut gathered = [0u64; 64];
+        for (j, &id) in self.output_ids.iter().enumerate() {
+            gathered[j] = self.planes[id as usize];
+        }
+        transpose64(&mut gathered);
+        // gathered[l] bit j = output j of lane l
+        out.copy_from_slice(&gathered[..codes.len()]);
+    }
+
+    /// Run an arbitrary-length batch of input codes, 64 lanes per pass,
+    /// returning one output code per input code in order. Ragged tails
+    /// (batch length not a multiple of 64) are padded internally.
+    pub fn run_code_batch(&mut self, codes: &[u64]) -> Vec<u64> {
+        let mut out = vec![0u64; codes.len()];
+        for (ic, oc) in codes.chunks(64).zip(out.chunks_mut(64)) {
+            self.run_codes_into(ic, oc);
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::netlist::sim::{eval_outputs_bool, pack_vectors, PackedSim};
+    use crate::util::prng::Xoshiro256;
+
+    /// Naive reference transpose under the LSB-first convention.
+    fn transpose_naive(m: &[u64; 64]) -> [u64; 64] {
+        let mut out = [0u64; 64];
+        for r in 0..64 {
+            for c in 0..64 {
+                if (m[c] >> r) & 1 != 0 {
+                    out[r] |= 1 << c;
+                }
+            }
+        }
+        out
+    }
+
+    #[test]
+    fn transpose_matches_naive_on_random_matrices() {
+        let mut rng = Xoshiro256::seeded(99);
+        for _ in 0..20 {
+            let mut m = [0u64; 64];
+            for w in m.iter_mut() {
+                *w = rng.next_u64();
+            }
+            let want = transpose_naive(&m);
+            let mut got = m;
+            transpose64(&mut got);
+            assert_eq!(got, want);
+            // involution: transposing twice restores the original
+            transpose64(&mut got);
+            assert_eq!(got, m);
+        }
+    }
+
+    #[test]
+    fn transpose_known_patterns() {
+        // identity matrix is its own transpose
+        let mut ident = [0u64; 64];
+        for (r, w) in ident.iter_mut().enumerate() {
+            *w = 1 << r;
+        }
+        let mut t = ident;
+        transpose64(&mut t);
+        assert_eq!(t, ident);
+        // single off-diagonal bit moves to its mirrored position
+        let mut m = [0u64; 64];
+        m[3] = 1 << 17; // (r=3, c=17)
+        transpose64(&mut m);
+        assert_eq!(m[17], 1 << 3);
+        assert_eq!(m.iter().map(|w| w.count_ones()).sum::<u32>(), 1);
+    }
+
+    fn toy_netlist() -> Netlist {
+        // f = (a & b) ^ c ; g = maj(a, b, c) — as in sim.rs tests
+        let mut n = Netlist::new("toy");
+        let a = n.input("a");
+        let b = n.input("b");
+        let c = n.input("c");
+        let ab = n.and2(a, b);
+        let f = n.xor2(ab, c);
+        let g = n.maj3(a, b, c);
+        n.output("f", f);
+        n.output("g", g);
+        n
+    }
+
+    #[test]
+    fn run_planes_matches_packed_sim() {
+        let n = toy_netlist();
+        let mut rng = Xoshiro256::seeded(7);
+        let vectors: Vec<Vec<bool>> =
+            (0..64).map(|_| (0..3).map(|_| rng.chance(0.5)).collect()).collect();
+        let inputs = pack_vectors(&vectors, 3);
+        let mut packed = PackedSim::new(&n);
+        let mut bit = BitSim::new(&n);
+        assert_eq!(packed.run(&n, &inputs), bit.run_planes(&inputs));
+    }
+
+    #[test]
+    fn codes_match_scalar_truth_table() {
+        let n = toy_netlist();
+        let mut sim = BitSim::new(&n);
+        // all 8 input combinations as one ragged chunk
+        let codes: Vec<u64> = (0..8).collect();
+        let out = sim.run_code_batch(&codes);
+        for (lane, &oc) in out.iter().enumerate() {
+            let bits = [lane & 1 != 0, lane & 2 != 0, lane & 4 != 0];
+            let want = eval_outputs_bool(&n, &bits);
+            assert_eq!(oc & 1 != 0, want[0], "lane {lane} output f");
+            assert_eq!((oc >> 1) & 1 != 0, want[1], "lane {lane} output g");
+            assert_eq!(oc >> 2, 0, "lane {lane}: only two outputs");
+        }
+    }
+
+    #[test]
+    fn ragged_chunk_equals_full_chunk_prefix() {
+        let n = toy_netlist();
+        let mut sim = BitSim::new(&n);
+        let full: Vec<u64> = (0..64).map(|i| i % 8).collect();
+        let want = sim.run_code_batch(&full);
+        for len in [1usize, 5, 63] {
+            let got = sim.run_code_batch(&full[..len]);
+            assert_eq!(got, want[..len], "len {len}");
+        }
+    }
+
+    #[test]
+    fn reuse_does_not_leak_state() {
+        let n = toy_netlist();
+        let mut sim = BitSim::new(&n);
+        let a = sim.run_code_batch(&[0b111, 0b000]);
+        let noise = sim.run_code_batch(&[0b101; 64]);
+        assert_eq!(noise.len(), 64);
+        let b = sim.run_code_batch(&[0b111, 0b000]);
+        assert_eq!(a, b);
+        assert_eq!(sim.name(), "toy");
+        assert_eq!(sim.num_inputs(), 3);
+        assert_eq!(sim.num_outputs(), 2);
+    }
+}

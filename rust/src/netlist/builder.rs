@@ -375,25 +375,22 @@ impl Netlist {
                         let tt = (f(false, false), f(false, true), f(true, false), f(true, true));
                         let sp = rest[0];
                         let sq = rest[1];
-                        let mat = |out: &mut Netlist, k0: &mut Option<SigId>, k1: &mut Option<SigId>, v: V| {
-                            materialize(out, k0, k1, v)
-                        };
                         match tt {
                             (false, false, false, false) => V::K0,
                             (true, true, true, true) => V::K1,
                             (false, false, true, true) => sp,
                             (true, true, false, false) => {
-                                let s = mat(&mut out, &mut k0, &mut k1, sp);
+                                let s = materialize(&mut out, &mut k0, &mut k1, sp);
                                                                 V::Sig(out.not(s))
                             }
                             (false, true, false, true) => sq,
                             (true, false, true, false) => {
-                                let s = mat(&mut out, &mut k0, &mut k1, sq);
+                                let s = materialize(&mut out, &mut k0, &mut k1, sq);
                                                                 V::Sig(out.not(s))
                             }
                             _ => {
-                                let p = mat(&mut out, &mut k0, &mut k1, sp);
-                                let q = mat(&mut out, &mut k0, &mut k1, sq);
+                                let p = materialize(&mut out, &mut k0, &mut k1, sp);
+                                let q = materialize(&mut out, &mut k0, &mut k1, sq);
                                                                 V::Sig(match tt {
                                     (false, false, false, true) => out.and2(p, q),
                                     (false, true, true, true) => out.or2(p, q),

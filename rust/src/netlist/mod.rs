@@ -8,10 +8,15 @@
 //! * [`builder`] — [`Netlist`] construction: a netlist is an append-only DAG
 //!   of gates; construction order is a topological order by design, so
 //!   simulation and timing are single linear passes.
-//! * [`sim`] — functional simulation. The workhorse is *bit-parallel*
-//!   evaluation: 64 independent test vectors are packed into each `u64`
-//!   word, so an exhaustive 8×8-multiplier sweep (65 536 vectors) costs
-//!   only 1024 netlist passes. A scalar reference evaluator cross-checks it.
+//! * [`sim`] — functional simulation: a scalar reference evaluator plus
+//!   the word-level 64-lane [`sim::PackedSim`].
+//! * [`bitslice`] — the bitsliced *batch* engine ([`bitslice::BitSim`]):
+//!   each net is a `u64` bit-plane, so one pass over the gate list
+//!   simulates 64 independent vectors, and a 64×64 bit-matrix transpose
+//!   marshals whole operand batches between lane-major integer codes and
+//!   plane-major simulator layout. An exhaustive 8×8-multiplier sweep
+//!   (65 536 vectors) costs only 1024 netlist passes; this is the engine
+//!   behind every operand-space sweep in the crate.
 //! * [`timing`] — static timing analysis (longest path by unit delays).
 //! * [`power`] — switching-activity power: toggle counts per net over a
 //!   vector sequence, weighted by driven capacitance.
@@ -23,8 +28,10 @@
 pub mod gate;
 pub mod builder;
 pub mod sim;
+pub mod bitslice;
 pub mod timing;
 pub mod power;
 
+pub use bitslice::BitSim;
 pub use builder::{Netlist, SigId};
 pub use gate::GateKind;

@@ -1,7 +1,12 @@
 //! Table 4: ER / NMED / MRED of every design, exhaustive over all 65 536
 //! signed 8-bit operand pairs (paper §5.1, Eqs. 7–8).
+//!
+//! Products come from the *gate-level netlists* via the bitsliced 64-lane
+//! sweep ([`crate::error::error_metrics_netlist`]), so this table reports
+//! hardware truth directly; the test suite separately proves the
+//! functional models bit-exact against the same netlists.
 
-use crate::error::error_metrics;
+use crate::error::error_metrics_netlist;
 use crate::multipliers::{build_design, DesignId};
 
 /// Paper's Table 4 values, for the side-by-side report.
@@ -20,7 +25,7 @@ pub fn rows() -> Vec<(DesignId, crate::error::ErrorMetrics)> {
         .into_iter()
         .map(|id| {
             let m = build_design(id, 8);
-            (id, error_metrics(m.as_ref()))
+            (id, error_metrics_netlist(m.as_ref()))
         })
         .collect()
 }

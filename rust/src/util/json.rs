@@ -38,12 +38,6 @@ impl Json {
         self
     }
 
-    pub fn to_string(&self) -> String {
-        let mut s = String::new();
-        self.write(&mut s);
-        s
-    }
-
     fn write(&self, out: &mut String) {
         match self {
             Json::Null => out.push_str("null"),
@@ -82,6 +76,16 @@ impl Json {
                 out.push('}');
             }
         }
+    }
+}
+
+/// Serialisation goes through `Display`, so `.to_string()` comes from the
+/// blanket `ToString` impl.
+impl std::fmt::Display for Json {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let mut s = String::new();
+        self.write(&mut s);
+        f.write_str(&s)
     }
 }
 

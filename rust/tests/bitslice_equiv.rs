@@ -1,0 +1,104 @@
+//! Tentpole equivalence suite: the bitsliced 64-lane engine
+//! (`netlist::bitslice::BitSim`) against the scalar reference simulator
+//! (`netlist::sim::eval_outputs_bool`), exhaustively at N=8 for every
+//! design in the registry, plus ragged-batch and wide-width coverage.
+
+use sfcmul::multipliers::traits::{from_bits, to_bits};
+use sfcmul::multipliers::verify::{
+    bitsim_multiply_batch, netlist_multiply_all, netlist_multiply_batch, netlist_multiply_one,
+};
+use sfcmul::multipliers::registry;
+use sfcmul::netlist::bitslice::BitSim;
+use sfcmul::netlist::sim::eval_outputs_bool;
+use sfcmul::netlist::Netlist;
+
+/// One product through the scalar (one-vector-at-a-time) simulator.
+fn scalar_multiply(nl: &Netlist, n: usize, a: i64, b: i64) -> i64 {
+    let ua = to_bits(a, n);
+    let ub = to_bits(b, n);
+    let mut inputs = vec![false; 2 * n];
+    for k in 0..n {
+        inputs[k] = (ua >> k) & 1 != 0;
+        inputs[n + k] = (ub >> k) & 1 != 0;
+    }
+    let outs = eval_outputs_bool(nl, &inputs);
+    let mut code = 0u64;
+    for (k, &bit) in outs.iter().enumerate() {
+        code |= (bit as u64) << k;
+    }
+    from_bits(code, 2 * n)
+}
+
+/// The headline guarantee: for every registered design family at N=8, the
+/// bitsliced sweep over all 65 536 operand pairs is bit-exact with the
+/// scalar simulator on the same netlist.
+#[test]
+fn bitsliced_equals_scalar_exhaustive_n8_every_design() {
+    for spec in registry().specs(8) {
+        let model = registry().build(&spec).unwrap_or_else(|e| panic!("{spec}: {e}"));
+        let nl = model.build_netlist();
+        let sweep = netlist_multiply_all(&nl, 8);
+        assert_eq!(sweep.len(), 65536, "{spec}");
+        for (idx, &p) in sweep.iter().enumerate() {
+            let a = from_bits((idx >> 8) as u64, 8);
+            let b = from_bits((idx & 0xFF) as u64, 8);
+            assert_eq!(p, scalar_multiply(&nl, 8, a, b), "{spec}: {a} * {b}");
+        }
+    }
+}
+
+/// Ragged batches — lengths that are not a multiple of 64 — agree with
+/// one-at-a-time evaluation and with the functional model.
+#[test]
+fn ragged_batches_match_one_by_one() {
+    let model = registry().build_str("proposed@8").unwrap();
+    let nl = model.build_netlist();
+    for len in [1usize, 63, 64, 65, 100, 129] {
+        let pairs: Vec<(i64, i64)> = (0..len)
+            .map(|i| {
+                let a = ((i * 37) % 256) as i64 - 128;
+                let b = ((i * 91 + 13) % 256) as i64 - 128;
+                (a, b)
+            })
+            .collect();
+        let batch = netlist_multiply_batch(&nl, 8, &pairs);
+        assert_eq!(batch.len(), len);
+        for (k, &(a, b)) in pairs.iter().enumerate() {
+            assert_eq!(batch[k], netlist_multiply_one(&nl, 8, a, b), "len {len} k {k}");
+            assert_eq!(batch[k], model.multiply(a, b), "len {len} k {k} vs model");
+        }
+    }
+}
+
+/// A reused simulator must be stateless across batches.
+#[test]
+fn bitsim_reuse_is_stateless_across_batches() {
+    let model = registry().build_str("proposed@8").unwrap();
+    let nl = model.build_netlist();
+    let mut sim = BitSim::new(&nl);
+    let p1 = bitsim_multiply_batch(&mut sim, 8, &[(3, 5), (-7, 9), (127, -128)]);
+    let noise = bitsim_multiply_batch(&mut sim, 8, &[(-1, -1); 200]);
+    assert_eq!(noise.len(), 200);
+    let p2 = bitsim_multiply_batch(&mut sim, 8, &[(3, 5), (-7, 9), (127, -128)]);
+    assert_eq!(p1, p2);
+}
+
+/// Wide-width coverage: the 16-bit proposed design's netlist through the
+/// bitsliced engine matches its functional model on a deterministic grid
+/// (the 2N = 32-bit product codes exercise the upper code bits).
+#[test]
+fn bitsliced_matches_model_at_16_bit() {
+    let model = registry().build_str("proposed@16").unwrap();
+    let nl = model.build_netlist();
+    let pairs: Vec<(i64, i64)> = (0..2000i64)
+        .map(|i| {
+            let a = (i * 7919) % 65536 - 32768;
+            let b = (i * 10429 + 31) % 65536 - 32768;
+            (a, b)
+        })
+        .collect();
+    let hw = netlist_multiply_batch(&nl, 16, &pairs);
+    for (&(a, b), &p) in pairs.iter().zip(hw.iter()) {
+        assert_eq!(p, model.multiply(a, b), "{a} * {b}");
+    }
+}
