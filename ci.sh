@@ -20,9 +20,21 @@
 #   harness is `harness = false`, so nothing executes) — benches stay
 #   buildable without spending CI minutes running them.
 # * `cargo test -q` is the second half of the tier-1 gate and must pass.
+# * `--bench-json`: after a green gate, additionally run the bench_conv
+#   group in quick mode with SFCMUL_BENCH_JSON=BENCH_conv.json, refreshing
+#   the machine-readable perf trajectory at the repo root (hosted CI
+#   uploads it as an artifact per run; see EXPERIMENTS.md).
 
 set -uo pipefail
 cd "$(dirname "$0")"
+
+bench_json=0
+for arg in "$@"; do
+    case "$arg" in
+        --bench-json) bench_json=1 ;;
+        *) echo "usage: ./ci.sh [--bench-json]" >&2; exit 2 ;;
+    esac
+done
 
 status=0
 
@@ -55,6 +67,15 @@ else
     echo "== cargo test (tier-1) =="
     if ! cargo test -q; then
         echo "FAIL: tests"
+        status=1
+    fi
+fi
+
+if [ "$bench_json" -eq 1 ] && [ "$status" -eq 0 ]; then
+    echo "== bench_conv → BENCH_conv.json (quick mode) =="
+    if ! SFCMUL_BENCH_QUICK=1 SFCMUL_BENCH_JSON=BENCH_conv.json \
+        cargo bench --bench bench_conv; then
+        echo "FAIL: bench_conv run"
         status=1
     fi
 fi

@@ -1,8 +1,15 @@
 //! Bench: Fig-9 machinery — every convolution path at 256×256, plus the
 //! PJRT executable path when artifacts are present.
+//!
+//! The pre-colsum 9-lookup kernels are benched next to the sliding
+//! column-sum paths so the speedup is measured, not asserted; with
+//! `SFCMUL_BENCH_JSON=BENCH_conv.json` (what `ci.sh --bench-json` sets)
+//! the whole group lands in the committed perf trajectory.
 
+use sfcmul::coordinator::engine::conv_tile_taps;
 use sfcmul::coordinator::{tile_image, LutTileEngine, ModelTileEngine, RowbufTileEngine, TileEngine};
-use sfcmul::image::{conv3x3, conv3x3_lut, conv3x3_rowbuf, synthetic_scene, LAPLACIAN};
+use sfcmul::image::colsum::laplacian_taps_i64;
+use sfcmul::image::{conv3x3, conv3x3_lut, conv3x3_lut_9tap, conv3x3_rowbuf, synthetic_scene, LAPLACIAN};
 use sfcmul::multipliers::{lut::product_table, registry};
 use sfcmul::runtime::{artifacts_available, artifacts_dir, pjrt_enabled, PjrtTileEngine};
 use sfcmul::util::bench::Bench;
@@ -21,6 +28,9 @@ fn main() {
     b.throughput(pixels).bench("conv_lut_direct_256", || {
         conv3x3_lut(&img, &LAPLACIAN, &lut).data[0]
     });
+    b.throughput(pixels).bench("conv_lut_direct_9tap_256", || {
+        conv3x3_lut_9tap(&img, &LAPLACIAN, &lut).data[0]
+    });
     b.throughput(pixels).bench("conv_rowbuf_256", || {
         conv3x3_rowbuf(&img, &LAPLACIAN, model.as_ref()).data[0]
     });
@@ -29,6 +39,10 @@ fn main() {
     let lut_engine = LutTileEngine::from_table("proposed", lut.clone());
     b.throughput(pixels).bench("tiles_lut_engine_256", || {
         lut_engine.process_batch(&tiles).len()
+    });
+    let (tc, tr) = laplacian_taps_i64(&lut);
+    b.throughput(pixels).bench("tiles_lut_9lookup_256", || {
+        tiles.iter().map(|t| conv_tile_taps(t, &tc, &tr).data[0] as usize).sum::<usize>()
     });
     let model_engine = ModelTileEngine::new(model.clone());
     b.throughput(pixels).bench("tiles_model_engine_256", || {
@@ -47,6 +61,15 @@ fn main() {
         });
     } else {
         println!("  (skipping PJRT bench: run `make artifacts`)");
+    }
+
+    // The acceptance ratio for the colsum rewrite: tile-engine LUT path
+    // (column-sum) vs. the retained pre-colsum 9-lookup tile kernel.
+    let median = |name: &str| b.results().iter().find(|r| r.name == name).map(|r| r.median_ns);
+    if let (Some(new_ns), Some(old_ns)) =
+        (median("tiles_lut_engine_256"), median("tiles_lut_9lookup_256"))
+    {
+        println!("  colsum tile kernel vs 9-lookup baseline: {:.2}x", old_ns / new_ns);
     }
 
     b.finish();

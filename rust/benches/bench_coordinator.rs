@@ -31,6 +31,20 @@ fn main() {
         drop(coord);
     }
 
+    // Many in-flight jobs across the sharded job table: finished tiles
+    // of different jobs land on different shard mutexes, so this is the
+    // contention profile the L3-4 sharding targets.
+    let engine = Arc::new(LutTileEngine::from_table("p16", lut.clone()));
+    let coord = Coordinator::start(
+        engine,
+        CoordinatorConfig { workers: 4, queue_capacity: 256, max_batch: 8 },
+    );
+    b.throughput(pixels * 16).bench("jobs_16_inflight_w4", || {
+        let handles: Vec<_> = (0..16).map(|_| coord.submit(img.clone())).collect();
+        handles.into_iter().map(|h| h.wait().tiles).sum::<usize>()
+    });
+    drop(coord);
+
     // queue throughput: raw channel send/recv
     b.throughput(10_000).bench("bounded_channel_10k_items", || {
         let (tx, rx) = sfcmul::util::pool::bounded(1024);

@@ -6,9 +6,8 @@
 //! same trait.
 
 use super::tiler::{Tile, TileOut, TILE_HALO, TILE_IN};
-use crate::image::conv::{
-    conv3x3_rowbuf, KERNEL_PRESCALE_SHIFT, LAPLACIAN, OUTPUT_NORM_SHIFT, PIXEL_SHIFT,
-};
+use crate::image::colsum::{laplacian_taps_i64, postprocess, ColSumKernel};
+use crate::image::conv::{conv3x3_rowbuf, KERNEL_PRESCALE_SHIFT, LAPLACIAN, PIXEL_SHIFT};
 use crate::image::Image;
 use crate::multipliers::MultiplierModel;
 use std::sync::Arc;
@@ -27,17 +26,31 @@ pub trait TileEngine: Send + Sync {
     }
 }
 
-#[inline]
-fn postprocess(acc: i64) -> u8 {
-    (acc.abs() >> (KERNEL_PRESCALE_SHIFT - PIXEL_SHIFT + OUTPUT_NORM_SHIFT)).clamp(0, 255) as u8
+/// Sliding column-sum tile convolution — the production hot path of
+/// every table-backed engine (LUT and bitsim): ≈2 lookups + 5 adds per
+/// output pixel through the shared [`crate::image::colsum`] core. The
+/// tile's haloed input window *is* the padded source the core expects,
+/// so edge tiles need no special-casing.
+fn conv_tile_colsum(tile: &Tile, kernel: &ColSumKernel) -> TileOut {
+    let mut data = vec![0u8; tile.core_w * tile.core_h];
+    kernel.run(&tile.data, TILE_IN, &mut data, tile.core_w, tile.core_w, tile.core_h);
+    TileOut {
+        job_id: tile.job_id,
+        x0: tile.x0,
+        y0: tile.y0,
+        core_w: tile.core_w,
+        core_h: tile.core_h,
+        data,
+    }
 }
 
-/// Shared folded-tap Laplacian tile convolution: the 3×3 kernel has only
-/// two distinct pre-scaled coefficients (centre / ring), so a tap table
-/// per coefficient — indexed by the raw pixel byte, pixel pre-shift baked
-/// in — turns the inner loop into 9 loads + 8 adds per output pixel.
-/// Used by every table-backed engine (LUT and bitsim).
-fn conv_tile_taps(tile: &Tile, tc: &[i64; 256], tr: &[i64; 256]) -> TileOut {
+/// The pre-colsum folded-tap tile kernel: per-coefficient i64 tap tables,
+/// 9 loads + 8 adds per output pixel. Retained verbatim (i) as the
+/// serving fallback for wide netlist designs whose tap products exceed
+/// [`crate::image::colsum::MAX_TAP_ABS`] and (ii) as the measured
+/// baseline `bench_conv` and the committed `BENCH_conv.json` trajectory
+/// compare the column-sum kernel against.
+pub fn conv_tile_taps(tile: &Tile, tc: &[i64; 256], tr: &[i64; 256]) -> TileOut {
     let mut data = vec![0u8; tile.core_w * tile.core_h];
     let src = &tile.data;
     for cy in 0..tile.core_h {
@@ -96,21 +109,47 @@ fn conv_tile(tile: &Tile, product: &dyn Fn(u8, i8) -> i64) -> TileOut {
     }
 }
 
+/// A table-backed engine's per-tile kernel: the column-sum fast path
+/// when the folded taps fit the i32-safe bound (every real product
+/// table), the retained i64 9-lookup kernel otherwise (reachable only
+/// through hand-built tables / very wide compensated netlists whose taps
+/// exceed [`crate::image::colsum::MAX_TAP_ABS`]).
+enum TapKernel {
+    ColSum(ColSumKernel),
+    Wide { tap_center: Box<[i64; 256]>, tap_ring: Box<[i64; 256]> },
+}
+
+impl TapKernel {
+    fn from_taps_i64(tap_center: Box<[i64; 256]>, tap_ring: Box<[i64; 256]>) -> Self {
+        match ColSumKernel::try_from_taps(&tap_center, &tap_ring) {
+            Some(k) => TapKernel::ColSum(k),
+            None => TapKernel::Wide { tap_center, tap_ring },
+        }
+    }
+
+    fn conv_tile(&self, tile: &Tile) -> TileOut {
+        match self {
+            TapKernel::ColSum(k) => conv_tile_colsum(tile, k),
+            TapKernel::Wide { tap_center, tap_ring } => {
+                conv_tile_taps(tile, tap_center, tap_ring)
+            }
+        }
+    }
+}
+
 /// LUT-backed engine: products come from a 256×256 table generated from a
 /// multiplier design — the production in-process path.
 ///
-/// Perf (EXPERIMENTS.md §Perf, iteration L3-1): the 3×3 Laplacian has only
-/// two distinct pre-scaled coefficients (centre +64, ring −8), so the
-/// 256×256 table folds into two 256-entry *tap tables* indexed directly by
-/// the raw pixel byte (the `>> PIXEL_SHIFT` is baked in). The inner loop
-/// is then 9 loads + 8 adds per output pixel with no shifts or muxes.
+/// Perf (EXPERIMENTS.md §Perf, iterations L3-1, L3-4): the 3×3 Laplacian
+/// has only two distinct pre-scaled coefficients (centre +64, ring −8),
+/// so the 256×256 table folds into two 256-entry L1-resident `i32` tap
+/// tables, and the per-tile inner loop is the sliding column-sum kernel
+/// of [`crate::image::colsum`] — ≈2 loads + 5 adds per output pixel
+/// (down from the 9 loads + 8 adds of [`conv_tile_taps`]).
 pub struct LutTileEngine {
     name: String,
     lut: Vec<i32>,
-    /// tap_center[px] = lut[px >> PIXEL_SHIFT][byte(+64)]
-    tap_center: Box<[i64; 256]>,
-    /// tap_ring[px] = lut[px >> PIXEL_SHIFT][byte(-8)]
-    tap_ring: Box<[i64; 256]>,
+    kernel: TapKernel,
 }
 
 impl LutTileEngine {
@@ -119,17 +158,9 @@ impl LutTileEngine {
     }
 
     pub fn from_table(name: &str, lut: Vec<i32>) -> Self {
-        assert_eq!(lut.len(), 65536);
-        let kb_center = ((LAPLACIAN[1][1] << KERNEL_PRESCALE_SHIFT) as i8) as u8 as usize;
-        let kb_ring = ((LAPLACIAN[0][0] << KERNEL_PRESCALE_SHIFT) as i8) as u8 as usize;
-        let mut tap_center = Box::new([0i64; 256]);
-        let mut tap_ring = Box::new([0i64; 256]);
-        for px in 0..256usize {
-            let row = (px >> PIXEL_SHIFT) << 8;
-            tap_center[px] = lut[row | kb_center] as i64;
-            tap_ring[px] = lut[row | kb_ring] as i64;
-        }
-        Self { name: name.to_string(), lut, tap_center, tap_ring }
+        let (tap_center, tap_ring) = laplacian_taps_i64(&lut);
+        let kernel = TapKernel::from_taps_i64(tap_center, tap_ring);
+        Self { name: name.to_string(), lut, kernel }
     }
 
     pub fn lut(&self) -> &[i32] {
@@ -143,10 +174,7 @@ impl TileEngine for LutTileEngine {
     }
 
     fn process_batch(&self, tiles: &[Tile]) -> Vec<TileOut> {
-        tiles
-            .iter()
-            .map(|t| conv_tile_taps(t, &self.tap_center, &self.tap_ring))
-            .collect()
+        tiles.iter().map(|t| self.kernel.conv_tile(t)).collect()
     }
 }
 
@@ -259,8 +287,7 @@ impl TileEngine for RowbufTileEngine {
 /// path.
 pub struct BitsimTileEngine {
     name: String,
-    tap_center: Box<[i64; 256]>,
-    tap_ring: Box<[i64; 256]>,
+    kernel: TapKernel,
 }
 
 impl BitsimTileEngine {
@@ -289,7 +316,8 @@ impl BitsimTileEngine {
             tap_center[px] = products[2 * shifted];
             tap_ring[px] = products[2 * shifted + 1];
         }
-        Self { name: format!("bitsim:{}", model.name()), tap_center, tap_ring }
+        let kernel = TapKernel::from_taps_i64(tap_center, tap_ring);
+        Self { name: format!("bitsim:{}", model.name()), kernel }
     }
 }
 
@@ -299,10 +327,7 @@ impl TileEngine for BitsimTileEngine {
     }
 
     fn process_batch(&self, tiles: &[Tile]) -> Vec<TileOut> {
-        tiles
-            .iter()
-            .map(|t| conv_tile_taps(t, &self.tap_center, &self.tap_ring))
-            .collect()
+        tiles.iter().map(|t| self.kernel.conv_tile(t)).collect()
     }
 }
 

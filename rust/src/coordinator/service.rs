@@ -9,6 +9,13 @@
 //! (first) engine. Metrics are kept per engine, so one service instance
 //! can A/B exact vs. approximate designs under load (the Fig. 8 serving
 //! story scaled up).
+//!
+//! Contention (EXPERIMENTS.md §Perf, iteration L3-4): job state lives in
+//! a [`JOB_SHARDS`]-way sharded map keyed by `job_id`, so workers
+//! finishing tiles of *different* jobs update disjoint mutexes instead of
+//! serialising on one global lock; and the batch clamp is per engine at
+//! dispatch time — one small-`preferred_batch` engine no longer shrinks
+//! every other engine's batches to the fleet-wide minimum.
 
 use super::engine::TileEngine;
 use super::job::JobResult;
@@ -31,8 +38,9 @@ pub struct CoordinatorConfig {
     /// block when the fleet is saturated, exactly like the line-buffer
     /// stall in the paper's Fig. 8 datapath.
     pub queue_capacity: usize,
-    /// Maximum tiles per engine batch (clamped to the engines'
-    /// preference).
+    /// Maximum tiles per engine batch. Clamped *per engine* at dispatch
+    /// time to that engine's [`TileEngine::preferred_batch`]; other
+    /// engines in the fleet are unaffected.
     pub max_batch: usize,
 }
 
@@ -52,8 +60,31 @@ struct JobState {
     reply: Sender<JobResult>,
 }
 
+/// Shard count of the job map. Power of two so the shard pick is one
+/// mask; 16 shards keep the collision probability low for any plausible
+/// worker count while the whole table stays a few cache lines of
+/// mutexes.
+const JOB_SHARDS: usize = 16;
+
+/// Job state sharded by `job_id`: workers completing tiles of different
+/// jobs lock different mutexes, removing the single global job-map lock
+/// from the reassembly path.
+struct JobTable {
+    shards: [Mutex<HashMap<u64, JobState>>; JOB_SHARDS],
+}
+
+impl JobTable {
+    fn new() -> Self {
+        Self { shards: std::array::from_fn(|_| Mutex::new(HashMap::new())) }
+    }
+
+    fn shard(&self, job_id: u64) -> &Mutex<HashMap<u64, JobState>> {
+        &self.shards[job_id as usize & (JOB_SHARDS - 1)]
+    }
+}
+
 struct Shared {
-    jobs: Mutex<HashMap<u64, JobState>>,
+    jobs: JobTable,
     metrics: Metrics,
 }
 
@@ -110,13 +141,12 @@ impl Coordinator {
             Arc::new(engines.into_iter().map(|(_, e)| e).collect());
         let (tile_tx, tile_rx) = bounded::<Tile>(cfg.queue_capacity);
         let shared = Arc::new(Shared {
-            jobs: Mutex::new(HashMap::new()),
+            jobs: JobTable::new(),
             metrics: Metrics::new(engine_names.clone()),
         });
-        let max_batch = cfg
-            .max_batch
-            .min(fleet.iter().map(|e| e.preferred_batch()).min().unwrap_or(1))
-            .max(1);
+        // The queue drain bound; each engine's own preferred_batch()
+        // clamps further at dispatch time (per engine, not fleet-wide).
+        let max_batch = cfg.max_batch;
         let workers = (0..cfg.workers)
             .map(|i| {
                 let rx = tile_rx.clone();
@@ -189,7 +219,7 @@ impl Coordinator {
         }
         let (reply_tx, reply_rx) = bounded::<JobResult>(1);
         {
-            let mut jobs = self.shared.jobs.lock().unwrap();
+            let mut jobs = self.shared.jobs.shard(id).lock().unwrap();
             jobs.insert(
                 id,
                 JobState {
@@ -267,30 +297,37 @@ fn worker_loop(
         }
         for (engine_idx, tiles) in groups {
             let engine = &fleet[engine_idx as usize];
-            let t0 = Instant::now();
-            let outs = engine.process_batch(&tiles);
-            shared
-                .metrics
-                .record_batch(engine_idx as usize, tiles.len(), t0.elapsed());
-            debug_assert_eq!(outs.len(), tiles.len());
-            for to in outs {
-                let mut jobs = shared.jobs.lock().unwrap();
-                let done = {
-                    let st = jobs.get_mut(&to.job_id).expect("job state");
-                    reassemble(&mut st.out, &to);
-                    st.remaining -= 1;
-                    st.remaining == 0
-                };
-                if done {
-                    let st = jobs.remove(&to.job_id).unwrap();
-                    let latency = st.started.elapsed();
-                    shared.metrics.record_job(st.engine, latency);
-                    let _ = st.reply.send(JobResult {
-                        id: to.job_id,
-                        edges: st.out,
-                        latency,
-                        tiles: st.tiles,
-                    });
+            // Per-engine batch clamp at dispatch time: each engine's
+            // preference bounds only its own chunks, so a small-batch
+            // engine in the fleet no longer shrinks everyone's batches.
+            let clamp = engine.preferred_batch().clamp(1, max_batch);
+            for chunk in tiles.chunks(clamp) {
+                let t0 = Instant::now();
+                let outs = engine.process_batch(chunk);
+                shared
+                    .metrics
+                    .record_batch(engine_idx as usize, chunk.len(), t0.elapsed());
+                debug_assert_eq!(outs.len(), chunk.len());
+                for to in outs {
+                    let mut jobs = shared.jobs.shard(to.job_id).lock().unwrap();
+                    let done = {
+                        let st = jobs.get_mut(&to.job_id).expect("job state");
+                        reassemble(&mut st.out, &to);
+                        st.remaining -= 1;
+                        st.remaining == 0
+                    };
+                    if done {
+                        let st = jobs.remove(&to.job_id).unwrap();
+                        drop(jobs); // finish the job outside the shard lock
+                        let latency = st.started.elapsed();
+                        shared.metrics.record_job(st.engine, latency);
+                        let _ = st.reply.send(JobResult {
+                            id: to.job_id,
+                            edges: st.out,
+                            latency,
+                            tiles: st.tiles,
+                        });
+                    }
                 }
             }
         }
@@ -379,6 +416,27 @@ mod tests {
         let img = synthetic_scene(128, 128, 2);
         let res = coord.run(img);
         assert_eq!(res.tiles, 4);
+    }
+
+    /// 40 concurrent jobs span every shard of the job table (ids 1..=40
+    /// cover all 16 residues); each must reassemble bit-exactly and be
+    /// removed, leaving no stranded state.
+    #[test]
+    fn jobs_across_all_shards_complete_correctly() {
+        let model = build_design(DesignId::Proposed, 8);
+        let coord = coordinator(4);
+        let mut expected = Vec::new();
+        let mut handles = Vec::new();
+        for seed in 0..40u64 {
+            let img = synthetic_scene(48 + (seed as usize % 5) * 7, 33, seed);
+            expected.push(edge_detect(&img, model.as_ref()));
+            handles.push(coord.submit(img));
+        }
+        for (h, exp) in handles.into_iter().zip(expected) {
+            let res = h.wait();
+            assert_eq!(res.edges, exp, "job {}", res.id);
+        }
+        assert_eq!(coord.shutdown().jobs_completed, 40);
     }
 
     #[test]
@@ -481,6 +539,104 @@ mod multi_design_tests {
         let m = coord.metrics();
         assert_eq!(m.per_engine[0].jobs_completed, 4);
         assert_eq!(m.per_engine[1].jobs_completed, 4);
+    }
+}
+
+#[cfg(test)]
+mod batching_tests {
+    use super::*;
+    use crate::coordinator::tiler::TileOut;
+    use crate::image::synthetic_scene;
+    use std::sync::atomic::{AtomicBool, AtomicUsize};
+
+    /// Engine that records the largest batch it was handed; an optional
+    /// gate blocks the *first* `process_batch` call until the test
+    /// releases it, so tiles pile up in the queue deterministically.
+    struct ProbeEngine {
+        preferred: usize,
+        max_seen: AtomicUsize,
+        gate: Option<Receiver<()>>,
+        gate_used: AtomicBool,
+    }
+
+    impl ProbeEngine {
+        fn new(preferred: usize, gate: Option<Receiver<()>>) -> Self {
+            Self {
+                preferred,
+                max_seen: AtomicUsize::new(0),
+                gate,
+                gate_used: AtomicBool::new(false),
+            }
+        }
+    }
+
+    impl TileEngine for ProbeEngine {
+        fn name(&self) -> String {
+            format!("probe{}", self.preferred)
+        }
+
+        fn process_batch(&self, tiles: &[Tile]) -> Vec<TileOut> {
+            if let Some(g) = &self.gate {
+                if !self.gate_used.swap(true, Ordering::SeqCst) {
+                    let _ = g.recv();
+                }
+            }
+            self.max_seen.fetch_max(tiles.len(), Ordering::SeqCst);
+            tiles
+                .iter()
+                .map(|t| TileOut {
+                    job_id: t.job_id,
+                    x0: t.x0,
+                    y0: t.y0,
+                    core_w: t.core_w,
+                    core_h: t.core_h,
+                    data: vec![0u8; t.core_w * t.core_h],
+                })
+                .collect()
+        }
+
+        fn preferred_batch(&self) -> usize {
+            self.preferred
+        }
+    }
+
+    /// The batch clamp is per engine at dispatch time: an engine
+    /// preferring batches of 4 gets batches of 4 even though a
+    /// `preferred_batch() == 1` engine shares the fleet (the old
+    /// fleet-wide-minimum clamp would have forced everyone to 1), while
+    /// the batch-of-1 engine is never handed more than 1 tile.
+    #[test]
+    fn batch_clamp_is_per_engine_not_fleet_minimum() {
+        let (gate_tx, gate_rx) = bounded::<()>(1);
+        let big = Arc::new(ProbeEngine::new(4, Some(gate_rx)));
+        let small = Arc::new(ProbeEngine::new(1, None));
+        let coord = Coordinator::start_named(
+            vec![
+                ("big".to_string(), big.clone() as Arc<dyn TileEngine>),
+                ("small".to_string(), small.clone() as Arc<dyn TileEngine>),
+            ],
+            CoordinatorConfig { workers: 1, queue_capacity: 256, max_batch: 8 },
+        );
+        // 12-tile job: the lone worker blocks inside its first
+        // process_batch call (≤ 8 tiles) while the remaining tiles are
+        // already queued; after release, at least one dispatch sees ≥ 8
+        // pending tiles and must chunk them 4-and-4.
+        let h_big = coord.submit_to(synthetic_scene(192, 256, 1), Some("big")).unwrap();
+        gate_tx.send(()).unwrap();
+        let h_small = coord.submit_to(synthetic_scene(130, 70, 2), Some("small")).unwrap();
+        assert_eq!(h_big.wait().tiles, 12);
+        assert_eq!(h_small.wait().tiles, 6);
+        coord.shutdown();
+        assert_eq!(
+            big.max_seen.load(Ordering::SeqCst),
+            4,
+            "large-batch engine must reach its own preferred batch size"
+        );
+        assert_eq!(
+            small.max_seen.load(Ordering::SeqCst),
+            1,
+            "batch-of-1 engine must never see more than one tile"
+        );
     }
 }
 

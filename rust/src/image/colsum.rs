@@ -1,0 +1,258 @@
+//! Sliding column-sum 3×3 convolution core — the shared hot path of the
+//! direct LUT convolution and every table-backed serving engine.
+//!
+//! The Laplacian of Eq. (6) has only **two distinct coefficients**: the
+//! centre (+8) and a uniform ring (−1). After tap folding (pixel
+//! pre-shift and kernel pre-scale baked into 256-entry tables) an output
+//! pixel is
+//!
+//! ```text
+//! acc(x, y) = Σ_ring tr[px] + tc[centre px]
+//!           = Σ_{3×3}  tr[px] + Δ[centre px]        Δ = tc − tr
+//! ```
+//!
+//! so the 9-lookup / 8-add inner loop collapses into a separable sum:
+//! keep per-row *tap vectors* `tv[r][x] = tr[row_r[x]]` in three rolling
+//! buffers (when the window moves down one output row, two of the three
+//! rows are reused verbatim and only the incoming row is looked up), fold
+//! them into *column sums* `cs[x] = tv0[x] + tv1[x] + tv2[x]`, and emit
+//!
+//! ```text
+//! out[x] = postprocess(cs[x] + cs[x+1] + cs[x+2] + Δ[mid[x+1]])
+//! ```
+//!
+//! — amortised ≈2 table lookups + 5 adds per output pixel (one fresh-row
+//! `tap_ring` fill plus the unconditional `Δ` lookup) instead of
+//! 9 lookups + 8 adds. Tap tables are `i32` (1 KiB each, L1-resident,
+//! SIMD-friendly) instead of the historical `i64`; [`MAX_TAP_ABS`] bounds
+//! every tap so the widest possible i32 accumulation cannot wrap, keeping
+//! the kernel bit-exact with the i64 reference
+//! ([`crate::coordinator::engine::conv_tile_taps`], retained as the
+//! pre-colsum baseline and wide-design fallback).
+
+use super::conv::{KERNEL_PRESCALE_SHIFT, OUTPUT_NORM_SHIFT, PIXEL_SHIFT};
+
+/// Output post-processing shared by **every** convolution path (direct,
+/// LUT, row-buffer, and all tile engines): the accumulator holds
+/// `Σ (k << KERNEL_PRESCALE_SHIFT) · (px >> PIXEL_SHIFT) = 4·Σ k·px`;
+/// the displayed edge magnitude is `|Σ k·px| >> OUTPUT_NORM_SHIFT`
+/// clamped to 0..255, so the three shifts combine into one.
+#[inline]
+pub fn postprocess(acc: i64) -> u8 {
+    (acc.abs() >> (KERNEL_PRESCALE_SHIFT - PIXEL_SHIFT + OUTPUT_NORM_SHIFT)).clamp(0, 255) as u8
+}
+
+/// Largest tap magnitude the i32 accumulation path absorbs safely: one
+/// output sums three column sums (3 taps each) plus one centre delta
+/// (±2 taps) — at most 11 tap magnitudes — so taps bounded by
+/// `i32::MAX / 16` can never wrap. Every 8-bit product table fits by
+/// orders of magnitude (16-bit product bus); only very wide compensated
+/// netlist designs can exceed it, and those fall back to the i64 path.
+pub const MAX_TAP_ABS: i64 = (i32::MAX / 16) as i64;
+
+/// Fold per-coefficient i64 tap tables from a 256×256 product table:
+/// `tap[px] = lut[(px >> PIXEL_SHIFT) << 8 | byte(k << PRESCALE)]`.
+fn fold_taps_i64(lut: &[i32], k_center: i64, k_ring: i64) -> (Box<[i64; 256]>, Box<[i64; 256]>) {
+    assert_eq!(lut.len(), 65536);
+    let kb_center = ((k_center << KERNEL_PRESCALE_SHIFT) as i8) as u8 as usize;
+    let kb_ring = ((k_ring << KERNEL_PRESCALE_SHIFT) as i8) as u8 as usize;
+    let mut tap_center = Box::new([0i64; 256]);
+    let mut tap_ring = Box::new([0i64; 256]);
+    for px in 0..256usize {
+        let row = (px >> PIXEL_SHIFT) << 8;
+        tap_center[px] = lut[row | kb_center] as i64;
+        tap_ring[px] = lut[row | kb_ring] as i64;
+    }
+    (tap_center, tap_ring)
+}
+
+/// The Laplacian's centre/ring tap tables in the historical i64 form —
+/// the **single** fold shared by the [`ColSumKernel`] constructors, the
+/// engines' wide-tap fallback, and the retained 9-lookup baselines in
+/// benches and equivalence tests.
+pub fn laplacian_taps_i64(lut: &[i32]) -> (Box<[i64; 256]>, Box<[i64; 256]>) {
+    let k = &super::conv::LAPLACIAN;
+    fold_taps_i64(lut, k[1][1], k[0][0])
+}
+
+/// Folded two-coefficient tap tables for the sliding column-sum kernel.
+///
+/// `tap_ring[px]` is the pre-scaled ring product for a raw pixel byte
+/// (pixel pre-shift baked in); `center_delta[px] = tap_center[px] −
+/// tap_ring[px]` corrects the uniform 3×3 ring sum at the centre tap.
+pub struct ColSumKernel {
+    tap_ring: Box<[i32; 256]>,
+    center_delta: Box<[i32; 256]>,
+}
+
+impl ColSumKernel {
+    /// Build from explicit centre/ring tap tables (the form the bitsim
+    /// engine produces by sweeping a netlist). Returns `None` when any
+    /// tap exceeds [`MAX_TAP_ABS`] — the caller must then keep the i64
+    /// reference path.
+    pub fn try_from_taps(tap_center: &[i64; 256], tap_ring: &[i64; 256]) -> Option<Self> {
+        if tap_center.iter().chain(tap_ring.iter()).any(|v| v.abs() > MAX_TAP_ABS) {
+            return None;
+        }
+        let mut ring = Box::new([0i32; 256]);
+        let mut delta = Box::new([0i32; 256]);
+        for px in 0..256 {
+            ring[px] = tap_ring[px] as i32;
+            delta[px] = (tap_center[px] - tap_ring[px]) as i32;
+        }
+        Some(Self { tap_ring: ring, center_delta: delta })
+    }
+
+    /// Fold a 256×256 product table (index `(a_byte << 8) | b_byte`) for
+    /// a 3×3 kernel with a *uniform ring*; `None` when the ring
+    /// coefficients differ (the column-sum identity needs one ring
+    /// coefficient). Kernel coefficients are pre-scaled by
+    /// `KERNEL_PRESCALE_SHIFT` and the pixel pre-shift is baked in,
+    /// exactly like the historical per-tap fold.
+    pub fn for_kernel(kernel: &[[i64; 3]; 3], lut: &[i32]) -> Option<Self> {
+        assert_eq!(lut.len(), 65536);
+        let ring = kernel[0][0];
+        let uniform = (0..9).filter(|t| *t != 4).all(|t| kernel[t / 3][t % 3] == ring);
+        if !uniform {
+            return None;
+        }
+        let (tap_center, tap_ring) = fold_taps_i64(lut, kernel[1][1], ring);
+        Self::try_from_taps(&tap_center, &tap_ring)
+    }
+
+    /// Convolve one zero-padding-included window.
+    ///
+    /// `src` is a row-major byte buffer whose rows are `src_stride` wide;
+    /// the `(out_h + 2) × (out_w + 2)` window starting at `src[0]` must
+    /// be in bounds (callers pass a haloed tile or a padded image copy).
+    /// Writes `out_w × out_h` post-processed pixels into `out` with rows
+    /// `out_stride` apart.
+    pub fn run(
+        &self,
+        src: &[u8],
+        src_stride: usize,
+        out: &mut [u8],
+        out_stride: usize,
+        out_w: usize,
+        out_h: usize,
+    ) {
+        assert!(out_w >= 1 && out_h >= 1, "empty output window");
+        let w2 = out_w + 2;
+        assert!(src_stride >= w2, "src rows narrower than the window");
+        assert!(out_stride >= out_w, "out rows narrower than the output");
+        assert!(src.len() >= (out_h + 1) * src_stride + w2, "src window out of bounds");
+        assert!(out.len() >= (out_h - 1) * out_stride + out_w, "out buffer too small");
+        let tr = &self.tap_ring;
+        let fill = |tv: &mut [i32], row: &[u8]| {
+            for (t, &p) in tv.iter_mut().zip(row) {
+                *t = tr[p as usize];
+            }
+        };
+        // Rolling per-row tap vectors: rows oy, oy+1, oy+2 of the window.
+        let mut tv0 = vec![0i32; w2];
+        let mut tv1 = vec![0i32; w2];
+        let mut tv2 = vec![0i32; w2];
+        let mut cs = vec![0i32; w2];
+        fill(&mut tv0[..], &src[0..w2]);
+        fill(&mut tv1[..], &src[src_stride..src_stride + w2]);
+        for oy in 0..out_h {
+            let base = (oy + 2) * src_stride;
+            fill(&mut tv2[..], &src[base..base + w2]); // the one fresh lookup row
+            for x in 0..w2 {
+                cs[x] = tv0[x] + tv1[x] + tv2[x];
+            }
+            let mid = &src[(oy + 1) * src_stride..(oy + 1) * src_stride + w2];
+            let out_row = &mut out[oy * out_stride..oy * out_stride + out_w];
+            for (x, out_px) in out_row.iter_mut().enumerate() {
+                let acc = cs[x] + cs[x + 1] + cs[x + 2] + self.center_delta[mid[x + 1] as usize];
+                *out_px = postprocess(acc as i64);
+            }
+            // Slide down one row: tv0 ← tv1, tv1 ← tv2, old tv0 becomes
+            // next iteration's scratch.
+            std::mem::swap(&mut tv0, &mut tv1);
+            std::mem::swap(&mut tv1, &mut tv2);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prng::Xoshiro256;
+
+    /// Exact signed-byte product table, the layout `product_table` uses.
+    fn exact_lut() -> Vec<i32> {
+        let mut lut = vec![0i32; 65536];
+        for a in 0..256usize {
+            for b in 0..256usize {
+                lut[(a << 8) | b] = ((a as u8 as i8) as i32) * ((b as u8 as i8) as i32);
+            }
+        }
+        lut
+    }
+
+    fn naive_9lookup(
+        tc: &[i64; 256],
+        tr: &[i64; 256],
+        src: &[u8],
+        stride: usize,
+        out_w: usize,
+        out_h: usize,
+    ) -> Vec<u8> {
+        let mut out = vec![0u8; out_w * out_h];
+        for oy in 0..out_h {
+            for ox in 0..out_w {
+                let mut acc = 0i64;
+                for ky in 0..3 {
+                    for kx in 0..3 {
+                        let px = src[(oy + ky) * stride + ox + kx] as usize;
+                        acc += if ky == 1 && kx == 1 { tc[px] } else { tr[px] };
+                    }
+                }
+                out[oy * out_w + ox] = postprocess(acc);
+            }
+        }
+        out
+    }
+
+    #[test]
+    fn colsum_matches_naive_9lookup_on_ragged_windows() {
+        let lut = exact_lut();
+        let k = ColSumKernel::for_kernel(&crate::image::conv::LAPLACIAN, &lut)
+            .expect("Laplacian taps fit the i32 bound");
+        let (tc, tr) = laplacian_taps_i64(&lut);
+        let mut rng = Xoshiro256::seeded(42);
+        for &(out_w, out_h, stride_pad) in
+            &[(1usize, 1usize, 0usize), (1, 7, 3), (7, 1, 0), (5, 4, 2), (64, 64, 0), (63, 2, 5)]
+        {
+            let stride = out_w + 2 + stride_pad;
+            let mut src = vec![0u8; (out_h + 2) * stride];
+            for b in src.iter_mut() {
+                *b = rng.below(256) as u8;
+            }
+            let mut got = vec![0u8; out_w * out_h];
+            k.run(&src, stride, &mut got, out_w, out_w, out_h);
+            let want = naive_9lookup(&tc, &tr, &src, stride, out_w, out_h);
+            assert_eq!(got, want, "{out_w}x{out_h} stride {stride}");
+        }
+    }
+
+    #[test]
+    fn for_kernel_rejects_non_uniform_ring() {
+        let lut = exact_lut();
+        let sobel_x = [[-1i64, 0, 1], [-2, 0, 2], [-1, 0, 1]];
+        assert!(ColSumKernel::for_kernel(&sobel_x, &lut).is_none());
+        assert!(ColSumKernel::for_kernel(&crate::image::conv::LAPLACIAN, &lut).is_some());
+    }
+
+    #[test]
+    fn oversized_taps_are_rejected() {
+        let mut tc = [0i64; 256];
+        let tr = [0i64; 256];
+        assert!(ColSumKernel::try_from_taps(&tc, &tr).is_some());
+        tc[7] = MAX_TAP_ABS + 1;
+        assert!(ColSumKernel::try_from_taps(&tc, &tr).is_none());
+        tc[7] = -(MAX_TAP_ABS + 1);
+        assert!(ColSumKernel::try_from_taps(&tc, &tr).is_none());
+    }
+}

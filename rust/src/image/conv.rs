@@ -15,13 +15,19 @@
 //! design, including the exact reference that PSNR is computed against,
 //! goes through the identical path, so comparisons are unaffected.
 //!
-//! Two hardware-faithful implementations are provided and tested equal:
+//! Three hardware-faithful implementations are provided and tested equal:
 //!
 //! * [`conv3x3`] — direct zero-padded convolution (the Python reference
 //!   path of §4);
+//! * [`conv3x3_lut`] — the table-backed fast path: for uniform-ring
+//!   kernels (the Laplacian) it runs the sliding column-sum core of
+//!   [`super::colsum`]; other kernels fall back to the folded-tap
+//!   9-lookup kernel [`conv3x3_lut_9tap`], which is also retained as the
+//!   pre-colsum perf baseline (`BENCH_conv.json`);
 //! * [`conv3x3_rowbuf`] — the streaming row-buffer datapath of Fig. 8:
 //!   two line buffers + a 3×3 window register file, one output per cycle.
 
+use super::colsum::{postprocess, ColSumKernel};
 use super::pgm::Image;
 use crate::multipliers::MultiplierModel;
 
@@ -44,12 +50,9 @@ fn prescale_kernel(k: i64) -> i64 {
 /// is conventionally displayed as `|response| / 8` (the centre weight), so
 /// the full response range maps exactly onto 0..255.
 pub const OUTPUT_NORM_SHIFT: u32 = 3;
-
-#[inline]
-fn postprocess(acc: i64) -> u8 {
-    // acc = Σ (k<<3)·(px>>1) = 4·Σ k·px; display |Σ k·px| >> 3.
-    (acc.abs() >> (KERNEL_PRESCALE_SHIFT - PIXEL_SHIFT + OUTPUT_NORM_SHIFT)).clamp(0, 255) as u8
-}
+// Output post-processing is shared by every path: see
+// `super::colsum::postprocess` (acc = Σ (k<<3)·(px>>1) = 4·Σ k·px;
+// display |Σ k·px| >> 3).
 
 /// Direct zero-padded 3×3 convolution using `model` for every multiply.
 pub fn conv3x3(img: &Image, kernel: &[[i64; 3]; 3], model: &dyn MultiplierModel) -> Image {
@@ -74,11 +77,45 @@ pub fn conv3x3(img: &Image, kernel: &[[i64; 3]; 3], model: &dyn MultiplierModel)
 /// `(a_byte << 8) | b_byte`) — the fast path used by the coordinator and
 /// mirrored by the Pallas kernel.
 ///
-/// Perf (EXPERIMENTS.md §Perf, iteration L3-2): per-coefficient 256-entry
-/// tap tables are folded once (baking in the pixel pre-shift), then the
-/// image interior runs on raw row slices with no padding branches; only
-/// the 1-pixel border uses the padded path.
+/// Perf (EXPERIMENTS.md §Perf, iteration L3-4): uniform-ring kernels (the
+/// Laplacian) run the sliding column-sum core ([`super::colsum`]) over a
+/// zero-padded copy of the image — ≈2 lookups + 5 adds per pixel with
+/// L1-resident `i32` tap tables, no border special-casing. Kernels with
+/// distinct ring coefficients fall back to [`conv3x3_lut_9tap`].
 pub fn conv3x3_lut(img: &Image, kernel: &[[i64; 3]; 3], lut: &[i32]) -> Image {
+    assert_eq!(lut.len(), 65536);
+    if let Some(k) = ColSumKernel::for_kernel(kernel, lut) {
+        let (w, h) = (img.width, img.height);
+        let mut out = Image::new(w, h);
+        if w == 0 || h == 0 {
+            return out;
+        }
+        let padded = padded_copy(img);
+        k.run(&padded, w + 2, &mut out.data, w, w, h);
+        return out;
+    }
+    conv3x3_lut_9tap(img, kernel, lut)
+}
+
+/// Zero-padded `(h+2) × (w+2)` copy of an image — the explicit form of
+/// the padding [`Image::get_padded`] synthesises, so the column-sum core
+/// can run border rows through the same branch-free inner loop.
+fn padded_copy(img: &Image) -> Vec<u8> {
+    let (w, h) = (img.width, img.height);
+    let mut p = vec![0u8; (w + 2) * (h + 2)];
+    for y in 0..h {
+        let base = (y + 1) * (w + 2) + 1;
+        p[base..base + w].copy_from_slice(&img.data[y * w..(y + 1) * w]);
+    }
+    p
+}
+
+/// The pre-colsum folded-tap kernel: 9 table loads + 8 adds per output
+/// pixel on raw row slices, borders through the padded path. Retained
+/// verbatim (i) as the fallback for kernels the column-sum identity does
+/// not cover and (ii) as the measured baseline the `bench_conv` speedup
+/// and the committed `BENCH_conv.json` trajectory compare against.
+pub fn conv3x3_lut_9tap(img: &Image, kernel: &[[i64; 3]; 3], lut: &[i32]) -> Image {
     assert_eq!(lut.len(), 65536);
     // fold per-tap tables
     let mut taps = [[0i32; 256]; 9];
@@ -259,6 +296,35 @@ mod tests {
         let lut = crate::multipliers::lut::product_table(m.as_ref());
         let a = conv3x3(&img, &LAPLACIAN, m.as_ref());
         let b = conv3x3_lut(&img, &LAPLACIAN, &lut);
+        assert_eq!(a, b);
+    }
+
+    /// The column-sum fast path and the retained 9-lookup kernel are one
+    /// function to callers — bit-exact on ragged shapes including the
+    /// degenerate 1×1 / 1×N / N×1 windows (full sweep over every
+    /// registered design lives in `tests/colsum_equiv.rs`).
+    #[test]
+    fn lut_colsum_equals_9tap_ragged() {
+        let m = build_design(DesignId::Proposed, 8);
+        let lut = crate::multipliers::lut::product_table(m.as_ref());
+        for &(w, h) in &[(1usize, 1usize), (1, 9), (9, 1), (5, 4), (65, 63)] {
+            let img = synthetic_scene(w, h, 3);
+            let a = conv3x3_lut(&img, &LAPLACIAN, &lut);
+            let b = conv3x3_lut_9tap(&img, &LAPLACIAN, &lut);
+            assert_eq!(a, b, "{w}x{h}");
+        }
+    }
+
+    /// Non-uniform-ring kernels route through the generic 9-lookup path
+    /// and still match the model convolution.
+    #[test]
+    fn non_uniform_kernel_falls_back_correctly() {
+        let kernel = [[-1i64, 0, 1], [-2, 0, 2], [-1, 0, 1]]; // Sobel-x
+        let img = synthetic_scene(24, 17, 6);
+        let exact = build_design(DesignId::Exact, 8);
+        let lut = crate::multipliers::lut::product_table(exact.as_ref());
+        let a = conv3x3(&img, &kernel, exact.as_ref());
+        let b = conv3x3_lut(&img, &kernel, &lut);
         assert_eq!(a, b);
     }
 

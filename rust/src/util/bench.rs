@@ -17,7 +17,16 @@
 //! reports median / mean ± sd / p90 and derived throughput. Results are
 //! printed in a stable table format and can be appended as JSON lines to
 //! `target/bench-results.jsonl` for the EXPERIMENTS.md record.
+//!
+//! Two environment knobs make bench runs scriptable:
+//!
+//! * `SFCMUL_BENCH_QUICK=1` — shrink warmup/sample budgets (CI mode);
+//! * `SFCMUL_BENCH_JSON=path` — on [`Bench::finish`], additionally write
+//!   the whole group as one machine-readable JSON document (schema
+//!   `sfcmul-bench-v1`) to `path`. This is how `ci.sh --bench-json`
+//!   produces the committed `BENCH_conv.json` perf trajectory.
 
+use super::json::Json;
 use super::stats;
 use std::hint::black_box;
 use std::io::Write;
@@ -44,6 +53,7 @@ impl BenchResult {
 
 pub struct Bench {
     group: String,
+    quick: bool,
     warmup: Duration,
     sample_target: Duration,
     samples: usize,
@@ -60,12 +70,19 @@ impl Bench {
         println!("{header}");
         Self {
             group: group.to_string(),
+            quick,
             warmup: if quick { Duration::from_millis(20) } else { Duration::from_millis(150) },
             sample_target: if quick { Duration::from_millis(5) } else { Duration::from_millis(25) },
             samples: if quick { 8 } else { 20 },
             results: Vec::new(),
             next_elems: None,
         }
+    }
+
+    /// Results recorded so far (bench binaries use this to derive and
+    /// print cross-bench ratios, e.g. the colsum-vs-9-lookup speedup).
+    pub fn results(&self) -> &[BenchResult] {
+        &self.results
     }
 
     /// Declare elements-per-iteration for the next `bench()` call so the
@@ -123,8 +140,44 @@ impl Bench {
         self.results.push(res);
     }
 
-    /// Print a footer and append JSONL results under `target/`.
+    /// One result as a `sfcmul-bench-v1` JSON object.
+    fn result_json(r: &BenchResult) -> Json {
+        Json::obj()
+            .set("name", r.name.as_str())
+            .set("median_ns", r.median_ns)
+            .set("mean_ns", r.mean_ns)
+            .set("sd_ns", r.sd_ns)
+            .set("p90_ns", r.p90_ns)
+            .set("iters", Json::Int(r.iters_per_sample as i64))
+            .set("samples", r.samples)
+            .set("elems", r.elems.map(|e| Json::Int(e as i64)).unwrap_or(Json::Null))
+            .set(
+                "melems_per_s",
+                r.throughput_m_elems().map(Json::Num).unwrap_or(Json::Null),
+            )
+    }
+
+    /// Print a footer, append JSONL results under `target/`, and — when
+    /// `SFCMUL_BENCH_JSON=path` is set — write the whole group as one
+    /// machine-readable JSON document to `path` (the `BENCH_conv.json`
+    /// perf-trajectory format; see EXPERIMENTS.md for regeneration).
     pub fn finish(self) {
+        if let Ok(json_path) = std::env::var("SFCMUL_BENCH_JSON") {
+            if !json_path.is_empty() {
+                let doc = Json::obj()
+                    .set("schema", "sfcmul-bench-v1")
+                    .set("group", self.group.as_str())
+                    .set("quick", self.quick)
+                    .set("provenance", "measured")
+                    .set("os", std::env::consts::OS)
+                    .set("arch", std::env::consts::ARCH)
+                    .set("results", Json::Arr(self.results.iter().map(Self::result_json).collect()));
+                match std::fs::write(&json_path, format!("{doc}\n")) {
+                    Ok(()) => println!("  wrote {json_path} ({} results)", self.results.len()),
+                    Err(e) => eprintln!("  could not write {json_path}: {e}"),
+                }
+            }
+        }
         let path = std::path::Path::new("target").join("bench-results.jsonl");
         if let Some(parent) = path.parent() {
             let _ = std::fs::create_dir_all(parent);
@@ -158,9 +211,17 @@ fn fmt_ns(ns: f64) -> String {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use std::sync::Mutex;
+
+    /// Env vars are process-global and `cargo test` is multi-threaded:
+    /// every test that mutates `SFCMUL_BENCH_*` or calls `finish()` (which
+    /// reads them) takes this lock so runs can't observe each other's
+    /// variables or race on the JSON output path.
+    static ENV_LOCK: Mutex<()> = Mutex::new(());
 
     #[test]
     fn bench_runs_and_records() {
+        let _env = ENV_LOCK.lock().unwrap_or_else(|e| e.into_inner());
         std::env::set_var("SFCMUL_BENCH_QUICK", "1");
         let mut b = Bench::new("selftest");
         b.throughput(64).bench("noop_sum", || (0..64u64).sum::<u64>());
@@ -168,6 +229,45 @@ mod tests {
         assert!(b.results[0].median_ns > 0.0);
         assert!(b.results[0].throughput_m_elems().unwrap() > 0.0);
         b.finish();
+    }
+
+    #[test]
+    fn result_json_covers_schema_fields() {
+        let r = BenchResult {
+            name: "conv_x".into(),
+            median_ns: 10.0,
+            mean_ns: 11.5,
+            sd_ns: 1.0,
+            p90_ns: 12.0,
+            iters_per_sample: 5,
+            samples: 8,
+            elems: Some(65536),
+        };
+        let s = Bench::result_json(&r).to_string();
+        assert!(s.contains("\"name\":\"conv_x\""));
+        assert!(s.contains("\"median_ns\":10"));
+        assert!(s.contains("\"elems\":65536"));
+        assert!(s.contains("\"melems_per_s\":"));
+        let none = BenchResult { elems: None, ..r };
+        assert!(Bench::result_json(&none).to_string().contains("\"melems_per_s\":null"));
+    }
+
+    #[test]
+    fn bench_json_env_writes_group_document() {
+        let _env = ENV_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+        std::env::set_var("SFCMUL_BENCH_QUICK", "1");
+        let path = std::env::temp_dir().join(format!("sfcmul_bench_{}.json", std::process::id()));
+        std::env::set_var("SFCMUL_BENCH_JSON", &path);
+        let mut b = Bench::new("jsontest");
+        b.throughput(16).bench("sum16", || (0..16u64).sum::<u64>());
+        b.finish();
+        std::env::remove_var("SFCMUL_BENCH_JSON");
+        let doc = std::fs::read_to_string(&path).unwrap();
+        let _ = std::fs::remove_file(&path);
+        assert!(doc.contains("\"schema\":\"sfcmul-bench-v1\""));
+        assert!(doc.contains("\"group\":\"jsontest\""));
+        assert!(doc.contains("\"name\":\"sum16\""));
+        assert!(doc.contains("\"provenance\":\"measured\""));
     }
 
     #[test]
