@@ -9,7 +9,7 @@
 //! Run: `make artifacts && cargo run --release --example streaming_service`
 
 use sfcmul::coordinator::{engines, Coordinator, CoordinatorConfig, EngineSpec, TileEngine};
-use sfcmul::image::{edge_detect, psnr, synthetic_scene};
+use sfcmul::image::{edge_detect, psnr, synthetic_scene, Operator};
 use sfcmul::multipliers::{registry, DesignSpec};
 use std::sync::Arc;
 use std::time::Instant;
@@ -40,7 +40,7 @@ fn main() {
         .map(|i| {
             let design = DESIGNS[i % DESIGNS.len()];
             coord
-                .submit_to(synthetic_scene(SIZE, SIZE, i as u64), Some(design))
+                .submit_to(synthetic_scene(SIZE, SIZE, i as u64), Some(design), Operator::Laplacian)
                 .expect("registered design")
         })
         .collect();

@@ -9,6 +9,7 @@
 use sfcmul::coordinator::engine::conv_tile_taps;
 use sfcmul::coordinator::{tile_image, LutTileEngine, ModelTileEngine, RowbufTileEngine, TileEngine};
 use sfcmul::image::colsum::laplacian_taps_i64;
+use sfcmul::image::ops::{apply_operator_lut, Operator, Post};
 use sfcmul::image::{conv3x3, conv3x3_lut, conv3x3_lut_9tap, conv3x3_rowbuf, synthetic_scene, LAPLACIAN};
 use sfcmul::multipliers::{lut::product_table, registry};
 use sfcmul::runtime::{artifacts_available, artifacts_dir, pjrt_enabled, PjrtTileEngine};
@@ -23,16 +24,26 @@ fn main() {
     let lut = product_table(model.as_ref());
 
     b.throughput(pixels).bench("conv_model_direct_256", || {
-        conv3x3(&img, &LAPLACIAN, model.as_ref()).data[0]
+        conv3x3(&img, &LAPLACIAN, model.as_ref(), Post::LAPLACIAN).data[0]
     });
     b.throughput(pixels).bench("conv_lut_direct_256", || {
-        conv3x3_lut(&img, &LAPLACIAN, &lut).data[0]
+        conv3x3_lut(&img, &LAPLACIAN, &lut, Post::LAPLACIAN).data[0]
     });
     b.throughput(pixels).bench("conv_lut_direct_9tap_256", || {
-        conv3x3_lut_9tap(&img, &LAPLACIAN, &lut).data[0]
+        conv3x3_lut_9tap(&img, &LAPLACIAN, &lut, Post::LAPLACIAN).data[0]
     });
     b.throughput(pixels).bench("conv_rowbuf_256", || {
-        conv3x3_rowbuf(&img, &LAPLACIAN, model.as_ref()).data[0]
+        conv3x3_rowbuf(&img, &LAPLACIAN, model.as_ref(), Post::LAPLACIAN).data[0]
+    });
+
+    // The multi-operator pipeline: a two-pass gradient magnitude
+    // (zero-tap-elided 6-lookup passes) and Roberts (2 lookups per pass)
+    // next to the single-pass Laplacian colsum path above.
+    b.throughput(pixels).bench("op_sobel_lut_direct_256", || {
+        apply_operator_lut(&img, Operator::Sobel, &lut).data[0]
+    });
+    b.throughput(pixels).bench("op_roberts_lut_direct_256", || {
+        apply_operator_lut(&img, Operator::Roberts, &lut).data[0]
     });
 
     let tiles = tile_image(0, &img);

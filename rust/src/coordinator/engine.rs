@@ -1,15 +1,22 @@
 //! Tile-processing engines.
 //!
 //! [`TileEngine`] is the pluggable compute backend of the coordinator.
-//! Two in-process engines live here; the PJRT engine (AOT-compiled
-//! JAX/Pallas executable) is in [`crate::runtime`] and implements the
-//! same trait.
+//! Engines are *multi-operator*: each tile carries an operator id
+//! ([`Tile::op`]) and the table-backed engines hold one compiled
+//! [`OpProgram`] per registered operator — tap tables are keyed per
+//! (design, operator) pair at construction, so concurrent jobs running
+//! different operators on the same engine never clobber each other.
+//! The PJRT engine (AOT-compiled JAX/Pallas executable) is in
+//! [`crate::runtime`] and implements the same trait (Laplacian-only:
+//! see [`TileEngine::supports_op`]).
 
 use super::tiler::{Tile, TileOut, TILE_HALO, TILE_IN};
-use crate::image::colsum::{laplacian_taps_i64, postprocess, ColSumKernel};
-use crate::image::conv::{conv3x3_rowbuf, KERNEL_PRESCALE_SHIFT, LAPLACIAN, PIXEL_SHIFT};
+use crate::image::colsum::postprocess;
+use crate::image::conv::{conv3x3_rowbuf, KERNEL_PRESCALE_SHIFT, PIXEL_SHIFT};
+use crate::image::ops::{combine_magnitude, OpProgram, Operator};
 use crate::image::Image;
 use crate::multipliers::MultiplierModel;
+use std::collections::BTreeSet;
 use std::sync::Arc;
 
 /// A batched tile processor.
@@ -24,16 +31,16 @@ pub trait TileEngine: Send + Sync {
     fn preferred_batch(&self) -> usize {
         16
     }
+
+    /// Whether this engine can serve `op`. In-process engines serve the
+    /// whole registry; the PJRT engine's compiled artifact is
+    /// Laplacian-only. Checked by the coordinator at submit time.
+    fn supports_op(&self, _op: Operator) -> bool {
+        true
+    }
 }
 
-/// Sliding column-sum tile convolution — the production hot path of
-/// every table-backed engine (LUT and bitsim): ≈2 lookups + 5 adds per
-/// output pixel through the shared [`crate::image::colsum`] core. The
-/// tile's haloed input window *is* the padded source the core expects,
-/// so edge tiles need no special-casing.
-fn conv_tile_colsum(tile: &Tile, kernel: &ColSumKernel) -> TileOut {
-    let mut data = vec![0u8; tile.core_w * tile.core_h];
-    kernel.run(&tile.data, TILE_IN, &mut data, tile.core_w, tile.core_w, tile.core_h);
+fn tile_out(tile: &Tile, data: Vec<u8>) -> TileOut {
     TileOut {
         job_id: tile.job_id,
         x0: tile.x0,
@@ -44,12 +51,55 @@ fn conv_tile_colsum(tile: &Tile, kernel: &ColSumKernel) -> TileOut {
     }
 }
 
+/// One compiled [`OpProgram`] per registered operator for a single
+/// design — the per-(design, operator) tap tables of every table-backed
+/// engine. Uniform-ring operators run the sliding column-sum core
+/// (≈2 lookups + 5 adds/pixel); the rest run the zero-tap-elided folded
+/// path; wide netlist designs whose products exceed the i32-safe bound
+/// fall back to i64 tables inside [`OpProgram`] transparently.
+struct OpSet {
+    programs: Vec<OpProgram>,
+}
+
+impl OpSet {
+    /// Compile all operators against a product source (`prod(a, b)` =
+    /// the design's product of pre-shifted pixel `a` and pre-scaled
+    /// coefficient `b`).
+    fn build(prod: &dyn Fn(u8, i8) -> i64) -> Self {
+        let programs = Operator::all().iter().map(|&op| OpProgram::build(op, prod)).collect();
+        Self { programs }
+    }
+
+    fn from_lut(lut: &[i32]) -> Self {
+        let programs =
+            Operator::all().iter().map(|&op| OpProgram::from_lut(op, lut)).collect();
+        Self { programs }
+    }
+
+    /// Run the tile's operator over its haloed window — the window *is*
+    /// the zero-padded source the program cores expect, so edge tiles
+    /// need no special-casing.
+    fn conv_tile(&self, tile: &Tile) -> TileOut {
+        let op = Operator::from_id(tile.op).expect("valid operator id on tile");
+        let mut data = vec![0u8; tile.core_w * tile.core_h];
+        self.programs[op.id() as usize].run_window(
+            &tile.data,
+            TILE_IN,
+            &mut data,
+            tile.core_w,
+            tile.core_w,
+            tile.core_h,
+        );
+        tile_out(tile, data)
+    }
+}
+
 /// The pre-colsum folded-tap tile kernel: per-coefficient i64 tap tables,
-/// 9 loads + 8 adds per output pixel. Retained verbatim (i) as the
-/// serving fallback for wide netlist designs whose tap products exceed
-/// [`crate::image::colsum::MAX_TAP_ABS`] and (ii) as the measured
-/// baseline `bench_conv` and the committed `BENCH_conv.json` trajectory
-/// compare the column-sum kernel against.
+/// 9 loads + 8 adds per output pixel, the Laplacian's historical output
+/// rule. Retained verbatim as the measured baseline `bench_conv` and the
+/// committed `BENCH_conv.json` trajectory compare the column-sum kernel
+/// against (the serving wide-design fallback now lives inside
+/// [`OpProgram`]).
 pub fn conv_tile_taps(tile: &Tile, tc: &[i64; 256], tr: &[i64; 256]) -> TileOut {
     let mut data = vec![0u8; tile.core_w * tile.core_h];
     let src = &tile.data;
@@ -71,85 +121,54 @@ pub fn conv_tile_taps(tile: &Tile, tc: &[i64; 256], tr: &[i64; 256]) -> TileOut 
             *out_px = postprocess(acc);
         }
     }
-    TileOut {
-        job_id: tile.job_id,
-        x0: tile.x0,
-        y0: tile.y0,
-        core_w: tile.core_w,
-        core_h: tile.core_h,
-        data,
-    }
+    tile_out(tile, data)
 }
 
-/// Shared tile-convolution core over a product function.
-fn conv_tile(tile: &Tile, product: &dyn Fn(u8, i8) -> i64) -> TileOut {
+/// Reference tile convolution through a raw product function: the tile's
+/// operator passes run as direct MACs (no folded tables), gradient
+/// components combined with the saturating magnitude sum. The slow path
+/// the table-backed engines are validated against.
+fn conv_tile_model(tile: &Tile, product: &dyn Fn(u8, i8) -> i64) -> TileOut {
+    let op = Operator::from_id(tile.op).expect("valid operator id on tile");
     let mut data = vec![0u8; tile.core_w * tile.core_h];
-    for cy in 0..tile.core_h {
-        for cx in 0..tile.core_w {
-            let mut acc = 0i64;
-            for ky in 0..3 {
-                for kx in 0..3 {
-                    let px =
-                        tile.data[(cy + ky) * TILE_IN + cx + kx] >> PIXEL_SHIFT;
-                    let k = (LAPLACIAN[ky][kx] << KERNEL_PRESCALE_SHIFT) as i8;
-                    acc += product(px, k);
+    let mut component = vec![0u8; tile.core_w * tile.core_h];
+    for (pi, pass) in op.passes().iter().enumerate() {
+        for cy in 0..tile.core_h {
+            for cx in 0..tile.core_w {
+                let mut acc = 0i64;
+                for ky in 0..3 {
+                    for kx in 0..3 {
+                        let px = tile.data[(cy + ky) * TILE_IN + cx + kx] >> PIXEL_SHIFT;
+                        let k = (pass.kernel[ky][kx] << KERNEL_PRESCALE_SHIFT) as i8;
+                        acc += product(px, k);
+                    }
                 }
+                component[cy * tile.core_w + cx] = pass.post.apply(acc);
             }
-            data[cy * tile.core_w + cx] = postprocess(acc);
+        }
+        if pi == 0 {
+            std::mem::swap(&mut data, &mut component);
+        } else {
+            combine_magnitude(&mut data, &component);
         }
     }
     debug_assert_eq!(TILE_HALO, 1);
-    TileOut {
-        job_id: tile.job_id,
-        x0: tile.x0,
-        y0: tile.y0,
-        core_w: tile.core_w,
-        core_h: tile.core_h,
-        data,
-    }
-}
-
-/// A table-backed engine's per-tile kernel: the column-sum fast path
-/// when the folded taps fit the i32-safe bound (every real product
-/// table), the retained i64 9-lookup kernel otherwise (reachable only
-/// through hand-built tables / very wide compensated netlists whose taps
-/// exceed [`crate::image::colsum::MAX_TAP_ABS`]).
-enum TapKernel {
-    ColSum(ColSumKernel),
-    Wide { tap_center: Box<[i64; 256]>, tap_ring: Box<[i64; 256]> },
-}
-
-impl TapKernel {
-    fn from_taps_i64(tap_center: Box<[i64; 256]>, tap_ring: Box<[i64; 256]>) -> Self {
-        match ColSumKernel::try_from_taps(&tap_center, &tap_ring) {
-            Some(k) => TapKernel::ColSum(k),
-            None => TapKernel::Wide { tap_center, tap_ring },
-        }
-    }
-
-    fn conv_tile(&self, tile: &Tile) -> TileOut {
-        match self {
-            TapKernel::ColSum(k) => conv_tile_colsum(tile, k),
-            TapKernel::Wide { tap_center, tap_ring } => {
-                conv_tile_taps(tile, tap_center, tap_ring)
-            }
-        }
-    }
+    tile_out(tile, data)
 }
 
 /// LUT-backed engine: products come from a 256×256 table generated from a
 /// multiplier design — the production in-process path.
 ///
-/// Perf (EXPERIMENTS.md §Perf, iterations L3-1, L3-4): the 3×3 Laplacian
-/// has only two distinct pre-scaled coefficients (centre +64, ring −8),
-/// so the 256×256 table folds into two 256-entry L1-resident `i32` tap
-/// tables, and the per-tile inner loop is the sliding column-sum kernel
-/// of [`crate::image::colsum`] — ≈2 loads + 5 adds per output pixel
-/// (down from the 9 loads + 8 adds of [`conv_tile_taps`]).
+/// Perf (EXPERIMENTS.md §Perf, iterations L3-1, L3-4): per operator the
+/// table folds into 256-entry L1-resident tap tables; uniform-ring
+/// operators (the Laplacian) run the sliding column-sum kernel of
+/// [`crate::image::colsum`] (≈2 loads + 5 adds per output pixel),
+/// directional operators run the zero-tap-elided folded path (6 loads
+/// for the Gx/Gy family, 2 for Roberts).
 pub struct LutTileEngine {
     name: String,
     lut: Vec<i32>,
-    kernel: TapKernel,
+    ops: OpSet,
 }
 
 impl LutTileEngine {
@@ -158,9 +177,8 @@ impl LutTileEngine {
     }
 
     pub fn from_table(name: &str, lut: Vec<i32>) -> Self {
-        let (tap_center, tap_ring) = laplacian_taps_i64(&lut);
-        let kernel = TapKernel::from_taps_i64(tap_center, tap_ring);
-        Self { name: name.to_string(), lut, kernel }
+        let ops = OpSet::from_lut(&lut);
+        Self { name: name.to_string(), lut, ops }
     }
 
     pub fn lut(&self) -> &[i32] {
@@ -174,7 +192,7 @@ impl TileEngine for LutTileEngine {
     }
 
     fn process_batch(&self, tiles: &[Tile]) -> Vec<TileOut> {
-        tiles.iter().map(|t| self.kernel.conv_tile(t)).collect()
+        tiles.iter().map(|t| self.ops.conv_tile(t)).collect()
     }
 }
 
@@ -228,10 +246,11 @@ impl TileEngine for DualModeTileEngine {
 
 /// Streaming row-buffer engine: runs the Fig. 8 line-buffer datapath
 /// (two line buffers + 3×3 window register file) over each tile's haloed
-/// input window. Bit-exact with the direct engines — the tile window
-/// already carries the zero padding the whole-image path would see — so
-/// `--engine rowbuf` serves through the coordinator like any other
-/// backend while exercising the hardware-faithful datapath.
+/// input window, once per operator pass. Bit-exact with the direct
+/// engines — the tile window already carries the zero padding the
+/// whole-image path would see — so `--engine rowbuf` serves through the
+/// coordinator like any other backend while exercising the
+/// hardware-faithful datapath.
 pub struct RowbufTileEngine {
     model: Arc<dyn MultiplierModel>,
 }
@@ -251,43 +270,47 @@ impl TileEngine for RowbufTileEngine {
         tiles
             .iter()
             .map(|t| {
+                let op = Operator::from_id(t.op).expect("valid operator id on tile");
                 let window = Image {
                     width: TILE_IN,
                     height: TILE_IN,
                     data: t.data.clone(),
                 };
-                let full = conv3x3_rowbuf(&window, &LAPLACIAN, self.model.as_ref());
                 let mut data = vec![0u8; t.core_w * t.core_h];
-                for cy in 0..t.core_h {
-                    for cx in 0..t.core_w {
-                        data[cy * t.core_w + cx] =
-                            full.get(cx + TILE_HALO, cy + TILE_HALO);
+                let mut component = vec![0u8; t.core_w * t.core_h];
+                for (pi, pass) in op.passes().iter().enumerate() {
+                    let full =
+                        conv3x3_rowbuf(&window, &pass.kernel, self.model.as_ref(), pass.post);
+                    for cy in 0..t.core_h {
+                        for cx in 0..t.core_w {
+                            component[cy * t.core_w + cx] =
+                                full.get(cx + TILE_HALO, cy + TILE_HALO);
+                        }
+                    }
+                    if pi == 0 {
+                        std::mem::swap(&mut data, &mut component);
+                    } else {
+                        combine_magnitude(&mut data, &component);
                     }
                 }
-                TileOut {
-                    job_id: t.job_id,
-                    x0: t.x0,
-                    y0: t.y0,
-                    core_w: t.core_w,
-                    core_h: t.core_h,
-                    data,
-                }
+                tile_out(t, data)
             })
             .collect()
     }
 }
 
-/// Gate-level serving engine: the design's per-coefficient tap tables are
-/// computed by running its *netlist* through the bitsliced 64-lane
-/// simulator ([`crate::netlist::bitslice::BitSim`]) at construction — 256
-/// operand pairs in 4 netlist passes — so the serving path computes what
-/// the hardware computes, not what the functional model claims. Works for
+/// Gate-level serving engine: the per-(design, operator) tap tables are
+/// computed by running the design's *netlist* through the bitsliced
+/// 64-lane simulator ([`crate::netlist::bitslice::BitSim`]) at
+/// construction — every distinct (pre-shifted pixel, pre-scaled
+/// coefficient) operand pair across the whole operator registry in a
+/// handful of netlist passes — so the serving path computes what the
+/// hardware computes, not what the functional model claims. Works for
 /// any design width in `8..=31` (the LUT engine is 8-bit only); the
-/// per-tile convolution then matches the LUT engine's folded-tap fast
-/// path.
+/// per-tile convolution then matches the LUT engine's program exactly.
 pub struct BitsimTileEngine {
     name: String,
-    kernel: TapKernel,
+    ops: OpSet,
 }
 
 impl BitsimTileEngine {
@@ -298,26 +321,32 @@ impl BitsimTileEngine {
         let n = model.bits();
         assert!((8..=31).contains(&n), "bitsim engine supports 8..=31-bit designs");
         let nl = model.build_netlist();
-        let k_center = ((LAPLACIAN[1][1] << KERNEL_PRESCALE_SHIFT) as i8) as i64;
-        let k_ring = ((LAPLACIAN[0][0] << KERNEL_PRESCALE_SHIFT) as i8) as i64;
-        // All distinct MAC operand pairs of the Laplacian datapath: every
-        // pre-shifted pixel value × the two pre-scaled coefficients. The
-        // domain is derived from PIXEL_SHIFT so the tap fold below can
-        // never index past the product list.
+        // The distinct pre-scaled coefficients of every registered
+        // operator pass — the full MAC operand alphabet of the serving
+        // surface.
+        let mut ks: BTreeSet<i8> = BTreeSet::new();
+        for op in Operator::all() {
+            for pass in op.passes() {
+                for row in &pass.kernel {
+                    for &k in row {
+                        ks.insert((k << KERNEL_PRESCALE_SHIFT) as i8);
+                    }
+                }
+            }
+        }
+        let ks: Vec<i8> = ks.into_iter().collect();
         let dom = 256usize >> PIXEL_SHIFT;
-        let pairs: Vec<(i64, i64)> = (0..dom as i64)
-            .flat_map(|px| [(px, k_center), (px, k_ring)])
+        let pairs: Vec<(i64, i64)> = ks
+            .iter()
+            .flat_map(|&k| (0..dom as i64).map(move |px| (px, k as i64)))
             .collect();
         let products = crate::multipliers::verify::netlist_multiply_batch(&nl, n, &pairs);
-        let mut tap_center = Box::new([0i64; 256]);
-        let mut tap_ring = Box::new([0i64; 256]);
-        for px in 0..256usize {
-            let shifted = px >> PIXEL_SHIFT;
-            tap_center[px] = products[2 * shifted];
-            tap_ring[px] = products[2 * shifted + 1];
-        }
-        let kernel = TapKernel::from_taps_i64(tap_center, tap_ring);
-        Self { name: format!("bitsim:{}", model.name()), kernel }
+        let prod = move |a: u8, b: i8| {
+            let ki = ks.binary_search(&b).expect("coefficient swept at construction");
+            products[ki * dom + a as usize]
+        };
+        let ops = OpSet::build(&prod);
+        Self { name: format!("bitsim:{}", model.name()), ops }
     }
 }
 
@@ -327,12 +356,12 @@ impl TileEngine for BitsimTileEngine {
     }
 
     fn process_batch(&self, tiles: &[Tile]) -> Vec<TileOut> {
-        tiles.iter().map(|t| self.kernel.conv_tile(t)).collect()
+        tiles.iter().map(|t| self.ops.conv_tile(t)).collect()
     }
 }
 
 /// Model-backed engine: calls the multiplier functional model directly
-/// (slow reference; used to validate the LUT and PJRT engines).
+/// per MAC (slow reference; used to validate the LUT and PJRT engines).
 pub struct ModelTileEngine {
     model: Arc<dyn MultiplierModel>,
 }
@@ -351,7 +380,7 @@ impl TileEngine for ModelTileEngine {
     fn process_batch(&self, tiles: &[Tile]) -> Vec<TileOut> {
         tiles
             .iter()
-            .map(|t| conv_tile(t, &|px, k| self.model.multiply(px as i64, k as i64)))
+            .map(|t| conv_tile_model(t, &|px, k| self.model.multiply(px as i64, k as i64)))
             .collect()
     }
 }
@@ -360,8 +389,25 @@ impl TileEngine for ModelTileEngine {
 mod tests {
     use super::*;
     use crate::coordinator::tiler::{reassemble, tile_image};
+    use crate::image::ops::{apply_operator, apply_operator_lut};
     use crate::image::{edge_detect, synthetic_scene, Image};
-    use crate::multipliers::{build_design, DesignId};
+    use crate::multipliers::{build_design, lut::product_table, DesignId};
+
+    fn tiles_for_op(job: u64, img: &Image, op: Operator) -> Vec<Tile> {
+        let mut tiles = tile_image(job, img);
+        for t in &mut tiles {
+            t.op = op.id();
+        }
+        tiles
+    }
+
+    fn reassembled(engine: &dyn TileEngine, tiles: &[Tile], w: usize, h: usize) -> Image {
+        let mut out = Image::new(w, h);
+        for to in engine.process_batch(tiles) {
+            reassemble(&mut out, &to);
+        }
+        out
+    }
 
     /// Tiled LUT engine output must equal the whole-image convolution —
     /// halos make tiling invisible.
@@ -373,11 +419,33 @@ mod tests {
             let reference = edge_detect(&img, model.as_ref());
             let engine = LutTileEngine::new(model.as_ref());
             let tiles = tile_image(0, &img);
-            let mut out = Image::new(150, 100);
-            for to in engine.process_batch(&tiles) {
-                reassemble(&mut out, &to);
-            }
+            let out = reassembled(&engine, &tiles, 150, 100);
             assert_eq!(out, reference, "{id:?}");
+        }
+    }
+
+    /// Every engine backend serves every registered operator, and the
+    /// tiled result equals the whole-image operator pipeline — tap
+    /// tables are keyed per (design, operator).
+    #[test]
+    fn engines_serve_every_operator_tiled() {
+        let model = build_design(DesignId::Proposed, 8);
+        let lut_table = product_table(model.as_ref());
+        let img = synthetic_scene(150, 90, 31);
+        let lut = LutTileEngine::new(model.as_ref());
+        let slow = ModelTileEngine::new(model.clone());
+        let rowbuf = RowbufTileEngine::new(model.clone());
+        for op in Operator::all() {
+            let tiles = tiles_for_op(1, &img, op);
+            let want = apply_operator(&img, op, model.as_ref());
+            assert_eq!(
+                apply_operator_lut(&img, op, &lut_table),
+                want,
+                "{op}: direct lut vs model"
+            );
+            assert_eq!(reassembled(&lut, &tiles, 150, 90), want, "{op}: lut engine");
+            assert_eq!(reassembled(&slow, &tiles, 150, 90), want, "{op}: model engine");
+            assert_eq!(reassembled(&rowbuf, &tiles, 150, 90), want, "{op}: rowbuf engine");
         }
     }
 
@@ -397,36 +465,41 @@ mod tests {
 
     /// The gate-level bitsim engine is bit-exact with the LUT engine for
     /// 8-bit designs (netlist ≡ model is proved exhaustively elsewhere),
-    /// including on partial edge tiles.
+    /// including on partial edge tiles — for every operator.
     #[test]
     fn bitsim_engine_equals_lut_engine() {
         for id in [DesignId::Exact, DesignId::Proposed] {
             let model = build_design(id, 8);
             let img = synthetic_scene(150, 90, 17);
-            let tiles = tile_image(3, &img);
             let lut = LutTileEngine::new(model.as_ref());
             let bitsim = BitsimTileEngine::new(model.as_ref());
-            let a = lut.process_batch(&tiles);
-            let b = bitsim.process_batch(&tiles);
-            for (x, y) in a.iter().zip(b.iter()) {
-                assert_eq!(x.data, y.data, "{id:?} tile at ({},{})", x.x0, x.y0);
+            for op in [Operator::Laplacian, Operator::Sobel, Operator::Gaussian3] {
+                let tiles = tiles_for_op(3, &img, op);
+                let a = lut.process_batch(&tiles);
+                let b = bitsim.process_batch(&tiles);
+                for (x, y) in a.iter().zip(b.iter()) {
+                    assert_eq!(x.data, y.data, "{id:?} {op} tile at ({},{})", x.x0, x.y0);
+                }
             }
         }
     }
 
     /// For wide designs (no LUT possible) the bitsim engine must agree
-    /// with the functional-model engine.
+    /// with the functional-model engine — the wide-tap i64 fallback
+    /// inside the operator programs engages here.
     #[test]
     fn bitsim_engine_equals_model_engine_wide() {
         let model = crate::multipliers::registry().build_str("proposed@16").unwrap();
         let img = synthetic_scene(96, 70, 23);
-        let tiles = tile_image(4, &img);
         let bitsim = BitsimTileEngine::new(model.as_ref());
         let slow = ModelTileEngine::new(model);
-        let a = bitsim.process_batch(&tiles);
-        let b = slow.process_batch(&tiles);
-        for (x, y) in a.iter().zip(b.iter()) {
-            assert_eq!(x.data, y.data, "tile at ({},{})", x.x0, x.y0);
+        for op in [Operator::Laplacian, Operator::Scharr] {
+            let tiles = tiles_for_op(4, &img, op);
+            let a = bitsim.process_batch(&tiles);
+            let b = slow.process_batch(&tiles);
+            for (x, y) in a.iter().zip(b.iter()) {
+                assert_eq!(x.data, y.data, "{op} tile at ({},{})", x.x0, x.y0);
+            }
         }
     }
 
@@ -446,5 +519,40 @@ mod tests {
                 assert_eq!(x.data, y.data, "{id:?} tile at ({},{})", x.x0, x.y0);
             }
         }
+    }
+
+    /// A single batch mixing tiles of different operators routes each
+    /// tile through its own program (no shared mutable state).
+    #[test]
+    fn mixed_operator_batch_is_routed_per_tile() {
+        let model = build_design(DesignId::Proposed, 8);
+        let engine = LutTileEngine::new(model.as_ref());
+        let img = synthetic_scene(64, 64, 5);
+        let mut mixed = Vec::new();
+        for op in Operator::all() {
+            mixed.extend(tiles_for_op(op.id() as u64, &img, op));
+        }
+        let outs = engine.process_batch(&mixed);
+        for (tile, out) in mixed.iter().zip(outs.iter()) {
+            let op = Operator::from_id(tile.op).unwrap();
+            let want = apply_operator(&img, op, model.as_ref());
+            assert_eq!(out.data, want.data, "{op}");
+        }
+    }
+
+    #[test]
+    fn in_process_engines_support_all_operators() {
+        let model = build_design(DesignId::Proposed, 8);
+        let engines: Vec<Box<dyn TileEngine>> = vec![
+            Box::new(LutTileEngine::new(model.as_ref())),
+            Box::new(ModelTileEngine::new(model.clone())),
+            Box::new(RowbufTileEngine::new(model.clone())),
+        ];
+        for e in &engines {
+            for op in Operator::all() {
+                assert!(e.supports_op(op), "{} {op}", e.name());
+            }
+        }
+        assert_eq!(Operator::all().len(), crate::image::ops::OPERATOR_COUNT);
     }
 }

@@ -18,6 +18,12 @@
 //!   (widths 8..=31) — batch jobs observe hardware truth.
 //! * `pjrt` — the AOT-compiled JAX/Pallas executable via PJRT (8-bit
 //!   designs; requires artifacts and the `pjrt` cargo feature).
+//!
+//! Every resolved in-process engine serves the **whole operator
+//! registry** ([`crate::image::ops::Operator`]) — tap tables are built
+//! per (design, operator) pair at construction. The PJRT artifact is
+//! Laplacian-only; the coordinator rejects other operators for it at
+//! submit time.
 
 use super::engine::{
     BitsimTileEngine, LutTileEngine, ModelTileEngine, RowbufTileEngine, TileEngine,
@@ -188,6 +194,29 @@ mod tests {
             assert_eq!(x.data, y.data, "lut vs model");
             assert_eq!(x.data, z.data, "lut vs rowbuf");
             assert_eq!(x.data, w.data, "lut vs bitsim");
+        }
+    }
+
+    /// Resolved engines agree on the new operators too — the per-design
+    /// operator programs are equivalent across backends.
+    #[test]
+    fn resolved_engines_agree_on_sobel() {
+        use crate::image::ops::Operator;
+        let design: DesignSpec = "proposed@8".parse().unwrap();
+        let img = synthetic_scene(100, 70, 7);
+        let mut tiles = tile_image(0, &img);
+        for t in &mut tiles {
+            t.op = Operator::Sobel.id();
+        }
+        let lut = resolve(EngineSpec::Lut, &design).unwrap();
+        let model = resolve(EngineSpec::Model, &design).unwrap();
+        let bitsim = resolve(EngineSpec::Bitsim, &design).unwrap();
+        let a = lut.process_batch(&tiles);
+        let b = model.process_batch(&tiles);
+        let c = bitsim.process_batch(&tiles);
+        for ((x, y), z) in a.iter().zip(b.iter()).zip(c.iter()) {
+            assert_eq!(x.data, y.data, "lut vs model");
+            assert_eq!(x.data, z.data, "lut vs bitsim");
         }
     }
 

@@ -12,9 +12,12 @@
 //!
 //! One coordinator serves a *set of named engines* (typically one per
 //! multiplier design, resolved from spec strings through
-//! [`engines::resolve`]); each job may select its engine by name at
-//! submit time and [`MetricsSnapshot`] carries per-design rows — a single
-//! service instance A/B-tests exact vs. approximate designs under load.
+//! [`engines::resolve`]); each job may select its engine by name **and
+//! its operator** ([`crate::image::ops::Operator`] — Sobel, Prewitt,
+//! Scharr, Roberts, sharpen, Gaussian, or the classic Laplacian) at
+//! submit time, and [`MetricsSnapshot`] carries per-design rows — a
+//! single service instance A/B-tests exact vs. approximate designs
+//! across heterogeneous workloads under load.
 //!
 //! ```text
 //!  submit(img, key?) ─┬─ tiler ─▶ [bounded tile queue] ─▶ batcher ─▶ engine[key] ─┐

@@ -21,6 +21,7 @@ use super::engine::TileEngine;
 use super::job::JobResult;
 use super::metrics::{Metrics, MetricsSnapshot};
 use super::tiler::{reassemble, tile_image, Tile};
+use crate::image::ops::Operator;
 use crate::image::Image;
 use crate::util::error::Error;
 use crate::util::pool::{bounded, Receiver, Sender};
@@ -109,6 +110,9 @@ pub struct Coordinator {
     workers: Vec<JoinHandle<()>>,
     next_job: AtomicU64,
     engine_names: Vec<String>,
+    /// The engine fleet, kept for submit-time capability checks
+    /// ([`TileEngine::supports_op`]); workers hold their own clone.
+    fleet: Arc<Vec<Arc<dyn TileEngine>>>,
 }
 
 impl Coordinator {
@@ -164,6 +168,7 @@ impl Coordinator {
             workers,
             next_job: AtomicU64::new(1),
             engine_names,
+            fleet,
         }
     }
 
@@ -179,15 +184,23 @@ impl Coordinator {
         &self.engine_names
     }
 
-    /// Submit an image to the default engine; returns a handle to wait
-    /// on. Blocks (backpressure) when the tile queue is full.
+    /// Submit an image to the default engine with the default operator
+    /// (Laplacian); returns a handle to wait on. Blocks (backpressure)
+    /// when the tile queue is full.
     pub fn submit(&self, image: Image) -> JobHandle {
-        self.submit_inner(image, 0, 0)
+        self.submit_inner(image, 0, 0, Operator::Laplacian)
     }
 
-    /// Submit to a named engine (per-job design selection). `None` routes
-    /// to the default engine; an unknown name is an error.
-    pub fn submit_to(&self, image: Image, engine: Option<&str>) -> crate::Result<JobHandle> {
+    /// Submit to a named engine with an explicit operator (per-job design
+    /// *and* workload selection). `None` routes to the default engine; an
+    /// unknown name, or an engine that cannot serve `op` (the PJRT
+    /// artifact is Laplacian-only), is an error.
+    pub fn submit_to(
+        &self,
+        image: Image,
+        engine: Option<&str>,
+        op: Operator,
+    ) -> crate::Result<JobHandle> {
         let idx = match engine {
             None => 0,
             Some(name) => self
@@ -201,21 +214,28 @@ impl Coordinator {
                     ))
                 })?,
         };
-        Ok(self.submit_inner(image, idx, 0))
+        if !self.fleet[idx].supports_op(op) {
+            return Err(Error::msg(format!(
+                "engine {:?} does not support operator {op}",
+                self.engine_names[idx]
+            )));
+        }
+        Ok(self.submit_inner(image, idx, 0, op))
     }
 
     /// Submit with an explicit quality class (dual-quality serving; see
     /// [`crate::coordinator::engine::Quality`]).
     pub fn submit_with_quality(&self, image: Image, quality: u8) -> JobHandle {
-        self.submit_inner(image, 0, quality)
+        self.submit_inner(image, 0, quality, Operator::Laplacian)
     }
 
-    fn submit_inner(&self, image: Image, engine: usize, quality: u8) -> JobHandle {
+    fn submit_inner(&self, image: Image, engine: usize, quality: u8, op: Operator) -> JobHandle {
         let id = self.next_job.fetch_add(1, Ordering::Relaxed);
         let mut tiles = tile_image(id, &image);
         for t in &mut tiles {
             t.engine = engine as u8;
             t.quality = quality;
+            t.op = op.id();
         }
         let (reply_tx, reply_rx) = bounded::<JobResult>(1);
         {
@@ -489,9 +509,9 @@ mod multi_design_tests {
         let img = synthetic_scene(192, 128, 21);
         let want_approx = edge_detect(&img, approx.as_ref());
         let want_exact = edge_detect(&img, exact.as_ref());
-        let h1 = coord.submit_to(img.clone(), Some("proposed@8")).unwrap();
-        let h2 = coord.submit_to(img.clone(), Some("exact@8")).unwrap();
-        let h3 = coord.submit_to(img.clone(), None).unwrap(); // default
+        let h1 = coord.submit_to(img.clone(), Some("proposed@8"), Operator::Laplacian).unwrap();
+        let h2 = coord.submit_to(img.clone(), Some("exact@8"), Operator::Laplacian).unwrap();
+        let h3 = coord.submit_to(img.clone(), None, Operator::Laplacian).unwrap(); // default
         let h4 = coord.submit(img.clone()); // also default
         assert_eq!(h1.wait().edges, want_approx);
         assert_eq!(h2.wait().edges, want_exact);
@@ -516,7 +536,7 @@ mod multi_design_tests {
     fn unknown_engine_name_is_an_error() {
         let coord = two_design_coordinator(1);
         let img = synthetic_scene(64, 64, 3);
-        let err = coord.submit_to(img, Some("d2@8")).unwrap_err();
+        let err = coord.submit_to(img, Some("d2@8"), Operator::Laplacian).unwrap_err();
         assert!(format!("{err}").contains("unknown engine"));
     }
 
@@ -530,7 +550,7 @@ mod multi_design_tests {
             let name = names[(t % 2) as usize];
             joins.push(std::thread::spawn(move || {
                 let img = synthetic_scene(100, 90, t);
-                coord.submit_to(img, Some(name)).unwrap().wait().tiles
+                coord.submit_to(img, Some(name), Operator::Laplacian).unwrap().wait().tiles
             }));
         }
         for j in joins {
@@ -621,9 +641,13 @@ mod batching_tests {
         // process_batch call (≤ 8 tiles) while the remaining tiles are
         // already queued; after release, at least one dispatch sees ≥ 8
         // pending tiles and must chunk them 4-and-4.
-        let h_big = coord.submit_to(synthetic_scene(192, 256, 1), Some("big")).unwrap();
+        let h_big = coord
+            .submit_to(synthetic_scene(192, 256, 1), Some("big"), Operator::Laplacian)
+            .unwrap();
         gate_tx.send(()).unwrap();
-        let h_small = coord.submit_to(synthetic_scene(130, 70, 2), Some("small")).unwrap();
+        let h_small = coord
+            .submit_to(synthetic_scene(130, 70, 2), Some("small"), Operator::Laplacian)
+            .unwrap();
         assert_eq!(h_big.wait().tiles, 12);
         assert_eq!(h_small.wait().tiles, 6);
         coord.shutdown();
@@ -636,6 +660,52 @@ mod batching_tests {
             small.max_seen.load(Ordering::SeqCst),
             1,
             "batch-of-1 engine must never see more than one tile"
+        );
+    }
+}
+
+#[cfg(test)]
+mod operator_routing_tests {
+    use super::*;
+    use crate::coordinator::engine::LutTileEngine;
+    use crate::coordinator::tiler::TileOut;
+    use crate::image::synthetic_scene;
+    use crate::multipliers::{build_design, DesignId};
+
+    /// Wrapper with a restricted operator surface (the shape of the PJRT
+    /// engine, whose compiled artifact is Laplacian-only).
+    struct LaplacianOnly(LutTileEngine);
+
+    impl TileEngine for LaplacianOnly {
+        fn name(&self) -> String {
+            "laplacian-only".into()
+        }
+
+        fn process_batch(&self, tiles: &[Tile]) -> Vec<TileOut> {
+            self.0.process_batch(tiles)
+        }
+
+        fn supports_op(&self, op: Operator) -> bool {
+            op == Operator::Laplacian
+        }
+    }
+
+    /// Jobs for an operator the engine cannot serve are rejected at
+    /// submit time, not silently miscomputed.
+    #[test]
+    fn unsupported_operator_is_rejected_at_submit() {
+        let model = build_design(DesignId::Exact, 8);
+        let coord = Coordinator::start(
+            Arc::new(LaplacianOnly(LutTileEngine::new(model.as_ref()))),
+            CoordinatorConfig::default(),
+        );
+        let img = synthetic_scene(64, 64, 1);
+        let ok = coord.submit_to(img.clone(), None, Operator::Laplacian).unwrap();
+        assert_eq!(ok.wait().tiles, 1);
+        let err = coord.submit_to(img, None, Operator::Sobel).unwrap_err();
+        assert!(
+            format!("{err}").contains("does not support operator sobel"),
+            "unexpected message: {err}"
         );
     }
 }

@@ -27,6 +27,10 @@ pub struct Tile {
     /// Accuracy class requested by the job (see [`super::engine::Quality`]);
     /// engines without quality support ignore it.
     pub quality: u8,
+    /// Operator id this tile is convolved with
+    /// ([`crate::image::ops::Operator::id`]); 0 is the Laplacian, the
+    /// historical default.
+    pub op: u8,
     pub x0: usize,
     pub y0: usize,
     /// Valid core size (edge tiles may be smaller than TILE_CORE).
@@ -81,7 +85,7 @@ pub fn tile_image(job_id: u64, img: &Image) -> Vec<Tile> {
                         .copy_from_slice(&row[src_lo..src_hi]);
                 }
             }
-            tiles.push(Tile { job_id, engine: 0, quality: 0, x0, y0, core_w, core_h, data });
+            tiles.push(Tile { job_id, engine: 0, quality: 0, op: 0, x0, y0, core_w, core_h, data });
             x0 += TILE_CORE;
         }
         y0 += TILE_CORE;

@@ -30,16 +30,19 @@
 //! ([`crate::coordinator::engine::conv_tile_taps`], retained as the
 //! pre-colsum baseline and wide-design fallback).
 
-use super::conv::{KERNEL_PRESCALE_SHIFT, OUTPUT_NORM_SHIFT, PIXEL_SHIFT};
+use super::conv::{KERNEL_PRESCALE_SHIFT, PIXEL_SHIFT};
+use super::ops::Post;
 
-/// Output post-processing shared by **every** convolution path (direct,
-/// LUT, row-buffer, and all tile engines): the accumulator holds
-/// `Σ (k << KERNEL_PRESCALE_SHIFT) · (px >> PIXEL_SHIFT) = 4·Σ k·px`;
-/// the displayed edge magnitude is `|Σ k·px| >> OUTPUT_NORM_SHIFT`
-/// clamped to 0..255, so the three shifts combine into one.
+/// The historical Laplacian output rule, shared by the retained
+/// pre-operator-pipeline baselines (9-lookup kernels, benches): the
+/// accumulator holds `Σ (k << KERNEL_PRESCALE_SHIFT) · (px >>
+/// PIXEL_SHIFT) = 4·Σ k·px`; the displayed edge magnitude is
+/// `|Σ k·px| >> OUTPUT_NORM_SHIFT` clamped to 0..255. Operator-aware
+/// paths carry their own [`Post`] instead ([`Post::LAPLACIAN`] is this
+/// exact rule).
 #[inline]
 pub fn postprocess(acc: i64) -> u8 {
-    (acc.abs() >> (KERNEL_PRESCALE_SHIFT - PIXEL_SHIFT + OUTPUT_NORM_SHIFT)).clamp(0, 255) as u8
+    Post::LAPLACIAN.apply(acc)
 }
 
 /// Largest tap magnitude the i32 accumulation path absorbs safely: one
@@ -75,14 +78,30 @@ pub fn laplacian_taps_i64(lut: &[i32]) -> (Box<[i64; 256]>, Box<[i64; 256]>) {
     fold_taps_i64(lut, k[1][1], k[0][0])
 }
 
+/// The **single** uniform-ring eligibility test: `Some((center, ring))`
+/// when all eight non-centre coefficients are one value — the structural
+/// precondition of the column-sum identity. Shared by
+/// [`ColSumKernel::for_kernel`] and the operator-program compiler
+/// ([`crate::image::ops`]), so the direct path and the serving engines
+/// can never classify the same kernel differently.
+pub fn uniform_ring(kernel: &[[i64; 3]; 3]) -> Option<(i64, i64)> {
+    let ring = kernel[0][0];
+    let uniform = (0..9).filter(|t| *t != 4).all(|t| kernel[t / 3][t % 3] == ring);
+    uniform.then_some((kernel[1][1], ring))
+}
+
 /// Folded two-coefficient tap tables for the sliding column-sum kernel.
 ///
 /// `tap_ring[px]` is the pre-scaled ring product for a raw pixel byte
 /// (pixel pre-shift baked in); `center_delta[px] = tap_center[px] −
 /// tap_ring[px]` corrects the uniform 3×3 ring sum at the centre tap.
+/// Works for **any** uniform-ring kernel and output rule — the centre and
+/// ring coefficients and the [`Post`] are the caller's (the operator
+/// registry of [`super::ops`] decides both).
 pub struct ColSumKernel {
     tap_ring: Box<[i32; 256]>,
     center_delta: Box<[i32; 256]>,
+    post: Post,
 }
 
 impl ColSumKernel {
@@ -90,7 +109,11 @@ impl ColSumKernel {
     /// engine produces by sweeping a netlist). Returns `None` when any
     /// tap exceeds [`MAX_TAP_ABS`] — the caller must then keep the i64
     /// reference path.
-    pub fn try_from_taps(tap_center: &[i64; 256], tap_ring: &[i64; 256]) -> Option<Self> {
+    pub fn try_from_taps(
+        tap_center: &[i64; 256],
+        tap_ring: &[i64; 256],
+        post: Post,
+    ) -> Option<Self> {
         if tap_center.iter().chain(tap_ring.iter()).any(|v| v.abs() > MAX_TAP_ABS) {
             return None;
         }
@@ -100,7 +123,7 @@ impl ColSumKernel {
             ring[px] = tap_ring[px] as i32;
             delta[px] = (tap_center[px] - tap_ring[px]) as i32;
         }
-        Some(Self { tap_ring: ring, center_delta: delta })
+        Some(Self { tap_ring: ring, center_delta: delta, post })
     }
 
     /// Fold a 256×256 product table (index `(a_byte << 8) | b_byte`) for
@@ -109,15 +132,11 @@ impl ColSumKernel {
     /// coefficient). Kernel coefficients are pre-scaled by
     /// `KERNEL_PRESCALE_SHIFT` and the pixel pre-shift is baked in,
     /// exactly like the historical per-tap fold.
-    pub fn for_kernel(kernel: &[[i64; 3]; 3], lut: &[i32]) -> Option<Self> {
+    pub fn for_kernel(kernel: &[[i64; 3]; 3], lut: &[i32], post: Post) -> Option<Self> {
         assert_eq!(lut.len(), 65536);
-        let ring = kernel[0][0];
-        let uniform = (0..9).filter(|t| *t != 4).all(|t| kernel[t / 3][t % 3] == ring);
-        if !uniform {
-            return None;
-        }
-        let (tap_center, tap_ring) = fold_taps_i64(lut, kernel[1][1], ring);
-        Self::try_from_taps(&tap_center, &tap_ring)
+        let (center, ring) = uniform_ring(kernel)?;
+        let (tap_center, tap_ring) = fold_taps_i64(lut, center, ring);
+        Self::try_from_taps(&tap_center, &tap_ring, post)
     }
 
     /// Convolve one zero-padding-included window.
@@ -165,7 +184,7 @@ impl ColSumKernel {
             let out_row = &mut out[oy * out_stride..oy * out_stride + out_w];
             for (x, out_px) in out_row.iter_mut().enumerate() {
                 let acc = cs[x] + cs[x + 1] + cs[x + 2] + self.center_delta[mid[x + 1] as usize];
-                *out_px = postprocess(acc as i64);
+                *out_px = self.post.apply(acc as i64);
             }
             // Slide down one row: tv0 ← tv1, tv1 ← tv2, old tv0 becomes
             // next iteration's scratch.
@@ -218,7 +237,7 @@ mod tests {
     #[test]
     fn colsum_matches_naive_9lookup_on_ragged_windows() {
         let lut = exact_lut();
-        let k = ColSumKernel::for_kernel(&crate::image::conv::LAPLACIAN, &lut)
+        let k = ColSumKernel::for_kernel(&crate::image::conv::LAPLACIAN, &lut, Post::LAPLACIAN)
             .expect("Laplacian taps fit the i32 bound");
         let (tc, tr) = laplacian_taps_i64(&lut);
         let mut rng = Xoshiro256::seeded(42);
@@ -241,18 +260,55 @@ mod tests {
     fn for_kernel_rejects_non_uniform_ring() {
         let lut = exact_lut();
         let sobel_x = [[-1i64, 0, 1], [-2, 0, 2], [-1, 0, 1]];
-        assert!(ColSumKernel::for_kernel(&sobel_x, &lut).is_none());
-        assert!(ColSumKernel::for_kernel(&crate::image::conv::LAPLACIAN, &lut).is_some());
+        assert!(ColSumKernel::for_kernel(&sobel_x, &lut, Post::LAPLACIAN).is_none());
+        assert!(
+            ColSumKernel::for_kernel(&crate::image::conv::LAPLACIAN, &lut, Post::LAPLACIAN)
+                .is_some()
+        );
+    }
+
+    /// The core serves any uniform-ring kernel and output rule, not just
+    /// the Laplacian: a 3×3 box blur (uniform ring == centre) under a
+    /// saturating post matches its naive 9-lookup expansion.
+    #[test]
+    fn generalised_uniform_ring_kernel_runs() {
+        let lut = exact_lut();
+        let box3 = [[1i64, 1, 1], [1, 1, 1], [1, 1, 1]];
+        let post = Post::saturate(3);
+        let k = ColSumKernel::for_kernel(&box3, &lut, post).expect("box taps fit");
+        let (tc, tr) = fold_taps_i64(&lut, 1, 1);
+        let mut rng = Xoshiro256::seeded(7);
+        let (out_w, out_h, stride) = (17usize, 9usize, 19usize);
+        let mut src = vec![0u8; (out_h + 2) * stride];
+        for b in src.iter_mut() {
+            *b = rng.below(256) as u8;
+        }
+        let mut got = vec![0u8; out_w * out_h];
+        k.run(&src, stride, &mut got, out_w, out_w, out_h);
+        let mut want = vec![0u8; out_w * out_h];
+        for oy in 0..out_h {
+            for ox in 0..out_w {
+                let mut acc = 0i64;
+                for ky in 0..3 {
+                    for kx in 0..3 {
+                        let px = src[(oy + ky) * stride + ox + kx] as usize;
+                        acc += if ky == 1 && kx == 1 { tc[px] } else { tr[px] };
+                    }
+                }
+                want[oy * out_w + ox] = post.apply(acc);
+            }
+        }
+        assert_eq!(got, want);
     }
 
     #[test]
     fn oversized_taps_are_rejected() {
         let mut tc = [0i64; 256];
         let tr = [0i64; 256];
-        assert!(ColSumKernel::try_from_taps(&tc, &tr).is_some());
+        assert!(ColSumKernel::try_from_taps(&tc, &tr, Post::LAPLACIAN).is_some());
         tc[7] = MAX_TAP_ABS + 1;
-        assert!(ColSumKernel::try_from_taps(&tc, &tr).is_none());
+        assert!(ColSumKernel::try_from_taps(&tc, &tr, Post::LAPLACIAN).is_none());
         tc[7] = -(MAX_TAP_ABS + 1);
-        assert!(ColSumKernel::try_from_taps(&tc, &tr).is_none());
+        assert!(ColSumKernel::try_from_taps(&tc, &tr, Post::LAPLACIAN).is_none());
     }
 }

@@ -9,11 +9,13 @@
 //! Laplacian coefficients (−1, 8) every product would live almost
 //! entirely inside the truncated LSP columns and any truncating design
 //! would destroy it. MSB-aligning the operands is exactly how a
-//! fixed-point designer integrates a truncated multiplier. The output is
-//! `|acc| >> (KERNEL_PRESCALE_SHIFT + ... )` rescaled back to the
-//! Laplacian response and clamped to 0..255 (edge magnitude). Every
-//! design, including the exact reference that PSNR is computed against,
-//! goes through the identical path, so comparisons are unaffected.
+//! fixed-point designer integrates a truncated multiplier. The output
+//! rule is per operator (a [`Post`]: magnitude vs. saturate plus the
+//! operator's display shift — the Laplacian's is `|acc| >> 5` clamped to
+//! 0..255). Every design, including the exact reference that PSNR is
+//! computed against, goes through the identical path, so comparisons are
+//! unaffected. The operator registry (kernels + post rules) lives in
+//! [`super::ops`]; these functions are the single-pass cores it runs.
 //!
 //! Three hardware-faithful implementations are provided and tested equal:
 //!
@@ -27,7 +29,8 @@
 //! * [`conv3x3_rowbuf`] — the streaming row-buffer datapath of Fig. 8:
 //!   two line buffers + a 3×3 window register file, one output per cycle.
 
-use super::colsum::{postprocess, ColSumKernel};
+use super::colsum::ColSumKernel;
+use super::ops::{Operator, Post};
 use super::pgm::Image;
 use crate::multipliers::MultiplierModel;
 
@@ -50,13 +53,31 @@ fn prescale_kernel(k: i64) -> i64 {
 /// is conventionally displayed as `|response| / 8` (the centre weight), so
 /// the full response range maps exactly onto 0..255.
 pub const OUTPUT_NORM_SHIFT: u32 = 3;
-// Output post-processing is shared by every path: see
-// `super::colsum::postprocess` (acc = Σ (k<<3)·(px>>1) = 4·Σ k·px;
-// display |Σ k·px| >> 3).
+// Output post-processing is per operator: each convolution pass carries a
+// `super::ops::Post` (magnitude vs. saturate + display shift);
+// `Post::LAPLACIAN` is the historical rule (acc = Σ (k<<3)·(px>>1) =
+// 4·Σ k·px; display |Σ k·px| >> 3).
 
-/// Direct zero-padded 3×3 convolution using `model` for every multiply.
-pub fn conv3x3(img: &Image, kernel: &[[i64; 3]; 3], model: &dyn MultiplierModel) -> Image {
+/// Direct zero-padded 3×3 convolution using `model` for every multiply,
+/// collapsing each accumulator through `post`.
+pub fn conv3x3(
+    img: &Image,
+    kernel: &[[i64; 3]; 3],
+    model: &dyn MultiplierModel,
+    post: Post,
+) -> Image {
     let mut out = Image::new(img.width, img.height);
+    for (i, &acc) in conv3x3_acc(img, kernel, model).iter().enumerate() {
+        out.data[i] = post.apply(acc);
+    }
+    out
+}
+
+/// The raw per-pixel accumulators of the direct convolution (row-major),
+/// before any post-processing — the pre-clamp view the property tests
+/// check linearity and gradient antisymmetry on.
+pub fn conv3x3_acc(img: &Image, kernel: &[[i64; 3]; 3], model: &dyn MultiplierModel) -> Vec<i64> {
+    let mut accs = vec![0i64; img.width * img.height];
     for y in 0..img.height as isize {
         for x in 0..img.width as isize {
             let mut acc = 0i64;
@@ -67,10 +88,10 @@ pub fn conv3x3(img: &Image, kernel: &[[i64; 3]; 3], model: &dyn MultiplierModel)
                     acc += model.multiply(px, k); // pixel = operand A (varying bits)
                 }
             }
-            out.set(x as usize, y as usize, postprocess(acc));
+            accs[y as usize * img.width + x as usize] = acc;
         }
     }
-    out
+    accs
 }
 
 /// Direct convolution through a 256×256 product table (index =
@@ -82,9 +103,9 @@ pub fn conv3x3(img: &Image, kernel: &[[i64; 3]; 3], model: &dyn MultiplierModel)
 /// zero-padded copy of the image — ≈2 lookups + 5 adds per pixel with
 /// L1-resident `i32` tap tables, no border special-casing. Kernels with
 /// distinct ring coefficients fall back to [`conv3x3_lut_9tap`].
-pub fn conv3x3_lut(img: &Image, kernel: &[[i64; 3]; 3], lut: &[i32]) -> Image {
+pub fn conv3x3_lut(img: &Image, kernel: &[[i64; 3]; 3], lut: &[i32], post: Post) -> Image {
     assert_eq!(lut.len(), 65536);
-    if let Some(k) = ColSumKernel::for_kernel(kernel, lut) {
+    if let Some(k) = ColSumKernel::for_kernel(kernel, lut, post) {
         let (w, h) = (img.width, img.height);
         let mut out = Image::new(w, h);
         if w == 0 || h == 0 {
@@ -94,13 +115,14 @@ pub fn conv3x3_lut(img: &Image, kernel: &[[i64; 3]; 3], lut: &[i32]) -> Image {
         k.run(&padded, w + 2, &mut out.data, w, w, h);
         return out;
     }
-    conv3x3_lut_9tap(img, kernel, lut)
+    conv3x3_lut_9tap(img, kernel, lut, post)
 }
 
 /// Zero-padded `(h+2) × (w+2)` copy of an image — the explicit form of
 /// the padding [`Image::get_padded`] synthesises, so the column-sum core
-/// can run border rows through the same branch-free inner loop.
-fn padded_copy(img: &Image) -> Vec<u8> {
+/// can run border rows through the same branch-free inner loop (shared
+/// with the operator programs of [`super::ops`]).
+pub(crate) fn padded_copy(img: &Image) -> Vec<u8> {
     let (w, h) = (img.width, img.height);
     let mut p = vec![0u8; (w + 2) * (h + 2)];
     for y in 0..h {
@@ -115,7 +137,7 @@ fn padded_copy(img: &Image) -> Vec<u8> {
 /// verbatim (i) as the fallback for kernels the column-sum identity does
 /// not cover and (ii) as the measured baseline the `bench_conv` speedup
 /// and the committed `BENCH_conv.json` trajectory compare against.
-pub fn conv3x3_lut_9tap(img: &Image, kernel: &[[i64; 3]; 3], lut: &[i32]) -> Image {
+pub fn conv3x3_lut_9tap(img: &Image, kernel: &[[i64; 3]; 3], lut: &[i32], post: Post) -> Image {
     assert_eq!(lut.len(), 65536);
     // fold per-tap tables
     let mut taps = [[0i32; 256]; 9];
@@ -136,7 +158,7 @@ pub fn conv3x3_lut_9tap(img: &Image, kernel: &[[i64; 3]; 3], lut: &[i32]) -> Ima
                 acc += taps[((ky + 1) * 3 + kx + 1) as usize][px] as i64;
             }
         }
-        out.set(x as usize, y as usize, postprocess(acc));
+        out.set(x as usize, y as usize, post.apply(acc));
     };
     for x in 0..w as isize {
         border(x, 0, &mut out);
@@ -167,7 +189,7 @@ pub fn conv3x3_lut_9tap(img: &Image, kernel: &[[i64; 3]; 3], lut: &[i32]) -> Ima
                     + taps[6][r2[i] as usize] as i64
                     + taps[7][r2[i + 1] as usize] as i64
                     + taps[8][r2[i + 2] as usize] as i64;
-                *out_px = postprocess(acc);
+                *out_px = post.apply(acc);
             }
         }
     }
@@ -180,7 +202,12 @@ pub fn conv3x3_lut_9tap(img: &Image, kernel: &[[i64; 3]; 3], lut: &[i32]) -> Ima
 /// scanlines and a 3-wide window register file slides across. Output
 /// pixel (x, y) is emitted when input pixel (x+1, y+1) arrives (one-pixel
 /// latency plus one line), with zero padding synthesised at the borders.
-pub fn conv3x3_rowbuf(img: &Image, kernel: &[[i64; 3]; 3], model: &dyn MultiplierModel) -> Image {
+pub fn conv3x3_rowbuf(
+    img: &Image,
+    kernel: &[[i64; 3]; 3],
+    model: &dyn MultiplierModel,
+    post: Post,
+) -> Image {
     let (w, h) = (img.width, img.height);
     let mut out = Image::new(w, h);
     // line buffers: rows y-1 and y-2 relative to the arriving pixel
@@ -220,7 +247,7 @@ pub fn conv3x3_rowbuf(img: &Image, kernel: &[[i64; 3]; 3], model: &dyn Multiplie
                             acc += model.multiply(px as i64, prescale_kernel(kernel[ky][kx]));
                         }
                     }
-                    out.set(ox, oy, postprocess(acc));
+                    out.set(ox, oy, post.apply(acc));
                 }
             }
         }
@@ -228,9 +255,11 @@ pub fn conv3x3_rowbuf(img: &Image, kernel: &[[i64; 3]; 3], model: &dyn Multiplie
     out
 }
 
-/// Edge detection (paper §4): Laplacian convolution + magnitude.
+/// Edge detection (paper §4): the Laplacian operator of the registry —
+/// one definition of the kernel and clamp rule, shared with every other
+/// caller (see [`super::ops`]).
 pub fn edge_detect(img: &Image, model: &dyn MultiplierModel) -> Image {
-    conv3x3(img, &LAPLACIAN, model)
+    super::ops::apply_operator(img, Operator::Laplacian, model)
 }
 
 #[cfg(test)]
@@ -275,8 +304,8 @@ mod tests {
     fn rowbuf_equals_direct_exact() {
         let img = synthetic_scene(33, 21, 3);
         let exact = build_design(DesignId::Exact, 8);
-        let a = conv3x3(&img, &LAPLACIAN, exact.as_ref());
-        let b = conv3x3_rowbuf(&img, &LAPLACIAN, exact.as_ref());
+        let a = conv3x3(&img, &LAPLACIAN, exact.as_ref(), Post::LAPLACIAN);
+        let b = conv3x3_rowbuf(&img, &LAPLACIAN, exact.as_ref(), Post::LAPLACIAN);
         assert_eq!(a, b);
     }
 
@@ -284,8 +313,8 @@ mod tests {
     fn rowbuf_equals_direct_approximate() {
         let img = synthetic_scene(40, 27, 9);
         let m = build_design(DesignId::Proposed, 8);
-        let a = conv3x3(&img, &LAPLACIAN, m.as_ref());
-        let b = conv3x3_rowbuf(&img, &LAPLACIAN, m.as_ref());
+        let a = conv3x3(&img, &LAPLACIAN, m.as_ref(), Post::LAPLACIAN);
+        let b = conv3x3_rowbuf(&img, &LAPLACIAN, m.as_ref(), Post::LAPLACIAN);
         assert_eq!(a, b);
     }
 
@@ -294,8 +323,8 @@ mod tests {
         let img = synthetic_scene(32, 32, 5);
         let m = build_design(DesignId::Proposed, 8);
         let lut = crate::multipliers::lut::product_table(m.as_ref());
-        let a = conv3x3(&img, &LAPLACIAN, m.as_ref());
-        let b = conv3x3_lut(&img, &LAPLACIAN, &lut);
+        let a = conv3x3(&img, &LAPLACIAN, m.as_ref(), Post::LAPLACIAN);
+        let b = conv3x3_lut(&img, &LAPLACIAN, &lut, Post::LAPLACIAN);
         assert_eq!(a, b);
     }
 
@@ -309,8 +338,8 @@ mod tests {
         let lut = crate::multipliers::lut::product_table(m.as_ref());
         for &(w, h) in &[(1usize, 1usize), (1, 9), (9, 1), (5, 4), (65, 63)] {
             let img = synthetic_scene(w, h, 3);
-            let a = conv3x3_lut(&img, &LAPLACIAN, &lut);
-            let b = conv3x3_lut_9tap(&img, &LAPLACIAN, &lut);
+            let a = conv3x3_lut(&img, &LAPLACIAN, &lut, Post::LAPLACIAN);
+            let b = conv3x3_lut_9tap(&img, &LAPLACIAN, &lut, Post::LAPLACIAN);
             assert_eq!(a, b, "{w}x{h}");
         }
     }
@@ -323,8 +352,9 @@ mod tests {
         let img = synthetic_scene(24, 17, 6);
         let exact = build_design(DesignId::Exact, 8);
         let lut = crate::multipliers::lut::product_table(exact.as_ref());
-        let a = conv3x3(&img, &kernel, exact.as_ref());
-        let b = conv3x3_lut(&img, &kernel, &lut);
+        let post = Post::magnitude(3);
+        let a = conv3x3(&img, &kernel, exact.as_ref(), post);
+        let b = conv3x3_lut(&img, &kernel, &lut, post);
         assert_eq!(a, b);
     }
 

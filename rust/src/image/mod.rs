@@ -4,10 +4,12 @@ pub mod pgm;
 pub mod synth;
 pub mod colsum;
 pub mod conv;
+pub mod ops;
 pub mod psnr;
 
 pub use colsum::ColSumKernel;
 pub use conv::{conv3x3, conv3x3_lut, conv3x3_lut_9tap, conv3x3_rowbuf, edge_detect, LAPLACIAN};
+pub use ops::{apply_operator, apply_operator_lut, OpProgram, Operator, Post};
 pub use pgm::Image;
 pub use psnr::psnr;
 pub use synth::synthetic_scene;

@@ -1,0 +1,693 @@
+//! Operator registry — every edge-detection / filtering operator the
+//! system serves, with its 3×3 kernel(s), output post-processing rule,
+//! and the folded-tap execution program the table-backed paths run.
+//!
+//! The paper evaluates one operator (the uniform-ring Laplacian of
+//! Eq. (6)); approximate-multiplier surveys evaluate across *several*
+//! image kernels because error behaviour is operator-dependent — signed
+//! gradient operators (Sobel/Prewitt/Scharr/Roberts) exercise the
+//! negative-partial-product path of the sign-focused compressors far
+//! harder than the Laplacian does. This module opens that workload:
+//!
+//! * [`Operator`] — the closed registry of served operators. Single-pass
+//!   operators (`laplacian`, `sharpen`, `gaussian3`) run one kernel;
+//!   directional operators (`sobel`, `prewitt`, `scharr`, `roberts`) run
+//!   a Gx and a Gy pass and combine them into the classic integer
+//!   gradient magnitude `min(255, |Gx| + |Gy|)` (saturating u8 add — the
+//!   per-component clamp commutes with the final clamp, so clamping each
+//!   pass first is exact).
+//! * [`Post`] — the per-operator output rule: gradient/magnitude
+//!   operators display `|acc| >> s` ([`PostMode::Magnitude`]), filters
+//!   display `acc >> s` clamped at 0 ([`PostMode::Saturate`]); `s` folds
+//!   the operand-conditioning shifts with the operator's display
+//!   normalisation ([`Post::apply`]).
+//! * [`OpProgram`] — an operator compiled against one design's products:
+//!   per-pass folded tap tables (pixel pre-shift and kernel pre-scale
+//!   baked in, exactly like the historical Laplacian fold). Uniform-ring
+//!   kernels run the sliding column-sum core of [`super::colsum`]
+//!   (≈2 lookups + 5 adds/pixel); other kernels run the generic per-tap
+//!   path with **identically-zero tap tables elided** — elision is keyed
+//!   on folded table *content*, not on the coefficient, because an
+//!   approximate design may return nonzero products for a zero
+//!   coefficient (compensation constants). Roberts drops from 9 to
+//!   2 lookups per pass this way, the Gx/Gy family from 9 to 6.
+//!
+//! Operand conditioning is shared with the Laplacian path (see
+//! [`super::conv`]): pixels enter pre-shifted by [`PIXEL_SHIFT`], kernel
+//! coefficients pre-scaled by [`KERNEL_PRESCALE_SHIFT`] — every
+//! coefficient here keeps `|k| ≤ 15` so the pre-scaled operand fits the
+//! signed 8-bit multiplier port.
+
+use super::colsum::ColSumKernel;
+use super::conv::{conv3x3, padded_copy, KERNEL_PRESCALE_SHIFT, OUTPUT_NORM_SHIFT, PIXEL_SHIFT};
+use super::pgm::Image;
+use crate::multipliers::MultiplierModel;
+use crate::util::error::Error;
+use std::fmt;
+use std::str::FromStr;
+
+/// How an accumulated response becomes an output pixel.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PostMode {
+    /// Edge magnitude: `|acc| >> s`, clamped to 0..255 (the Laplacian and
+    /// every gradient component).
+    Magnitude,
+    /// Filter output: `acc >> s` (arithmetic), clamped to 0..255
+    /// (sharpen, gaussian smoothing — negative responses floor at black).
+    Saturate,
+}
+
+/// Per-operator output post-processing: mode + display normalisation.
+///
+/// The accumulator holds `Σ (k << KERNEL_PRESCALE_SHIFT) · (px >>
+/// PIXEL_SHIFT)`, i.e. the operator response on the half-intensity image
+/// scaled by 2^(KERNEL_PRESCALE_SHIFT−PIXEL_SHIFT); `apply` folds that
+/// conditioning factor with the operator's own `norm_shift` (e.g. the
+/// Laplacian's conventional ÷8) into a single shift.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Post {
+    pub mode: PostMode,
+    /// Operator display normalisation (power of two).
+    pub norm_shift: u32,
+}
+
+impl Post {
+    pub const fn magnitude(norm_shift: u32) -> Self {
+        Self { mode: PostMode::Magnitude, norm_shift }
+    }
+
+    pub const fn saturate(norm_shift: u32) -> Self {
+        Self { mode: PostMode::Saturate, norm_shift }
+    }
+
+    /// The historical Laplacian rule (`|acc| >> 5`, clamp) — the one rule
+    /// every pre-operator-pipeline path hardcoded.
+    pub const LAPLACIAN: Post = Post::magnitude(OUTPUT_NORM_SHIFT);
+
+    /// Collapse an accumulated response to an output pixel.
+    #[inline]
+    pub fn apply(self, acc: i64) -> u8 {
+        let s = KERNEL_PRESCALE_SHIFT - PIXEL_SHIFT + self.norm_shift;
+        let v = match self.mode {
+            PostMode::Magnitude => acc.abs() >> s,
+            PostMode::Saturate => acc >> s,
+        };
+        v.clamp(0, 255) as u8
+    }
+}
+
+/// One convolution pass of an operator: a 3×3 kernel and its output rule.
+#[derive(Debug, Clone, Copy)]
+pub struct Pass {
+    /// Pass label for listings/diagnostics (`laplacian`, `gx`, `gy`, ...).
+    pub label: &'static str,
+    pub kernel: [[i64; 3]; 3],
+    pub post: Post,
+}
+
+const fn pass(label: &'static str, kernel: [[i64; 3]; 3], post: Post) -> Pass {
+    Pass { label, kernel, post }
+}
+
+// Directional kernels. Roberts' classic 2×2 cross pair is embedded in the
+// lower-right 2×2 of the 3×3 window (output (x,y) differences pixel
+// (x,y) against (x+1,y+1) and (x,y+1) against (x+1,y)), so it rides the
+// same 3×3 datapath as everything else.
+const SOBEL_GX: [[i64; 3]; 3] = [[-1, 0, 1], [-2, 0, 2], [-1, 0, 1]];
+const SOBEL_GY: [[i64; 3]; 3] = [[-1, -2, -1], [0, 0, 0], [1, 2, 1]];
+const PREWITT_GX: [[i64; 3]; 3] = [[-1, 0, 1], [-1, 0, 1], [-1, 0, 1]];
+const PREWITT_GY: [[i64; 3]; 3] = [[-1, -1, -1], [0, 0, 0], [1, 1, 1]];
+const SCHARR_GX: [[i64; 3]; 3] = [[-3, 0, 3], [-10, 0, 10], [-3, 0, 3]];
+const SCHARR_GY: [[i64; 3]; 3] = [[-3, -10, -3], [0, 0, 0], [3, 10, 3]];
+const ROBERTS_GX: [[i64; 3]; 3] = [[0, 0, 0], [0, 1, 0], [0, 0, -1]];
+const ROBERTS_GY: [[i64; 3]; 3] = [[0, 0, 0], [0, 0, 1], [0, -1, 0]];
+const SHARPEN_K: [[i64; 3]; 3] = [[0, -1, 0], [-1, 5, -1], [0, -1, 0]];
+const GAUSSIAN3_K: [[i64; 3]; 3] = [[1, 2, 1], [2, 4, 2], [1, 2, 1]];
+
+// Per-operator pass tables. Gradient norm shifts are chosen so each
+// component spans ≈0..255 before the magnitude sum (Σ|k| per direction:
+// sobel 8 → ÷8, prewitt 6 → ÷8, scharr 32 → ÷32, roberts 2 → ÷2);
+// saturate shifts map the filter's DC gain back to unity (sharpen Σk=1,
+// gaussian Σk=16).
+const PASSES_LAPLACIAN: [Pass; 1] =
+    [pass("laplacian", super::conv::LAPLACIAN, Post::LAPLACIAN)];
+const PASSES_SOBEL: [Pass; 2] = [
+    pass("gx", SOBEL_GX, Post::magnitude(3)),
+    pass("gy", SOBEL_GY, Post::magnitude(3)),
+];
+const PASSES_PREWITT: [Pass; 2] = [
+    pass("gx", PREWITT_GX, Post::magnitude(3)),
+    pass("gy", PREWITT_GY, Post::magnitude(3)),
+];
+const PASSES_SCHARR: [Pass; 2] = [
+    pass("gx", SCHARR_GX, Post::magnitude(5)),
+    pass("gy", SCHARR_GY, Post::magnitude(5)),
+];
+const PASSES_ROBERTS: [Pass; 2] = [
+    pass("gx", ROBERTS_GX, Post::magnitude(1)),
+    pass("gy", ROBERTS_GY, Post::magnitude(1)),
+];
+const PASSES_SHARPEN: [Pass; 1] = [pass("sharpen", SHARPEN_K, Post::saturate(0))];
+const PASSES_GAUSSIAN3: [Pass; 1] = [pass("gaussian3", GAUSSIAN3_K, Post::saturate(4))];
+
+/// Number of registered operators ([`Operator::all`]).
+pub const OPERATOR_COUNT: usize = 7;
+
+/// The served operator set. Discriminants are the wire ids carried by
+/// coordinator tiles ([`Operator::id`] / [`Operator::from_id`]); the
+/// Laplacian is id 0, the historical default.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Operator {
+    /// Uniform-ring Laplacian of paper Eq. (6) — the original workload.
+    Laplacian,
+    /// Sobel gradient magnitude |Gx|+|Gy|.
+    Sobel,
+    /// Prewitt gradient magnitude.
+    Prewitt,
+    /// Scharr gradient magnitude (rotation-optimised 3×3 derivative).
+    Scharr,
+    /// Roberts cross gradient magnitude (2×2 pair on the 3×3 datapath).
+    Roberts,
+    /// Identity + Laplacian sharpening filter.
+    Sharpen,
+    /// 3×3 binomial Gaussian smoothing.
+    Gaussian3,
+}
+
+impl Operator {
+    /// Every registered operator, id order.
+    pub const fn all() -> [Operator; OPERATOR_COUNT] {
+        [
+            Operator::Laplacian,
+            Operator::Sobel,
+            Operator::Prewitt,
+            Operator::Scharr,
+            Operator::Roberts,
+            Operator::Sharpen,
+            Operator::Gaussian3,
+        ]
+    }
+
+    /// Stable wire id (the `Tile::op` routing byte).
+    pub const fn id(self) -> u8 {
+        self as u8
+    }
+
+    /// Inverse of [`Operator::id`].
+    pub fn from_id(id: u8) -> Option<Operator> {
+        Operator::all().get(id as usize).copied()
+    }
+
+    /// Canonical CLI/spec key.
+    pub const fn key(self) -> &'static str {
+        match self {
+            Operator::Laplacian => "laplacian",
+            Operator::Sobel => "sobel",
+            Operator::Prewitt => "prewitt",
+            Operator::Scharr => "scharr",
+            Operator::Roberts => "roberts",
+            Operator::Sharpen => "sharpen",
+            Operator::Gaussian3 => "gaussian3",
+        }
+    }
+
+    /// The convolution passes this operator runs (1 for plain filters,
+    /// 2 — Gx then Gy — for gradient-magnitude operators).
+    pub fn passes(self) -> &'static [Pass] {
+        match self {
+            Operator::Laplacian => &PASSES_LAPLACIAN,
+            Operator::Sobel => &PASSES_SOBEL,
+            Operator::Prewitt => &PASSES_PREWITT,
+            Operator::Scharr => &PASSES_SCHARR,
+            Operator::Roberts => &PASSES_ROBERTS,
+            Operator::Sharpen => &PASSES_SHARPEN,
+            Operator::Gaussian3 => &PASSES_GAUSSIAN3,
+        }
+    }
+
+    /// True for the two-pass |Gx|+|Gy| operators.
+    pub fn is_gradient_pair(self) -> bool {
+        self.passes().len() == 2
+    }
+
+    /// One-line description for the `ops` listing.
+    pub const fn describe(self) -> &'static str {
+        match self {
+            Operator::Laplacian => "uniform-ring Laplacian edge magnitude (paper Eq. 6)",
+            Operator::Sobel => "Sobel |Gx|+|Gy| gradient magnitude",
+            Operator::Prewitt => "Prewitt |Gx|+|Gy| gradient magnitude",
+            Operator::Scharr => "Scharr |Gx|+|Gy| gradient magnitude",
+            Operator::Roberts => "Roberts cross |Gx|+|Gy| gradient magnitude",
+            Operator::Sharpen => "identity + Laplacian sharpening filter",
+            Operator::Gaussian3 => "3x3 binomial Gaussian smoothing",
+        }
+    }
+}
+
+impl fmt::Display for Operator {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.key())
+    }
+}
+
+impl FromStr for Operator {
+    type Err = Error;
+
+    fn from_str(s: &str) -> Result<Self, Error> {
+        let lower = s.trim().to_lowercase();
+        Operator::all()
+            .into_iter()
+            .find(|op| op.key() == lower)
+            .ok_or_else(|| {
+                let keys: Vec<&str> = Operator::all().iter().map(|o| o.key()).collect();
+                Error::msg(format!("unknown operator {s:?} ({})", keys.join(" | ")))
+            })
+    }
+}
+
+/// Saturating per-pixel magnitude combine: `a[i] = min(255, a[i]+b[i])`.
+pub fn combine_magnitude(a: &mut [u8], b: &[u8]) {
+    for (x, &y) in a.iter_mut().zip(b) {
+        *x = x.saturating_add(y);
+    }
+}
+
+/// How one compiled pass executes — exposed for the `ops` listing and the
+/// fast-path tests.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PassKind {
+    /// Uniform-ring sliding column-sum core (≈2 lookups + 5 adds/pixel).
+    ColSum,
+    /// Generic folded-tap path with this many active (non-zero-table)
+    /// taps, i32 tables.
+    Taps(usize),
+    /// Generic path with i64 tables (wide designs whose products exceed
+    /// the i32-safe bound).
+    WideTaps(usize),
+}
+
+impl fmt::Display for PassKind {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            PassKind::ColSum => write!(f, "colsum"),
+            PassKind::Taps(n) => write!(f, "taps({n})"),
+            PassKind::WideTaps(n) => write!(f, "taps-wide({n})"),
+        }
+    }
+}
+
+/// One active tap of the generic folded path: its window offset
+/// (precomputed at fold time — nothing per-call to derive) and table.
+struct Tap<T> {
+    dy: usize,
+    dx: usize,
+    table: Box<[T; 256]>,
+}
+
+enum PassKernel {
+    ColSum(ColSumKernel),
+    Taps { taps: Vec<Tap<i32>>, post: Post },
+    WideTaps { taps: Vec<Tap<i64>>, post: Post },
+}
+
+impl PassKernel {
+    /// Fold one pass against a product source. `prod(a, b)` is the
+    /// design's product for the *conditioned* operands: `a` the
+    /// pre-shifted pixel (0..=127 at the current [`PIXEL_SHIFT`]), `b`
+    /// the pre-scaled kernel coefficient.
+    fn build(p: &Pass, prod: &dyn Fn(u8, i8) -> i64) -> Self {
+        let fold = |k: i64| -> Box<[i64; 256]> {
+            let scaled = k << KERNEL_PRESCALE_SHIFT;
+            debug_assert_eq!(scaled as i8 as i64, scaled, "coefficient {k} overflows the operand");
+            let kb = scaled as i8;
+            let mut t = Box::new([0i64; 256]);
+            for (px, slot) in t.iter_mut().enumerate() {
+                *slot = prod((px as u8) >> PIXEL_SHIFT, kb);
+            }
+            t
+        };
+        // Uniform-ring kernels take the sliding column-sum core when the
+        // folded taps fit its i32-safe bound (eligibility shared with the
+        // direct path: `colsum::uniform_ring`).
+        if let Some((center, ring)) = crate::image::colsum::uniform_ring(&p.kernel) {
+            let tap_center = fold(center);
+            let tap_ring = fold(ring);
+            if let Some(k) = ColSumKernel::try_from_taps(&tap_center, &tap_ring, p.post) {
+                return PassKernel::ColSum(k);
+            }
+            return Self::from_tables(
+                (0..9u8).map(|t| if t == 4 { tap_center.clone() } else { tap_ring.clone() }),
+                p.post,
+            );
+        }
+        Self::from_tables((0..9u8).map(|t| fold(p.kernel[t as usize / 3][t as usize % 3])), p.post)
+    }
+
+    /// Classify folded tables: elide identically-zero ones (exact for any
+    /// input — the table *is* the tap's entire contribution), use i32
+    /// tables when every value fits (L1-friendly), i64 otherwise.
+    fn from_tables(tables: impl Iterator<Item = Box<[i64; 256]>>, post: Post) -> Self {
+        let active: Vec<(usize, Box<[i64; 256]>)> = tables
+            .enumerate()
+            .filter(|(_, t)| t.iter().any(|&v| v != 0))
+            .collect();
+        let fits_i32 = active
+            .iter()
+            .all(|(_, t)| t.iter().all(|&v| i32::try_from(v).is_ok()));
+        if fits_i32 {
+            let taps = active
+                .into_iter()
+                .map(|(i, t)| {
+                    let mut n = Box::new([0i32; 256]);
+                    for (d, &s) in n.iter_mut().zip(t.iter()) {
+                        *d = s as i32;
+                    }
+                    Tap { dy: i / 3, dx: i % 3, table: n }
+                })
+                .collect();
+            PassKernel::Taps { taps, post }
+        } else {
+            let taps = active
+                .into_iter()
+                .map(|(i, t)| Tap { dy: i / 3, dx: i % 3, table: t })
+                .collect();
+            PassKernel::WideTaps { taps, post }
+        }
+    }
+
+    fn kind(&self) -> PassKind {
+        match self {
+            PassKernel::ColSum(_) => PassKind::ColSum,
+            PassKernel::Taps { taps, .. } => PassKind::Taps(taps.len()),
+            PassKernel::WideTaps { taps, .. } => PassKind::WideTaps(taps.len()),
+        }
+    }
+
+    /// Run over a zero-padding-included window (same contract as
+    /// [`ColSumKernel::run`]): the `(out_h+2) × (out_w+2)` source window
+    /// starting at `src[0]` with rows `src_stride` apart.
+    fn run(
+        &self,
+        src: &[u8],
+        src_stride: usize,
+        out: &mut [u8],
+        out_stride: usize,
+        out_w: usize,
+        out_h: usize,
+    ) {
+        match self {
+            PassKernel::ColSum(k) => k.run(src, src_stride, out, out_stride, out_w, out_h),
+            PassKernel::Taps { taps, post } => {
+                run_taps(taps, *post, src, src_stride, out, out_stride, out_w, out_h)
+            }
+            PassKernel::WideTaps { taps, post } => {
+                run_taps(taps, *post, src, src_stride, out, out_stride, out_w, out_h)
+            }
+        }
+    }
+}
+
+fn run_taps<T: Copy + Into<i64>>(
+    taps: &[Tap<T>],
+    post: Post,
+    src: &[u8],
+    src_stride: usize,
+    out: &mut [u8],
+    out_stride: usize,
+    out_w: usize,
+    out_h: usize,
+) {
+    assert!(out_w >= 1 && out_h >= 1, "empty output window");
+    assert!(src_stride >= out_w + 2, "src rows narrower than the window");
+    assert!(out_stride >= out_w, "out rows narrower than the output");
+    assert!(src.len() >= (out_h + 1) * src_stride + out_w + 2, "src window out of bounds");
+    assert!(out.len() >= (out_h - 1) * out_stride + out_w, "out buffer too small");
+    for oy in 0..out_h {
+        let out_row = &mut out[oy * out_stride..oy * out_stride + out_w];
+        for (ox, out_px) in out_row.iter_mut().enumerate() {
+            let mut acc = 0i64;
+            for t in taps {
+                acc += t.table[src[(oy + t.dy) * src_stride + ox + t.dx] as usize].into();
+            }
+            *out_px = post.apply(acc);
+        }
+    }
+}
+
+/// An operator compiled against one design's product source: the folded
+/// per-pass execution programs every table-backed path runs (the direct
+/// [`apply_operator_lut`] convolution and the coordinator tile engines).
+pub struct OpProgram {
+    op: Operator,
+    passes: Vec<PassKernel>,
+}
+
+impl OpProgram {
+    /// Compile `op` against an arbitrary product source (`prod(a, b)` =
+    /// the design's product of pre-shifted pixel `a` and pre-scaled
+    /// coefficient `b`). The LUT engines pass a table lookup; the bitsim
+    /// engine passes netlist-swept products.
+    pub fn build(op: Operator, prod: &dyn Fn(u8, i8) -> i64) -> Self {
+        Self { op, passes: op.passes().iter().map(|p| PassKernel::build(p, prod)).collect() }
+    }
+
+    /// Compile against a 256×256 product table (index
+    /// `(a_byte << 8) | b_byte`).
+    pub fn from_lut(op: Operator, lut: &[i32]) -> Self {
+        assert_eq!(lut.len(), 65536);
+        Self::build(op, &|a, b| lut[((a as usize) << 8) | (b as u8 as usize)] as i64)
+    }
+
+    pub fn operator(&self) -> Operator {
+        self.op
+    }
+
+    /// How each pass executes (listing / fast-path tests).
+    pub fn pass_kinds(&self) -> Vec<PassKind> {
+        self.passes.iter().map(|p| p.kind()).collect()
+    }
+
+    /// Run the whole program over a zero-padding-included window (the
+    /// contract of [`ColSumKernel::run`]); multi-pass operators combine
+    /// components with the saturating magnitude sum.
+    pub fn run_window(
+        &self,
+        src: &[u8],
+        src_stride: usize,
+        out: &mut [u8],
+        out_stride: usize,
+        out_w: usize,
+        out_h: usize,
+    ) {
+        if out_w == 0 || out_h == 0 {
+            return;
+        }
+        self.passes[0].run(src, src_stride, out, out_stride, out_w, out_h);
+        if self.passes.len() > 1 {
+            let mut scratch = vec![0u8; out_w * out_h];
+            for p in &self.passes[1..] {
+                p.run(src, src_stride, &mut scratch, out_w, out_w, out_h);
+                for oy in 0..out_h {
+                    combine_magnitude(
+                        &mut out[oy * out_stride..oy * out_stride + out_w],
+                        &scratch[oy * out_w..(oy + 1) * out_w],
+                    );
+                }
+            }
+        }
+    }
+
+    /// Convolve a whole image (zero padding at the borders, one padded
+    /// copy shared by all passes).
+    pub fn apply(&self, img: &Image) -> Image {
+        let (w, h) = (img.width, img.height);
+        let mut out = Image::new(w, h);
+        if w == 0 || h == 0 {
+            return out;
+        }
+        let padded = padded_copy(img);
+        self.run_window(&padded, w + 2, &mut out.data, w, w, h);
+        out
+    }
+}
+
+/// Run an operator through the functional-model reference path: one
+/// direct [`conv3x3`] per pass (every MAC through `model`), gradient
+/// components combined with the saturating magnitude sum.
+pub fn apply_operator(img: &Image, op: Operator, model: &dyn MultiplierModel) -> Image {
+    let mut it = op.passes().iter();
+    let first = it.next().expect("operator has at least one pass");
+    let mut out = conv3x3(img, &first.kernel, model, first.post);
+    for p in it {
+        let comp = conv3x3(img, &p.kernel, model, p.post);
+        combine_magnitude(&mut out.data, &comp.data);
+    }
+    out
+}
+
+/// Run an operator through the table-backed fast path (the program the
+/// serving engines execute). Bit-exact with [`apply_operator`] for the
+/// design the table was generated from.
+pub fn apply_operator_lut(img: &Image, op: Operator, lut: &[i32]) -> Image {
+    OpProgram::from_lut(op, lut).apply(img)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::image::synth::synthetic_scene;
+    use crate::multipliers::{lut::product_table, registry};
+
+    fn exact_lut() -> Vec<i32> {
+        product_table(registry().build_str("exact@8").unwrap().as_ref())
+    }
+
+    #[test]
+    fn keys_roundtrip_and_ids_are_stable() {
+        for (i, op) in Operator::all().into_iter().enumerate() {
+            assert_eq!(op.id() as usize, i);
+            assert_eq!(Operator::from_id(op.id()), Some(op));
+            assert_eq!(op.key().parse::<Operator>().unwrap(), op);
+            assert_eq!(op.to_string(), op.key());
+        }
+        assert_eq!(Operator::Laplacian.id(), 0, "laplacian is the wire default");
+        assert!("canny".parse::<Operator>().is_err());
+        assert!(Operator::from_id(OPERATOR_COUNT as u8).is_none());
+    }
+
+    #[test]
+    fn all_coefficients_fit_the_signed_operand() {
+        for op in Operator::all() {
+            for p in op.passes() {
+                for row in &p.kernel {
+                    for &k in row {
+                        let scaled = k << KERNEL_PRESCALE_SHIFT;
+                        assert_eq!(scaled as i8 as i64, scaled, "{op} {k}");
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn laplacian_post_matches_historical_rule() {
+        for acc in [-100_000i64, -31, 0, 31, 32, 8_191, 100_000] {
+            assert_eq!(Post::LAPLACIAN.apply(acc), crate::image::colsum::postprocess(acc));
+        }
+        // saturate floors negatives at black instead of mirroring them
+        assert_eq!(Post::saturate(0).apply(-400), 0);
+        assert_eq!(Post::magnitude(0).apply(-400), 100);
+    }
+
+    #[test]
+    fn lut_path_matches_model_path_for_every_operator() {
+        for name in ["exact@8", "proposed@8"] {
+            let model = registry().build_str(name).unwrap();
+            let lut = product_table(model.as_ref());
+            let img = synthetic_scene(40, 33, 9);
+            for op in Operator::all() {
+                assert_eq!(
+                    apply_operator_lut(&img, op, &lut),
+                    apply_operator(&img, op, model.as_ref()),
+                    "{name} {op}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn laplacian_program_takes_the_colsum_fast_path() {
+        let lut = exact_lut();
+        let prog = OpProgram::from_lut(Operator::Laplacian, &lut);
+        assert_eq!(prog.pass_kinds(), vec![PassKind::ColSum]);
+    }
+
+    /// Zero-tap elision is keyed on folded-table content: with the exact
+    /// multiplier (zero products are zero) Roberts keeps only its 2 live
+    /// taps and the Sobel passes keep 6; a design whose zero-coefficient
+    /// products are nonzero (here: a doctored table) keeps all 9.
+    #[test]
+    fn zero_taps_elide_only_when_products_vanish() {
+        let lut = exact_lut();
+        let roberts = OpProgram::from_lut(Operator::Roberts, &lut);
+        assert_eq!(roberts.pass_kinds(), vec![PassKind::Taps(2), PassKind::Taps(2)]);
+        let sobel = OpProgram::from_lut(Operator::Sobel, &lut);
+        assert_eq!(sobel.pass_kinds(), vec![PassKind::Taps(6), PassKind::Taps(6)]);
+
+        let mut biased = lut.clone();
+        for a in 0..256usize {
+            biased[a << 8] = 1; // multiply(a, 0) == 1: k=0 taps now live
+        }
+        let roberts_biased = OpProgram::from_lut(Operator::Roberts, &biased);
+        assert_eq!(
+            roberts_biased.pass_kinds(),
+            vec![PassKind::Taps(9), PassKind::Taps(9)]
+        );
+    }
+
+    #[test]
+    fn sobel_detects_a_vertical_step_edge() {
+        let mut img = Image::new(16, 16);
+        for y in 0..16 {
+            for x in 0..16 {
+                img.set(x, y, if x < 8 { 20 } else { 220 });
+            }
+        }
+        let exact = registry().build_str("exact@8").unwrap();
+        let edges = apply_operator(&img, Operator::Sobel, exact.as_ref());
+        assert!(edges.get(7, 8) > 50, "step column must respond, got {}", edges.get(7, 8));
+        assert_eq!(edges.get(3, 8), 0, "flat interior is silent");
+        assert_eq!(edges.get(12, 8), 0);
+    }
+
+    /// The magnitude combine saturates at 255 instead of wrapping. (With
+    /// the exact multiplier each normalised component tops out near 127,
+    /// so the clamp is the safety net for approximate-design overshoot —
+    /// exercise it directly.)
+    #[test]
+    fn magnitude_combine_saturates() {
+        let mut a = [200u8, 10, 255, 0];
+        combine_magnitude(&mut a, &[100, 5, 255, 0]);
+        assert_eq!(a, [255, 15, 255, 0]);
+    }
+
+    /// A corner against zero padding drives both gradient components at
+    /// once; the flat interior stays silent.
+    #[test]
+    fn gradient_corner_responds_in_both_components() {
+        let mut img = Image::new(8, 8);
+        img.data.fill(255);
+        let exact = registry().build_str("exact@8").unwrap();
+        let edges = apply_operator(&img, Operator::Scharr, exact.as_ref());
+        assert!(edges.get(0, 0) > 150, "corner response {}", edges.get(0, 0));
+        assert_eq!(edges.get(4, 4), 0, "flat interior stays black");
+    }
+
+    /// Gaussian smoothing with the exact multiplier reproduces a flat
+    /// image up to the pixel pre-shift quantisation, and sharpen is
+    /// identity-plus-detail on flat input.
+    #[test]
+    fn saturate_filters_preserve_flat_interiors() {
+        let mut img = Image::new(12, 12);
+        img.data.fill(200);
+        let exact = registry().build_str("exact@8").unwrap();
+        let smooth = apply_operator(&img, Operator::Gaussian3, exact.as_ref());
+        let sharp = apply_operator(&img, Operator::Sharpen, exact.as_ref());
+        for y in 2..10 {
+            for x in 2..10 {
+                assert_eq!(smooth.get(x, y), 200, "gaussian interior ({x},{y})");
+                assert_eq!(sharp.get(x, y), 200, "sharpen interior ({x},{y})");
+            }
+        }
+    }
+
+    #[test]
+    fn empty_images_are_handled() {
+        let lut = exact_lut();
+        for (w, h) in [(0usize, 0usize), (0, 4), (4, 0)] {
+            let img = Image::new(w, h);
+            let out = apply_operator_lut(&img, Operator::Sobel, &lut);
+            assert_eq!((out.width, out.height), (w, h));
+        }
+    }
+}

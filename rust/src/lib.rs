@@ -37,16 +37,20 @@
 //! * [`error`] — ER / MED / NMED / MRED error-metric harness (Table 4).
 //! * [`hwmodel`] — unit-gate → calibrated area/power/delay/PDP model
 //!   (Table 5, Fig 10).
-//! * [`image`] — PGM I/O, synthetic scenes, Laplacian convolution (direct
-//!   and hardware-oriented row-buffer streaming), PSNR (Fig 9).
+//! * [`image`] — PGM I/O, synthetic scenes, the operator registry
+//!   ([`image::ops`]: Laplacian, Sobel/Prewitt/Scharr/Roberts gradient
+//!   magnitudes, sharpen, gaussian3 — per-operator kernels, post rules
+//!   and folded-tap execution programs), the convolution cores (direct,
+//!   LUT/colsum, row-buffer streaming), PSNR (Fig 9).
 //! * [`coordinator`] — the L3 serving layer: halo tiling, dynamic batching,
 //!   worker pool with backpressure, latency/throughput metrics (Fig 8).
 //!   A [`coordinator::Coordinator`] now serves a *set of named engines*
 //!   (one per design/backend pair, resolved through
 //!   [`coordinator::engines::resolve`]); each job may select its engine by
-//!   key, and [`coordinator::MetricsSnapshot`] reports per-design rows —
-//!   one service instance can A/B exact vs. approximate designs under
-//!   load.
+//!   key **and its operator** (tap tables are built per (design,
+//!   operator) pair), and [`coordinator::MetricsSnapshot`] reports
+//!   per-design rows — one service instance can A/B exact vs.
+//!   approximate designs across heterogeneous workloads under load.
 //! * [`runtime`] — PJRT client wrapper that loads the AOT-compiled
 //!   JAX/Pallas artifacts (`artifacts/*.hlo.txt`) and executes them from
 //!   the Rust hot path (feature `pjrt`; a stub that reports the feature as

@@ -1,11 +1,12 @@
 //! `sfcmul` — CLI for the approximate signed multiplier reproduction.
 //!
 //! Subcommands:
-//!   tables   --id <t1|t2|t3|t4|t5|f9|f10|all> [--seed S] [--out out/]
-//!   edge     --input img.pgm --output edges.pgm [--design SPEC] [--engine SPEC]
-//!   serve    --demo [--jobs N] [--workers W] [--designs SPEC,SPEC,...] [--engine SPEC]
+//!   tables   --id <t1|t2|t3|t4|t5|f9|f10|ops|all> [--seed S] [--out out/]
+//!   edge     --input img.pgm --output edges.pgm [--design SPEC] [--engine SPEC] [--op OP]
+//!   serve    --demo [--jobs N] [--workers W] [--designs SPEC,SPEC,...] [--engine SPEC] [--op OP]
 //!   ablate   [--seed S]                      (design-space ablation report)
 //!   designs                                  (list the design registry)
+//!   ops                                      (list the operator registry)
 //!   dump-lut --design proposed@8 --out artifacts/proposed_lut_rust.i32
 //!   hw       [--seed S]                      (raw unit-gate figures)
 //!   help
@@ -14,10 +15,13 @@
 //! `multipliers::spec`: `family[@bits][:trunc=...][:comp=...]`, e.g.
 //! `proposed@8`, `proposed@16:comp=const`, `d2@8:trunc=none`. Engine
 //! specs (`--engine`) are one of `lut | model | rowbuf | bitsim | pjrt`,
-//! resolved through `coordinator::engines::resolve`.
+//! resolved through `coordinator::engines::resolve`. Operators (`--op`)
+//! are the registry of `image::ops` (`laplacian` default, `sobel`,
+//! `prewitt`, `scharr`, `roberts`, `sharpen`, `gaussian3`).
 
 use sfcmul::coordinator::{engines, Coordinator, CoordinatorConfig, EngineSpec, TileEngine};
-use sfcmul::image::{edge_detect, synthetic_scene, Image};
+use sfcmul::image::ops::{apply_operator, OpProgram, Operator};
+use sfcmul::image::{synthetic_scene, Image};
 use sfcmul::multipliers::{lut, registry, DesignSpec};
 use sfcmul::util::cli::Args;
 use std::path::{Path, PathBuf};
@@ -29,17 +33,19 @@ sfcmul — Approximate Signed Multiplier with Sign-Focused Compressors (CS.AR 20
 
 USAGE: sfcmul <subcommand> [options]
 
-  tables   --id t1|t2|t3|t4|t5|f9|f10|all [--seed S] [--out DIR]
-           regenerate a paper table/figure
-  edge     --input in.pgm --output out.pgm [--design SPEC] [--engine SPEC]
-           run edge detection on an image (or --demo for the synthetic scene)
-  serve    --demo [--jobs N] [--workers W] [--batch B] [--designs SPEC,SPEC,...] [--engine SPEC]
+  tables   --id t1|t2|t3|t4|t5|f9|f10|ops|all [--seed S] [--out DIR]
+           regenerate a paper table/figure (ops = design x operator PSNR matrix)
+  edge     --input in.pgm --output out.pgm [--design SPEC] [--engine SPEC] [--op OP]
+           run an operator on an image (or --demo for the synthetic scene)
+  serve    --demo [--jobs N] [--workers W] [--batch B] [--designs SPEC,SPEC,...]
+           [--engine SPEC] [--op OP]
            run the streaming coordinator on a synthetic job stream, round-robin
            across the listed designs, print aggregate + per-design metrics
            (default designs: proposed@8,exact@8 — an exact-vs-approximate A/B)
   ablate   [--seed S]
            design-space ablation (compressor candidates, compensation, truncation)
   designs  list every registered design family and example spec strings
+  ops      list every registered operator (kernels, post rule, fast path)
   dump-lut [--design SPEC] [--out FILE]
            export an 8-bit design's 256x256 product table (cross-check with python)
   hw       [--seed S]
@@ -50,6 +56,8 @@ design SPEC grammar:  family[@bits][:trunc=paper|none|K][:comp=paper|none|const]
   examples: proposed@8   proposed@16:comp=const   d2@8:trunc=none   exact@16
 engine SPEC: lut (8-bit table, default) | model (any width) | rowbuf
              | bitsim (gate-level netlist via bitsliced sim, widths 8..=31) | pjrt
+operator OP: laplacian (default) | sobel | prewitt | scharr | roberts
+             | sharpen | gaussian3
 ";
 
 fn main() {
@@ -66,6 +74,7 @@ fn main() {
         Some("serve") => cmd_serve(&args),
         Some("ablate") => cmd_ablate(&args),
         Some("designs") => cmd_designs(),
+        Some("ops") => cmd_ops(),
         Some("dump-lut") => cmd_dump_lut(&args),
         Some("hw") => cmd_hw(&args),
         Some("help") | None => {
@@ -108,6 +117,15 @@ fn design_spec_of(args: &Args) -> Result<DesignSpec, i32> {
     })
 }
 
+/// Parse `--op` into an operator (exits with a message on bad input).
+fn operator_of(args: &Args) -> Result<Operator, i32> {
+    let raw = args.get_or("op", "laplacian");
+    raw.parse::<Operator>().map_err(|e| {
+        eprintln!("invalid --op: {e}");
+        2
+    })
+}
+
 /// Resolve one design × engine pair through the shared fallback path
 /// (PJRT degrades to the LUT engine when unavailable); reports the
 /// backend actually used.
@@ -121,6 +139,10 @@ fn engine_for(
 fn cmd_edge(args: &Args) -> i32 {
     let spec = match design_spec_of(args) {
         Ok(s) => s,
+        Err(code) => return code,
+    };
+    let op = match operator_of(args) {
+        Ok(o) => o,
         Err(code) => return code,
     };
     let engine_spec: EngineSpec = match args.get_or("engine", "lut").parse() {
@@ -137,6 +159,12 @@ fn cmd_edge(args: &Args) -> i32 {
             return 1;
         }
     };
+    if !engine.supports_op(op) {
+        // Bad request, same exit class as serve's pre-check (the PJRT
+        // artifact is laplacian-only).
+        eprintln!("engine {} cannot serve operator {op} (try --engine lut)", engine.name());
+        return 2;
+    }
     let img = if args.flag("demo") || args.get("input").is_none() {
         synthetic_scene(256, 256, seed_of(args))
     } else {
@@ -150,7 +178,13 @@ fn cmd_edge(args: &Args) -> i32 {
     };
     let t0 = Instant::now();
     let coord = Coordinator::start(engine, CoordinatorConfig::default());
-    let result = coord.run(img.clone());
+    let result = match coord.submit_to(img.clone(), None, op) {
+        Ok(handle) => handle.wait(),
+        Err(e) => {
+            eprintln!("error: {e}");
+            return 1;
+        }
+    };
     let edges = result.edges;
     let dt = t0.elapsed();
     let out = PathBuf::from(args.get_or("output", "out/edges.pgm"));
@@ -158,16 +192,18 @@ fn cmd_edge(args: &Args) -> i32 {
         eprintln!("cannot write output: {e}");
         return 1;
     }
-    // PSNR vs the exact multiplier at the same width, for context
+    // PSNR vs the exact multiplier at the same width and operator, for
+    // context
     let exact = registry()
         .build_str(&format!("exact@{}", spec.bits))
         .expect("exact design");
-    let reference = edge_detect(&img, exact.as_ref());
+    let reference = apply_operator(&img, op, exact.as_ref());
     println!(
-        "{}x{} image, design {} via {}, {:.1} ms -> {} (PSNR vs exact: {:.2} dB)",
+        "{}x{} image, design {} op {} via {}, {:.1} ms -> {} (PSNR vs exact: {:.2} dB)",
         img.width,
         img.height,
         spec,
+        op,
         coord.engine_name(),
         dt.as_secs_f64() * 1e3,
         out.display(),
@@ -183,6 +219,10 @@ fn cmd_serve(args: &Args) -> i32 {
             eprintln!("invalid --engine: {e}");
             return 2;
         }
+    };
+    let op = match operator_of(args) {
+        Ok(o) => o,
+        Err(code) => return code,
     };
     // --designs a,b,c; a lone --design is honoured; the default A/Bs the
     // proposed approximate design against the exact multiplier.
@@ -207,6 +247,13 @@ fn cmd_serve(args: &Args) -> i32 {
         }
         match engine_for(engine_spec, &spec) {
             Ok((engine, actual)) => {
+                if !engine.supports_op(op) {
+                    eprintln!(
+                        "engine {actual} for {part:?} cannot serve operator {op} \
+                         (the PJRT artifact is laplacian-only; try --engine lut)"
+                    );
+                    return 2;
+                }
                 backends.push(actual);
                 named.push((key, engine));
             }
@@ -233,7 +280,7 @@ fn cmd_serve(args: &Args) -> i32 {
     let backend_list =
         backends.iter().map(|e| e.key()).collect::<Vec<_>>().join("+");
     println!(
-        "serving {jobs} synthetic jobs round-robin across [{}] via engine {backend_list} ({workers} workers, batch {batch})",
+        "serving {jobs} synthetic {op} jobs round-robin across [{}] via engine {backend_list} ({workers} workers, batch {batch})",
         keys.join(", "),
     );
     let t0 = Instant::now();
@@ -241,8 +288,8 @@ fn cmd_serve(args: &Args) -> i32 {
         .map(|i| {
             let key = keys[i % keys.len()].as_str();
             coord
-                .submit_to(synthetic_scene(256, 256, i as u64), Some(key))
-                .expect("registered engine")
+                .submit_to(synthetic_scene(256, 256, i as u64), Some(key), op)
+                .expect("registered engine serving the requested operator")
         })
         .collect();
     let mut px_total = 0usize;
@@ -300,6 +347,43 @@ fn cmd_designs() -> i32 {
         );
     }
     println!("options: :trunc=paper|none|K  :comp=paper|none|const");
+    0
+}
+
+fn cmd_ops() -> i32 {
+    // Fast-path classification is data-driven (folded against the exact
+    // product table): uniform-ring operators compile to the sliding
+    // column-sum core, the rest to the zero-tap-elided folded path.
+    let exact = registry().build_str("exact@8").expect("exact design");
+    let table = lut::product_table(exact.as_ref());
+    println!("registered operators (--op KEY; kernels pre-scaled x8 on the 8-bit datapath):");
+    for op in Operator::all() {
+        let prog = OpProgram::from_lut(op, &table);
+        let kinds: Vec<String> =
+            prog.pass_kinds().iter().map(|k| k.to_string()).collect();
+        let passes: Vec<String> = op
+            .passes()
+            .iter()
+            .map(|p| {
+                let rule = match p.post.mode {
+                    sfcmul::image::ops::PostMode::Magnitude => "|acc|",
+                    sfcmul::image::ops::PostMode::Saturate => "acc",
+                };
+                format!("{} {:?}  {rule}>>{}", p.label, p.kernel, p.post.norm_shift)
+            })
+            .collect();
+        println!(
+            "  {:<10} {:<7} fast path {:<18} {}",
+            op.key(),
+            if op.is_gradient_pair() { "gx+gy" } else { "single" },
+            kinds.join("+"),
+            op.describe(),
+        );
+        for p in passes {
+            println!("             {p}");
+        }
+    }
+    println!("gradient operators combine as min(255, |Gx| + |Gy|) (saturating integer sum)");
     0
 }
 

@@ -74,6 +74,10 @@ mod stub {
         fn process_batch(&self, _tiles: &[Tile]) -> Vec<TileOut> {
             match self._unconstructible {}
         }
+
+        fn supports_op(&self, _op: crate::image::ops::Operator) -> bool {
+            match self._unconstructible {}
+        }
     }
 }
 
@@ -150,6 +154,13 @@ mod xla_impl {
 
         fn preferred_batch(&self) -> usize {
             *BATCH_SIZES.iter().max().unwrap()
+        }
+
+        /// The AOT artifact hardcodes the Laplacian convolution; other
+        /// operators must be declined so the coordinator rejects them at
+        /// submit time instead of serving wrong pixels.
+        fn supports_op(&self, op: crate::image::ops::Operator) -> bool {
+            op == crate::image::ops::Operator::Laplacian
         }
 
         fn process_batch(&self, tiles: &[Tile]) -> Vec<TileOut> {

@@ -2,7 +2,8 @@
 //!
 //! Every table and figure of the paper's evaluation has a generator here
 //! that prints the same rows/series the paper reports and returns the
-//! data for tests/benches. `sfcmul tables --id <t1|t2|t3|t4|t5|f9|f10|all>`
+//! data for tests/benches, plus the beyond-paper [`opmatrix`] (design ×
+//! operator PSNR). `sfcmul tables --id <t1|t2|t3|t4|t5|f9|f10|ops|all>`
 //! is the CLI entry.
 
 pub mod t1;
@@ -12,6 +13,7 @@ pub mod t5;
 pub mod f9;
 pub mod f10;
 pub mod ablation;
+pub mod opmatrix;
 pub mod sweep;
 
 pub use ablation::report as ablation_report;
@@ -26,17 +28,18 @@ pub fn generate(id: &str, seed: u64, out_dir: &std::path::Path) -> crate::Result
         "t5" => Ok(t5::render(seed)),
         "f9" => f9::render(seed, out_dir),
         "f10" => Ok(f10::render(seed)),
+        "ops" => Ok(opmatrix::render(seed)),
         "sweep" => Ok(sweep::render()),
         "all" => {
             let mut s = String::new();
-            for id in ["t1", "t2", "t3", "t4", "t5", "f9", "f10"] {
+            for id in ["t1", "t2", "t3", "t4", "t5", "f9", "f10", "ops"] {
                 s.push_str(&generate(id, seed, out_dir)?);
                 s.push('\n');
             }
             Ok(s)
         }
         other => Err(crate::util::error::Error::msg(format!(
-            "unknown table id {other:?} (t1..t5, f9, f10, sweep, all)"
+            "unknown table id {other:?} (t1..t5, f9, f10, ops, sweep, all)"
         ))),
     }
 }

@@ -8,6 +8,7 @@
 use sfcmul::coordinator::engine::conv_tile_taps;
 use sfcmul::coordinator::{reassemble, tile_image, BitsimTileEngine, LutTileEngine, TileEngine};
 use sfcmul::image::colsum::laplacian_taps_i64;
+use sfcmul::image::ops::Post;
 use sfcmul::image::{conv3x3, conv3x3_lut, conv3x3_lut_9tap, synthetic_scene, Image, LAPLACIAN};
 use sfcmul::multipliers::{lut::product_table, registry};
 
@@ -38,14 +39,14 @@ fn direct_colsum_matches_model_and_9tap_for_all_designs() {
         let lut = product_table(model.as_ref());
         for &(w, h) in SIZES {
             let img = synthetic_scene(w, h, (w * 31 + h) as u64);
-            let want = conv3x3(&img, &LAPLACIAN, model.as_ref());
+            let want = conv3x3(&img, &LAPLACIAN, model.as_ref(), Post::LAPLACIAN);
             assert_eq!(
-                conv3x3_lut(&img, &LAPLACIAN, &lut),
+                conv3x3_lut(&img, &LAPLACIAN, &lut, Post::LAPLACIAN),
                 want,
                 "{spec} {w}x{h}: colsum vs model"
             );
             assert_eq!(
-                conv3x3_lut_9tap(&img, &LAPLACIAN, &lut),
+                conv3x3_lut_9tap(&img, &LAPLACIAN, &lut, Post::LAPLACIAN),
                 want,
                 "{spec} {w}x{h}: 9-tap vs model"
             );
@@ -65,7 +66,7 @@ fn tile_engine_colsum_matches_model_and_9lookup_for_all_designs() {
         let (tc, tr) = laplacian_taps_i64(&lut);
         for &(w, h) in &[(1usize, 1usize), (1, 130), (130, 1), (65, 63), (130, 67)] {
             let img = synthetic_scene(w, h, 7);
-            let want = conv3x3(&img, &LAPLACIAN, model.as_ref());
+            let want = conv3x3(&img, &LAPLACIAN, model.as_ref(), Post::LAPLACIAN);
             let tiles = tile_image(0, &img);
             let mut out = Image::new(w, h);
             for to in engine.process_batch(&tiles) {

@@ -1,9 +1,10 @@
 //! Property tests over the tiling/reassembly/coordinator invariants for
-//! arbitrary image geometries.
+//! arbitrary image geometries and operators.
 
-use sfcmul::coordinator::{tile_image, Coordinator, CoordinatorConfig, LutTileEngine};
+use sfcmul::coordinator::{tile_image, Coordinator, CoordinatorConfig, LutTileEngine, TileEngine};
+use sfcmul::image::ops::{apply_operator, Operator};
 use sfcmul::image::{edge_detect, synthetic_scene};
-use sfcmul::multipliers::{build_design, DesignId};
+use sfcmul::multipliers::{build_design, registry, DesignId};
 use sfcmul::util::prop::{forall, Gen};
 use std::sync::Arc;
 
@@ -51,4 +52,65 @@ fn coordinator_equals_direct_path_for_any_geometry() {
             coord.run(img).edges == expect
         },
     );
+}
+
+/// Two jobs on the *same* engine with *different* operators complete
+/// concurrently with correct per-operator outputs — the engine's tap
+/// tables are keyed per (design, operator), not clobbered by whichever
+/// job came last. Every operator pair is exercised, interleaved through
+/// one worker fleet.
+#[test]
+fn concurrent_jobs_with_different_operators_on_one_engine() {
+    let model = build_design(DesignId::Proposed, 8);
+    let engine = Arc::new(LutTileEngine::new(model.as_ref()));
+    let coord = Coordinator::start(
+        engine,
+        CoordinatorConfig { workers: 4, queue_capacity: 64, max_batch: 8 },
+    );
+    let img = synthetic_scene(150, 100, 77);
+    let expected: Vec<_> = Operator::all()
+        .iter()
+        .map(|&op| apply_operator(&img, op, model.as_ref()))
+        .collect();
+    // several rounds so tiles of different operators interleave in the
+    // shared queue
+    for round in 0..3 {
+        let handles: Vec<_> = Operator::all()
+            .iter()
+            .map(|&op| (op, coord.submit_to(img.clone(), None, op).unwrap()))
+            .collect();
+        for ((op, h), want) in handles.into_iter().zip(&expected) {
+            assert_eq!(h.wait().edges, *want, "round {round}, operator {op}");
+        }
+    }
+    assert_eq!(coord.shutdown().jobs_completed, 3 * Operator::all().len() as u64);
+}
+
+/// The full matrix: two designs × mixed operators through one coordinator
+/// — per-job routing picks both the right design *and* the right
+/// operator program.
+#[test]
+fn design_by_operator_matrix_routes_correctly() {
+    let approx = registry().build_str("proposed@8").unwrap();
+    let exact = registry().build_str("exact@8").unwrap();
+    let engines: Vec<(String, Arc<dyn TileEngine>)> = vec![
+        ("proposed@8".to_string(), Arc::new(LutTileEngine::new(approx.as_ref()))),
+        ("exact@8".to_string(), Arc::new(LutTileEngine::new(exact.as_ref()))),
+    ];
+    let coord = Coordinator::start_named(
+        engines,
+        CoordinatorConfig { workers: 3, queue_capacity: 64, max_batch: 8 },
+    );
+    let img = synthetic_scene(130, 70, 5);
+    let mut handles = Vec::new();
+    for (name, model) in [("proposed@8", &approx), ("exact@8", &exact)] {
+        for op in [Operator::Laplacian, Operator::Sobel, Operator::Sharpen] {
+            let want = apply_operator(&img, op, model.as_ref());
+            let h = coord.submit_to(img.clone(), Some(name), op).unwrap();
+            handles.push((name, op, h, want));
+        }
+    }
+    for (name, op, h, want) in handles {
+        assert_eq!(h.wait().edges, want, "{name} {op}");
+    }
 }

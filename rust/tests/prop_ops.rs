@@ -1,0 +1,157 @@
+//! Property tests over the operator pipeline (`image::ops`):
+//!
+//! * with the **exact** multiplier the convolution is linear in the image
+//!   pre-clamp (`acc(a+b) == acc(a) + acc(b)`), checked on the raw
+//!   accumulators for every operator pass;
+//! * horizontal flip maps the Gx pass of the column-antisymmetric
+//!   gradient operators (Sobel/Prewitt/Scharr) to its negation;
+//! * the colsum/9-tap/model paths agree bit-exactly on ragged geometries
+//!   (1×1, 1×N, N×1, ...) for **all** operators.
+
+use sfcmul::image::ops::{apply_operator, apply_operator_lut, Operator};
+use sfcmul::image::{conv3x3, conv3x3_lut, conv3x3_lut_9tap, Image};
+use sfcmul::image::conv::conv3x3_acc;
+use sfcmul::multipliers::{lut::product_table, registry};
+use sfcmul::util::prng::Xoshiro256;
+use sfcmul::util::prop::{forall, Gen};
+
+/// Random image with every pixel even and below `max_half * 2` — evenness
+/// keeps the pixel pre-shift (`px >> 1`) linear, so image addition
+/// commutes with operand conditioning.
+fn even_image(w: usize, h: usize, max_half: u64, seed: u64) -> Image {
+    let mut rng = Xoshiro256::seeded(seed);
+    let mut img = Image::new(w, h);
+    for px in img.data.iter_mut() {
+        *px = (rng.below(max_half) * 2) as u8;
+    }
+    img
+}
+
+/// conv(a + b) == conv(a) + conv(b) on the raw (pre-clamp) accumulators,
+/// for every pass of every operator, with the exact multiplier.
+#[test]
+fn exact_convolution_is_linear_pre_clamp() {
+    let exact = registry().build_str("exact@8").unwrap();
+    forall(
+        "conv(a+b) == conv(a)+conv(b)",
+        20,
+        Gen::no_shrink(|rng| {
+            (1 + rng.below(40) as usize, 1 + rng.below(30) as usize, rng.next_u64())
+        }),
+        |&(w, h, seed)| {
+            // a in {0,2,..,126}, b in {0,2,..,128}: a+b ≤ 254 fits u8
+            let a = even_image(w, h, 64, seed);
+            let b = even_image(w, h, 65, seed ^ 0x9E37_79B9);
+            let mut sum = Image::new(w, h);
+            for (s, (&x, &y)) in sum.data.iter_mut().zip(a.data.iter().zip(b.data.iter())) {
+                *s = x + y;
+            }
+            Operator::all().iter().all(|op| {
+                op.passes().iter().all(|p| {
+                    let acc_a = conv3x3_acc(&a, &p.kernel, exact.as_ref());
+                    let acc_b = conv3x3_acc(&b, &p.kernel, exact.as_ref());
+                    let acc_s = conv3x3_acc(&sum, &p.kernel, exact.as_ref());
+                    acc_s
+                        .iter()
+                        .zip(acc_a.iter().zip(acc_b.iter()))
+                        .all(|(&s, (&x, &y))| s == x + y)
+                })
+            })
+        },
+    );
+}
+
+/// Horizontally flipping the image negates and mirrors the Gx response of
+/// the column-antisymmetric gradient operators (exact multiplier, raw
+/// accumulators — zero padding is flip-symmetric).
+#[test]
+fn horizontal_flip_negates_gx() {
+    let exact = registry().build_str("exact@8").unwrap();
+    forall(
+        "flip(img) Gx == -mirror(Gx)",
+        20,
+        Gen::no_shrink(|rng| {
+            (1 + rng.below(50) as usize, 1 + rng.below(40) as usize, rng.next_u64())
+        }),
+        |&(w, h, seed)| {
+            let img = sfcmul::image::synthetic_scene(w, h, seed);
+            let mut flipped = Image::new(w, h);
+            for y in 0..h {
+                for x in 0..w {
+                    flipped.set(x, y, img.get(w - 1 - x, y));
+                }
+            }
+            [Operator::Sobel, Operator::Prewitt, Operator::Scharr].iter().all(|op| {
+                let gx = &op.passes()[0];
+                let acc = conv3x3_acc(&img, &gx.kernel, exact.as_ref());
+                let acc_f = conv3x3_acc(&flipped, &gx.kernel, exact.as_ref());
+                (0..h).all(|y| {
+                    (0..w).all(|x| acc_f[y * w + x] == -acc[y * w + (w - 1 - x)])
+                })
+            })
+        },
+    );
+}
+
+/// After the magnitude post-processing the Gx *component image* of the
+/// flipped input is the mirror of the original's — |−v| == |v|.
+#[test]
+fn flipped_gx_component_is_mirrored() {
+    let exact = registry().build_str("exact@8").unwrap();
+    let img = sfcmul::image::synthetic_scene(47, 31, 13);
+    let mut flipped = Image::new(47, 31);
+    for y in 0..31 {
+        for x in 0..47 {
+            flipped.set(x, y, img.get(46 - x, y));
+        }
+    }
+    let gx = &Operator::Sobel.passes()[0];
+    let a = conv3x3(&img, &gx.kernel, exact.as_ref(), gx.post);
+    let b = conv3x3(&flipped, &gx.kernel, exact.as_ref(), gx.post);
+    for y in 0..31 {
+        for x in 0..47 {
+            assert_eq!(b.get(x, y), a.get(46 - x, y), "({x},{y})");
+        }
+    }
+}
+
+/// Table path ≡ model path on ragged geometries for every operator and a
+/// representative design pair (exact + the proposed approximate design):
+/// the colsum core (laplacian), the zero-tap-elided folded path
+/// (gradients), and the per-pass 9-tap fallback all reduce to the same
+/// pixels.
+#[test]
+fn lut_model_and_9tap_paths_agree_on_ragged_geometries() {
+    const SIZES: &[(usize, usize)] =
+        &[(1, 1), (1, 9), (9, 1), (2, 2), (5, 4), (63, 1), (65, 63)];
+    for name in ["exact@8", "proposed@8"] {
+        let model = registry().build_str(name).unwrap();
+        let lut = product_table(model.as_ref());
+        for &(w, h) in SIZES {
+            let img = sfcmul::image::synthetic_scene(w, h, (w * 17 + h) as u64);
+            for op in Operator::all() {
+                let want = apply_operator(&img, op, model.as_ref());
+                assert_eq!(
+                    apply_operator_lut(&img, op, &lut),
+                    want,
+                    "{name} {op} {w}x{h}: lut vs model"
+                );
+                // per pass: generic 9-tap table kernel ≡ model conv
+                for p in op.passes() {
+                    assert_eq!(
+                        conv3x3_lut_9tap(&img, &p.kernel, &lut, p.post),
+                        conv3x3(&img, &p.kernel, model.as_ref(), p.post),
+                        "{name} {op}/{} {w}x{h}: 9-tap vs model",
+                        p.label
+                    );
+                    assert_eq!(
+                        conv3x3_lut(&img, &p.kernel, &lut, p.post),
+                        conv3x3(&img, &p.kernel, model.as_ref(), p.post),
+                        "{name} {op}/{} {w}x{h}: lut (colsum or fallback) vs model",
+                        p.label
+                    );
+                }
+            }
+        }
+    }
+}

@@ -15,6 +15,8 @@ fn all_tables_generate() {
         "Table 5",
         "Fig 9",
         "Fig 10",
+        "Operator PSNR matrix",
+        "sobel",
         "Proposed",
     ] {
         assert!(text.contains(needle), "{needle} missing from the report");
