@@ -20,10 +20,18 @@
 #   harness is `harness = false`, so nothing executes) — benches stay
 #   buildable without spending CI minutes running them.
 # * `cargo test -q` is the second half of the tier-1 gate and must pass.
+# * Golden lock: after the test leg, rust/tests/golden/pipeline.tsv must
+#   carry blessed data rows AND match the committed copy. The
+#   golden_pipeline test blesses the working-tree file on its first
+#   toolchain run, so the file itself always looks blessed post-test; the
+#   lock is only real once those rows are committed — a post-test
+#   `git diff` on the file is the gate. Until the blessed rows land in a
+#   commit, CI stays red and uploads them as the golden-pipeline artifact.
 # * `--bench-json`: after a green gate, additionally run the bench_conv
-#   group in quick mode with SFCMUL_BENCH_JSON=BENCH_conv.json, refreshing
-#   the machine-readable perf trajectory at the repo root (hosted CI
-#   uploads it as an artifact per run; see EXPERIMENTS.md).
+#   and bench_nn groups in quick mode with SFCMUL_BENCH_JSON pointing at
+#   BENCH_conv.json / BENCH_nn.json, refreshing the machine-readable perf
+#   trajectory at the repo root (hosted CI uploads both as artifacts per
+#   run; see EXPERIMENTS.md).
 
 set -uo pipefail
 cd "$(dirname "$0")"
@@ -69,6 +77,32 @@ else
         echo "FAIL: tests"
         status=1
     fi
+
+    echo "== golden pipeline lock =="
+    # The golden_pipeline test blesses the *working-tree* file when the
+    # committed copy is header-only, so checking the file alone would
+    # always pass right after the test leg. The lock is only active once
+    # the blessed rows are committed — so a post-test diff against the
+    # committed copy is the actual gate.
+    golden=rust/tests/golden/pipeline.tsv
+    if ! [ -f "$golden" ] || ! grep -q -v -e '^#' -e '^[[:space:]]*$' "$golden"; then
+        echo "FAIL: $golden has no blessed data rows after the test leg"
+        status=1
+    elif git rev-parse --is-inside-work-tree >/dev/null 2>&1; then
+        # status --porcelain covers every not-yet-committed state
+        # (modified, staged-only, untracked) — the lock is real only
+        # when the blessed rows are in a commit.
+        if [ -z "$(git status --porcelain -- "$golden")" ]; then
+            echo "golden file is blessed and committed — exact-checksum locking active"
+        else
+            echo "FAIL: $golden was (re)blessed by this run but the rows are not committed;"
+            echo "      commit the blessed file to activate exact-checksum locking"
+            echo "      (hosted CI uploads it as the golden-pipeline artifact)"
+            status=1
+        fi
+    else
+        echo "golden file carries blessed rows (not a git checkout; commit check skipped)"
+    fi
 fi
 
 if [ "$bench_json" -eq 1 ] && [ "$status" -eq 0 ]; then
@@ -76,6 +110,12 @@ if [ "$bench_json" -eq 1 ] && [ "$status" -eq 0 ]; then
     if ! SFCMUL_BENCH_QUICK=1 SFCMUL_BENCH_JSON=BENCH_conv.json \
         cargo bench --bench bench_conv; then
         echo "FAIL: bench_conv run"
+        status=1
+    fi
+    echo "== bench_nn → BENCH_nn.json (quick mode) =="
+    if ! SFCMUL_BENCH_QUICK=1 SFCMUL_BENCH_JSON=BENCH_nn.json \
+        cargo bench --bench bench_nn; then
+        echo "FAIL: bench_nn run"
         status=1
     fi
 fi

@@ -1,0 +1,82 @@
+//! Bench: the quantized-inference hot path — tiled-LUT GEMM vs the
+//! naive per-element paths, plus conv2d/network throughput.
+//!
+//! With `SFCMUL_BENCH_JSON=BENCH_nn.json` (what `ci.sh --bench-json`
+//! sets for the nn group) the whole group lands in the committed perf
+//! trajectory next to `BENCH_conv.json`. Throughput rows report
+//! Melem/s where an element is one MAC (GEMM rows) or one input pixel
+//! (network rows).
+
+use sfcmul::coordinator::{Coordinator, CoordinatorConfig, LutTileEngine};
+use sfcmul::image::synthetic_scene;
+use sfcmul::multipliers::{lut::product_table, registry, MultiplierModel};
+use sfcmul::nn::{gemm_naive, gemm_tiled, lut_product, quantize_image, MatI8, Network};
+use sfcmul::util::bench::Bench;
+use sfcmul::util::prng::Xoshiro256;
+use std::sync::Arc;
+
+fn main() {
+    let mut b = Bench::new("bench_nn");
+    let model = registry().build_str("proposed@8").expect("registered design");
+    let lut = product_table(model.as_ref());
+    let mut rng = Xoshiro256::seeded(7);
+
+    // Square GEMM at 128³: the tiled table path vs the untiled
+    // per-element table path (same product source, so the ratio is pure
+    // blocking/locality).
+    let a128 = MatI8::random(128, 128, &mut rng);
+    let b128 = MatI8::random(128, 128, &mut rng);
+    let macs128 = (128u64).pow(3);
+    b.throughput(macs128).bench("gemm_tiled_lut_128", || {
+        gemm_tiled(&a128, &b128, &lut).data[0]
+    });
+    b.throughput(macs128).bench("gemm_naive_lut_128", || {
+        gemm_naive(&a128, &b128, &|x, y| lut_product(&lut, x, y)).data[0]
+    });
+
+    // 64³ pair including the functional-model reference (every MAC a
+    // virtual multiply — the path the tiled LUT replaces).
+    let a64 = MatI8::random(64, 64, &mut rng);
+    let b64 = MatI8::random(64, 64, &mut rng);
+    let macs64 = (64u64).pow(3);
+    b.throughput(macs64).bench("gemm_tiled_lut_64", || {
+        gemm_tiled(&a64, &b64, &lut).data[0]
+    });
+    b.throughput(macs64).bench("gemm_naive_model_64", || {
+        gemm_naive(&a64, &b64, &|x, y| model.multiply(x as i64, y as i64) as i32).data[0]
+    });
+
+    // The fixed conv→relu→conv network on a 64×64 scene: in-process
+    // tiled inference, and the same network served as coordinator GEMM
+    // jobs (im2col + dispatch + reassembly overhead included).
+    let net = Network::demo();
+    let x = quantize_image(&synthetic_scene(64, 64, 11));
+    let pixels = (64 * 64) as u64;
+    b.throughput(pixels).bench("network_tiled_64", || {
+        net.run_tiled(&x, &lut).data[0]
+    });
+    let coord = Coordinator::start(
+        Arc::new(LutTileEngine::from_table("proposed", lut.clone())),
+        CoordinatorConfig { workers: 2, queue_capacity: 64, max_batch: 8 },
+    );
+    b.throughput(pixels).bench("network_served_64", || {
+        net.run_served(&coord, None, &x).expect("nn-capable engine").data[0]
+    });
+    coord.shutdown();
+
+    // Headline ratios: blocking win at equal product source, and the
+    // end-to-end win over per-element model calls.
+    let median = |name: &str| b.results().iter().find(|r| r.name == name).map(|r| r.median_ns);
+    if let (Some(tiled), Some(naive)) =
+        (median("gemm_tiled_lut_128"), median("gemm_naive_lut_128"))
+    {
+        println!("  tiled vs naive LUT GEMM (128^3): {:.2}x", naive / tiled);
+    }
+    if let (Some(tiled), Some(model_ns)) =
+        (median("gemm_tiled_lut_64"), median("gemm_naive_model_64"))
+    {
+        println!("  tiled LUT vs per-element model GEMM (64^3): {:.2}x", model_ns / tiled);
+    }
+
+    b.finish();
+}

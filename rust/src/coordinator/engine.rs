@@ -15,9 +15,27 @@ use crate::image::colsum::postprocess;
 use crate::image::conv::{conv3x3_rowbuf, KERNEL_PRESCALE_SHIFT, PIXEL_SHIFT};
 use crate::image::ops::{combine_magnitude, OpProgram, Operator};
 use crate::image::Image;
+use crate::multipliers::verify::netlist_multiply_all;
 use crate::multipliers::MultiplierModel;
+use crate::netlist::Netlist;
 use std::collections::BTreeSet;
-use std::sync::Arc;
+use std::sync::{Arc, OnceLock};
+
+/// How an engine computes quantized-inference (GEMM/conv2d) MACs — the
+/// nn analogue of the per-operator tap tables. Returned by
+/// [`TileEngine::nn_backend`]; `None` means the engine cannot serve nn
+/// jobs and the coordinator rejects them at submit time (the same
+/// contract as [`TileEngine::supports_op`] for operators).
+#[derive(Clone)]
+pub enum NnBackend {
+    /// 256×256 i8×i8 product table (the
+    /// [`crate::multipliers::lut::product_table`] layout) — the tiled
+    /// GEMM fast path.
+    Table(Arc<Vec<i32>>),
+    /// Per-element calls into the multiplier functional model — the
+    /// reference path.
+    PerElement(Arc<dyn MultiplierModel>),
+}
 
 /// A batched tile processor.
 pub trait TileEngine: Send + Sync {
@@ -37,6 +55,15 @@ pub trait TileEngine: Send + Sync {
     /// Laplacian-only. Checked by the coordinator at submit time.
     fn supports_op(&self, _op: Operator) -> bool {
         true
+    }
+
+    /// Quantized-inference capability: the MAC product source for i8
+    /// GEMM/conv2d jobs, or `None` when the engine is conv-datapath-only
+    /// (rowbuf, PJRT) or its design is not 8-bit. Checked by the
+    /// coordinator at [`super::Coordinator::submit_gemm`] /
+    /// [`super::Coordinator::submit_conv2d`] time.
+    fn nn_backend(&self) -> Option<NnBackend> {
+        None
     }
 }
 
@@ -167,7 +194,9 @@ fn conv_tile_model(tile: &Tile, product: &dyn Fn(u8, i8) -> i64) -> TileOut {
 /// for the Gx/Gy family, 2 for Roberts).
 pub struct LutTileEngine {
     name: String,
-    lut: Vec<i32>,
+    /// Shared so [`TileEngine::nn_backend`] hands the GEMM path the same
+    /// table without copying 256 KiB per job.
+    lut: Arc<Vec<i32>>,
     ops: OpSet,
 }
 
@@ -178,7 +207,7 @@ impl LutTileEngine {
 
     pub fn from_table(name: &str, lut: Vec<i32>) -> Self {
         let ops = OpSet::from_lut(&lut);
-        Self { name: name.to_string(), lut, ops }
+        Self { name: name.to_string(), lut: Arc::new(lut), ops }
     }
 
     pub fn lut(&self) -> &[i32] {
@@ -193,6 +222,10 @@ impl TileEngine for LutTileEngine {
 
     fn process_batch(&self, tiles: &[Tile]) -> Vec<TileOut> {
         tiles.iter().map(|t| self.ops.conv_tile(t)).collect()
+    }
+
+    fn nn_backend(&self) -> Option<NnBackend> {
+        Some(NnBackend::Table(self.lut.clone()))
     }
 }
 
@@ -311,6 +344,11 @@ impl TileEngine for RowbufTileEngine {
 pub struct BitsimTileEngine {
     name: String,
     ops: OpSet,
+    /// The design's netlist + width, kept so the nn path can sweep the
+    /// full 256×256 product table out of the gates on first use.
+    nl: Netlist,
+    bits: usize,
+    nn_table: OnceLock<Arc<Vec<i32>>>,
 }
 
 impl BitsimTileEngine {
@@ -346,7 +384,13 @@ impl BitsimTileEngine {
             products[ki * dom + a as usize]
         };
         let ops = OpSet::build(&prod);
-        Self { name: format!("bitsim:{}", model.name()), ops }
+        Self {
+            name: format!("bitsim:{}", model.name()),
+            ops,
+            nl,
+            bits: n,
+            nn_table: OnceLock::new(),
+        }
     }
 }
 
@@ -357,6 +401,28 @@ impl TileEngine for BitsimTileEngine {
 
     fn process_batch(&self, tiles: &[Tile]) -> Vec<TileOut> {
         tiles.iter().map(|t| self.ops.conv_tile(t)).collect()
+    }
+
+    /// Netlist-true GEMM: the full 65 536-pair operand space is swept
+    /// out of the gates by the bitsliced simulator on first nn use
+    /// (~1 000 passes, cached for the engine's lifetime), so quantized
+    /// inference observes hardware truth exactly like the paper tables.
+    /// The nn datapath is i8, so only 8-bit designs qualify.
+    fn nn_backend(&self) -> Option<NnBackend> {
+        if self.bits != 8 {
+            return None;
+        }
+        let table = self.nn_table.get_or_init(|| {
+            // netlist_multiply_all indexes by (a_bits << 8) | b_bits —
+            // the product_table layout; 8-bit products fit 16 bits.
+            Arc::new(
+                netlist_multiply_all(&self.nl, 8)
+                    .into_iter()
+                    .map(|p| p as i32)
+                    .collect(),
+            )
+        });
+        Some(NnBackend::Table(table.clone()))
     }
 }
 
@@ -382,6 +448,16 @@ impl TileEngine for ModelTileEngine {
             .iter()
             .map(|t| conv_tile_model(t, &|px, k| self.model.multiply(px as i64, k as i64)))
             .collect()
+    }
+
+    /// Per-element reference path for nn jobs (8-bit designs; the i8
+    /// datapath cannot carry wider operands).
+    fn nn_backend(&self) -> Option<NnBackend> {
+        if self.model.bits() == 8 {
+            Some(NnBackend::PerElement(self.model.clone()))
+        } else {
+            None
+        }
     }
 }
 
@@ -538,6 +614,30 @@ mod tests {
             let want = apply_operator(&img, op, model.as_ref());
             assert_eq!(out.data, want.data, "{op}");
         }
+    }
+
+    /// nn capability matrix: table-backed and model engines serve the
+    /// i8 GEMM path (bitsim's table is swept from the gates and must
+    /// equal the model LUT at 8 bit); rowbuf is conv-datapath-only and
+    /// wide designs cannot carry the i8 operands.
+    #[test]
+    fn nn_backend_capability_matrix() {
+        let model = build_design(DesignId::Proposed, 8);
+        let lut = LutTileEngine::new(model.as_ref());
+        assert!(matches!(lut.nn_backend(), Some(NnBackend::Table(_))));
+        let bitsim = BitsimTileEngine::new(model.as_ref());
+        let Some(NnBackend::Table(t)) = bitsim.nn_backend() else {
+            panic!("bitsim engine must serve nn jobs at 8 bit");
+        };
+        assert_eq!(t.as_slice(), lut.lut(), "netlist-swept table == model LUT");
+        assert!(matches!(
+            ModelTileEngine::new(model.clone()).nn_backend(),
+            Some(NnBackend::PerElement(_))
+        ));
+        assert!(RowbufTileEngine::new(model).nn_backend().is_none(), "rowbuf is conv-only");
+        let wide = crate::multipliers::registry().build_str("proposed@16").unwrap();
+        assert!(BitsimTileEngine::new(wide.as_ref()).nn_backend().is_none());
+        assert!(ModelTileEngine::new(wide).nn_backend().is_none());
     }
 
     #[test]

@@ -24,6 +24,13 @@
 //! per (design, operator) pair at construction. The PJRT artifact is
 //! Laplacian-only; the coordinator rejects other operators for it at
 //! submit time.
+//!
+//! Quantized-inference (GEMM/conv2d) jobs are served by the engines
+//! with an i8 MAC source ([`super::engine::NnBackend`]): `lut` and
+//! `bitsim` via product tables (bitsim sweeps the full operand space
+//! out of the netlist on first nn use), `model` per element — all for
+//! 8-bit designs only. `rowbuf` and `pjrt` are conv-datapath-only and
+//! reject nn jobs at submit time.
 
 use super::engine::{
     BitsimTileEngine, LutTileEngine, ModelTileEngine, RowbufTileEngine, TileEngine,

@@ -1,6 +1,7 @@
 //! Job types exchanged with the coordinator.
 
 use crate::image::Image;
+use crate::nn::MatI32;
 use std::time::Duration;
 
 /// An edge-detection request.
@@ -19,4 +20,18 @@ pub struct JobResult {
     pub latency: Duration,
     /// Number of tiles the job was split into.
     pub tiles: usize,
+}
+
+/// A completed quantized-inference (GEMM/conv2d) job: the raw i32
+/// accumulator matrix (callers apply the layer epilogue — see
+/// [`crate::nn::Conv2d::epilogue`]).
+#[derive(Debug)]
+pub struct GemmResult {
+    pub id: u64,
+    /// `C = A × B` accumulators through the engine's multiplier design.
+    pub out: MatI32,
+    /// Wall-clock latency from submit to completion.
+    pub latency: Duration,
+    /// Number of row-block tasks the GEMM was split into.
+    pub blocks: usize,
 }

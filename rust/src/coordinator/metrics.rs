@@ -1,9 +1,53 @@
 //! Coordinator metrics: counters and latency/batch-size distributions,
 //! kept per named engine (per design) and aggregated across the fleet.
+//!
+//! Storage is **bounded**: a production coordinator serves an unbounded
+//! job stream, so per-engine job latencies are kept in a fixed-capacity
+//! [`Reservoir`] (Vitter's Algorithm R — every recorded latency has
+//! equal probability of being retained, so the p50/p90/p99 read from
+//! the sample converge on the stream quantiles), and batch sizes reduce
+//! to running sums. Memory per engine is `O(RESERVOIR_CAP)` regardless
+//! of how many jobs have been served. Units are generic: edge jobs
+//! record tiles, quantized-inference jobs record GEMM blocks — both
+//! land in the same per-engine rows.
 
+use crate::util::prng::Xoshiro256;
 use crate::util::stats;
 use std::sync::Mutex;
 use std::time::Duration;
+
+/// Latency samples retained per engine. 512 samples bound the p99
+/// estimate's standard error near 1.5 percentile points while the whole
+/// reservoir stays two cache pages.
+pub const RESERVOIR_CAP: usize = 512;
+
+/// Fixed-capacity uniform sample of a stream (Algorithm R). The
+/// replacement PRNG is deterministic per reservoir, so metric snapshots
+/// are reproducible for a fixed job order.
+struct Reservoir {
+    samples: Vec<f64>,
+    seen: u64,
+    rng: Xoshiro256,
+}
+
+impl Reservoir {
+    fn new(seed: u64) -> Self {
+        Self { samples: Vec::new(), seen: 0, rng: Xoshiro256::seeded(seed) }
+    }
+
+    fn record(&mut self, v: f64) {
+        self.seen += 1;
+        if self.samples.len() < RESERVOIR_CAP {
+            self.samples.push(v);
+        } else {
+            // Keep each of the `seen` values with probability CAP/seen.
+            let j = self.rng.below(self.seen);
+            if (j as usize) < RESERVOIR_CAP {
+                self.samples[j as usize] = v;
+            }
+        }
+    }
+}
 
 /// Live metrics of a running coordinator. One row per named engine;
 /// the aggregate view sums/merges across rows.
@@ -16,20 +60,18 @@ struct EngineInner {
     jobs_completed: u64,
     tiles_processed: u64,
     batches: u64,
-    batch_sizes: Vec<f64>,
-    job_latencies_ms: Vec<f64>,
+    latencies_ms: Reservoir,
     busy: Duration,
 }
 
 impl EngineInner {
-    fn new(name: String) -> Self {
+    fn new(name: String, seed: u64) -> Self {
         Self {
             name,
             jobs_completed: 0,
             tiles_processed: 0,
             batches: 0,
-            batch_sizes: Vec::new(),
-            job_latencies_ms: Vec::new(),
+            latencies_ms: Reservoir::new(seed),
             busy: Duration::ZERO,
         }
     }
@@ -41,9 +83,13 @@ pub struct EngineMetricsSnapshot {
     /// The engine's registered name (the design/engine key jobs select).
     pub name: String,
     pub jobs_completed: u64,
+    /// Work units processed: conv tiles plus GEMM row-blocks.
     pub tiles_processed: u64,
     pub batches: u64,
     pub mean_batch_size: f64,
+    /// Job-latency quantiles, read from the engine's bounded reservoir
+    /// (exact while ≤ [`RESERVOIR_CAP`] jobs have completed, a uniform
+    /// sample estimate beyond that).
     pub latency_p50_ms: f64,
     pub latency_p90_ms: f64,
     pub latency_p99_ms: f64,
@@ -71,7 +117,15 @@ impl Metrics {
     pub fn new(engine_names: Vec<String>) -> Self {
         assert!(!engine_names.is_empty());
         Self {
-            inner: Mutex::new(engine_names.into_iter().map(EngineInner::new).collect()),
+            inner: Mutex::new(
+                engine_names
+                    .into_iter()
+                    .enumerate()
+                    // Distinct deterministic seed per row so reservoirs
+                    // don't share replacement streams.
+                    .map(|(i, n)| EngineInner::new(n, 0x5fc0_0db5 ^ i as u64))
+                    .collect(),
+            ),
         }
     }
 
@@ -80,7 +134,6 @@ impl Metrics {
         let m = &mut rows[engine];
         m.batches += 1;
         m.tiles_processed += size as u64;
-        m.batch_sizes.push(size as f64);
         m.busy += busy;
     }
 
@@ -88,21 +141,28 @@ impl Metrics {
         let mut rows = self.inner.lock().unwrap();
         let m = &mut rows[engine];
         m.jobs_completed += 1;
-        m.job_latencies_ms.push(latency.as_secs_f64() * 1e3);
+        m.latencies_ms.record(latency.as_secs_f64() * 1e3);
     }
 
     pub fn snapshot(&self) -> MetricsSnapshot {
         let rows = self.inner.lock().unwrap();
+        let mean_batch = |tiles: u64, batches: u64| {
+            if batches == 0 {
+                0.0
+            } else {
+                tiles as f64 / batches as f64
+            }
+        };
         let per_engine: Vec<EngineMetricsSnapshot> = rows
             .iter()
             .map(|m| {
-                let (p50, p90, p99) = stats::p50_p90_p99(&m.job_latencies_ms);
+                let (p50, p90, p99) = stats::p50_p90_p99(&m.latencies_ms.samples);
                 EngineMetricsSnapshot {
                     name: m.name.clone(),
                     jobs_completed: m.jobs_completed,
                     tiles_processed: m.tiles_processed,
                     batches: m.batches,
-                    mean_batch_size: stats::mean(&m.batch_sizes),
+                    mean_batch_size: mean_batch(m.tiles_processed, m.batches),
                     latency_p50_ms: p50,
                     latency_p90_ms: p90,
                     latency_p99_ms: p99,
@@ -110,16 +170,19 @@ impl Metrics {
                 }
             })
             .collect();
-        let all_batches: Vec<f64> =
-            rows.iter().flat_map(|m| m.batch_sizes.iter().copied()).collect();
+        // Aggregate quantiles merge the per-engine reservoir samples —
+        // a uniform sample of the whole stream when loads are balanced,
+        // and at worst a per-engine-weighted estimate.
         let all_latencies: Vec<f64> =
-            rows.iter().flat_map(|m| m.job_latencies_ms.iter().copied()).collect();
+            rows.iter().flat_map(|m| m.latencies_ms.samples.iter().copied()).collect();
         let (p50, p90, p99) = stats::p50_p90_p99(&all_latencies);
+        let tiles: u64 = rows.iter().map(|m| m.tiles_processed).sum();
+        let batches: u64 = rows.iter().map(|m| m.batches).sum();
         MetricsSnapshot {
             jobs_completed: rows.iter().map(|m| m.jobs_completed).sum(),
-            tiles_processed: rows.iter().map(|m| m.tiles_processed).sum(),
-            batches: rows.iter().map(|m| m.batches).sum(),
-            mean_batch_size: stats::mean(&all_batches),
+            tiles_processed: tiles,
+            batches,
+            mean_batch_size: mean_batch(tiles, batches),
             latency_p50_ms: p50,
             latency_p90_ms: p90,
             latency_p99_ms: p99,
@@ -167,10 +230,59 @@ mod tests {
         assert_eq!(approx.name, "approx");
         assert_eq!(approx.jobs_completed, 2);
         assert_eq!(approx.tiles_processed, 4);
+        assert!(approx.latency_p50_ms >= 10.0 && approx.latency_p99_ms <= 30.0 + 1e-9);
         assert_eq!(exact.name, "exact");
         assert_eq!(exact.jobs_completed, 1);
         assert_eq!(exact.batches, 1);
         assert!((exact.mean_batch_size - 2.0).abs() < 1e-12);
+        assert!((exact.latency_p50_ms - 20.0).abs() < 1e-9, "single sample is its own p50");
         assert_eq!(exact.engine_busy, Duration::from_millis(5));
+    }
+
+    /// Below the reservoir capacity the quantiles are exact: every
+    /// recorded latency is retained.
+    #[test]
+    fn quantiles_are_exact_below_capacity() {
+        let m = Metrics::new(vec!["e".into()]);
+        for i in 1..=100u64 {
+            m.record_job(0, Duration::from_millis(i));
+        }
+        let s = m.snapshot();
+        assert!((s.latency_p50_ms - 50.5).abs() < 1.0, "p50 {}", s.latency_p50_ms);
+        assert!(s.latency_p99_ms > 98.0 && s.latency_p99_ms <= 100.0);
+    }
+
+    /// Past capacity, memory stays bounded and the sampled quantiles
+    /// still land inside the stream's range (here: a uniform ramp, so
+    /// p50 of any uniform subsample concentrates near the midpoint).
+    #[test]
+    fn reservoir_bounds_memory_past_capacity() {
+        let m = Metrics::new(vec!["e".into()]);
+        let total = RESERVOIR_CAP as u64 * 20;
+        for i in 1..=total {
+            m.record_job(0, Duration::from_millis(i));
+        }
+        let rows = m.inner.lock().unwrap();
+        assert_eq!(rows[0].latencies_ms.samples.len(), RESERVOIR_CAP);
+        assert_eq!(rows[0].latencies_ms.seen, total);
+        drop(rows);
+        let s = m.snapshot();
+        assert_eq!(s.jobs_completed, total);
+        let mid = total as f64 / 2.0;
+        assert!(
+            (s.latency_p50_ms - mid).abs() < mid * 0.25,
+            "sampled p50 {} should concentrate near {mid}",
+            s.latency_p50_ms
+        );
+        assert!(s.latency_p99_ms <= total as f64 && s.latency_p99_ms > mid);
+    }
+
+    #[test]
+    fn empty_engine_rows_report_zero_quantiles() {
+        let m = Metrics::new(vec!["a".into(), "idle".into()]);
+        m.record_job(0, Duration::from_millis(5));
+        let s = m.snapshot();
+        assert_eq!(s.per_engine[1].jobs_completed, 0);
+        assert_eq!(s.per_engine[1].mean_batch_size, 0.0);
     }
 }

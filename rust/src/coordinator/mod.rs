@@ -19,6 +19,14 @@
 //! single service instance A/B-tests exact vs. approximate designs
 //! across heterogeneous workloads under load.
 //!
+//! Beyond image tiles, the same queue and worker fleet serve
+//! **quantized-inference jobs** ([`Coordinator::submit_gemm`] /
+//! [`Coordinator::submit_conv2d`]): an i8×i8 GEMM is split into
+//! output-stationary row × column block tasks ([`crate::nn`]) and dispatched to
+//! any engine advertising an [`engine::NnBackend`] (the product-table
+//! engines and the functional-model reference; rowbuf/PJRT are
+//! conv-datapath-only and reject nn jobs at submit time).
+//!
 //! ```text
 //!  submit(img, key?) ─┬─ tiler ─▶ [bounded tile queue] ─▶ batcher ─▶ engine[key] ─┐
 //!                     │                                   (worker × W)            │
@@ -33,11 +41,11 @@ pub mod service;
 pub mod tiler;
 
 pub use engine::{
-    BitsimTileEngine, DualModeTileEngine, LutTileEngine, ModelTileEngine, Quality,
+    BitsimTileEngine, DualModeTileEngine, LutTileEngine, ModelTileEngine, NnBackend, Quality,
     RowbufTileEngine, TileEngine,
 };
 pub use engines::{resolve, resolve_str, resolve_with_fallback, EngineSpec};
-pub use job::{EdgeJob, JobResult};
+pub use job::{EdgeJob, GemmResult, JobResult};
 pub use metrics::{EngineMetricsSnapshot, MetricsSnapshot};
-pub use service::{Coordinator, CoordinatorConfig, JobHandle};
+pub use service::{Coordinator, CoordinatorConfig, GemmHandle, JobHandle};
 pub use tiler::{reassemble, tile_image, Tile, TileOut, TILE_CORE, TILE_HALO, TILE_IN};

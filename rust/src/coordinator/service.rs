@@ -17,19 +17,21 @@
 //! dispatch time — one small-`preferred_batch` engine no longer shrinks
 //! every other engine's batches to the fleet-wide minimum.
 
-use super::engine::TileEngine;
-use super::job::JobResult;
+use super::engine::{NnBackend, TileEngine};
+use super::job::{GemmResult, JobResult};
 use super::metrics::{Metrics, MetricsSnapshot};
 use super::tiler::{reassemble, tile_image, Tile};
 use crate::image::ops::Operator;
 use crate::image::Image;
+use crate::multipliers::MultiplierModel;
+use crate::nn::{gemm_block_lut, gemm_block_mul, Conv2d, MatI32, MatI8, TensorI8};
 use crate::util::error::Error;
 use crate::util::pool::{bounded, Receiver, Sender};
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 #[derive(Debug, Clone)]
 pub struct CoordinatorConfig {
@@ -51,14 +53,58 @@ impl Default for CoordinatorConfig {
     }
 }
 
+/// One unit of queued work. Edge jobs travel as halo tiles; quantized
+/// inference travels as output-stationary GEMM row-block tasks — both
+/// share the bounded queue (backpressure), the worker fleet, the
+/// per-engine batch regrouping and the per-design metrics.
+enum Work {
+    Conv(Tile),
+    Gemm(GemmTask),
+}
+
+impl Work {
+    fn engine(&self) -> u8 {
+        match self {
+            Work::Conv(t) => t.engine,
+            Work::Gemm(g) => g.engine,
+        }
+    }
+}
+
+/// One GEMM block task: compute the `rows × cols` block of `C = A × B`
+/// at `(row0, col0)` (see [`crate::nn::gemm_block_lut`]). Jobs split
+/// along *both* C dimensions ([`crate::nn::MC`] rows ×
+/// [`crate::nn::NC`] columns): convolution GEMMs have only `out_c` rows
+/// but thousands of im2col columns, so the column split is what spreads
+/// a conv layer across the fleet. Operands are shared across the job's
+/// tasks, never copied per task.
+struct GemmTask {
+    job_id: u64,
+    engine: u8,
+    row0: usize,
+    rows: usize,
+    col0: usize,
+    cols: usize,
+    a: Arc<MatI8>,
+    b: Arc<MatI8>,
+}
+
+/// Where a job's finished units accumulate, paired with the reply
+/// channel its result returns on — one enum, so a sink/reply kind
+/// mismatch is unrepresentable.
+enum Sink {
+    Image(Image, Sender<JobResult>),
+    Mat(MatI32, Sender<GemmResult>),
+}
+
 struct JobState {
-    out: Image,
+    sink: Sink,
     remaining: usize,
     started: Instant,
-    tiles: usize,
+    /// Total units (tiles or GEMM blocks) the job was split into.
+    units: usize,
     /// Index of the engine serving this job (metrics attribution).
     engine: usize,
-    reply: Sender<JobResult>,
 }
 
 /// Shard count of the job map. Power of two so the shard pick is one
@@ -102,16 +148,30 @@ impl JobHandle {
     }
 }
 
+/// Handle for one submitted quantized-inference (GEMM/conv2d) job.
+pub struct GemmHandle {
+    pub id: u64,
+    rx: Receiver<GemmResult>,
+}
+
+impl GemmHandle {
+    /// Block until the job completes.
+    pub fn wait(self) -> GemmResult {
+        self.rx.recv().expect("coordinator dropped before completing job")
+    }
+}
+
 /// The running service. Dropping it shuts the workers down gracefully
 /// (queued work is drained first).
 pub struct Coordinator {
     shared: Arc<Shared>,
-    tile_tx: Option<Sender<Tile>>,
+    tile_tx: Option<Sender<Work>>,
     workers: Vec<JoinHandle<()>>,
     next_job: AtomicU64,
     engine_names: Vec<String>,
     /// The engine fleet, kept for submit-time capability checks
-    /// ([`TileEngine::supports_op`]); workers hold their own clone.
+    /// ([`TileEngine::supports_op`], [`TileEngine::nn_backend`]);
+    /// workers hold their own clone.
     fleet: Arc<Vec<Arc<dyn TileEngine>>>,
 }
 
@@ -143,7 +203,7 @@ impl Coordinator {
         }
         let fleet: Arc<Vec<Arc<dyn TileEngine>>> =
             Arc::new(engines.into_iter().map(|(_, e)| e).collect());
-        let (tile_tx, tile_rx) = bounded::<Tile>(cfg.queue_capacity);
+        let (tile_tx, tile_rx) = bounded::<Work>(cfg.queue_capacity);
         let shared = Arc::new(Shared {
             jobs: JobTable::new(),
             metrics: Metrics::new(engine_names.clone()),
@@ -201,8 +261,20 @@ impl Coordinator {
         engine: Option<&str>,
         op: Operator,
     ) -> crate::Result<JobHandle> {
-        let idx = match engine {
-            None => 0,
+        let idx = self.engine_index(engine)?;
+        if !self.fleet[idx].supports_op(op) {
+            return Err(Error::msg(format!(
+                "engine {:?} does not support operator {op}",
+                self.engine_names[idx]
+            )));
+        }
+        Ok(self.submit_inner(image, idx, 0, op))
+    }
+
+    /// Resolve an engine selector to a fleet index (None = default).
+    fn engine_index(&self, engine: Option<&str>) -> crate::Result<usize> {
+        match engine {
+            None => Ok(0),
             Some(name) => self
                 .engine_names
                 .iter()
@@ -212,15 +284,117 @@ impl Coordinator {
                         "unknown engine {name:?} (registered: {})",
                         self.engine_names.join(", ")
                     ))
-                })?,
-        };
-        if !self.fleet[idx].supports_op(op) {
+                }),
+        }
+    }
+
+    /// Submit a quantized-inference GEMM job: `C = A × B` with every MAC
+    /// through the selected engine's multiplier design. The job is split
+    /// into [`crate::nn::MC`]-row × [`crate::nn::NC`]-column
+    /// output-stationary block tasks that share the tile queue and
+    /// worker fleet. Engines opt in via [`TileEngine::nn_backend`] — a
+    /// conv-only engine (rowbuf, PJRT) or a non-8-bit design is rejected
+    /// here, at submit time.
+    pub fn submit_gemm(
+        &self,
+        a: MatI8,
+        b: MatI8,
+        engine: Option<&str>,
+    ) -> crate::Result<GemmHandle> {
+        let idx = self.engine_index(engine)?;
+        // Cheap shape validation first: the capability probe below can be
+        // expensive (a fresh bitsim engine sweeps its netlist table on
+        // first nn use) and malformed submits should fail fast.
+        if a.cols != b.rows {
             return Err(Error::msg(format!(
-                "engine {:?} does not support operator {op}",
+                "GEMM shape mismatch: {}x{} × {}x{}",
+                a.rows, a.cols, b.rows, b.cols
+            )));
+        }
+        if a.cols > crate::nn::MAX_GEMM_DEPTH {
+            return Err(Error::msg(format!(
+                "GEMM depth {} exceeds the i32-safe bound {}",
+                a.cols,
+                crate::nn::MAX_GEMM_DEPTH
+            )));
+        }
+        if self.fleet[idx].nn_backend().is_none() {
+            return Err(Error::msg(format!(
+                "engine {:?} does not serve quantized-inference (GEMM) jobs",
                 self.engine_names[idx]
             )));
         }
-        Ok(self.submit_inner(image, idx, 0, op))
+        let id = self.next_job.fetch_add(1, Ordering::Relaxed);
+        let (reply_tx, reply_rx) = bounded::<GemmResult>(1);
+        if a.rows == 0 || b.cols == 0 {
+            // Empty output: no tasks to dispatch, complete immediately.
+            let _ = reply_tx.send(GemmResult {
+                id,
+                out: MatI32::new(a.rows, b.cols),
+                latency: Duration::ZERO,
+                blocks: 0,
+            });
+            return Ok(GemmHandle { id, rx: reply_rx });
+        }
+        let blocks = a.rows.div_ceil(crate::nn::MC) * b.cols.div_ceil(crate::nn::NC);
+        {
+            let mut jobs = self.shared.jobs.shard(id).lock().unwrap();
+            jobs.insert(
+                id,
+                JobState {
+                    sink: Sink::Mat(MatI32::new(a.rows, b.cols), reply_tx),
+                    remaining: blocks,
+                    started: Instant::now(),
+                    units: blocks,
+                    engine: idx,
+                },
+            );
+        }
+        let (a, b) = (Arc::new(a), Arc::new(b));
+        let tx = self.tile_tx.as_ref().expect("coordinator running");
+        let mut row0 = 0;
+        while row0 < a.rows {
+            let rows = crate::nn::MC.min(a.rows - row0);
+            let mut col0 = 0;
+            while col0 < b.cols {
+                let cols = crate::nn::NC.min(b.cols - col0);
+                tx.send(Work::Gemm(GemmTask {
+                    job_id: id,
+                    engine: idx as u8,
+                    row0,
+                    rows,
+                    col0,
+                    cols,
+                    a: a.clone(),
+                    b: b.clone(),
+                }))
+                .expect("tile queue closed");
+                col0 += cols;
+            }
+            row0 += rows;
+        }
+        Ok(GemmHandle { id, rx: reply_rx })
+    }
+
+    /// Submit one quantized convolution layer: the input is lowered via
+    /// [`crate::nn::im2col`] at submit time and served as a GEMM job
+    /// (`layer.weight × im2col(x)`). The result carries the raw i32
+    /// accumulators; apply [`Conv2d::epilogue`] (bias/requant/ReLU) —
+    /// [`crate::nn::Network::run_served`] does both per layer.
+    pub fn submit_conv2d(
+        &self,
+        x: &TensorI8,
+        layer: &Conv2d,
+        engine: Option<&str>,
+    ) -> crate::Result<GemmHandle> {
+        if x.c != layer.in_c {
+            return Err(Error::msg(format!(
+                "conv2d input has {} channels, layer expects {}",
+                x.c, layer.in_c
+            )));
+        }
+        let cols = crate::nn::im2col(x, layer.kh, layer.kw, layer.stride, layer.pad);
+        self.submit_gemm(layer.weight.clone(), cols, engine)
     }
 
     /// Submit with an explicit quality class (dual-quality serving; see
@@ -243,18 +417,17 @@ impl Coordinator {
             jobs.insert(
                 id,
                 JobState {
-                    out: Image::new(image.width, image.height),
+                    sink: Sink::Image(Image::new(image.width, image.height), reply_tx),
                     remaining: tiles.len(),
                     started: Instant::now(),
-                    tiles: tiles.len(),
+                    units: tiles.len(),
                     engine,
-                    reply: reply_tx,
                 },
             );
         }
         let tx = self.tile_tx.as_ref().expect("coordinator running");
         for t in tiles {
-            tx.send(t).expect("tile queue closed");
+            tx.send(Work::Conv(t)).expect("tile queue closed");
         }
         JobHandle { id, rx: reply_rx }
     }
@@ -291,7 +464,7 @@ impl Drop for Coordinator {
 }
 
 fn worker_loop(
-    rx: Receiver<Tile>,
+    rx: Receiver<Work>,
     fleet: Arc<Vec<Arc<dyn TileEngine>>>,
     shared: Arc<Shared>,
     max_batch: usize,
@@ -302,21 +475,29 @@ fn worker_loop(
             return; // queue closed and drained
         }
         // Regroup the batch by engine (stable: queue order kept within
-        // each group). Concurrent submitters interleave tiles of
+        // each group). Concurrent submitters interleave units of
         // different jobs in the shared queue, so coalescing — not
         // run-splitting — keeps engine batches large; batching across
         // designs is never correct, and reassembly is position-keyed so
         // cross-engine reordering is safe.
-        let mut groups: Vec<(u8, Vec<Tile>)> = Vec::new();
+        let mut groups: Vec<(u8, Vec<Work>)> = Vec::new();
         for t in batch {
-            if let Some(pos) = groups.iter().position(|(e, _)| *e == t.engine) {
+            if let Some(pos) = groups.iter().position(|(e, _)| *e == t.engine()) {
                 groups[pos].1.push(t);
             } else {
-                groups.push((t.engine, vec![t]));
+                groups.push((t.engine(), vec![t]));
             }
         }
-        for (engine_idx, tiles) in groups {
+        for (engine_idx, items) in groups {
             let engine = &fleet[engine_idx as usize];
+            let mut tiles: Vec<Tile> = Vec::new();
+            let mut gemms: Vec<GemmTask> = Vec::new();
+            for it in items {
+                match it {
+                    Work::Conv(t) => tiles.push(t),
+                    Work::Gemm(g) => gemms.push(g),
+                }
+            }
             // Per-engine batch clamp at dispatch time: each engine's
             // preference bounds only its own chunks, so a small-batch
             // engine in the fleet no longer shrinks everyone's batches.
@@ -332,24 +513,93 @@ fn worker_loop(
                     let mut jobs = shared.jobs.shard(to.job_id).lock().unwrap();
                     let done = {
                         let st = jobs.get_mut(&to.job_id).expect("job state");
-                        reassemble(&mut st.out, &to);
+                        match &mut st.sink {
+                            Sink::Image(out, _) => reassemble(out, &to),
+                            Sink::Mat(..) => unreachable!("conv tile routed to a GEMM job"),
+                        }
                         st.remaining -= 1;
                         st.remaining == 0
                     };
                     if done {
                         let st = jobs.remove(&to.job_id).unwrap();
                         drop(jobs); // finish the job outside the shard lock
-                        let latency = st.started.elapsed();
-                        shared.metrics.record_job(st.engine, latency);
-                        let _ = st.reply.send(JobResult {
-                            id: to.job_id,
-                            edges: st.out,
-                            latency,
-                            tiles: st.tiles,
-                        });
+                        finish_job(&shared, to.job_id, st);
                     }
                 }
             }
+            if gemms.is_empty() {
+                continue;
+            }
+            // GEMM block tasks: each is already a block-sized unit
+            // (nn::MC rows × nn::NC columns), so they dispatch one at a
+            // time through the engine's nn backend (validated present at
+            // submit).
+            let backend = engine
+                .nn_backend()
+                .expect("nn-capable engine validated at submit time");
+            for task in gemms {
+                let n = task.b.cols;
+                let t0 = Instant::now();
+                let mut block = vec![0i32; task.rows * task.cols];
+                match &backend {
+                    NnBackend::Table(table) => {
+                        gemm_block_lut(
+                            &task.a, &task.b, table, task.row0, task.rows, task.col0,
+                            task.cols, &mut block,
+                        );
+                    }
+                    NnBackend::PerElement(m) => {
+                        gemm_block_mul(
+                            &task.a,
+                            &task.b,
+                            &|x, y| m.multiply(x as i64, y as i64) as i32,
+                            task.row0,
+                            task.rows,
+                            task.col0,
+                            task.cols,
+                            &mut block,
+                        );
+                    }
+                }
+                shared.metrics.record_batch(engine_idx as usize, 1, t0.elapsed());
+                let mut jobs = shared.jobs.shard(task.job_id).lock().unwrap();
+                let done = {
+                    let st = jobs.get_mut(&task.job_id).expect("job state");
+                    match &mut st.sink {
+                        Sink::Mat(out, _) => {
+                            for i in 0..task.rows {
+                                let dst = (task.row0 + i) * n + task.col0;
+                                out.data[dst..dst + task.cols]
+                                    .copy_from_slice(&block[i * task.cols..(i + 1) * task.cols]);
+                            }
+                        }
+                        Sink::Image(..) => unreachable!("GEMM task routed to a conv job"),
+                    }
+                    st.remaining -= 1;
+                    st.remaining == 0
+                };
+                if done {
+                    let st = jobs.remove(&task.job_id).unwrap();
+                    drop(jobs);
+                    finish_job(&shared, task.job_id, st);
+                }
+            }
+        }
+    }
+}
+
+/// Record the job's latency and send its result — outside the shard
+/// lock. The sink carries its own reply channel, so the result kind
+/// always matches.
+fn finish_job(shared: &Shared, id: u64, st: JobState) {
+    let latency = st.started.elapsed();
+    shared.metrics.record_job(st.engine, latency);
+    match st.sink {
+        Sink::Image(out, tx) => {
+            let _ = tx.send(JobResult { id, edges: out, latency, tiles: st.units });
+        }
+        Sink::Mat(out, tx) => {
+            let _ = tx.send(GemmResult { id, out, latency, blocks: st.units });
         }
     }
 }
@@ -707,6 +957,172 @@ mod operator_routing_tests {
             format!("{err}").contains("does not support operator sobel"),
             "unexpected message: {err}"
         );
+    }
+}
+
+#[cfg(test)]
+mod nn_job_tests {
+    use super::*;
+    use crate::coordinator::engine::{
+        BitsimTileEngine, LutTileEngine, ModelTileEngine, RowbufTileEngine,
+    };
+    use crate::image::synthetic_scene;
+    use crate::multipliers::{lut::product_table, registry};
+    use crate::nn::{gemm_tiled, quantize_image, Network};
+    use crate::util::prng::Xoshiro256;
+
+    /// A fleet mixing nn-capable engines (lut, model, bitsim) with a
+    /// conv-only one (rowbuf).
+    fn nn_coordinator() -> Coordinator {
+        let model = registry().build_str("proposed@8").unwrap();
+        let engines: Vec<(String, Arc<dyn TileEngine>)> = vec![
+            ("lut".into(), Arc::new(LutTileEngine::new(model.as_ref()))),
+            ("model".into(), Arc::new(ModelTileEngine::new(model.clone()))),
+            ("bitsim".into(), Arc::new(BitsimTileEngine::new(model.as_ref()))),
+            ("rowbuf".into(), Arc::new(RowbufTileEngine::new(model))),
+        ];
+        Coordinator::start_named(
+            engines,
+            CoordinatorConfig { workers: 3, queue_capacity: 64, max_batch: 8 },
+        )
+    }
+
+    /// Served GEMM equals the direct tiled product on every nn-capable
+    /// backend — including a multi-block job (rows > nn::MC) — and the
+    /// per-design metrics count the nn jobs.
+    #[test]
+    fn served_gemm_matches_direct_on_every_backend() {
+        let design = registry().build_str("proposed@8").unwrap();
+        let lut = product_table(design.as_ref());
+        let mut rng = Xoshiro256::seeded(33);
+        let a = crate::nn::MatI8::random(crate::nn::MC * 2 + 5, 37, &mut rng);
+        let b = crate::nn::MatI8::random(37, 23, &mut rng);
+        let want = gemm_tiled(&a, &b, &lut);
+        let coord = nn_coordinator();
+        for key in ["lut", "model", "bitsim"] {
+            let res = coord.submit_gemm(a.clone(), b.clone(), Some(key)).unwrap().wait();
+            assert_eq!(res.out, want, "{key}");
+            assert_eq!(res.blocks, 3, "{key}: 69 rows in MC=32 blocks");
+        }
+        let m = coord.shutdown();
+        assert_eq!(m.jobs_completed, 3);
+        for row in &m.per_engine[..3] {
+            assert_eq!(row.jobs_completed, 1, "{}", row.name);
+            assert_eq!(row.tiles_processed, 3, "{}: one unit per GEMM block", row.name);
+        }
+        assert_eq!(m.per_engine[3].jobs_completed, 0, "rowbuf served nothing");
+    }
+
+    #[test]
+    fn nn_jobs_are_validated_at_submit() {
+        let coord = nn_coordinator();
+        let a = crate::nn::MatI8::new(4, 3);
+        let b = crate::nn::MatI8::new(3, 2);
+        // conv-only engine
+        let err = coord.submit_gemm(a.clone(), b.clone(), Some("rowbuf")).unwrap_err();
+        assert!(
+            format!("{err}").contains("does not serve quantized-inference"),
+            "unexpected message: {err}"
+        );
+        // unknown engine
+        assert!(coord.submit_gemm(a.clone(), b.clone(), Some("turbo")).is_err());
+        // shape mismatch
+        let err = coord.submit_gemm(a, crate::nn::MatI8::new(4, 2), None).unwrap_err();
+        assert!(format!("{err}").contains("shape mismatch"), "unexpected message: {err}");
+    }
+
+    /// An empty-output GEMM (zero rows or zero columns) has no tasks to
+    /// dispatch and must still complete (immediately), leaving no
+    /// stranded job state.
+    #[test]
+    fn empty_gemm_completes_immediately() {
+        let coord = nn_coordinator();
+        let res = coord
+            .submit_gemm(crate::nn::MatI8::new(0, 5), crate::nn::MatI8::new(5, 7), None)
+            .unwrap()
+            .wait();
+        assert_eq!((res.out.rows, res.out.cols), (0, 7));
+        assert_eq!(res.blocks, 0);
+        let res = coord
+            .submit_gemm(crate::nn::MatI8::new(3, 5), crate::nn::MatI8::new(5, 0), None)
+            .unwrap()
+            .wait();
+        assert_eq!((res.out.rows, res.out.cols), (3, 0));
+        assert_eq!(res.blocks, 0);
+        assert_eq!(coord.shutdown().jobs_completed, 0, "no worker-side job recorded");
+    }
+
+    /// Conv-shaped GEMMs (few rows, many columns — A is the weight
+    /// matrix) split along C's columns, so a single conv layer becomes
+    /// several tasks the fleet can run in parallel, and the column-wise
+    /// reassembly is bit-exact.
+    #[test]
+    fn wide_gemm_splits_along_columns() {
+        let design = registry().build_str("proposed@8").unwrap();
+        let lut = product_table(design.as_ref());
+        let mut rng = Xoshiro256::seeded(91);
+        let a = crate::nn::MatI8::random(3, 18, &mut rng);
+        let b = crate::nn::MatI8::random(18, 2 * crate::nn::NC + 10, &mut rng);
+        let want = gemm_tiled(&a, &b, &lut);
+        let coord = nn_coordinator();
+        let res = coord.submit_gemm(a, b, Some("lut")).unwrap().wait();
+        assert_eq!(res.out, want);
+        assert_eq!(res.blocks, 3, "1 row block x 3 column blocks");
+        coord.shutdown();
+    }
+
+    /// submit_conv2d == the direct table-backed forward pass, and the
+    /// whole served network equals the in-process tiled network.
+    #[test]
+    fn served_conv2d_and_network_match_direct() {
+        let design = registry().build_str("proposed@8").unwrap();
+        let lut = product_table(design.as_ref());
+        let net = Network::demo();
+        let x = quantize_image(&synthetic_scene(48, 40, 17));
+        let coord = nn_coordinator();
+        // one layer
+        let l1 = &net.layers[0];
+        let (oh, ow) = l1.out_dims(x.h, x.w);
+        let res = coord.submit_conv2d(&x, l1, Some("lut")).unwrap().wait();
+        assert_eq!(l1.epilogue(&res.out, oh, ow), l1.forward_tiled(&x, &lut));
+        // channel mismatch is a submit-time error
+        assert!(coord.submit_conv2d(&x, &net.layers[1], None).is_err());
+        // whole network
+        let served = net.run_served(&coord, Some("lut"), &x).unwrap();
+        assert_eq!(served, net.run_tiled(&x, &lut));
+    }
+
+    /// Edge tiles and GEMM blocks interleave through one worker fleet:
+    /// both job kinds complete correctly and the metrics attribute units
+    /// to the right engines.
+    #[test]
+    fn conv_and_gemm_jobs_share_the_fleet() {
+        let design = registry().build_str("proposed@8").unwrap();
+        let lut = product_table(design.as_ref());
+        let img = synthetic_scene(150, 90, 9);
+        let want_edges = crate::image::edge_detect(&img, design.as_ref());
+        let mut rng = Xoshiro256::seeded(71);
+        let a = crate::nn::MatI8::random(40, 21, &mut rng);
+        let b = crate::nn::MatI8::random(21, 33, &mut rng);
+        let want_c = gemm_tiled(&a, &b, &lut);
+        let coord = nn_coordinator();
+        let mut edge_handles = Vec::new();
+        let mut gemm_handles = Vec::new();
+        for _ in 0..4 {
+            edge_handles.push(
+                coord.submit_to(img.clone(), Some("lut"), Operator::Laplacian).unwrap(),
+            );
+            gemm_handles.push(coord.submit_gemm(a.clone(), b.clone(), Some("lut")).unwrap());
+        }
+        for h in edge_handles {
+            assert_eq!(h.wait().edges, want_edges);
+        }
+        for h in gemm_handles {
+            assert_eq!(h.wait().out, want_c);
+        }
+        let m = coord.shutdown();
+        assert_eq!(m.jobs_completed, 8);
+        assert_eq!(m.per_engine[0].jobs_completed, 8, "all routed to the lut engine");
     }
 }
 

@@ -42,6 +42,13 @@
 //!   magnitudes, sharpen, gaussian3 — per-operator kernels, post rules
 //!   and folded-tap execution programs), the convolution cores (direct,
 //!   LUT/colsum, row-buffer streaming), PSNR (Fig 9).
+//! * [`nn`] — approximate quantized inference: symmetric i8
+//!   quantization, an output-stationary tiled signed GEMM
+//!   (`i8 × i8 → i32`) where every MAC routes through a registry design
+//!   (product-LUT fast path, bitsim-swept netlist-true tables, and a
+//!   per-element reference), and `Conv2d`/`Network` lowered via im2col
+//!   onto that GEMM — served through the coordinator as a second job
+//!   kind next to image tiles (`sfcmul infer`).
 //! * [`coordinator`] — the L3 serving layer: halo tiling, dynamic batching,
 //!   worker pool with backpressure, latency/throughput metrics (Fig 8).
 //!   A [`coordinator::Coordinator`] now serves a *set of named engines*
@@ -66,6 +73,7 @@ pub mod multipliers;
 pub mod error;
 pub mod hwmodel;
 pub mod image;
+pub mod nn;
 pub mod coordinator;
 pub mod runtime;
 pub mod tables;

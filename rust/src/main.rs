@@ -1,9 +1,11 @@
 //! `sfcmul` — CLI for the approximate signed multiplier reproduction.
 //!
 //! Subcommands:
-//!   tables   --id <t1|t2|t3|t4|t5|f9|f10|ops|all> [--seed S] [--out out/]
+//!   tables   --id <t1|t2|t3|t4|t5|f9|f10|ops|nn|all> [--seed S] [--out out/]
 //!   edge     --input img.pgm --output edges.pgm [--design SPEC] [--engine SPEC] [--op OP]
 //!   serve    --demo [--jobs N] [--workers W] [--designs SPEC,SPEC,...] [--engine SPEC] [--op OP]
+//!   infer    [--design SPEC] [--engine lut|bitsim|model] [--seed S] [--size N]
+//!            (quantized conv→relu→conv inference through the coordinator)
 //!   ablate   [--seed S]                      (design-space ablation report)
 //!   designs                                  (list the design registry)
 //!   ops                                      (list the operator registry)
@@ -23,6 +25,7 @@ use sfcmul::coordinator::{engines, Coordinator, CoordinatorConfig, EngineSpec, T
 use sfcmul::image::ops::{apply_operator, OpProgram, Operator};
 use sfcmul::image::{synthetic_scene, Image};
 use sfcmul::multipliers::{lut, registry, DesignSpec};
+use sfcmul::nn::{fidelity as nn_fidelity, quantize_image, Network};
 use sfcmul::util::cli::Args;
 use std::path::{Path, PathBuf};
 use std::sync::Arc;
@@ -33,8 +36,9 @@ sfcmul — Approximate Signed Multiplier with Sign-Focused Compressors (CS.AR 20
 
 USAGE: sfcmul <subcommand> [options]
 
-  tables   --id t1|t2|t3|t4|t5|f9|f10|ops|all [--seed S] [--out DIR]
-           regenerate a paper table/figure (ops = design x operator PSNR matrix)
+  tables   --id t1|t2|t3|t4|t5|f9|f10|ops|nn|all [--seed S] [--out DIR]
+           regenerate a paper table/figure (ops = design x operator PSNR
+           matrix, nn = design x quantized-inference accuracy matrix)
   edge     --input in.pgm --output out.pgm [--design SPEC] [--engine SPEC] [--op OP]
            run an operator on an image (or --demo for the synthetic scene)
   serve    --demo [--jobs N] [--workers W] [--batch B] [--designs SPEC,SPEC,...]
@@ -42,6 +46,10 @@ USAGE: sfcmul <subcommand> [options]
            run the streaming coordinator on a synthetic job stream, round-robin
            across the listed designs, print aggregate + per-design metrics
            (default designs: proposed@8,exact@8 — an exact-vs-approximate A/B)
+  infer    [--design SPEC] [--engine lut|bitsim|model] [--seed S] [--size N]
+           run the fixed quantized conv->relu->conv network on a synthetic
+           scene through the coordinator (i8 im2col + tiled GEMM, every MAC
+           through the design; prints final-activation fidelity vs exact)
   ablate   [--seed S]
            design-space ablation (compressor candidates, compensation, truncation)
   designs  list every registered design family and example spec strings
@@ -72,6 +80,7 @@ fn main() {
         Some("tables") => cmd_tables(&args),
         Some("edge") => cmd_edge(&args),
         Some("serve") => cmd_serve(&args),
+        Some("infer") => cmd_infer(&args),
         Some("ablate") => cmd_ablate(&args),
         Some("designs") => cmd_designs(),
         Some("ops") => cmd_ops(),
@@ -326,6 +335,93 @@ fn cmd_serve(args: &Args) -> i32 {
             row.engine_busy.as_secs_f64()
         );
     }
+    0
+}
+
+/// Quantized inference: the fixed conv→relu→conv demo network on a
+/// synthetic scene, every MAC through the selected design, served as
+/// coordinator GEMM jobs (one per layer).
+fn cmd_infer(args: &Args) -> i32 {
+    let spec = match design_spec_of(args) {
+        Ok(s) => s,
+        Err(code) => return code,
+    };
+    if spec.bits != 8 {
+        eprintln!("infer runs the i8 quantized datapath; need an 8-bit design (got {spec})");
+        return 2;
+    }
+    let engine_spec: EngineSpec = match args.get_or("engine", "lut").parse() {
+        Ok(e) => e,
+        Err(e) => {
+            eprintln!("invalid --engine: {e}");
+            return 2;
+        }
+    };
+    let (engine, actual) = match engine_for(engine_spec, &spec) {
+        Ok(pair) => pair,
+        Err(e) => {
+            eprintln!("error: {e}");
+            return 1;
+        }
+    };
+    if engine.nn_backend().is_none() {
+        // Same exit class as the operator pre-checks: the request names
+        // an engine that cannot carry the i8 GEMM datapath.
+        eprintln!(
+            "engine {actual} cannot serve quantized-inference jobs \
+             (try --engine lut | bitsim | model)"
+        );
+        return 2;
+    }
+    let size = args.get_parse("size", 64usize).unwrap_or(64);
+    let seed = seed_of(args);
+    let net = Network::demo();
+    let img = synthetic_scene(size, size, seed);
+    let x = quantize_image(&img);
+    let coord = Coordinator::start(engine, CoordinatorConfig::default());
+    let t0 = Instant::now();
+    let served = match net.run_served(&coord, None, &x) {
+        Ok(t) => t,
+        Err(e) => {
+            eprintln!("error: {e}");
+            return 1;
+        }
+    };
+    let dt = t0.elapsed();
+    // Reference: the same network with the exact multiplier.
+    let exact = registry().build_str("exact@8").expect("exact design");
+    let exact_lut = lut::product_table(exact.as_ref());
+    let reference = net.run_tiled(&x, &exact_lut);
+    let fid = nn_fidelity(&served, &reference);
+    let engine_label = coord.engine_name().to_string();
+    let m = coord.shutdown();
+    println!(
+        "infer: conv(1->4, 3x3, s1, p1)+relu -> conv(4->2, 3x3, s2, p1) on a {size}x{size} \
+         synthetic scene (seed {seed})"
+    );
+    let mut shape = format!("1x{}x{}", size, size);
+    let (mut h, mut w) = (size, size);
+    for layer in &net.layers {
+        let (oh, ow) = layer.out_dims(h, w);
+        shape.push_str(&format!(" -> {}x{}x{}", layer.out_c(), oh, ow));
+        (h, w) = (oh, ow);
+    }
+    println!("layers: {shape}  (design {spec} via {engine_label})");
+    println!(
+        "final activations vs exact@8: {}/{} mismatched ({:.2}%), mean |d| {:.3}, max |d| {}",
+        fid.mismatched,
+        fid.total,
+        fid.mismatch_rate() * 100.0,
+        fid.mean_abs,
+        fid.max_abs
+    );
+    println!(
+        "served {} GEMM jobs ({} blocks) in {:.2} ms (engine busy {:.2} ms)",
+        m.jobs_completed,
+        m.tiles_processed,
+        dt.as_secs_f64() * 1e3,
+        m.engine_busy.as_secs_f64() * 1e3
+    );
     0
 }
 

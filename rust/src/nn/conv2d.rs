@@ -1,0 +1,467 @@
+//! Quantized `Conv2d` lowered onto the tiled GEMM via im2col, plus the
+//! fixed conv→relu→conv demo network the `infer` CLI serves.
+//!
+//! A convolution with `out_c` filters of shape `in_c × kh × kw` over a
+//! CHW input is exactly the matrix product
+//!
+//! ```text
+//! W (out_c × in_c·kh·kw)  ×  im2col(x) (in_c·kh·kw × oh·ow)
+//! ```
+//!
+//! so every conv MAC routes through the same approximate-multiplier GEMM
+//! core ([`super::gemm`]) — the "custom convolution layer" of the source
+//! paper's §4 generalised from 3×3 single-channel edge kernels to
+//! arbitrary channels, stride and padding. The epilogue (per-channel
+//! i32 bias, [`Requant`] back to i8, optional ReLU) is integer-only.
+//!
+//! [`conv2d_direct`] is the no-im2col nested-loop foil the property
+//! tests compare against: `conv2d == im2col + gemm` is *asserted*, not
+//! assumed.
+
+use super::gemm::{gemm_naive, gemm_tiled, MatI32, MatI8};
+use super::quant::Requant;
+use crate::image::Image;
+use crate::util::prng::Xoshiro256;
+
+/// Signed 8-bit activation tensor, CHW layout.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct TensorI8 {
+    pub c: usize,
+    pub h: usize,
+    pub w: usize,
+    pub data: Vec<i8>,
+}
+
+impl TensorI8 {
+    pub fn new(c: usize, h: usize, w: usize) -> Self {
+        Self { c, h, w, data: vec![0; c * h * w] }
+    }
+
+    #[inline]
+    pub fn get(&self, c: usize, y: usize, x: usize) -> i8 {
+        self.data[(c * self.h + y) * self.w + x]
+    }
+
+    #[inline]
+    pub fn set(&mut self, c: usize, y: usize, x: usize, v: i8) {
+        self.data[(c * self.h + y) * self.w + x] = v;
+    }
+
+    /// Input sample with zero padding outside the spatial extent.
+    #[inline]
+    pub fn get_padded(&self, c: usize, y: isize, x: isize) -> i8 {
+        if y < 0 || x < 0 || y as usize >= self.h || x as usize >= self.w {
+            0
+        } else {
+            self.get(c, y as usize, x as usize)
+        }
+    }
+}
+
+/// Activation-fidelity statistics between two same-shape tensors — the
+/// single definition of the mismatch/|Δ| figures reported by the
+/// `infer` CLI and the `tables --id nn` matrix.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Fidelity {
+    /// Elements where the two tensors differ.
+    pub mismatched: usize,
+    /// Total elements compared.
+    pub total: usize,
+    /// Mean |a − b| in i8 codes (0.0 for empty tensors).
+    pub mean_abs: f64,
+    /// Max |a − b| in i8 codes.
+    pub max_abs: i64,
+}
+
+impl Fidelity {
+    /// Mismatched fraction in [0, 1] (0.0 for empty tensors).
+    pub fn mismatch_rate(&self) -> f64 {
+        self.mismatched as f64 / self.total.max(1) as f64
+    }
+}
+
+/// Compare two same-shape activation tensors element-wise.
+pub fn fidelity(a: &TensorI8, b: &TensorI8) -> Fidelity {
+    assert_eq!(
+        (a.c, a.h, a.w),
+        (b.c, b.h, b.w),
+        "fidelity compares same-shape tensors"
+    );
+    let mut mismatched = 0usize;
+    let (mut sum_abs, mut max_abs) = (0i64, 0i64);
+    for (&x, &y) in a.data.iter().zip(&b.data) {
+        let d = (x as i64 - y as i64).abs();
+        if d != 0 {
+            mismatched += 1;
+        }
+        sum_abs += d;
+        max_abs = max_abs.max(d);
+    }
+    Fidelity {
+        mismatched,
+        total: a.data.len(),
+        mean_abs: sum_abs as f64 / a.data.len().max(1) as f64,
+        max_abs,
+    }
+}
+
+/// Quantize a grayscale image onto the symmetric i8 grid: `q = px − 128`
+/// (mid-gray is the zero code, implied scale 1/128) — the integer-exact
+/// input conditioning of the demo network.
+pub fn quantize_image(img: &Image) -> TensorI8 {
+    let mut t = TensorI8::new(1, img.height, img.width);
+    for (q, &px) in t.data.iter_mut().zip(&img.data) {
+        *q = (px as i16 - 128) as i8;
+    }
+    t
+}
+
+/// Unfold a CHW tensor into the GEMM operand: row `ci·kh·kw + ky·kw + kx`,
+/// column `oy·ow + ox` holds `x[ci][oy·stride + ky − pad][ox·stride + kx − pad]`
+/// (zero outside the input — the same zero-padding rule as the
+/// edge-detection datapath).
+pub fn im2col(x: &TensorI8, kh: usize, kw: usize, stride: usize, pad: usize) -> MatI8 {
+    assert!(stride >= 1, "stride must be at least 1");
+    let (oh, ow) = out_dims(x.h, x.w, kh, kw, stride, pad);
+    let mut m = MatI8::new(x.c * kh * kw, oh * ow);
+    for ci in 0..x.c {
+        for ky in 0..kh {
+            for kx in 0..kw {
+                let row = (ci * kh + ky) * kw + kx;
+                for oy in 0..oh {
+                    for ox in 0..ow {
+                        let sy = (oy * stride + ky) as isize - pad as isize;
+                        let sx = (ox * stride + kx) as isize - pad as isize;
+                        m.set(row, oy * ow + ox, x.get_padded(ci, sy, sx));
+                    }
+                }
+            }
+        }
+    }
+    m
+}
+
+/// Output spatial dims of a `kh × kw` / `stride` / `pad` convolution
+/// over an `h × w` input (0 when the padded input is smaller than the
+/// kernel).
+pub fn out_dims(h: usize, w: usize, kh: usize, kw: usize, stride: usize, pad: usize) -> (usize, usize) {
+    let span = |n: usize, k: usize| {
+        let padded = n + 2 * pad;
+        if padded < k {
+            0
+        } else {
+            (padded - k) / stride + 1
+        }
+    };
+    (span(h, kh), span(w, kw))
+}
+
+/// A quantized convolution layer: i8 weights, i32 bias (accumulator
+/// scale), fixed-point requantization, optional fused ReLU.
+#[derive(Debug, Clone)]
+pub struct Conv2d {
+    /// `out_c × (in_c·kh·kw)` filter matrix — the GEMM A operand.
+    pub weight: MatI8,
+    /// Per-output-channel bias, added to the raw accumulator.
+    pub bias: Vec<i32>,
+    pub in_c: usize,
+    pub kh: usize,
+    pub kw: usize,
+    pub stride: usize,
+    pub pad: usize,
+    pub requant: Requant,
+    pub relu: bool,
+}
+
+impl Conv2d {
+    pub fn out_c(&self) -> usize {
+        self.weight.rows
+    }
+
+    /// Output spatial dims for an `h × w` input.
+    pub fn out_dims(&self, h: usize, w: usize) -> (usize, usize) {
+        out_dims(h, w, self.kh, self.kw, self.stride, self.pad)
+    }
+
+    /// Collapse raw GEMM accumulators (`out_c × oh·ow`) to the output
+    /// tensor: bias, requantize, optional ReLU.
+    pub fn epilogue(&self, acc: &MatI32, oh: usize, ow: usize) -> TensorI8 {
+        assert_eq!(acc.rows, self.out_c());
+        assert_eq!(acc.cols, oh * ow);
+        let mut out = TensorI8::new(self.out_c(), oh, ow);
+        for co in 0..self.out_c() {
+            let bias = self.bias[co];
+            let arow = &acc.data[co * acc.cols..(co + 1) * acc.cols];
+            let orow = &mut out.data[co * oh * ow..(co + 1) * oh * ow];
+            for (o, &a) in orow.iter_mut().zip(arow) {
+                // Saturate, matching the clamp semantics of the requant:
+                // bias is a caller-supplied i32, so the sum may exceed
+                // i32 even though in-bound GEMM accumulators cannot.
+                let mut v = self.requant.apply(a.saturating_add(bias));
+                if self.relu {
+                    v = v.max(0);
+                }
+                *o = v;
+            }
+        }
+        out
+    }
+
+    /// Reference forward pass: im2col + per-element GEMM (`mul` is the
+    /// multiplier functional model) + epilogue.
+    pub fn forward(&self, x: &TensorI8, mul: &dyn Fn(i8, i8) -> i32) -> TensorI8 {
+        assert_eq!(x.c, self.in_c, "input channel mismatch");
+        let (oh, ow) = self.out_dims(x.h, x.w);
+        let cols = im2col(x, self.kh, self.kw, self.stride, self.pad);
+        self.epilogue(&gemm_naive(&self.weight, &cols, mul), oh, ow)
+    }
+
+    /// Table-backed forward pass: im2col + tiled LUT GEMM + epilogue —
+    /// the production path (and what the coordinator serves blockwise).
+    pub fn forward_tiled(&self, x: &TensorI8, table: &[i32]) -> TensorI8 {
+        assert_eq!(x.c, self.in_c, "input channel mismatch");
+        let (oh, ow) = self.out_dims(x.h, x.w);
+        let cols = im2col(x, self.kh, self.kw, self.stride, self.pad);
+        self.epilogue(&gemm_tiled(&self.weight, &cols, table), oh, ow)
+    }
+}
+
+/// Direct nested-loop convolution — no im2col, no GEMM. The independent
+/// foil `conv2d == im2col + gemm` is property-tested against.
+pub fn conv2d_direct(x: &TensorI8, layer: &Conv2d, mul: &dyn Fn(i8, i8) -> i32) -> TensorI8 {
+    assert_eq!(x.c, layer.in_c, "input channel mismatch");
+    let (oh, ow) = layer.out_dims(x.h, x.w);
+    let mut acc = MatI32::new(layer.out_c(), oh * ow);
+    for co in 0..layer.out_c() {
+        for oy in 0..oh {
+            for ox in 0..ow {
+                let mut s = 0i32;
+                for ci in 0..layer.in_c {
+                    for ky in 0..layer.kh {
+                        for kx in 0..layer.kw {
+                            let sy = (oy * layer.stride + ky) as isize - layer.pad as isize;
+                            let sx = (ox * layer.stride + kx) as isize - layer.pad as isize;
+                            let w = layer.weight.get(co, (ci * layer.kh + ky) * layer.kw + kx);
+                            s += mul(w, x.get_padded(ci, sy, sx));
+                        }
+                    }
+                }
+                acc.data[co * oh * ow + oy * ow + ox] = s;
+            }
+        }
+    }
+    layer.epilogue(&acc, oh, ow)
+}
+
+/// The fixed conv→relu→conv demo network: deterministic i8 weights,
+/// integer-only inference, built once and shared by the `infer` CLI, the
+/// `tables --id nn` accuracy matrix and the test suite.
+///
+/// * layer 1 — `1 → 4` channels, 3×3, stride 1, pad 1, ReLU. The four
+///   filters are classic feature extractors (Sobel-x, Sobel-y, centre
+///   blur, Laplacian ring) so activations carry recognisable structure.
+/// * layer 2 — `4 → 2` channels, 3×3, stride 2, pad 1, no ReLU, weights
+///   drawn deterministically from the crate PRNG in `[-4, 4]`.
+#[derive(Debug, Clone)]
+pub struct Network {
+    pub layers: Vec<Conv2d>,
+}
+
+impl Network {
+    pub fn demo() -> Self {
+        let l1_filters: [[[i8; 3]; 3]; 4] = [
+            [[-1, 0, 1], [-2, 0, 2], [-1, 0, 1]],    // sobel-x
+            [[-1, -2, -1], [0, 0, 0], [1, 2, 1]],    // sobel-y
+            [[1, 1, 1], [1, 2, 1], [1, 1, 1]],       // blur
+            [[-1, -1, -1], [-1, 8, -1], [-1, -1, -1]], // laplacian
+        ];
+        let w1 = MatI8::from_fn(4, 9, |co, i| l1_filters[co][i / 3][i % 3]);
+        let l1 = Conv2d {
+            weight: w1,
+            bias: vec![0, 0, -640, 64],
+            in_c: 1,
+            kh: 3,
+            kw: 3,
+            stride: 1,
+            pad: 1,
+            requant: Requant::from_shift(4),
+            relu: true,
+        };
+        // layer 2: deterministic pseudo-random mixing weights
+        let mut rng = Xoshiro256::seeded(0x5fc_0002);
+        let w2 = MatI8::from_fn(2, 4 * 9, |_, _| rng.range_i64(-4, 4) as i8);
+        let l2 = Conv2d {
+            weight: w2,
+            bias: vec![16, -16],
+            in_c: 4,
+            kh: 3,
+            kw: 3,
+            stride: 2,
+            pad: 1,
+            requant: Requant::from_shift(6),
+            relu: false,
+        };
+        Self { layers: vec![l1, l2] }
+    }
+
+    /// Reference inference: every layer through the per-element GEMM.
+    pub fn run(&self, x: &TensorI8, mul: &dyn Fn(i8, i8) -> i32) -> TensorI8 {
+        self.run_layers(x, mul).pop().expect("network has layers")
+    }
+
+    /// Reference inference keeping every layer's activations (the
+    /// per-layer accuracy matrix reads these).
+    pub fn run_layers(&self, x: &TensorI8, mul: &dyn Fn(i8, i8) -> i32) -> Vec<TensorI8> {
+        let mut outs = Vec::with_capacity(self.layers.len());
+        let mut cur = x.clone();
+        for layer in &self.layers {
+            cur = layer.forward(&cur, mul);
+            outs.push(cur.clone());
+        }
+        outs
+    }
+
+    /// Table-backed inference (tiled LUT GEMM per layer).
+    pub fn run_tiled(&self, x: &TensorI8, table: &[i32]) -> TensorI8 {
+        self.run_tiled_layers(x, table).pop().expect("network has layers")
+    }
+
+    /// Table-backed inference keeping every layer's activations.
+    pub fn run_tiled_layers(&self, x: &TensorI8, table: &[i32]) -> Vec<TensorI8> {
+        let mut outs = Vec::with_capacity(self.layers.len());
+        let mut cur = x.clone();
+        for layer in &self.layers {
+            cur = layer.forward_tiled(&cur, table);
+            outs.push(cur.clone());
+        }
+        outs
+    }
+
+    /// Serve inference through a running coordinator: each layer is one
+    /// [`crate::coordinator::Coordinator::submit_conv2d`] job routed to
+    /// `engine` (None = default), epilogues applied as results return.
+    pub fn run_served(
+        &self,
+        coord: &crate::coordinator::Coordinator,
+        engine: Option<&str>,
+        x: &TensorI8,
+    ) -> crate::Result<TensorI8> {
+        let mut cur = x.clone();
+        for layer in &self.layers {
+            let (oh, ow) = layer.out_dims(cur.h, cur.w);
+            let res = coord.submit_conv2d(&cur, layer, engine)?.wait();
+            cur = layer.epilogue(&res.out, oh, ow);
+        }
+        Ok(cur)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::image::synthetic_scene;
+    use crate::multipliers::{lut::product_table, registry};
+
+    fn exact_mul() -> impl Fn(i8, i8) -> i32 {
+        |a, b| a as i32 * b as i32
+    }
+
+    #[test]
+    fn out_dims_match_the_usual_formula() {
+        assert_eq!(out_dims(8, 8, 3, 3, 1, 1), (8, 8));
+        assert_eq!(out_dims(8, 8, 3, 3, 1, 0), (6, 6));
+        assert_eq!(out_dims(8, 8, 3, 3, 2, 1), (4, 4));
+        assert_eq!(out_dims(1, 1, 3, 3, 1, 0), (0, 0), "kernel larger than input");
+        assert_eq!(out_dims(1, 1, 3, 3, 1, 1), (1, 1));
+    }
+
+    #[test]
+    fn im2col_reproduces_padded_windows() {
+        let mut x = TensorI8::new(2, 3, 4);
+        for (i, v) in x.data.iter_mut().enumerate() {
+            *v = i as i8 - 12;
+        }
+        let m = im2col(&x, 3, 3, 1, 1);
+        assert_eq!(m.rows, 2 * 9);
+        assert_eq!(m.cols, 3 * 4);
+        // spot-check: row (ci=1, ky=0, kx=0), output (oy=0, ox=0) reads
+        // x[1][-1][-1] = 0 (padding); output (1,2) reads x[1][0][1]
+        assert_eq!(m.get(9, 0), 0);
+        assert_eq!(m.get(9, 4 + 2), x.get(1, 0, 1));
+    }
+
+    #[test]
+    fn quantize_image_is_centered_and_exact() {
+        let mut img = Image::new(2, 1);
+        img.data = vec![0, 255];
+        let t = quantize_image(&img);
+        assert_eq!(t.data, vec![-128, 127]);
+        assert_eq!((t.c, t.h, t.w), (1, 1, 2));
+    }
+
+    #[test]
+    fn direct_conv_equals_im2col_gemm_on_the_demo_layers() {
+        let net = Network::demo();
+        let img = synthetic_scene(13, 11, 3);
+        let x = quantize_image(&img);
+        let mul = exact_mul();
+        let l1 = &net.layers[0];
+        assert_eq!(conv2d_direct(&x, l1, &mul), l1.forward(&x, &mul));
+        let mid = l1.forward(&x, &mul);
+        let l2 = &net.layers[1];
+        assert_eq!(conv2d_direct(&mid, l2, &mul), l2.forward(&mid, &mul));
+    }
+
+    #[test]
+    fn tiled_forward_equals_reference_forward() {
+        let exact = registry().build_str("exact@8").unwrap();
+        let lut = product_table(exact.as_ref());
+        let net = Network::demo();
+        let img = synthetic_scene(17, 9, 5);
+        let x = quantize_image(&img);
+        let mul = exact_mul();
+        assert_eq!(net.run_tiled(&x, &lut), net.run(&x, &mul));
+    }
+
+    #[test]
+    fn demo_network_output_is_deterministic_and_alive() {
+        let exact = registry().build_str("exact@8").unwrap();
+        let lut = product_table(exact.as_ref());
+        let net = Network::demo();
+        let x = quantize_image(&synthetic_scene(32, 32, 2024));
+        let y1 = net.run_tiled(&x, &lut);
+        let y2 = net.run_tiled(&x, &lut);
+        assert_eq!(y1, y2);
+        assert_eq!((y1.c, y1.h, y1.w), (2, 16, 16));
+        let nonzero = y1.data.iter().filter(|&&v| v != 0).count();
+        assert!(nonzero > y1.data.len() / 8, "activations are degenerate: {nonzero} nonzero");
+        let distinct: std::collections::BTreeSet<i8> = y1.data.iter().copied().collect();
+        assert!(distinct.len() > 8, "activations carry structure: {} levels", distinct.len());
+    }
+
+    #[test]
+    fn fidelity_counts_and_averages() {
+        let mut a = TensorI8::new(1, 2, 2);
+        let mut b = TensorI8::new(1, 2, 2);
+        a.data = vec![10, -5, 0, 100];
+        b.data = vec![10, -8, 0, 90];
+        let f = fidelity(&a, &b);
+        assert_eq!((f.mismatched, f.total), (2, 4));
+        assert!((f.mismatch_rate() - 0.5).abs() < 1e-12);
+        assert!((f.mean_abs - 13.0 / 4.0).abs() < 1e-12);
+        assert_eq!(f.max_abs, 10);
+        let zero = fidelity(&a, &a);
+        assert_eq!((zero.mismatched, zero.max_abs), (0, 0));
+        assert_eq!(zero.mean_abs, 0.0);
+    }
+
+    #[test]
+    fn relu_floors_layer1_activations() {
+        let exact = registry().build_str("exact@8").unwrap();
+        let lut = product_table(exact.as_ref());
+        let net = Network::demo();
+        let x = quantize_image(&synthetic_scene(16, 16, 7));
+        let mid = net.layers[0].forward_tiled(&x, &lut);
+        assert!(mid.data.iter().all(|&v| v >= 0), "ReLU output must be non-negative");
+    }
+}

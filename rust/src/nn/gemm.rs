@@ -1,0 +1,345 @@
+//! Output-stationary tiled signed GEMM (`i8 × i8 → i32` accumulate)
+//! where every MAC routes through a registry multiplier design.
+//!
+//! The blocking mirrors the systolic-array formulation of *Energy
+//! Efficient Exact and Approximate Systolic Array Architecture for
+//! Matrix Multiplication* (arXiv 2509.00778): C is computed in
+//! [`MC`]-row × [`NR`]-column output-stationary blocks, streaming
+//! [`KC`]-deep operand panels through the MAC array — here the "array"
+//! is a 256×256 per-design product table ([`lut_product`]), so each MAC
+//! is one L1/L2-resident load + add and the *approximate product* of the
+//! design under test is what accumulates, exactly as in hardware.
+//!
+//! Three product sources serve the same GEMM (and are proved equal by
+//! `rust/tests/nn_gemm_equiv.rs`):
+//!
+//! * the **LUT fast path** ([`gemm_tiled`]) — a table generated from the
+//!   design's functional model ([`crate::multipliers::lut::product_table`]);
+//! * the **bitsim-swept table** — the same 65 536-entry layout swept out
+//!   of the design's gate-level netlist by the bitsliced simulator
+//!   ([`crate::multipliers::verify::netlist_multiply_all`]), giving
+//!   netlist-true GEMM results;
+//! * the **per-element reference** ([`gemm_naive`]) — every MAC calls
+//!   the multiplier model directly, no tiling, no tables.
+//!
+//! Overflow: any 8-bit design's product fits 16 signed bits
+//! (`|p| ≤ 2^15`), so a depth-`K` accumulation is bounded by `K · 2^15`;
+//! [`gemm_naive`]/[`gemm_tiled`] assert `K ≤ 2^15` so accumulators can
+//! never leave i32.
+
+use crate::util::prng::Xoshiro256;
+
+/// Maximum GEMM depth (K) the i32 accumulator provably cannot overflow
+/// at: `2^15 · 2^15 = 2^30 < i32::MAX`.
+pub const MAX_GEMM_DEPTH: usize = 1 << 15;
+
+/// Rows of C per output-stationary block (also the coordinator's
+/// GEMM-task row granularity).
+pub const MC: usize = 32;
+/// Depth (K) panel streamed per block iteration.
+pub const KC: usize = 64;
+/// C columns per register tile.
+pub const NR: usize = 8;
+/// C columns per coordinator GEMM task (a multiple of [`NR`]). Served
+/// jobs split along *both* C dimensions: convolution GEMMs have few
+/// rows (A = the weight matrix, `out_c` rows) but thousands of columns
+/// (im2col output pixels), so the column split is what actually spreads
+/// a conv layer across the worker fleet.
+pub const NC: usize = 256;
+
+/// Row-major signed 8-bit matrix — the quantized operand type.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct MatI8 {
+    pub rows: usize,
+    pub cols: usize,
+    pub data: Vec<i8>,
+}
+
+impl MatI8 {
+    pub fn new(rows: usize, cols: usize) -> Self {
+        Self { rows, cols, data: vec![0; rows * cols] }
+    }
+
+    pub fn from_fn(rows: usize, cols: usize, mut f: impl FnMut(usize, usize) -> i8) -> Self {
+        let mut m = Self::new(rows, cols);
+        for r in 0..rows {
+            for c in 0..cols {
+                m.data[r * cols + c] = f(r, c);
+            }
+        }
+        m
+    }
+
+    /// Uniform random entries over the full i8 range (test workloads).
+    pub fn random(rows: usize, cols: usize, rng: &mut Xoshiro256) -> Self {
+        Self::from_fn(rows, cols, |_, _| rng.next_i8())
+    }
+
+    #[inline]
+    pub fn get(&self, r: usize, c: usize) -> i8 {
+        self.data[r * self.cols + c]
+    }
+
+    #[inline]
+    pub fn set(&mut self, r: usize, c: usize, v: i8) {
+        self.data[r * self.cols + c] = v;
+    }
+}
+
+/// Row-major i32 accumulator matrix — the GEMM output type.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct MatI32 {
+    pub rows: usize,
+    pub cols: usize,
+    pub data: Vec<i32>,
+}
+
+impl MatI32 {
+    pub fn new(rows: usize, cols: usize) -> Self {
+        Self { rows, cols, data: vec![0; rows * cols] }
+    }
+
+    #[inline]
+    pub fn get(&self, r: usize, c: usize) -> i32 {
+        self.data[r * self.cols + c]
+    }
+}
+
+/// One product out of a 256×256 table (index `(a_byte << 8) | b_byte` —
+/// the [`crate::multipliers::lut::product_table`] layout, which
+/// [`crate::multipliers::verify::netlist_multiply_all`] shares at N=8).
+#[inline]
+pub fn lut_product(table: &[i32], a: i8, b: i8) -> i32 {
+    table[((a as u8 as usize) << 8) | (b as u8 as usize)]
+}
+
+fn check_shapes(a: &MatI8, b: &MatI8) {
+    assert_eq!(
+        a.cols, b.rows,
+        "GEMM shape mismatch: {}x{} × {}x{}",
+        a.rows, a.cols, b.rows, b.cols
+    );
+    assert!(
+        a.cols <= MAX_GEMM_DEPTH,
+        "GEMM depth {} exceeds the i32-safe bound {MAX_GEMM_DEPTH}",
+        a.cols
+    );
+}
+
+/// Reference GEMM: plain triple loop, every MAC through `mul` (the
+/// multiplier functional model on the per-element path). No tiling —
+/// this is what the tiled paths are proved equal to.
+pub fn gemm_naive(a: &MatI8, b: &MatI8, mul: &dyn Fn(i8, i8) -> i32) -> MatI32 {
+    check_shapes(a, b);
+    let mut c = MatI32::new(a.rows, b.cols);
+    for i in 0..a.rows {
+        for k in 0..a.cols {
+            let av = a.get(i, k);
+            let brow = &b.data[k * b.cols..(k + 1) * b.cols];
+            let crow = &mut c.data[i * b.cols..(i + 1) * b.cols];
+            for (cv, &bv) in crow.iter_mut().zip(brow) {
+                *cv += mul(av, bv);
+            }
+        }
+    }
+    c
+}
+
+/// Compute the `rows × cols` block of C at `(row0, col0)` into `out`
+/// (row-major, `rows × cols`), with the table-backed fast path.
+///
+/// This is the unit of work the coordinator dispatches per GEMM task;
+/// [`gemm_tiled`] is exactly a loop over these blocks, so the served and
+/// direct paths share one kernel. Inside the block: output-stationary
+/// [`NR`]-column tiles, [`KC`]-deep panels, and a per-`a`-operand table
+/// row slice so the inner loop is one byte-indexed load + add per MAC.
+pub fn gemm_block_lut(
+    a: &MatI8,
+    b: &MatI8,
+    table: &[i32],
+    row0: usize,
+    rows: usize,
+    col0: usize,
+    cols: usize,
+    out: &mut [i32],
+) {
+    check_shapes(a, b);
+    assert_eq!(table.len(), 65536);
+    let (k, n) = (a.cols, b.cols);
+    assert!(row0 + rows <= a.rows && col0 + cols <= n);
+    assert_eq!(out.len(), rows * cols);
+    for k0 in (0..k).step_by(KC) {
+        let kc = KC.min(k - k0);
+        for j0 in (col0..col0 + cols).step_by(NR) {
+            let nr = NR.min(col0 + cols - j0);
+            for i in 0..rows {
+                let arow = &a.data[(row0 + i) * k..(row0 + i) * k + k];
+                let obase = i * cols + (j0 - col0);
+                let orow = &mut out[obase..obase + nr];
+                for (kk, &av) in arow.iter().enumerate().skip(k0).take(kc) {
+                    let base = (av as u8 as usize) << 8;
+                    let atab = &table[base..base + 256];
+                    let brow = &b.data[kk * n + j0..kk * n + j0 + nr];
+                    for (o, &bv) in orow.iter_mut().zip(brow) {
+                        *o += atab[bv as u8 as usize];
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Per-element form of [`gemm_block_lut`]: the same block through a
+/// product function instead of a table (the coordinator's model-backed
+/// reference engines use this).
+pub fn gemm_block_mul(
+    a: &MatI8,
+    b: &MatI8,
+    mul: &dyn Fn(i8, i8) -> i32,
+    row0: usize,
+    rows: usize,
+    col0: usize,
+    cols: usize,
+    out: &mut [i32],
+) {
+    check_shapes(a, b);
+    let (k, n) = (a.cols, b.cols);
+    assert!(row0 + rows <= a.rows && col0 + cols <= n);
+    assert_eq!(out.len(), rows * cols);
+    for i in 0..rows {
+        for kk in 0..k {
+            let av = a.get(row0 + i, kk);
+            let brow = &b.data[kk * n + col0..kk * n + col0 + cols];
+            let orow = &mut out[i * cols..(i + 1) * cols];
+            for (o, &bv) in orow.iter_mut().zip(brow) {
+                *o += mul(av, bv);
+            }
+        }
+    }
+}
+
+/// Tiled table-backed GEMM: `C = A × B` with every product read from the
+/// design's 256×256 table, blocked [`MC`] × [`KC`] × [`NR`].
+pub fn gemm_tiled(a: &MatI8, b: &MatI8, table: &[i32]) -> MatI32 {
+    check_shapes(a, b);
+    let mut c = MatI32::new(a.rows, b.cols);
+    let n = b.cols;
+    let mut row0 = 0;
+    while row0 < a.rows {
+        let rows = MC.min(a.rows - row0);
+        gemm_block_lut(a, b, table, row0, rows, 0, n, &mut c.data[row0 * n..(row0 + rows) * n]);
+        row0 += rows;
+    }
+    c
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::multipliers::{lut::product_table, registry};
+
+    fn exact_lut() -> Vec<i32> {
+        product_table(registry().build_str("exact@8").unwrap().as_ref())
+    }
+
+    #[test]
+    fn tiny_gemm_by_hand() {
+        // [1 2; 3 4] × [5 6; 7 8] = [19 22; 43 50]
+        let a = MatI8::from_fn(2, 2, |r, c| [[1, 2], [3, 4]][r][c]);
+        let b = MatI8::from_fn(2, 2, |r, c| [[5, 6], [7, 8]][r][c]);
+        let c = gemm_naive(&a, &b, &|x, y| x as i32 * y as i32);
+        assert_eq!(c.data, vec![19, 22, 43, 50]);
+        let lut = exact_lut();
+        assert_eq!(gemm_tiled(&a, &b, &lut).data, c.data);
+    }
+
+    #[test]
+    fn tiled_equals_naive_on_shapes_straddling_every_block_edge() {
+        let lut = exact_lut();
+        let mut rng = Xoshiro256::seeded(41);
+        for &(m, k, n) in &[
+            (1usize, 1usize, 1usize),
+            (MC, KC, NR),
+            (MC + 1, KC + 1, NR + 1),
+            (MC - 1, 3, NR - 1),
+            (2 * MC + 5, KC + 17, 2 * NR + 3),
+        ] {
+            let a = MatI8::random(m, k, &mut rng);
+            let b = MatI8::random(k, n, &mut rng);
+            let want = gemm_naive(&a, &b, &|x, y| lut_product(&lut, x, y));
+            assert_eq!(gemm_tiled(&a, &b, &lut), want, "{m}x{k}x{n}");
+        }
+    }
+
+    /// 2-D block-by-block assembly (the coordinator's dispatch shape,
+    /// including off-origin column blocks) reproduces the whole product,
+    /// through both the table and per-element block kernels.
+    #[test]
+    fn blocks_cover_the_full_product() {
+        let lut = exact_lut();
+        let mut rng = Xoshiro256::seeded(5);
+        let a = MatI8::random(MC + 7, 19, &mut rng);
+        let b = MatI8::random(19, 2 * NR + 3, &mut rng);
+        let whole = gemm_tiled(&a, &b, &lut);
+        let n = b.cols;
+        let mut out = vec![0i32; a.rows * n];
+        let col_step = NR + 1; // deliberately not a tile multiple
+        let mut row0 = 0;
+        while row0 < a.rows {
+            let rows = MC.min(a.rows - row0);
+            let mut col0 = 0;
+            while col0 < n {
+                let cols = col_step.min(n - col0);
+                let mut block = vec![0i32; rows * cols];
+                gemm_block_lut(&a, &b, &lut, row0, rows, col0, cols, &mut block);
+                for i in 0..rows {
+                    out[(row0 + i) * n + col0..(row0 + i) * n + col0 + cols]
+                        .copy_from_slice(&block[i * cols..(i + 1) * cols]);
+                }
+                col0 += cols;
+            }
+            row0 += rows;
+        }
+        assert_eq!(out, whole.data);
+        // the per-element block form agrees on an interior sub-block
+        let mut block = vec![0i32; 2 * 5];
+        gemm_block_mul(&a, &b, &|x, y| lut_product(&lut, x, y), 3, 2, 4, 5, &mut block);
+        for i in 0..2 {
+            assert_eq!(
+                block[i * 5..(i + 1) * 5],
+                whole.data[(3 + i) * n + 4..(3 + i) * n + 9]
+            );
+        }
+    }
+
+    #[test]
+    fn degenerate_shapes_are_served() {
+        let lut = exact_lut();
+        // K = 0: all-zero accumulators
+        let a = MatI8::new(3, 0);
+        let b = MatI8::new(0, 4);
+        assert_eq!(gemm_tiled(&a, &b, &lut).data, vec![0; 12]);
+        // N = 0 and M = 0: empty outputs
+        assert_eq!(gemm_tiled(&MatI8::new(3, 2), &MatI8::new(2, 0), &lut).data.len(), 0);
+        assert_eq!(gemm_tiled(&MatI8::new(0, 2), &MatI8::new(2, 3), &lut).data.len(), 0);
+    }
+
+    #[test]
+    #[should_panic(expected = "shape mismatch")]
+    fn mismatched_inner_dims_panic() {
+        let lut = exact_lut();
+        gemm_tiled(&MatI8::new(2, 3), &MatI8::new(4, 2), &lut);
+    }
+
+    /// Worst-case accumulation at the documented depth bound stays in
+    /// i32: K entries of (-128)·(-128) = 16384 each.
+    #[test]
+    fn accumulator_bound_holds_at_max_magnitude() {
+        let lut = exact_lut();
+        let k = 4096; // large depth, well under MAX_GEMM_DEPTH
+        let a = MatI8::from_fn(1, k, |_, _| -128);
+        let b = MatI8::from_fn(k, 1, |_, _| -128);
+        let c = gemm_tiled(&a, &b, &lut);
+        assert_eq!(c.data[0], (k as i32) * 16384);
+    }
+}

@@ -1,0 +1,42 @@
+//! Approximate quantized inference — the "nn" workload layer.
+//!
+//! The source paper's headline application is the approximate signed
+//! multiplier *integrated into a custom convolution layer* for
+//! machine-learning workloads; related work evaluates the same
+//! multiplier family inside DNN layers (arXiv 2509.00764) with the
+//! tiled-GEMM formulation of systolic arrays (arXiv 2509.00778). This
+//! module opens that workload on top of the existing registry/serving
+//! stack:
+//!
+//! * [`quant`] — symmetric i8 quantization: scale/zero-point-0 params,
+//!   the rounding right-shift, and fixed-point [`Requant`] back to i8.
+//! * [`gemm`] — output-stationary tiled signed GEMM (`i8 × i8 → i32`)
+//!   blocked [`gemm::MC`] × [`gemm::KC`] × [`gemm::NR`], where every MAC
+//!   routes through a registry design: a 256×256 product-LUT fast path,
+//!   a bitsim-swept (netlist-true) table path, and a per-element
+//!   functional-model reference — proved equal in
+//!   `rust/tests/nn_gemm_equiv.rs`.
+//! * [`conv2d`] — `Conv2d` (arbitrary channels/stride/padding) lowered
+//!   via [`conv2d::im2col`] onto that GEMM, ReLU + requantize, and the
+//!   fixed conv→relu→conv [`Network`] the `sfcmul infer` CLI runs on
+//!   `synthetic_scene` inputs.
+//!
+//! Serving: the coordinator accepts GEMM/conv2d jobs next to image
+//! tiles ([`crate::coordinator::Coordinator::submit_gemm`] /
+//! [`crate::coordinator::Coordinator::submit_conv2d`]); engines opt in
+//! via [`crate::coordinator::engine::TileEngine::nn_backend`], and
+//! `tables --id nn` prints the design × layer accuracy matrix.
+
+pub mod conv2d;
+pub mod gemm;
+pub mod quant;
+
+pub use conv2d::{
+    conv2d_direct, fidelity, im2col, out_dims, quantize_image, Conv2d, Fidelity, Network,
+    TensorI8,
+};
+pub use gemm::{
+    gemm_block_lut, gemm_block_mul, gemm_naive, gemm_tiled, lut_product, MatI32, MatI8, KC,
+    MAX_GEMM_DEPTH, MC, NC, NR,
+};
+pub use quant::{quantize_symmetric, rounding_shift, QuantParams, Requant};

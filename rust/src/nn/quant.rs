@@ -1,0 +1,167 @@
+//! Symmetric i8 quantization — the fixed-point numerics of the
+//! quantized-inference datapath.
+//!
+//! The scheme is the standard *symmetric per-tensor* one used by the
+//! DNN-with-approximate-multiplier literature (e.g. arXiv 2509.00764):
+//! a real value `x` is represented as `q * scale` with `q` a signed
+//! 8-bit integer and zero-point fixed at 0, so the multiplier under test
+//! sees plain signed i8×i8 products and the sign-focused compressor path
+//! is exercised exactly as in the edge-detection workload. Accumulators
+//! are i32 (scale `s_a · s_b`); [`Requant`] folds the scale ratio back
+//! to the next layer's i8 domain as an integer multiply plus a rounding
+//! right-shift — no floating point anywhere at inference time.
+
+/// Symmetric quantization parameters: `value ≈ q * scale`, zero-point 0.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct QuantParams {
+    pub scale: f32,
+}
+
+impl QuantParams {
+    /// Parameters covering `[-max_abs, max_abs]` on the symmetric i8
+    /// grid `-127..=127` (the -128 code is unused, keeping the grid
+    /// symmetric so negation is exact).
+    pub fn from_max_abs(max_abs: f32) -> Self {
+        let bound = if max_abs > 0.0 { max_abs } else { 1.0 };
+        Self { scale: bound / 127.0 }
+    }
+
+    /// Quantize one value (round half away from zero, clamp to ±127).
+    pub fn quantize(&self, x: f32) -> i8 {
+        let q = (x / self.scale).round();
+        q.clamp(-127.0, 127.0) as i8
+    }
+
+    /// Real value of a quantized code.
+    pub fn dequantize(&self, q: i8) -> f32 {
+        q as f32 * self.scale
+    }
+}
+
+/// Quantize a tensor symmetrically, deriving the scale from its own
+/// max-|x| (the calibration rule used for the fixed demo weights).
+pub fn quantize_symmetric(xs: &[f32]) -> (Vec<i8>, QuantParams) {
+    let max_abs = xs.iter().fold(0f32, |m, &x| m.max(x.abs()));
+    let p = QuantParams::from_max_abs(max_abs);
+    (xs.iter().map(|&x| p.quantize(x)).collect(), p)
+}
+
+/// Rounding arithmetic right shift: `round(v / 2^s)` with ties toward
+/// +∞ (`(v + 2^(s-1)) >> s`), the hardware-friendly rounding used by
+/// every requantization step. `s == 0` is the identity.
+#[inline]
+pub fn rounding_shift(v: i64, s: u32) -> i64 {
+    if s == 0 {
+        v
+    } else {
+        (v + (1i64 << (s - 1))) >> s
+    }
+}
+
+/// Fixed-point requantization: maps an i32 accumulator to an i8
+/// activation as `clamp(round(acc * mult / 2^shift))` — the integer-only
+/// encoding of the real scale ratio `s_in / s_out`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Requant {
+    /// Positive integer multiplier (≈ 15-bit mantissa of the ratio).
+    pub mult: i32,
+    /// Rounding right-shift applied after the multiply.
+    pub shift: u32,
+}
+
+impl Requant {
+    /// A pure power-of-two requantization (`mult == 1`) — what the fixed
+    /// demo network uses, so its arithmetic is exactly reproducible by
+    /// eye.
+    pub const fn from_shift(shift: u32) -> Self {
+        Self { mult: 1, shift }
+    }
+
+    /// Encode a positive real ratio as mult/2^shift with a 15-bit
+    /// mantissa (`mult` in `[2^14, 2^15)` whenever the ratio allows a
+    /// non-negative shift; very large ratios saturate at `shift == 0`).
+    pub fn from_ratio(ratio: f64) -> Self {
+        assert!(ratio > 0.0 && ratio.is_finite(), "requant ratio must be positive");
+        let mut mult = ratio;
+        let mut shift = 0u32;
+        while mult < (1 << 14) as f64 && shift < 62 {
+            mult *= 2.0;
+            shift += 1;
+        }
+        while mult >= (1 << 15) as f64 && shift > 0 {
+            mult /= 2.0;
+            shift -= 1;
+        }
+        Self { mult: mult.round().min(i32::MAX as f64) as i32, shift }
+    }
+
+    /// Requantize one accumulator to i8.
+    #[inline]
+    pub fn apply(&self, acc: i32) -> i8 {
+        rounding_shift(acc as i64 * self.mult as i64, self.shift).clamp(-128, 127) as i8
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn quantize_roundtrips_grid_points() {
+        let p = QuantParams::from_max_abs(1.0);
+        for q in [-127i8, -64, -1, 0, 1, 64, 127] {
+            assert_eq!(p.quantize(p.dequantize(q)), q, "{q}");
+        }
+        // symmetric grid: negation is exact
+        assert_eq!(p.quantize(-1.0), -127);
+        assert_eq!(p.quantize(1.0), 127);
+        // out-of-range clamps, never touches -128
+        assert_eq!(p.quantize(-100.0), -127);
+    }
+
+    #[test]
+    fn quantize_symmetric_calibrates_to_max_abs() {
+        let (q, p) = quantize_symmetric(&[0.5, -2.0, 1.0]);
+        assert_eq!(q[1], -127, "max-|x| element maps to the grid edge");
+        assert!((p.dequantize(q[2]) - 1.0).abs() < 0.02);
+        // all-zero input stays finite
+        let (q0, p0) = quantize_symmetric(&[0.0, 0.0]);
+        assert_eq!(q0, vec![0, 0]);
+        assert!(p0.scale > 0.0);
+    }
+
+    #[test]
+    fn rounding_shift_rounds_half_up() {
+        assert_eq!(rounding_shift(5, 0), 5);
+        assert_eq!(rounding_shift(5, 1), 3); // 2.5 → 3
+        assert_eq!(rounding_shift(-5, 1), -2); // -2.5 → -2 (toward +∞)
+        assert_eq!(rounding_shift(4, 2), 1);
+        assert_eq!(rounding_shift(6, 2), 2); // 1.5 → 2
+        assert_eq!(rounding_shift(-1024, 4), -64);
+    }
+
+    #[test]
+    fn requant_shift_form_divides_exactly() {
+        let r = Requant::from_shift(4);
+        assert_eq!(r.apply(160), 10);
+        assert_eq!(r.apply(-160), -10);
+        assert_eq!(r.apply(1 << 20), 127, "saturates high");
+        assert_eq!(r.apply(-(1 << 20)), -128, "saturates low");
+    }
+
+    #[test]
+    fn requant_ratio_tracks_real_arithmetic() {
+        for ratio in [0.003, 0.06, 0.5, 1.0, 3.7] {
+            let r = Requant::from_ratio(ratio);
+            for acc in [-12_000i32, -100, -1, 0, 1, 99, 12_000] {
+                let want = (acc as f64 * ratio).round().clamp(-128.0, 127.0);
+                let got = r.apply(acc) as f64;
+                // 15-bit mantissa: within 1 code of the real rounding
+                assert!(
+                    (want - got).abs() <= 1.0,
+                    "ratio {ratio} acc {acc}: want {want} got {got}"
+                );
+            }
+        }
+    }
+}

@@ -3,8 +3,9 @@
 //! Every table and figure of the paper's evaluation has a generator here
 //! that prints the same rows/series the paper reports and returns the
 //! data for tests/benches, plus the beyond-paper [`opmatrix`] (design ×
-//! operator PSNR). `sfcmul tables --id <t1|t2|t3|t4|t5|f9|f10|ops|all>`
-//! is the CLI entry.
+//! operator PSNR) and [`nnmatrix`] (design × quantized-inference layer
+//! accuracy). `sfcmul tables --id
+//! <t1|t2|t3|t4|t5|f9|f10|ops|nn|all>` is the CLI entry.
 
 pub mod t1;
 pub mod t2t3;
@@ -13,6 +14,7 @@ pub mod t5;
 pub mod f9;
 pub mod f10;
 pub mod ablation;
+pub mod nnmatrix;
 pub mod opmatrix;
 pub mod sweep;
 
@@ -29,17 +31,18 @@ pub fn generate(id: &str, seed: u64, out_dir: &std::path::Path) -> crate::Result
         "f9" => f9::render(seed, out_dir),
         "f10" => Ok(f10::render(seed)),
         "ops" => Ok(opmatrix::render(seed)),
+        "nn" => Ok(nnmatrix::render(seed)),
         "sweep" => Ok(sweep::render()),
         "all" => {
             let mut s = String::new();
-            for id in ["t1", "t2", "t3", "t4", "t5", "f9", "f10", "ops"] {
+            for id in ["t1", "t2", "t3", "t4", "t5", "f9", "f10", "ops", "nn"] {
                 s.push_str(&generate(id, seed, out_dir)?);
                 s.push('\n');
             }
             Ok(s)
         }
         other => Err(crate::util::error::Error::msg(format!(
-            "unknown table id {other:?} (t1..t5, f9, f10, ops, sweep, all)"
+            "unknown table id {other:?} (t1..t5, f9, f10, ops, nn, sweep, all)"
         ))),
     }
 }

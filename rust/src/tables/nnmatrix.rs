@@ -1,0 +1,142 @@
+//! Quantized-inference accuracy matrix (`sfcmul tables --id nn`):
+//! every registered design against the exact multiplier, measured on
+//! (a) raw tiled-GEMM outputs and (b) the activations of the fixed
+//! conv→relu→conv demo network ([`crate::nn::Network::demo`]).
+//!
+//! Columns per design:
+//!
+//! * **GEMM MED** — mean |Δ| of `C = A × B` accumulators vs the exact
+//!   product, on a fixed seeded i8 workload (the raw approximation
+//!   error before any requantization absorbs it);
+//! * **GEMM NMED** — MED normalised by the accumulator bound
+//!   `K · 2^14` (max |exact product| per MAC × depth), mirroring the
+//!   Eq.-(8) normalisation of the multiplier tables;
+//! * **per-layer mismatch** — fraction of i8 activations differing
+//!   from the exact network after each layer (requantization and ReLU
+//!   mask small accumulator errors; what survives them is what a
+//!   deployed network would actually see);
+//! * **final mean |Δ|** — mean absolute final-activation difference in
+//!   i8 codes.
+
+use crate::image::synthetic_scene;
+use crate::multipliers::{lut::product_table, registry, DesignSpec};
+use crate::nn::{fidelity, gemm_tiled, quantize_image, MatI8, Network};
+use crate::util::prng::Xoshiro256;
+
+/// One design's row of the matrix.
+pub struct NnRow {
+    pub spec: DesignSpec,
+    pub gemm_med: f64,
+    pub gemm_nmed: f64,
+    /// Mismatch fraction per network layer (demo net: 2 layers).
+    pub layer_mismatch: Vec<f64>,
+    pub final_mean_abs: f64,
+}
+
+/// Compute the matrix rows (Table-5 design order).
+pub fn rows(seed: u64) -> Vec<NnRow> {
+    let exact = registry().build_str("exact@8").expect("exact design");
+    let exact_lut = product_table(exact.as_ref());
+    // Fixed GEMM workload: seeded i8 matrices, depth 64.
+    let mut rng = Xoshiro256::seeded(seed ^ 0xD00D_F00D);
+    let a = MatI8::random(48, 64, &mut rng);
+    let b = MatI8::random(64, 40, &mut rng);
+    let c_exact = gemm_tiled(&a, &b, &exact_lut);
+    let nmed_bound = (a.cols as f64) * 16384.0;
+    // Fixed inference workload: the demo network on a synthetic scene.
+    let net = Network::demo();
+    let x = quantize_image(&synthetic_scene(64, 64, seed));
+    let exact_layers = net.run_tiled_layers(&x, &exact_lut);
+    registry()
+        .specs(8)
+        .into_iter()
+        .map(|spec| {
+            let model = registry().build(&spec).expect("registered design builds");
+            let lut = product_table(model.as_ref());
+            let c = gemm_tiled(&a, &b, &lut);
+            let med = c
+                .data
+                .iter()
+                .zip(&c_exact.data)
+                .map(|(&x, &y)| (x as i64 - y as i64).abs() as f64)
+                .sum::<f64>()
+                / c.data.len() as f64;
+            let layers = net.run_tiled_layers(&x, &lut);
+            let per_layer: Vec<_> = layers
+                .iter()
+                .zip(&exact_layers)
+                .map(|(l, e)| fidelity(l, e))
+                .collect();
+            let layer_mismatch: Vec<f64> =
+                per_layer.iter().map(|f| f.mismatch_rate()).collect();
+            let final_mean_abs =
+                per_layer.last().expect("network has layers").mean_abs;
+            NnRow {
+                spec,
+                gemm_med: med,
+                gemm_nmed: med / nmed_bound,
+                layer_mismatch,
+                final_mean_abs,
+            }
+        })
+        .collect()
+}
+
+pub fn render(seed: u64) -> String {
+    let mut s = String::new();
+    s.push_str(
+        "== Quantized-inference accuracy matrix: design vs exact on the i8 GEMM/conv \
+         datapath ==\n",
+    );
+    s.push_str(&format!(
+        "  {:<17} {:>10} {:>10} {:>10} {:>10} {:>11}\n",
+        "design", "gemm MED", "gemm NMED", "conv1 mis", "final mis", "final |d|"
+    ));
+    for r in rows(seed) {
+        s.push_str(&format!(
+            "  {:<17} {:>10.2} {:>9.5}% {:>9.2}% {:>9.2}% {:>11.3}\n",
+            r.spec.display_name(),
+            r.gemm_med,
+            r.gemm_nmed * 100.0,
+            r.layer_mismatch.first().copied().unwrap_or(0.0) * 100.0,
+            r.layer_mismatch.last().copied().unwrap_or(0.0) * 100.0,
+            r.final_mean_abs,
+        ));
+    }
+    s.push_str(
+        "  (GEMM: 48x64 x 64x40 seeded i8 workload, MED in raw i32 accumulator codes, \
+         NMED vs the K*2^14 bound;\n   network: conv(1->4)+relu -> conv(4->2) on a 64x64 \
+         synthetic scene — regenerate with `sfcmul tables --id nn`)\n",
+    );
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Shape and sanity: one row per registered design, two layer
+    /// columns, the exact row identically zero everywhere, approximate
+    /// rows with genuine (finite, nonzero) GEMM error.
+    #[test]
+    fn matrix_covers_every_design_with_exact_zero_row() {
+        let rows = rows(11);
+        assert_eq!(rows.len(), registry().specs(8).len());
+        for r in &rows {
+            assert_eq!(r.layer_mismatch.len(), 2, "{}", r.spec);
+            if r.spec.compressors.key() == "exact" {
+                assert_eq!(r.gemm_med, 0.0, "exact GEMM is lossless");
+                assert!(r.layer_mismatch.iter().all(|&m| m == 0.0));
+                assert_eq!(r.final_mean_abs, 0.0);
+            } else {
+                assert!(r.gemm_med > 0.0, "{}: approximate design must err", r.spec);
+                assert!(r.gemm_nmed < 0.2, "{}: NMED {} out of range", r.spec, r.gemm_nmed);
+                assert!(
+                    r.layer_mismatch.iter().all(|&m| (0.0..=1.0).contains(&m)),
+                    "{}: mismatch out of [0,1]",
+                    r.spec
+                );
+            }
+        }
+    }
+}

@@ -1,0 +1,166 @@
+//! Quantized-inference equivalence suite — the acceptance gate of the
+//! nn subsystem:
+//!
+//! 1. **Exhaustive** i8×i8 coverage for *every registered design*: a
+//!    256×1 × 1×256 outer-product GEMM touches all 65 536 operand pairs
+//!    with no accumulation, so `tiled-LUT == bitsim-swept table ==
+//!    per-element functional model` is a full multiplier equivalence
+//!    proof *through the GEMM path* (not just per-multiplier).
+//! 2. **Ragged shapes**: tiled vs naive on shapes straddling every
+//!    MC/KC/NR block boundary, per design.
+//! 3. **conv2d == im2col + gemm**: property-tested against an
+//!    independent direct nested-loop convolution on random
+//!    channels/shapes/strides/paddings with the exact multiplier.
+//! 4. The served path: coordinator GEMM jobs equal the direct product
+//!    on lut, model and bitsim backends (`rust/src/coordinator/service.rs`
+//!    holds the finer-grained serving tests).
+
+use sfcmul::multipliers::verify::netlist_multiply_all;
+use sfcmul::multipliers::{lut::product_table, registry, MultiplierModel};
+use sfcmul::nn::{
+    conv2d_direct, gemm_naive, gemm_tiled, lut_product, quantize_image, Conv2d, MatI8, Network,
+    Requant, TensorI8, KC, MC, NR,
+};
+use sfcmul::util::prng::Xoshiro256;
+
+/// All 256 i8 bit patterns, byte order (the LUT index order).
+fn every_i8_column() -> MatI8 {
+    MatI8::from_fn(256, 1, |r, _| r as u8 as i8)
+}
+
+fn every_i8_row() -> MatI8 {
+    MatI8::from_fn(1, 256, |_, c| c as u8 as i8)
+}
+
+/// The acceptance criterion: for every registry design, the LUT fast
+/// path, the bitsim-swept (netlist-true) table path and the per-element
+/// model reference produce identical GEMM outputs over the *entire*
+/// operand space.
+#[test]
+fn exhaustive_outer_product_lut_equals_bitsim_equals_model() {
+    let a = every_i8_column();
+    let b = every_i8_row();
+    for spec in registry().specs(8) {
+        let model = registry().build(&spec).unwrap_or_else(|e| panic!("{spec}: {e}"));
+        let lut = product_table(model.as_ref());
+        let bitsim_table: Vec<i32> = netlist_multiply_all(&model.build_netlist(), 8)
+            .into_iter()
+            .map(|p| p as i32)
+            .collect();
+        let via_lut = gemm_tiled(&a, &b, &lut);
+        let via_bitsim = gemm_tiled(&a, &b, &bitsim_table);
+        let via_model =
+            gemm_naive(&a, &b, &|x, y| model.multiply(x as i64, y as i64) as i32);
+        assert_eq!(via_lut, via_model, "{spec}: lut vs per-element model");
+        assert_eq!(via_lut, via_bitsim, "{spec}: lut vs bitsim-swept netlist table");
+        // The outer product covers each pair exactly once: C[i][j] is
+        // literally the product of bit patterns i and j.
+        assert_eq!(via_lut.get(3, 251), lut_product(&lut, 3, 251u8 as i8), "{spec}");
+    }
+}
+
+/// Tiled == naive on ragged shapes (1×K×1 and everything straddling the
+/// MC/KC/NR tile boundaries), for every registered design.
+#[test]
+fn ragged_shapes_tiled_equals_naive_for_every_design() {
+    let shapes: &[(usize, usize, usize)] = &[
+        (1, 1, 1),
+        (1, 7, 1),
+        (1, KC + 3, 1),
+        (3, 1, 5),
+        (MC, KC, NR),
+        (MC + 1, KC - 1, NR + 1),
+        (2 * MC + 5, 17, NR - 1),
+        (MC - 1, KC + 17, 2 * NR + 3),
+    ];
+    for spec in registry().specs(8) {
+        let model = registry().build(&spec).unwrap_or_else(|e| panic!("{spec}: {e}"));
+        let lut = product_table(model.as_ref());
+        let mut rng = Xoshiro256::seeded(0xA11C_E5 ^ spec.to_string().len() as u64);
+        for &(m, k, n) in shapes {
+            let a = MatI8::random(m, k, &mut rng);
+            let b = MatI8::random(k, n, &mut rng);
+            let tiled = gemm_tiled(&a, &b, &lut);
+            let naive_lut = gemm_naive(&a, &b, &|x, y| lut_product(&lut, x, y));
+            let naive_model =
+                gemm_naive(&a, &b, &|x, y| model.multiply(x as i64, y as i64) as i32);
+            assert_eq!(tiled, naive_lut, "{spec} {m}x{k}x{n}: tiled vs naive lut");
+            assert_eq!(tiled, naive_model, "{spec} {m}x{k}x{n}: tiled vs naive model");
+        }
+    }
+}
+
+/// `conv2d == im2col + gemm` on random shapes/strides/paddings with the
+/// exact multiplier: the direct nested-loop convolution is the
+/// independent foil (it never builds the im2col matrix).
+#[test]
+fn conv2d_equals_im2col_gemm_on_random_geometries() {
+    let exact = registry().build_str("exact@8").unwrap();
+    let lut = product_table(exact.as_ref());
+    let mul = |a: i8, b: i8| a as i32 * b as i32;
+    let mut rng = Xoshiro256::seeded(0xC0472D);
+    for case in 0..60 {
+        let in_c = 1 + rng.below(3) as usize;
+        let out_c = 1 + rng.below(3) as usize;
+        let h = 1 + rng.below(12) as usize;
+        let w = 1 + rng.below(12) as usize;
+        let kh = 1 + rng.below(3) as usize;
+        let kw = 1 + rng.below(3) as usize;
+        let stride = 1 + rng.below(3) as usize;
+        let pad = rng.below(3) as usize;
+        let layer = Conv2d {
+            weight: MatI8::random(out_c, in_c * kh * kw, &mut rng),
+            bias: (0..out_c).map(|_| rng.range_i64(-64, 64) as i32).collect(),
+            in_c,
+            kh,
+            kw,
+            stride,
+            pad,
+            requant: Requant::from_shift(rng.below(5) as u32),
+            relu: rng.chance(0.5),
+        };
+        let mut x = TensorI8::new(in_c, h, w);
+        for v in x.data.iter_mut() {
+            *v = rng.next_i8();
+        }
+        let direct = conv2d_direct(&x, &layer, &mul);
+        let via_gemm = layer.forward(&x, &mul);
+        let via_tiled = layer.forward_tiled(&x, &lut);
+        let ctx = format!(
+            "case {case}: {in_c}c {h}x{w} -> {out_c}c, k{kh}x{kw} s{stride} p{pad}"
+        );
+        assert_eq!(direct, via_gemm, "{ctx}: direct vs im2col+gemm");
+        assert_eq!(direct, via_tiled, "{ctx}: direct vs tiled lut");
+    }
+}
+
+/// End-to-end: the demo network served through the coordinator on the
+/// lut engine — the `sfcmul infer --design proposed@8 --engine lut`
+/// path — equals the in-process tiled network, per design, and genuinely
+/// differs between exact and approximate designs.
+#[test]
+fn demo_network_served_equals_direct_per_design() {
+    use sfcmul::coordinator::{Coordinator, CoordinatorConfig, LutTileEngine};
+    use sfcmul::image::synthetic_scene;
+    use std::sync::Arc;
+
+    let net = Network::demo();
+    let x = quantize_image(&synthetic_scene(64, 64, 2024));
+    let mut outputs = Vec::new();
+    for key in ["exact@8", "proposed@8"] {
+        let model = registry().build_str(key).unwrap();
+        let lut = product_table(model.as_ref());
+        let coord = Coordinator::start(
+            Arc::new(LutTileEngine::from_table(key, lut.clone())),
+            CoordinatorConfig { workers: 2, queue_capacity: 32, max_batch: 8 },
+        );
+        let served = net.run_served(&coord, None, &x).unwrap();
+        assert_eq!(served, net.run_tiled(&x, &lut), "{key}: served vs direct");
+        coord.shutdown();
+        outputs.push(served);
+    }
+    assert_ne!(
+        outputs[0], outputs[1],
+        "exact and approximate inference genuinely differ on the demo net"
+    );
+}

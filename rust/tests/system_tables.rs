@@ -16,6 +16,7 @@ fn all_tables_generate() {
         "Fig 9",
         "Fig 10",
         "Operator PSNR matrix",
+        "Quantized-inference accuracy matrix",
         "sobel",
         "Proposed",
     ] {
