@@ -27,11 +27,14 @@
 #   lock is only real once those rows are committed — a post-test
 #   `git diff` on the file is the gate. Until the blessed rows land in a
 #   commit, CI stays red and uploads them as the golden-pipeline artifact.
-# * `--bench-json`: after a green gate, additionally run the bench_conv
-#   and bench_nn groups in quick mode with SFCMUL_BENCH_JSON pointing at
-#   BENCH_conv.json / BENCH_nn.json, refreshing the machine-readable perf
-#   trajectory at the repo root (hosted CI uploads both as artifacts per
-#   run; see EXPERIMENTS.md).
+# * `--bench-json`: after a green gate, additionally run the bench_conv,
+#   bench_nn, and bench_coordinator groups in quick mode with
+#   SFCMUL_BENCH_JSON pointing at BENCH_conv.json / BENCH_nn.json /
+#   BENCH_coordinator.json, refreshing the machine-readable perf
+#   trajectory at the repo root (hosted CI uploads all three as artifacts
+#   per run; see EXPERIMENTS.md). bench_coordinator includes the socket
+#   saturation rows (N streaming clients through the TCP front-end vs the
+#   in-process equivalent).
 
 set -uo pipefail
 cd "$(dirname "$0")"
@@ -116,6 +119,12 @@ if [ "$bench_json" -eq 1 ] && [ "$status" -eq 0 ]; then
     if ! SFCMUL_BENCH_QUICK=1 SFCMUL_BENCH_JSON=BENCH_nn.json \
         cargo bench --bench bench_nn; then
         echo "FAIL: bench_nn run"
+        status=1
+    fi
+    echo "== bench_coordinator → BENCH_coordinator.json (quick mode, incl. socket saturation) =="
+    if ! SFCMUL_BENCH_QUICK=1 SFCMUL_BENCH_JSON=BENCH_coordinator.json \
+        cargo bench --bench bench_coordinator; then
+        echo "FAIL: bench_coordinator run"
         status=1
     fi
 fi

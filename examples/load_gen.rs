@@ -1,0 +1,169 @@
+//! Load generator for the network serving front-end (EXPERIMENTS.md
+//! §Saturation): N client threads stream mixed edge/GEMM frames over
+//! real sockets and report per-client throughput, reply latency, and
+//! the server's closing `/metrics` gauges.
+//!
+//! Two ways to run:
+//!
+//! * Self-contained (default): spins up an in-process two-design fleet
+//!   (`proposed@8` A/B `exact@8`) behind a loopback server, drives it,
+//!   tears it down. `cargo run --release --example load_gen`
+//! * Against a live server: point it at `sfcmul serve --listen ADDR`.
+//!   `cargo run --release --example load_gen -- --addr 127.0.0.1:7878`
+//!
+//! Options: `--clients N` (default 4), `--jobs J` per client (default
+//! 32), `--size S` edge frames of SxS (default 128), `--gemm-every K`
+//! (every K-th job is a GEMM, default 4; 0 disables).
+
+use sfcmul::coordinator::{Coordinator, CoordinatorConfig, LutTileEngine, TileEngine};
+use sfcmul::image::{synthetic_scene, Operator};
+use sfcmul::multipliers::registry;
+use sfcmul::nn::MatI8;
+use sfcmul::server::{http_get, Client, ClientError, Server, ServerConfig};
+use sfcmul::util::cli::Args;
+use sfcmul::util::prng::Xoshiro256;
+use std::net::SocketAddr;
+use std::sync::Arc;
+use std::time::Instant;
+
+const DESIGNS: [&str; 2] = ["proposed@8", "exact@8"];
+const OPS: [Operator; 3] = [Operator::Laplacian, Operator::Sobel, Operator::Roberts];
+
+struct ClientReport {
+    ok: usize,
+    busy: usize,
+    quota: usize,
+    other_err: usize,
+    total_latency_us: u64,
+}
+
+fn drive_client(
+    addr: SocketAddr,
+    id: usize,
+    jobs: usize,
+    size: usize,
+    gemm_every: usize,
+) -> ClientReport {
+    let mut report =
+        ClientReport { ok: 0, busy: 0, quota: 0, other_err: 0, total_latency_us: 0 };
+    let mut client = Client::connect(addr).expect("connect");
+    let mut rng = Xoshiro256::seeded(0x10ad ^ id as u64);
+    for j in 0..jobs {
+        let design = DESIGNS[(id + j) % DESIGNS.len()];
+        let outcome = if gemm_every > 0 && j % gemm_every == gemm_every - 1 {
+            let a = MatI8::random(24, 16, &mut rng);
+            let b = MatI8::random(16, 24, &mut rng);
+            client.gemm(&a, &b, Some(design)).map(|r| r.latency_us)
+        } else {
+            let img = synthetic_scene(size, size, (id * jobs + j) as u64);
+            let op = OPS[j % OPS.len()];
+            client.edge(&img, Some(design), op).map(|r| r.latency_us)
+        };
+        match outcome {
+            Ok(latency_us) => {
+                report.ok += 1;
+                report.total_latency_us += latency_us;
+            }
+            Err(ClientError::Server { code, .. }) if code == "busy" => report.busy += 1,
+            Err(ClientError::Server { code, .. }) if code == "quota" => report.quota += 1,
+            Err(_) => report.other_err += 1,
+        }
+    }
+    let _ = client.quit();
+    report
+}
+
+fn main() {
+    let args = Args::from_env().expect("args");
+    let clients = args.get_parse("clients", 4usize).unwrap_or(4);
+    let jobs = args.get_parse("jobs", 32usize).unwrap_or(32);
+    let size = args.get_parse("size", 128usize).unwrap_or(128);
+    let gemm_every = args.get_parse("gemm-every", 4usize).unwrap_or(4);
+
+    // No --addr: stand up a local fleet + server to drive.
+    let local = match args.get("addr") {
+        Some(_) => None,
+        None => {
+            let named: Vec<(String, Arc<dyn TileEngine>)> = DESIGNS
+                .iter()
+                .map(|d| {
+                    let model = registry().build_str(d).expect("design");
+                    (d.to_string(), Arc::new(LutTileEngine::new(model.as_ref())) as _)
+                })
+                .collect();
+            let coord = Arc::new(Coordinator::start_named(
+                named,
+                CoordinatorConfig { workers: 4, queue_capacity: 256, max_batch: 8 },
+            ));
+            let server = Server::start(
+                coord.clone(),
+                ServerConfig {
+                    conn_workers: clients.max(4),
+                    max_inflight: 256,
+                    ..ServerConfig::default()
+                },
+            )
+            .expect("server");
+            println!("self-contained mode: fleet {DESIGNS:?} behind {}", server.local_addr());
+            Some((coord, server))
+        }
+    };
+    let addr: SocketAddr = match &local {
+        Some((_, server)) => server.local_addr(),
+        None => args.get("addr").unwrap().parse().expect("--addr must be host:port"),
+    };
+
+    println!(
+        "driving {clients} clients x {jobs} jobs ({size}x{size} edge frames, \
+         GEMM every {gemm_every}) against {addr}"
+    );
+    let t0 = Instant::now();
+    let reports: Vec<ClientReport> = std::thread::scope(|scope| {
+        let handles: Vec<_> = (0..clients)
+            .map(|id| scope.spawn(move || drive_client(addr, id, jobs, size, gemm_every)))
+            .collect();
+        handles.into_iter().map(|h| h.join().expect("client thread")).collect()
+    });
+    let wall = t0.elapsed();
+
+    let ok: usize = reports.iter().map(|r| r.ok).sum();
+    let busy: usize = reports.iter().map(|r| r.busy).sum();
+    let quota: usize = reports.iter().map(|r| r.quota).sum();
+    let other: usize = reports.iter().map(|r| r.other_err).sum();
+    let lat_sum: u64 = reports.iter().map(|r| r.total_latency_us).sum();
+    println!(
+        "done in {:.2} s: {ok} ok ({:.1} jobs/s), {busy} busy, {quota} quota, {other} errors",
+        wall.as_secs_f64(),
+        ok as f64 / wall.as_secs_f64()
+    );
+    if ok > 0 {
+        println!(
+            "mean server-side job latency {:.2} ms",
+            lat_sum as f64 / ok as f64 / 1e3
+        );
+    }
+
+    // Close with the server's own view of the run.
+    match http_get(addr, "/metrics") {
+        Ok((200, body)) => {
+            println!("GET /metrics highlights:");
+            for line in body.lines().filter(|l| {
+                l.starts_with("sfcmul_jobs_")
+                    || l.starts_with("sfcmul_queue_depth")
+                    || l.starts_with("sfcmul_server_")
+                    || l.contains("quantile=\"0.99\"")
+            }) {
+                println!("  {line}");
+            }
+        }
+        Ok((code, _)) => println!("GET /metrics -> HTTP {code}"),
+        Err(e) => println!("GET /metrics failed: {e}"),
+    }
+
+    if let Some((coord, server)) = local {
+        server.stop();
+        if let Ok(c) = Arc::try_unwrap(coord) {
+            c.shutdown();
+        }
+    }
+}

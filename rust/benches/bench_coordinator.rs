@@ -1,9 +1,11 @@
-//! Bench: E2E coordinator machinery — tiling, queue, batching, and whole
-//! jobs/second under different worker counts.
+//! Bench: E2E coordinator machinery — tiling, queue, batching, whole
+//! jobs/second under different worker counts, and socket saturation
+//! through the network front-end (wire overhead vs in-process submits).
 
 use sfcmul::coordinator::{tile_image, Coordinator, CoordinatorConfig, LutTileEngine};
-use sfcmul::image::synthetic_scene;
+use sfcmul::image::{synthetic_scene, Operator};
 use sfcmul::multipliers::{lut::product_table, registry};
+use sfcmul::server::{Client, Server, ServerConfig};
 use sfcmul::util::bench::Bench;
 use std::sync::Arc;
 
@@ -43,6 +45,56 @@ fn main() {
         let handles: Vec<_> = (0..16).map(|_| coord.submit(img.clone())).collect();
         handles.into_iter().map(|h| h.wait().tiles).sum::<usize>()
     });
+    drop(coord);
+
+    // Socket saturation: N client threads stream 64x64 edge frames
+    // through the TCP front-end (one streaming connection each, 8
+    // frames per iteration). The in-process row below is the same
+    // workload without the wire, so the pair prices protocol+socket
+    // overhead and shows how concurrent clients fill the fleet.
+    let sat_img = synthetic_scene(64, 64, 7);
+    let sat_pixels = (sat_img.width * sat_img.height) as u64;
+    const FRAMES_PER_CLIENT: usize = 8;
+    let engine = Arc::new(LutTileEngine::from_table("p", lut.clone()));
+    let coord = Arc::new(Coordinator::start(
+        engine,
+        CoordinatorConfig { workers: 4, queue_capacity: 256, max_batch: 8 },
+    ));
+    let server = Server::start(
+        coord.clone(),
+        ServerConfig { conn_workers: 16, max_inflight: 256, ..ServerConfig::default() },
+    )
+    .expect("bench server");
+    let addr = server.local_addr();
+    for clients in [1usize, 2, 4, 8] {
+        let name = format!("socket_saturation_c{clients}_64");
+        b.throughput(sat_pixels * (clients * FRAMES_PER_CLIENT) as u64).bench(&name, || {
+            std::thread::scope(|scope| {
+                let handles: Vec<_> = (0..clients)
+                    .map(|_| {
+                        let img = &sat_img;
+                        scope.spawn(move || {
+                            let mut c = Client::connect(addr).expect("connect");
+                            let mut px = 0usize;
+                            for _ in 0..FRAMES_PER_CLIENT {
+                                let r = c
+                                    .edge(img, None, Operator::Laplacian)
+                                    .expect("served frame");
+                                px += r.edges.width * r.edges.height;
+                            }
+                            px
+                        })
+                    })
+                    .collect();
+                handles.into_iter().map(|h| h.join().unwrap()).sum::<usize>()
+            })
+        });
+    }
+    b.throughput(sat_pixels * 8).bench("inprocess_equivalent_64", || {
+        let handles: Vec<_> = (0..8).map(|_| coord.submit(sat_img.clone())).collect();
+        handles.into_iter().map(|h| h.wait().tiles).sum::<usize>()
+    });
+    server.stop();
     drop(coord);
 
     // queue throughput: raw channel send/recv

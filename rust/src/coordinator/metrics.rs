@@ -13,6 +13,7 @@
 
 use crate::util::prng::Xoshiro256;
 use crate::util::stats;
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Mutex;
 use std::time::Duration;
 
@@ -53,6 +54,15 @@ impl Reservoir {
 /// the aggregate view sums/merges across rows.
 pub struct Metrics {
     inner: Mutex<Vec<EngineInner>>,
+    /// Jobs admitted at submit time (conv + GEMM, including empty GEMMs
+    /// that complete without dispatching any task). Lock-free: recorded
+    /// on the submit path, outside the per-engine rows.
+    accepted: AtomicU64,
+    /// Submissions rejected at validation time (unknown engine,
+    /// unsupported operator, shape/capability errors). Network-level
+    /// rejections (admission control, quotas) are counted separately by
+    /// the server front-end.
+    rejected: AtomicU64,
 }
 
 struct EngineInner {
@@ -100,6 +110,14 @@ pub struct EngineMetricsSnapshot {
 /// [`EngineMetricsSnapshot`] row per named engine.
 #[derive(Debug, Clone)]
 pub struct MetricsSnapshot {
+    /// Cumulative jobs admitted at submit time.
+    pub jobs_accepted: u64,
+    /// Cumulative submissions rejected at validation time.
+    pub jobs_rejected: u64,
+    /// Work units currently waiting in the bounded tile queue. Filled by
+    /// [`super::Coordinator::metrics`] (a bare [`Metrics::snapshot`]
+    /// reports 0 — the queue belongs to the coordinator).
+    pub queue_depth: usize,
     pub jobs_completed: u64,
     pub tiles_processed: u64,
     pub batches: u64,
@@ -126,7 +144,19 @@ impl Metrics {
                     .map(|(i, n)| EngineInner::new(n, 0x5fc0_0db5 ^ i as u64))
                     .collect(),
             ),
+            accepted: AtomicU64::new(0),
+            rejected: AtomicU64::new(0),
         }
+    }
+
+    /// Count one admitted submission (O(1), lock-free).
+    pub fn record_accept(&self) {
+        self.accepted.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Count one submission rejected at validation time (O(1), lock-free).
+    pub fn record_reject(&self) {
+        self.rejected.fetch_add(1, Ordering::Relaxed);
     }
 
     pub fn record_batch(&self, engine: usize, size: usize, busy: Duration) {
@@ -179,6 +209,9 @@ impl Metrics {
         let tiles: u64 = rows.iter().map(|m| m.tiles_processed).sum();
         let batches: u64 = rows.iter().map(|m| m.batches).sum();
         MetricsSnapshot {
+            jobs_accepted: self.accepted.load(Ordering::Relaxed),
+            jobs_rejected: self.rejected.load(Ordering::Relaxed),
+            queue_depth: 0,
             jobs_completed: rows.iter().map(|m| m.jobs_completed).sum(),
             tiles_processed: tiles,
             batches,
@@ -275,6 +308,23 @@ mod tests {
             s.latency_p50_ms
         );
         assert!(s.latency_p99_ms <= total as f64 && s.latency_p99_ms > mid);
+    }
+
+    /// Accepted/rejected are cumulative fleet-level counters, independent
+    /// of the per-engine rows, and a bare snapshot reports queue depth 0
+    /// (the coordinator fills the real value).
+    #[test]
+    fn accept_reject_counters_accumulate() {
+        let m = Metrics::new(vec!["e".into()]);
+        assert_eq!((m.snapshot().jobs_accepted, m.snapshot().jobs_rejected), (0, 0));
+        m.record_accept();
+        m.record_accept();
+        m.record_reject();
+        let s = m.snapshot();
+        assert_eq!(s.jobs_accepted, 2);
+        assert_eq!(s.jobs_rejected, 1);
+        assert_eq!(s.queue_depth, 0);
+        assert_eq!(s.jobs_completed, 0, "accept/reject do not touch completion");
     }
 
     #[test]

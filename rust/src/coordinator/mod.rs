@@ -46,6 +46,6 @@ pub use engine::{
 };
 pub use engines::{resolve, resolve_str, resolve_with_fallback, EngineSpec};
 pub use job::{EdgeJob, GemmResult, JobResult};
-pub use metrics::{EngineMetricsSnapshot, MetricsSnapshot};
+pub use metrics::{EngineMetricsSnapshot, Metrics, MetricsSnapshot};
 pub use service::{Coordinator, CoordinatorConfig, GemmHandle, JobHandle};
 pub use tiler::{reassemble, tile_image, Tile, TileOut, TILE_CORE, TILE_HALO, TILE_IN};

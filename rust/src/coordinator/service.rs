@@ -261,8 +261,15 @@ impl Coordinator {
         engine: Option<&str>,
         op: Operator,
     ) -> crate::Result<JobHandle> {
-        let idx = self.engine_index(engine)?;
+        let idx = match self.engine_index(engine) {
+            Ok(idx) => idx,
+            Err(e) => {
+                self.shared.metrics.record_reject();
+                return Err(e);
+            }
+        };
         if !self.fleet[idx].supports_op(op) {
+            self.shared.metrics.record_reject();
             return Err(Error::msg(format!(
                 "engine {:?} does not support operator {op}",
                 self.engine_names[idx]
@@ -296,6 +303,24 @@ impl Coordinator {
     /// conv-only engine (rowbuf, PJRT) or a non-8-bit design is rejected
     /// here, at submit time.
     pub fn submit_gemm(
+        &self,
+        a: MatI8,
+        b: MatI8,
+        engine: Option<&str>,
+    ) -> crate::Result<GemmHandle> {
+        match self.submit_gemm_inner(a, b, engine) {
+            Ok(h) => {
+                self.shared.metrics.record_accept();
+                Ok(h)
+            }
+            Err(e) => {
+                self.shared.metrics.record_reject();
+                Err(e)
+            }
+        }
+    }
+
+    fn submit_gemm_inner(
         &self,
         a: MatI8,
         b: MatI8,
@@ -388,6 +413,7 @@ impl Coordinator {
         engine: Option<&str>,
     ) -> crate::Result<GemmHandle> {
         if x.c != layer.in_c {
+            self.shared.metrics.record_reject();
             return Err(Error::msg(format!(
                 "conv2d input has {} channels, layer expects {}",
                 x.c, layer.in_c
@@ -404,6 +430,7 @@ impl Coordinator {
     }
 
     fn submit_inner(&self, image: Image, engine: usize, quality: u8, op: Operator) -> JobHandle {
+        self.shared.metrics.record_accept();
         let id = self.next_job.fetch_add(1, Ordering::Relaxed);
         let mut tiles = tile_image(id, &image);
         for t in &mut tiles {
@@ -437,8 +464,17 @@ impl Coordinator {
         self.submit(image).wait()
     }
 
+    /// Work units currently waiting in the bounded tile queue (racy by
+    /// nature; 0 once the coordinator has shut down). The live
+    /// backpressure signal behind the server front-end's gauge.
+    pub fn queue_depth(&self) -> usize {
+        self.tile_tx.as_ref().map(|tx| tx.len()).unwrap_or(0)
+    }
+
     pub fn metrics(&self) -> MetricsSnapshot {
-        self.shared.metrics.snapshot()
+        let mut s = self.shared.metrics.snapshot();
+        s.queue_depth = self.queue_depth();
+        s
     }
 
     /// Graceful shutdown: close intake, drain queue, join workers.
@@ -707,6 +743,28 @@ mod tests {
             assert_eq!(res.edges, exp, "job {}", res.id);
         }
         assert_eq!(coord.shutdown().jobs_completed, 40);
+    }
+
+    /// The cumulative accept/reject counters track submit-time admission:
+    /// good submissions count as accepted, validation failures as
+    /// rejected, and the post-drain queue depth is zero.
+    #[test]
+    fn accept_reject_counters_track_submissions() {
+        let coord = coordinator(2);
+        let img = synthetic_scene(64, 64, 5);
+        let h = coord.submit(img.clone());
+        let err = coord.submit_to(img, Some("nope"), Operator::Laplacian);
+        assert!(err.is_err());
+        assert!(coord
+            .submit_gemm(crate::nn::MatI8::new(2, 3), crate::nn::MatI8::new(4, 2), None)
+            .is_err());
+        h.wait();
+        let m = coord.metrics();
+        assert_eq!(m.jobs_accepted, 1);
+        assert_eq!(m.jobs_rejected, 2);
+        assert_eq!(m.jobs_completed, 1);
+        let m = coord.shutdown();
+        assert_eq!(m.queue_depth, 0, "drained coordinator reports an empty queue");
     }
 
     #[test]

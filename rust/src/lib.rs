@@ -58,6 +58,12 @@
 //!   operator) pair), and [`coordinator::MetricsSnapshot`] reports
 //!   per-design rows — one service instance can A/B exact vs.
 //!   approximate designs across heterogeneous workloads under load.
+//! * [`server`] — the L4 network front-end: a `std::net`-only TCP
+//!   listener speaking a streaming job protocol plus `GET /metrics`
+//!   HTTP on one port, with a bounded handler pool, admission control
+//!   (in-flight bound + per-client token-bucket quotas), SIGINT-safe
+//!   graceful drain, and a blocking [`server::Client`]
+//!   (`sfcmul serve --listen ADDR`).
 //! * [`runtime`] — PJRT client wrapper that loads the AOT-compiled
 //!   JAX/Pallas artifacts (`artifacts/*.hlo.txt`) and executes them from
 //!   the Rust hot path (feature `pjrt`; a stub that reports the feature as
@@ -75,6 +81,7 @@ pub mod hwmodel;
 pub mod image;
 pub mod nn;
 pub mod coordinator;
+pub mod server;
 pub mod runtime;
 pub mod tables;
 

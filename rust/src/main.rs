@@ -4,6 +4,9 @@
 //!   tables   --id <t1|t2|t3|t4|t5|f9|f10|ops|nn|all> [--seed S] [--out out/]
 //!   edge     --input img.pgm --output edges.pgm [--design SPEC] [--engine SPEC] [--op OP]
 //!   serve    --demo [--jobs N] [--workers W] [--designs SPEC,SPEC,...] [--engine SPEC] [--op OP]
+//!   serve    --listen ADDR [--conn-workers C] [--max-inflight J] [--quota-rps R] [--quota-burst B]
+//!            (network mode: the SFC/1 TCP job protocol + GET /metrics HTTP on one
+//!            listener, SIGINT-safe graceful drain — see `sfcmul::server`)
 //!   infer    [--design SPEC] [--engine lut|bitsim|model] [--seed S] [--size N]
 //!            (quantized conv→relu→conv inference through the coordinator)
 //!   ablate   [--seed S]                      (design-space ablation report)
@@ -26,6 +29,7 @@ use sfcmul::image::ops::{apply_operator, OpProgram, Operator};
 use sfcmul::image::{synthetic_scene, Image};
 use sfcmul::multipliers::{lut, registry, DesignSpec};
 use sfcmul::nn::{fidelity as nn_fidelity, quantize_image, Network};
+use sfcmul::server::{shutdown, Server, ServerConfig};
 use sfcmul::util::cli::Args;
 use std::path::{Path, PathBuf};
 use std::sync::Arc;
@@ -46,6 +50,14 @@ USAGE: sfcmul <subcommand> [options]
            run the streaming coordinator on a synthetic job stream, round-robin
            across the listed designs, print aggregate + per-design metrics
            (default designs: proposed@8,exact@8 — an exact-vs-approximate A/B)
+  serve    --listen ADDR [--workers W] [--batch B] [--designs SPEC,SPEC,...]
+           [--conn-workers C] [--max-inflight J] [--quota-rps R] [--quota-burst B]
+           network mode: serve the fleet over TCP (line-delimited SFC/1 job
+           protocol with streaming connections, plus GET /metrics and
+           GET /healthz HTTP on the same port). --max-inflight bounds
+           concurrent jobs (excess gets ERR busy); --quota-rps/--quota-burst
+           set per-client token-bucket quotas (ERR quota). Ctrl-C drains
+           in-flight jobs and prints a final metrics snapshot.
   infer    [--design SPEC] [--engine lut|bitsim|model] [--seed S] [--size N]
            run the fixed quantized conv->relu->conv network on a synthetic
            scene through the coordinator (i8 im2col + tiled GEMM, every MAC
@@ -279,7 +291,6 @@ fn cmd_serve(args: &Args) -> i32 {
     let keys: Vec<String> = named.iter().map(|(n, _)| n.clone()).collect();
     let workers = args.get_parse("workers", 4usize).unwrap_or(4);
     let batch = args.get_parse("batch", 8usize).unwrap_or(8);
-    let jobs = args.get_parse("jobs", 64usize).unwrap_or(64);
     let coord = Coordinator::start_named(
         named,
         CoordinatorConfig { workers, queue_capacity: 256, max_batch: batch },
@@ -288,19 +299,31 @@ fn cmd_serve(args: &Args) -> i32 {
     backends.dedup();
     let backend_list =
         backends.iter().map(|e| e.key()).collect::<Vec<_>>().join("+");
+    // Ctrl-C must drain in-flight jobs and print a final snapshot, not
+    // abort mid-batch — both serve modes share the flag.
+    shutdown::install();
+    if let Some(addr) = args.get("listen") {
+        return serve_listen(args, coord, addr.to_string(), &keys, &backend_list);
+    }
+    let jobs = args.get_parse("jobs", 64usize).unwrap_or(64);
     println!(
         "serving {jobs} synthetic {op} jobs round-robin across [{}] via engine {backend_list} ({workers} workers, batch {batch})",
         keys.join(", "),
     );
     let t0 = Instant::now();
-    let handles: Vec<_> = (0..jobs)
-        .map(|i| {
-            let key = keys[i % keys.len()].as_str();
+    let mut handles = Vec::new();
+    for i in 0..jobs {
+        if shutdown::signalled() {
+            println!("interrupt: stopping intake after {i} submissions, draining in-flight jobs");
+            break;
+        }
+        let key = keys[i % keys.len()].as_str();
+        handles.push(
             coord
                 .submit_to(synthetic_scene(256, 256, i as u64), Some(key), op)
-                .expect("registered engine serving the requested operator")
-        })
-        .collect();
+                .expect("registered engine serving the requested operator"),
+        );
+    }
     let mut px_total = 0usize;
     for h in handles {
         let r = h.wait();
@@ -315,6 +338,17 @@ fn cmd_serve(args: &Args) -> i32 {
         wall.as_secs_f64(),
         px_total as f64 / wall.as_secs_f64() / 1e6,
         m.mean_batch_size
+    );
+    print_snapshot(&m);
+    0
+}
+
+/// Shared tail of both serve modes: fleet-wide counters + quantiles and
+/// the per-design metric rows.
+fn print_snapshot(m: &sfcmul::coordinator::MetricsSnapshot) {
+    println!(
+        "jobs accepted/rejected/completed = {}/{}/{}; queue depth {}",
+        m.jobs_accepted, m.jobs_rejected, m.jobs_completed, m.queue_depth
     );
     println!(
         "latency p50/p90/p99 = {:.1} / {:.1} / {:.1} ms; engine busy {:.2} s",
@@ -335,6 +369,71 @@ fn cmd_serve(args: &Args) -> i32 {
             row.engine_busy.as_secs_f64()
         );
     }
+}
+
+/// Network serve mode: run the fleet behind the TCP/HTTP front-end until
+/// SIGINT/SIGTERM, then drain connections, drain the fleet, and print
+/// the final snapshot.
+fn serve_listen(
+    args: &Args,
+    coord: Coordinator,
+    addr: String,
+    keys: &[String],
+    backend_list: &str,
+) -> i32 {
+    let cfg = ServerConfig {
+        addr,
+        conn_workers: args.get_parse("conn-workers", 8usize).unwrap_or(8),
+        pending_conns: args.get_parse("pending-conns", 32usize).unwrap_or(32),
+        max_inflight: args.get_parse("max-inflight", 64usize).unwrap_or(64),
+        quota_rps: args.get_parse("quota-rps", 0.0f64).unwrap_or(0.0),
+        quota_burst: args.get_parse("quota-burst", 8.0f64).unwrap_or(8.0),
+    };
+    let coord = Arc::new(coord);
+    let server = match Server::start(coord.clone(), cfg.clone()) {
+        Ok(s) => s,
+        Err(e) => {
+            eprintln!("error: {e}");
+            return 1;
+        }
+    };
+    println!(
+        "listening on {} — engines [{}] via {backend_list}; {} conn workers, \
+         max {} jobs in flight{}",
+        server.local_addr(),
+        keys.join(", "),
+        cfg.conn_workers,
+        cfg.max_inflight,
+        if cfg.quota_rps > 0.0 {
+            format!(", per-client quota {}/s (burst {})", cfg.quota_rps, cfg.quota_burst)
+        } else {
+            String::new()
+        }
+    );
+    println!("job protocol: EDGE/GEMM/METRICS/PING frames; HTTP: GET /metrics, GET /healthz");
+    while !shutdown::signalled() {
+        std::thread::sleep(std::time::Duration::from_millis(150));
+    }
+    println!("signal received: draining connections, then the fleet");
+    let stats = server.stop();
+    let m = match Arc::try_unwrap(coord) {
+        Ok(c) => c.shutdown(),
+        // A handler leaked an Arc clone (cannot happen after stop(), but
+        // stay defensive): read the metrics and let Drop shut down.
+        Err(c) => c.metrics(),
+    };
+    print_snapshot(&m);
+    println!(
+        "server: {} connections ({} still open), {} ok replies, rejected busy/quota = {}/{}, \
+         protocol errors {}, http requests {}",
+        stats.connections_total,
+        stats.connections_open,
+        stats.requests_ok,
+        stats.rejected_busy,
+        stats.rejected_quota,
+        stats.protocol_errors,
+        stats.http_requests
+    );
     0
 }
 

@@ -1,0 +1,207 @@
+//! Blocking client for the `SFC/1` job protocol — used by the
+//! `load_gen` example, the socket tests, and anyone scripting the
+//! server without speaking raw frames.
+//!
+//! A [`Client`] wraps one TCP connection and streams frames over it
+//! (the connection-reuse half of the streaming story). All calls are
+//! synchronous: submit one frame, block for its reply. The socket
+//! carries no read timeout, so [`super::protocol::LineRead::Idle`] is
+//! never observed here.
+
+use crate::image::ops::Operator;
+use crate::image::Image;
+use crate::nn::{MatI32, MatI8};
+use std::io::{Read, Write};
+use std::net::{SocketAddr, TcpStream, ToSocketAddrs};
+use std::time::Duration;
+
+use super::protocol::{self, FrameReader, LineRead};
+
+/// A stall bound for payload reads; effectively "wait for the server".
+const CLIENT_PAYLOAD_IDLE: Duration = Duration::from_secs(3600);
+
+/// Errors a client call can surface.
+#[derive(Debug)]
+pub enum ClientError {
+    /// Transport-level failure.
+    Io(std::io::Error),
+    /// The server answered with an `ERR` line; `code` is the
+    /// machine-readable class (`busy`, `quota`, `unknown-engine`, ...).
+    Server { code: String, message: String },
+    /// The server's reply did not follow the protocol.
+    Protocol(String),
+}
+
+impl std::fmt::Display for ClientError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ClientError::Io(e) => write!(f, "io: {e}"),
+            ClientError::Server { code, message } => write!(f, "server error [{code}]: {message}"),
+            ClientError::Protocol(m) => write!(f, "protocol violation: {m}"),
+        }
+    }
+}
+
+impl std::error::Error for ClientError {}
+
+impl From<std::io::Error> for ClientError {
+    fn from(e: std::io::Error) -> Self {
+        ClientError::Io(e)
+    }
+}
+
+/// The result of one served edge frame.
+pub struct EdgeReply {
+    pub edges: Image,
+    /// Server-side job latency (queue + compute), as reported on the
+    /// `OK` line.
+    pub latency_us: u64,
+}
+
+/// The result of one served GEMM frame.
+pub struct GemmReply {
+    pub out: MatI32,
+    pub latency_us: u64,
+}
+
+/// One streaming connection to a serving front-end.
+pub struct Client {
+    sock: TcpStream,
+    reader: FrameReader,
+}
+
+impl Client {
+    /// Connect to a server address (anything [`ToSocketAddrs`], e.g. a
+    /// [`SocketAddr`] or `"127.0.0.1:7878"`).
+    pub fn connect(addr: impl ToSocketAddrs) -> Result<Self, ClientError> {
+        let sock = TcpStream::connect(addr)?;
+        sock.set_nodelay(true)?;
+        Ok(Self { sock, reader: FrameReader::new() })
+    }
+
+    fn read_line(&mut self) -> Result<String, ClientError> {
+        loop {
+            match self.reader.poll_line(&mut self.sock)? {
+                LineRead::Line(l) => return Ok(l),
+                LineRead::Eof => {
+                    return Err(ClientError::Protocol("server closed the connection".into()))
+                }
+                LineRead::Idle { .. } => continue, // no read timeout set; defensive
+            }
+        }
+    }
+
+    /// Read a reply line, splitting `ERR` answers into [`ClientError::Server`].
+    fn read_ok(&mut self) -> Result<String, ClientError> {
+        let line = self.read_line()?;
+        if let Some(rest) = line.strip_prefix("ERR ") {
+            let (code, message) = rest.split_once(' ').unwrap_or((rest, ""));
+            return Err(ClientError::Server { code: code.into(), message: message.into() });
+        }
+        if line == "OK" || line.starts_with("OK ") {
+            Ok(line)
+        } else {
+            Err(ClientError::Protocol(format!("expected OK/ERR, got {line:?}")))
+        }
+    }
+
+    fn field(line: &str, key: &str) -> Result<u64, ClientError> {
+        protocol::parse_ok_fields(line)
+            .into_iter()
+            .find(|(k, _)| k == key)
+            .ok_or_else(|| ClientError::Protocol(format!("missing {key}= in {line:?}")))?
+            .1
+            .parse::<u64>()
+            .map_err(|e| ClientError::Protocol(format!("bad {key}= in {line:?}: {e}")))
+    }
+
+    fn read_payload(&mut self, len: usize) -> Result<Vec<u8>, ClientError> {
+        let mut buf = vec![0u8; len];
+        self.reader.read_exact_payload(&mut self.sock, &mut buf, CLIENT_PAYLOAD_IDLE)?;
+        Ok(buf)
+    }
+
+    /// Liveness round trip.
+    pub fn ping(&mut self) -> Result<(), ClientError> {
+        self.sock.write_all(b"PING\n")?;
+        self.read_ok().map(|_| ())
+    }
+
+    /// Submit one edge-detection frame and block for the result.
+    pub fn edge(
+        &mut self,
+        img: &Image,
+        engine: Option<&str>,
+        op: Operator,
+    ) -> Result<EdgeReply, ClientError> {
+        let header = protocol::edge_header(img.width, img.height, engine, op);
+        self.sock.write_all(header.as_bytes())?;
+        self.sock.write_all(&img.data)?;
+        let line = self.read_ok()?;
+        let (w, h) = (Self::field(&line, "w")? as usize, Self::field(&line, "h")? as usize);
+        let latency_us = Self::field(&line, "latency_us")?;
+        let data = self.read_payload(w * h)?;
+        Ok(EdgeReply { edges: Image { width: w, height: h, data }, latency_us })
+    }
+
+    /// Submit one quantized GEMM (`C = A × B`) and block for the result.
+    pub fn gemm(
+        &mut self,
+        a: &MatI8,
+        b: &MatI8,
+        engine: Option<&str>,
+    ) -> Result<GemmReply, ClientError> {
+        let header = protocol::gemm_header(a.rows, a.cols, b.cols, engine);
+        self.sock.write_all(header.as_bytes())?;
+        let mut payload = Vec::with_capacity(a.data.len() + b.data.len());
+        payload.extend(a.data.iter().map(|&v| v as u8));
+        payload.extend(b.data.iter().map(|&v| v as u8));
+        self.sock.write_all(&payload)?;
+        let line = self.read_ok()?;
+        let (m, n) = (Self::field(&line, "m")? as usize, Self::field(&line, "n")? as usize);
+        let latency_us = Self::field(&line, "latency_us")?;
+        let bytes = self.read_payload(m * n * 4)?;
+        let mut out = MatI32::new(m, n);
+        for (dst, chunk) in out.data.iter_mut().zip(bytes.chunks_exact(4)) {
+            *dst = i32::from_le_bytes([chunk[0], chunk[1], chunk[2], chunk[3]]);
+        }
+        Ok(GemmReply { out, latency_us })
+    }
+
+    /// Fetch the metrics text over the job protocol (`METRICS` frame).
+    pub fn metrics_text(&mut self) -> Result<String, ClientError> {
+        self.sock.write_all(b"METRICS\n")?;
+        let line = self.read_ok()?;
+        let len = Self::field(&line, "bytes")? as usize;
+        let bytes = self.read_payload(len)?;
+        String::from_utf8(bytes)
+            .map_err(|_| ClientError::Protocol("metrics text is not UTF-8".into()))
+    }
+
+    /// Polite goodbye; the server closes the connection after replying.
+    pub fn quit(mut self) -> Result<(), ClientError> {
+        self.sock.write_all(b"QUIT\n")?;
+        self.read_ok().map(|_| ())
+    }
+}
+
+/// One-shot HTTP GET against the same listener (e.g. `/metrics`,
+/// `/healthz`). Returns (status code, body).
+pub fn http_get(addr: SocketAddr, path: &str) -> std::io::Result<(u16, String)> {
+    let mut sock = TcpStream::connect(addr)?;
+    sock.write_all(format!("GET {path} HTTP/1.1\r\nHost: sfcmul\r\n\r\n").as_bytes())?;
+    let mut raw = Vec::new();
+    sock.read_to_end(&mut raw)?; // server sends Connection: close
+    let text = String::from_utf8_lossy(&raw);
+    let mut lines = text.splitn(2, "\r\n\r\n");
+    let head = lines.next().unwrap_or("");
+    let body = lines.next().unwrap_or("").to_string();
+    let status = head
+        .split_ascii_whitespace()
+        .nth(1)
+        .and_then(|s| s.parse::<u16>().ok())
+        .ok_or_else(|| {
+            std::io::Error::new(std::io::ErrorKind::InvalidData, "malformed status line")
+        })?;
+    Ok((status, body))
+}

@@ -1,0 +1,168 @@
+//! Minimal HTTP/1.1 surface sharing the job-protocol listener.
+//!
+//! The dispatcher sniffs each header line: if it starts with an HTTP
+//! method token the connection is treated as a one-shot HTTP exchange
+//! (`Connection: close`), otherwise it stays on the streaming job
+//! protocol. Supported routes:
+//!
+//! * `GET /metrics` — Prometheus-style text exposition of the
+//!   coordinator [`MetricsSnapshot`] plus server gauges.
+//! * `GET /healthz` — liveness probe, `200 ok`.
+//!
+//! Everything else is `404`; non-GET/HEAD methods are `405`. This is
+//! deliberately not a general HTTP server — no keep-alive, chunking, or
+//! header interpretation beyond the request line.
+
+use crate::coordinator::MetricsSnapshot;
+
+use super::service::ServerStatsSnapshot;
+
+/// Does this job-protocol header line actually open an HTTP request?
+pub fn is_http(line: &str) -> bool {
+    ["GET ", "HEAD ", "POST ", "PUT ", "DELETE "].iter().any(|m| line.starts_with(m))
+}
+
+/// Parse an HTTP request line into (method, path). Returns `None` when
+/// the line is not a well-formed request line.
+pub fn parse_request_line(line: &str) -> Option<(&str, &str)> {
+    let mut parts = line.split_ascii_whitespace();
+    let method = parts.next()?;
+    let path = parts.next()?;
+    let version = parts.next()?;
+    if !version.starts_with("HTTP/") {
+        return None;
+    }
+    Some((method, path))
+}
+
+/// Build a full HTTP/1.1 response with `Connection: close`.
+pub fn response(status: u16, reason: &str, content_type: &str, body: &str) -> String {
+    format!(
+        "HTTP/1.1 {status} {reason}\r\nContent-Type: {content_type}\r\nContent-Length: {}\r\nConnection: close\r\n\r\n{body}",
+        body.len()
+    )
+}
+
+/// Route one HTTP request to its response text.
+pub fn route(method: &str, path: &str, metrics: impl FnOnce() -> String) -> String {
+    if method != "GET" && method != "HEAD" {
+        return response(405, "Method Not Allowed", "text/plain", "method not allowed\n");
+    }
+    match path {
+        "/metrics" => response(200, "OK", "text/plain; version=0.0.4", &metrics()),
+        "/healthz" => response(200, "OK", "text/plain", "ok\n"),
+        _ => response(404, "Not Found", "text/plain", "not found\n"),
+    }
+}
+
+fn quantile_lines(out: &mut String, name: &str, labels: &str, p50: f64, p90: f64, p99: f64) {
+    use std::fmt::Write;
+    let sep = if labels.is_empty() { "" } else { "," };
+    for (q, v) in [("0.5", p50), ("0.9", p90), ("0.99", p99)] {
+        let _ = writeln!(out, "{name}{{{labels}{sep}quantile=\"{q}\"}} {v:.6}");
+    }
+}
+
+/// Render the coordinator snapshot plus server gauges in the Prometheus
+/// text exposition format (one `name{labels} value` line per sample).
+pub fn render_metrics(m: &MetricsSnapshot, s: &ServerStatsSnapshot) -> String {
+    use std::fmt::Write;
+    let mut out = String::with_capacity(2048);
+    let w = &mut out;
+    let _ = writeln!(w, "# Fleet-wide coordinator counters.");
+    let _ = writeln!(w, "sfcmul_jobs_accepted_total {}", m.jobs_accepted);
+    let _ = writeln!(w, "sfcmul_jobs_rejected_total {}", m.jobs_rejected);
+    let _ = writeln!(w, "sfcmul_jobs_completed_total {}", m.jobs_completed);
+    let _ = writeln!(w, "sfcmul_tiles_processed_total {}", m.tiles_processed);
+    let _ = writeln!(w, "sfcmul_batches_total {}", m.batches);
+    let _ = writeln!(w, "sfcmul_queue_depth {}", m.queue_depth);
+    quantile_lines(w, "sfcmul_job_latency_ms", "", m.latency_p50_ms, m.latency_p90_ms, m.latency_p99_ms);
+    let _ = writeln!(w, "# Per-engine rows.");
+    for e in &m.per_engine {
+        let labels = format!("engine=\"{}\"", e.name);
+        let _ = writeln!(w, "sfcmul_engine_jobs_completed_total{{{labels}}} {}", e.jobs_completed);
+        let _ = writeln!(w, "sfcmul_engine_tiles_processed_total{{{labels}}} {}", e.tiles_processed);
+        let _ = writeln!(w, "sfcmul_engine_batches_total{{{labels}}} {}", e.batches);
+        let _ = writeln!(w, "sfcmul_engine_busy_seconds{{{labels}}} {:.6}", e.engine_busy.as_secs_f64());
+        quantile_lines(
+            w,
+            "sfcmul_engine_job_latency_ms",
+            &labels,
+            e.latency_p50_ms,
+            e.latency_p90_ms,
+            e.latency_p99_ms,
+        );
+    }
+    let _ = writeln!(w, "# Server front-end gauges.");
+    let _ = writeln!(w, "sfcmul_server_connections_open {}", s.connections_open);
+    let _ = writeln!(w, "sfcmul_server_connections_total {}", s.connections_total);
+    let _ = writeln!(w, "sfcmul_server_requests_ok_total {}", s.requests_ok);
+    let _ = writeln!(w, "sfcmul_server_rejected_total{{reason=\"busy\"}} {}", s.rejected_busy);
+    let _ = writeln!(w, "sfcmul_server_rejected_total{{reason=\"quota\"}} {}", s.rejected_quota);
+    let _ = writeln!(w, "sfcmul_server_protocol_errors_total {}", s.protocol_errors);
+    let _ = writeln!(w, "sfcmul_server_http_requests_total {}", s.http_requests);
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::Metrics;
+    use std::time::Duration;
+
+    #[test]
+    fn http_sniff_only_matches_methods() {
+        assert!(is_http("GET /metrics HTTP/1.1"));
+        assert!(is_http("HEAD /healthz HTTP/1.1"));
+        assert!(!is_http("EDGE w=4 h=4"));
+        assert!(!is_http("GEMM m=1 k=1 n=1"));
+        assert!(!is_http("GETX /"), "prefix requires the trailing space");
+    }
+
+    #[test]
+    fn request_line_parse() {
+        assert_eq!(parse_request_line("GET /metrics HTTP/1.1"), Some(("GET", "/metrics")));
+        assert_eq!(parse_request_line("GET /metrics"), None, "missing version");
+    }
+
+    #[test]
+    fn routes_and_statuses() {
+        let r = route("GET", "/healthz", String::new);
+        assert!(r.starts_with("HTTP/1.1 200 OK"));
+        assert!(r.ends_with("ok\n"));
+        assert!(route("GET", "/nope", String::new).starts_with("HTTP/1.1 404"));
+        assert!(route("POST", "/metrics", String::new).starts_with("HTTP/1.1 405"));
+        let r = route("GET", "/metrics", || "x 1\n".to_string());
+        assert!(r.contains("Content-Length: 4"));
+        assert!(r.ends_with("x 1\n"));
+    }
+
+    #[test]
+    fn metrics_render_has_engine_quantiles_and_server_gauges() {
+        let metrics = Metrics::new(vec!["proposed@8".into(), "exact@8".into()]);
+        metrics.record_job(0, Duration::from_millis(7));
+        metrics.record_batch(0, 3, Duration::from_millis(2));
+        metrics.record_accept();
+        let m = metrics.snapshot();
+        let s = ServerStatsSnapshot {
+            connections_total: 5,
+            connections_open: 2,
+            requests_ok: 40,
+            rejected_busy: 1,
+            rejected_quota: 2,
+            protocol_errors: 3,
+            http_requests: 4,
+        };
+        let text = render_metrics(&m, &s);
+        assert!(text.contains("sfcmul_jobs_accepted_total 1"));
+        assert!(text.contains("sfcmul_engine_job_latency_ms{engine=\"proposed@8\",quantile=\"0.5\"}"));
+        assert!(text.contains("sfcmul_engine_job_latency_ms{engine=\"exact@8\",quantile=\"0.99\"}"));
+        assert!(text.contains("sfcmul_server_rejected_total{reason=\"quota\"} 2"));
+        assert!(text.contains("sfcmul_server_connections_open 2"));
+        // Every non-comment line is `name{...} value` with a parseable value.
+        for line in text.lines().filter(|l| !l.starts_with('#')) {
+            let (_, val) = line.rsplit_once(' ').expect("name value");
+            val.parse::<f64>().unwrap_or_else(|_| panic!("unparseable value in {line:?}"));
+        }
+    }
+}

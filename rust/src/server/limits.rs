@@ -1,0 +1,200 @@
+//! Admission control: a global in-flight bound plus per-client
+//! token-bucket quotas.
+//!
+//! Both knobs protect the coordinator's bounded tile queue from
+//! unbounded fan-in. The in-flight bound caps *concurrent* work (jobs
+//! admitted but not yet completed) across all connections; the token
+//! bucket caps *rate* per client IP. A denied frame costs the client
+//! one round trip (`ERR busy` / `ERR quota`), never a hang — payload
+//! bytes are consumed before the admission check so the stream stays
+//! framed.
+
+use std::collections::HashMap;
+use std::net::IpAddr;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+use std::time::Instant;
+
+/// Tuning for [`Admission`].
+#[derive(Debug, Clone, Copy)]
+pub struct AdmissionConfig {
+    /// Maximum jobs admitted but not yet completed, across all
+    /// connections. `0` disables the bound.
+    pub max_inflight: usize,
+    /// Sustained per-client job rate (jobs/second). `<= 0.0` disables
+    /// quotas entirely.
+    pub quota_rps: f64,
+    /// Bucket capacity: how many jobs a client may burst above the
+    /// sustained rate.
+    pub quota_burst: f64,
+}
+
+impl Default for AdmissionConfig {
+    fn default() -> Self {
+        Self { max_inflight: 64, quota_rps: 0.0, quota_burst: 8.0 }
+    }
+}
+
+/// Why a frame was denied admission.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Deny {
+    /// The global in-flight bound is saturated (the 429 analogue).
+    Busy { inflight: usize, bound: usize },
+    /// This client's token bucket is empty.
+    Quota,
+}
+
+struct Bucket {
+    tokens: f64,
+    last: Instant,
+}
+
+/// Shared admission state. One instance per server; cheap to consult
+/// per frame (an atomic bump plus, when quotas are on, one short
+/// mutex-guarded map probe).
+pub struct Admission {
+    cfg: AdmissionConfig,
+    inflight: AtomicUsize,
+    buckets: Mutex<HashMap<IpAddr, Bucket>>,
+}
+
+/// Soft cap on tracked client IPs; beyond it, stale buckets (idle
+/// > 60 s) are evicted before inserting a new one.
+const MAX_TRACKED_CLIENTS: usize = 4096;
+
+impl Admission {
+    pub fn new(cfg: AdmissionConfig) -> Self {
+        Self { cfg, inflight: AtomicUsize::new(0), buckets: Mutex::new(HashMap::new()) }
+    }
+
+    /// Jobs currently admitted but not completed.
+    pub fn inflight(&self) -> usize {
+        self.inflight.load(Ordering::Relaxed)
+    }
+
+    /// Try to admit one job from `client`. On success the returned
+    /// guard holds the in-flight slot until dropped (job completion).
+    ///
+    /// Quota is charged before the in-flight probe: a rate-abusive
+    /// client burns its own bucket, not a global slot.
+    pub fn try_admit(&self, client: IpAddr) -> Result<InflightGuard<'_>, Deny> {
+        if self.cfg.quota_rps > 0.0 && !self.take_token(client) {
+            return Err(Deny::Quota);
+        }
+        if self.cfg.max_inflight > 0 {
+            let bound = self.cfg.max_inflight;
+            let res = self.inflight.fetch_update(Ordering::AcqRel, Ordering::Acquire, |n| {
+                if n < bound {
+                    Some(n + 1)
+                } else {
+                    None
+                }
+            });
+            if let Err(n) = res {
+                return Err(Deny::Busy { inflight: n, bound });
+            }
+        } else {
+            self.inflight.fetch_add(1, Ordering::AcqRel);
+        }
+        Ok(InflightGuard { adm: self })
+    }
+
+    fn take_token(&self, client: IpAddr) -> bool {
+        let now = Instant::now();
+        let mut map = self.buckets.lock().unwrap();
+        if !map.contains_key(&client) && map.len() >= MAX_TRACKED_CLIENTS {
+            map.retain(|_, b| now.duration_since(b.last).as_secs() < 60);
+        }
+        let bucket = map
+            .entry(client)
+            .or_insert_with(|| Bucket { tokens: self.cfg.quota_burst, last: now });
+        let dt = now.duration_since(bucket.last).as_secs_f64();
+        bucket.last = now;
+        bucket.tokens = (bucket.tokens + dt * self.cfg.quota_rps).min(self.cfg.quota_burst);
+        if bucket.tokens >= 1.0 {
+            bucket.tokens -= 1.0;
+            true
+        } else {
+            false
+        }
+    }
+}
+
+/// RAII in-flight slot; dropping it (job done or errored) releases the
+/// slot back to the global bound.
+pub struct InflightGuard<'a> {
+    adm: &'a Admission,
+}
+
+impl Drop for InflightGuard<'_> {
+    fn drop(&mut self) {
+        self.adm.inflight.fetch_sub(1, Ordering::AcqRel);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::net::Ipv4Addr;
+
+    fn ip(last: u8) -> IpAddr {
+        IpAddr::V4(Ipv4Addr::new(10, 0, 0, last))
+    }
+
+    #[test]
+    fn inflight_bound_enforced_and_released_by_guard() {
+        let adm =
+            Admission::new(AdmissionConfig { max_inflight: 2, quota_rps: 0.0, quota_burst: 0.0 });
+        let g1 = adm.try_admit(ip(1)).unwrap();
+        let g2 = adm.try_admit(ip(1)).unwrap();
+        assert_eq!(adm.inflight(), 2);
+        match adm.try_admit(ip(1)) {
+            Err(Deny::Busy { inflight: 2, bound: 2 }) => {}
+            other => panic!("expected Busy, got {other:?}"),
+        }
+        drop(g1);
+        let g3 = adm.try_admit(ip(1)).expect("slot freed by guard drop");
+        drop(g2);
+        drop(g3);
+        assert_eq!(adm.inflight(), 0);
+    }
+
+    #[test]
+    fn zero_bound_means_unlimited() {
+        let adm =
+            Admission::new(AdmissionConfig { max_inflight: 0, quota_rps: 0.0, quota_burst: 0.0 });
+        let guards: Vec<_> = (0..100).map(|_| adm.try_admit(ip(1)).unwrap()).collect();
+        assert_eq!(adm.inflight(), 100);
+        drop(guards);
+        assert_eq!(adm.inflight(), 0);
+    }
+
+    #[test]
+    fn token_bucket_denies_after_burst_and_is_per_client() {
+        // Negligible refill rate: only the burst allowance matters.
+        let adm = Admission::new(AdmissionConfig {
+            max_inflight: 0,
+            quota_rps: 1e-9,
+            quota_burst: 2.0,
+        });
+        let _a1 = adm.try_admit(ip(1)).unwrap();
+        let _a2 = adm.try_admit(ip(1)).unwrap();
+        assert_eq!(adm.try_admit(ip(1)).err(), Some(Deny::Quota));
+        // A different client has its own bucket.
+        let _b1 = adm.try_admit(ip(2)).unwrap();
+    }
+
+    #[test]
+    fn quota_denial_does_not_leak_inflight_slots() {
+        let adm = Admission::new(AdmissionConfig {
+            max_inflight: 8,
+            quota_rps: 1e-9,
+            quota_burst: 1.0,
+        });
+        let g = adm.try_admit(ip(1)).unwrap();
+        assert_eq!(adm.try_admit(ip(1)).err(), Some(Deny::Quota));
+        assert_eq!(adm.inflight(), 1);
+        drop(g);
+        assert_eq!(adm.inflight(), 0);
+    }
+}

@@ -1,0 +1,36 @@
+//! L4 — the network serving front-end.
+//!
+//! PRs 1–5 built the compute stack: multiplier designs, the convolution
+//! cores, the im2col+GEMM nn layer and the L3 coordinator fleet. This
+//! module turns that fleet into a *service*: a `std::net`-only TCP
+//! listener speaking a line-delimited streaming job protocol
+//! ([`protocol`], the `SFC/1` grammar) with a minimal HTTP/1.1 surface
+//! on the same port ([`http`]: `GET /metrics`, `GET /healthz`).
+//!
+//! The production concerns live in their own submodules:
+//!
+//! * [`limits`] — admission control: a global in-flight job bound
+//!   (reject with `ERR busy` when saturated) plus per-client
+//!   token-bucket rate quotas (`ERR quota`).
+//! * [`shutdown`] — the SIGINT/SIGTERM flag the `serve` CLI polls to
+//!   drain in-flight work instead of aborting mid-batch.
+//! * [`service`] — the listener: bounded connection queue, fixed
+//!   handler pool (connection-per-worker), graceful drain-first stop.
+//! * [`client`] — the blocking client used by `load_gen`, the socket
+//!   tests, and scripts.
+//!
+//! Everything is hand-rolled on `std` — no tokio, hyper, or signal
+//! crates — matching the crate's offline, auditable-substrate rule
+//! (see [`crate::util`]).
+
+pub mod client;
+pub mod http;
+pub mod limits;
+pub mod protocol;
+pub mod service;
+pub mod shutdown;
+
+pub use client::{http_get, Client, ClientError, EdgeReply, GemmReply};
+pub use limits::{Admission, AdmissionConfig, Deny};
+pub use protocol::{ErrCode, Request};
+pub use service::{Server, ServerConfig, ServerStatsSnapshot};

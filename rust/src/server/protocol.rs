@@ -1,0 +1,432 @@
+//! The `SFC/1` wire protocol: one ASCII header line per frame, then a
+//! binary payload whose length is implied by the header dimensions.
+//!
+//! A client holds one TCP connection and streams frames — the video
+//! story: repeated edge/infer jobs over a single connection, with the
+//! server reusing its receive buffers between frames. The same listener
+//! also answers plain HTTP/1.1 (`GET /metrics`); the dispatcher sniffs
+//! the first header token (see [`crate::server::http::is_http`]).
+//!
+//! Request grammar (tokens are space-separated, line ends with `\n`):
+//!
+//! ```text
+//! EDGE w=W h=H [engine=NAME] [op=OP]\n   + W*H bytes   (u8 pixels, row-major)
+//! GEMM m=M k=K n=N [engine=NAME]\n       + M*K + K*N bytes (i8 A then i8 B, row-major)
+//! METRICS\n
+//! PING\n
+//! QUIT\n
+//! ```
+//!
+//! Responses:
+//!
+//! ```text
+//! OK w=W h=H latency_us=L\n   + W*H bytes            (EDGE)
+//! OK m=M n=N latency_us=L\n   + M*N*4 bytes i32 LE   (GEMM)
+//! OK bytes=B\n                + B bytes of text      (METRICS)
+//! OK pong\n                                          (PING)
+//! OK bye\n                                           (QUIT; server closes)
+//! ERR <code> <message>\n                             (any request)
+//! ```
+//!
+//! Error codes ([`ErrCode`]): `bad-request`, `unknown-engine`,
+//! `unsupported`, `busy` (in-flight bound reached — the 429 analogue),
+//! `quota` (per-client token bucket empty), `shutting-down`, `internal`.
+//! A denied job frame consumes its payload first, so the connection
+//! stays framed and usable — over-limit clients get a clean error line,
+//! never a hang or a desync.
+
+use crate::image::ops::Operator;
+use std::io::Read;
+use std::time::{Duration, Instant};
+
+/// Longest accepted header line (bytes, excluding the terminator).
+pub const MAX_HEADER_BYTES: usize = 4096;
+/// Largest accepted edge frame (pixels) — 16 Mpix bounds a single
+/// frame's allocation at 16 MiB.
+pub const MAX_EDGE_PIXELS: usize = 1 << 24;
+/// Largest accepted GEMM dimension.
+pub const MAX_GEMM_DIM: usize = 1 << 15;
+/// Largest accepted combined GEMM operand payload (bytes).
+pub const MAX_GEMM_PAYLOAD: usize = 1 << 26;
+
+/// One parsed request frame header.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum Request {
+    Ping,
+    Quit,
+    Metrics,
+    Edge { w: usize, h: usize, engine: Option<String>, op: Operator },
+    Gemm { m: usize, k: usize, n: usize, engine: Option<String> },
+}
+
+impl Request {
+    /// Payload bytes that follow this header on the wire.
+    pub fn payload_len(&self) -> usize {
+        match self {
+            Request::Edge { w, h, .. } => w * h,
+            Request::Gemm { m, k, n, .. } => m * k + k * n,
+            _ => 0,
+        }
+    }
+}
+
+/// Machine-readable error class carried on `ERR` lines.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ErrCode {
+    BadRequest,
+    UnknownEngine,
+    Unsupported,
+    Busy,
+    Quota,
+    ShuttingDown,
+    Internal,
+}
+
+impl ErrCode {
+    pub fn key(self) -> &'static str {
+        match self {
+            ErrCode::BadRequest => "bad-request",
+            ErrCode::UnknownEngine => "unknown-engine",
+            ErrCode::Unsupported => "unsupported",
+            ErrCode::Busy => "busy",
+            ErrCode::Quota => "quota",
+            ErrCode::ShuttingDown => "shutting-down",
+            ErrCode::Internal => "internal",
+        }
+    }
+}
+
+impl std::fmt::Display for ErrCode {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.key())
+    }
+}
+
+/// Parse one request header line. The error string is the human-readable
+/// message the server sends back as `ERR bad-request <message>`.
+pub fn parse_request(line: &str) -> Result<Request, String> {
+    let mut toks = line.split_ascii_whitespace();
+    let verb = toks.next().ok_or("empty request line")?;
+    let mut kv: Vec<(&str, &str)> = Vec::new();
+    for t in toks {
+        let (k, v) = t
+            .split_once('=')
+            .ok_or_else(|| format!("malformed token {t:?} (expected key=value)"))?;
+        kv.push((k, v));
+    }
+    let get = |key: &str| kv.iter().find(|(k, _)| *k == key).map(|(_, v)| *v);
+    let dim = |key: &str| -> Result<usize, String> {
+        get(key)
+            .ok_or_else(|| format!("{verb} needs {key}="))?
+            .parse::<usize>()
+            .map_err(|e| format!("bad {key}=: {e}"))
+    };
+    match verb {
+        "PING" => Ok(Request::Ping),
+        "QUIT" => Ok(Request::Quit),
+        "METRICS" => Ok(Request::Metrics),
+        "EDGE" => {
+            let (w, h) = (dim("w")?, dim("h")?);
+            if w == 0 || h == 0 {
+                return Err("EDGE needs w>0 and h>0".into());
+            }
+            if w.saturating_mul(h) > MAX_EDGE_PIXELS {
+                return Err(format!("EDGE frame {w}x{h} exceeds {MAX_EDGE_PIXELS} pixels"));
+            }
+            let op = match get("op") {
+                None => Operator::Laplacian,
+                Some(s) => s.parse::<Operator>().map_err(|e| format!("bad op=: {e}"))?,
+            };
+            Ok(Request::Edge { w, h, engine: get("engine").map(String::from), op })
+        }
+        "GEMM" => {
+            let (m, k, n) = (dim("m")?, dim("k")?, dim("n")?);
+            if m.max(k).max(n) > MAX_GEMM_DIM {
+                return Err(format!("GEMM dims {m}x{k}x{n} exceed {MAX_GEMM_DIM}"));
+            }
+            if m * k + k * n > MAX_GEMM_PAYLOAD {
+                return Err(format!(
+                    "GEMM operand payload {} exceeds {MAX_GEMM_PAYLOAD} bytes",
+                    m * k + k * n
+                ));
+            }
+            Ok(Request::Gemm { m, k, n, engine: get("engine").map(String::from) })
+        }
+        other => Err(format!("unknown verb {other:?}")),
+    }
+}
+
+/// Header-line builders — shared by [`crate::server::client::Client`]
+/// and the tests, so both sides of the wire agree on the grammar.
+pub fn edge_header(w: usize, h: usize, engine: Option<&str>, op: Operator) -> String {
+    let engine = engine.map(|e| format!(" engine={e}")).unwrap_or_default();
+    format!("EDGE w={w} h={h} op={}{engine}\n", op.key())
+}
+
+pub fn gemm_header(m: usize, k: usize, n: usize, engine: Option<&str>) -> String {
+    let engine = engine.map(|e| format!(" engine={e}")).unwrap_or_default();
+    format!("GEMM m={m} k={k} n={n}{engine}\n")
+}
+
+/// Outcome of one non-blocking line poll (see [`FrameReader::poll_line`]).
+#[derive(Debug)]
+pub enum LineRead {
+    /// A complete header line (terminator stripped, `\r\n` tolerated).
+    Line(String),
+    /// Clean end of stream at a frame boundary.
+    Eof,
+    /// The read timed out. `partial` is true when header bytes are
+    /// already buffered (a client mid-send) — the caller should keep
+    /// waiting; with `partial == false` the connection is idle and may
+    /// be closed for drain.
+    Idle { partial: bool },
+}
+
+/// Buffered frame reader over a byte stream. Owns the receive buffer,
+/// which is reused across frames on a long-lived streaming connection —
+/// the server-side buffer-reuse half of the video story.
+///
+/// Timeout-aware: when the underlying socket carries a read timeout,
+/// [`FrameReader::poll_line`] surfaces idleness instead of failing, so
+/// the connection handler can poll its shutdown flag between frames.
+pub struct FrameReader {
+    buf: Vec<u8>,
+    start: usize,
+}
+
+impl FrameReader {
+    pub fn new() -> Self {
+        Self { buf: Vec::with_capacity(1024), start: 0 }
+    }
+
+    fn compact(&mut self) {
+        if self.start > 0 {
+            self.buf.drain(..self.start);
+            self.start = 0;
+        }
+    }
+
+    fn pending(&self) -> usize {
+        self.buf.len() - self.start
+    }
+
+    /// Poll for the next header line. Returns [`LineRead::Idle`] on a
+    /// read timeout (socket `WouldBlock`/`TimedOut`), so a blocking
+    /// socket without a timeout never observes it.
+    pub fn poll_line(&mut self, r: &mut impl Read) -> std::io::Result<LineRead> {
+        loop {
+            if let Some(pos) = self.buf[self.start..].iter().position(|&b| b == b'\n') {
+                let end = self.start + pos;
+                let mut line_bytes = &self.buf[self.start..end];
+                if line_bytes.last() == Some(&b'\r') {
+                    line_bytes = &line_bytes[..line_bytes.len() - 1];
+                }
+                let line = std::str::from_utf8(line_bytes)
+                    .map_err(|_| {
+                        std::io::Error::new(
+                            std::io::ErrorKind::InvalidData,
+                            "non-UTF-8 header line",
+                        )
+                    })?
+                    .to_string();
+                self.start = end + 1;
+                return Ok(LineRead::Line(line));
+            }
+            if self.pending() > MAX_HEADER_BYTES {
+                return Err(std::io::Error::new(
+                    std::io::ErrorKind::InvalidData,
+                    "header line too long",
+                ));
+            }
+            self.compact();
+            let mut tmp = [0u8; 4096];
+            match r.read(&mut tmp) {
+                Ok(0) => {
+                    return if self.buf.is_empty() {
+                        Ok(LineRead::Eof)
+                    } else {
+                        Err(std::io::Error::new(
+                            std::io::ErrorKind::UnexpectedEof,
+                            "connection closed mid-header",
+                        ))
+                    };
+                }
+                Ok(n) => self.buf.extend_from_slice(&tmp[..n]),
+                Err(e)
+                    if matches!(
+                        e.kind(),
+                        std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut
+                    ) =>
+                {
+                    return Ok(LineRead::Idle { partial: !self.buf.is_empty() });
+                }
+                Err(e) if e.kind() == std::io::ErrorKind::Interrupted => {}
+                Err(e) => return Err(e),
+            }
+        }
+    }
+
+    /// Read exactly `out.len()` payload bytes, draining any bytes already
+    /// buffered behind the header first. Once a header has arrived the
+    /// frame is always finished (drain semantics), but a peer that goes
+    /// silent mid-payload for longer than `max_idle` (consecutively)
+    /// errors out instead of pinning the handler forever.
+    pub fn read_exact_payload(
+        &mut self,
+        r: &mut impl Read,
+        out: &mut [u8],
+        max_idle: Duration,
+    ) -> std::io::Result<()> {
+        let take = self.pending().min(out.len());
+        if take > 0 {
+            out[..take].copy_from_slice(&self.buf[self.start..self.start + take]);
+            self.start += take;
+            if self.start == self.buf.len() {
+                self.buf.clear();
+                self.start = 0;
+            }
+        }
+        let mut filled = take;
+        let mut idle_since: Option<Instant> = None;
+        while filled < out.len() {
+            match r.read(&mut out[filled..]) {
+                Ok(0) => {
+                    return Err(std::io::Error::new(
+                        std::io::ErrorKind::UnexpectedEof,
+                        "connection closed mid-payload",
+                    ));
+                }
+                Ok(n) => {
+                    filled += n;
+                    idle_since = None;
+                }
+                Err(e)
+                    if matches!(
+                        e.kind(),
+                        std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut
+                    ) =>
+                {
+                    let t = *idle_since.get_or_insert_with(Instant::now);
+                    if t.elapsed() > max_idle {
+                        return Err(std::io::Error::new(
+                            std::io::ErrorKind::TimedOut,
+                            "peer stalled mid-payload",
+                        ));
+                    }
+                }
+                Err(e) if e.kind() == std::io::ErrorKind::Interrupted => {}
+                Err(e) => return Err(e),
+            }
+        }
+        Ok(())
+    }
+}
+
+impl Default for FrameReader {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+/// Parse the `k=v` tokens of an `OK` response line (client side).
+pub fn parse_ok_fields(line: &str) -> Vec<(String, String)> {
+    line.split_ascii_whitespace()
+        .skip(1) // "OK"
+        .filter_map(|t| t.split_once('='))
+        .map(|(k, v)| (k.to_string(), v.to_string()))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_every_verb() {
+        assert_eq!(parse_request("PING").unwrap(), Request::Ping);
+        assert_eq!(parse_request("QUIT").unwrap(), Request::Quit);
+        assert_eq!(parse_request("METRICS").unwrap(), Request::Metrics);
+        let e = parse_request("EDGE w=64 h=48 engine=proposed@8 op=sobel").unwrap();
+        assert_eq!(
+            e,
+            Request::Edge {
+                w: 64,
+                h: 48,
+                engine: Some("proposed@8".into()),
+                op: Operator::Sobel
+            }
+        );
+        assert_eq!(e.payload_len(), 64 * 48);
+        let g = parse_request("GEMM m=3 k=5 n=7").unwrap();
+        assert_eq!(g, Request::Gemm { m: 3, k: 5, n: 7, engine: None });
+        assert_eq!(g.payload_len(), 3 * 5 + 5 * 7);
+    }
+
+    #[test]
+    fn header_builders_roundtrip_through_parse() {
+        let h = edge_header(10, 20, Some("exact@8"), Operator::Roberts);
+        assert_eq!(
+            parse_request(h.trim_end()).unwrap(),
+            Request::Edge { w: 10, h: 20, engine: Some("exact@8".into()), op: Operator::Roberts }
+        );
+        let h = gemm_header(4, 6, 8, None);
+        assert_eq!(
+            parse_request(h.trim_end()).unwrap(),
+            Request::Gemm { m: 4, k: 6, n: 8, engine: None }
+        );
+    }
+
+    #[test]
+    fn rejects_malformed_and_oversized() {
+        assert!(parse_request("").is_err());
+        assert!(parse_request("NOPE").is_err());
+        assert!(parse_request("EDGE w=4").is_err(), "missing h=");
+        assert!(parse_request("EDGE w=0 h=4").is_err(), "zero dim");
+        assert!(parse_request("EDGE w=99999999 h=99999999").is_err(), "pixel bound");
+        assert!(parse_request("EDGE w=4 h=4 op=nope").is_err(), "unknown operator");
+        assert!(parse_request("EDGE w=4 h=4 junk").is_err(), "non-k=v token");
+        assert!(parse_request("GEMM m=4 k=5").is_err(), "missing n=");
+        assert!(parse_request("GEMM m=40000 k=2 n=2").is_err(), "dim bound");
+    }
+
+    #[test]
+    fn frame_reader_splits_lines_and_payload() {
+        let wire = b"EDGE w=2 h=2\nABCDPING\r\n".to_vec();
+        let mut cur = std::io::Cursor::new(wire);
+        let mut fr = FrameReader::new();
+        match fr.poll_line(&mut cur).unwrap() {
+            LineRead::Line(l) => assert_eq!(l, "EDGE w=2 h=2"),
+            other => panic!("{other:?}"),
+        }
+        let mut payload = [0u8; 4];
+        fr.read_exact_payload(&mut cur, &mut payload, Duration::from_secs(1)).unwrap();
+        assert_eq!(&payload, b"ABCD");
+        match fr.poll_line(&mut cur).unwrap() {
+            LineRead::Line(l) => assert_eq!(l, "PING", "CRLF stripped"),
+            other => panic!("{other:?}"),
+        }
+        assert!(matches!(fr.poll_line(&mut cur).unwrap(), LineRead::Eof));
+    }
+
+    #[test]
+    fn frame_reader_rejects_unterminated_monster_header() {
+        let wire = vec![b'x'; MAX_HEADER_BYTES + 10];
+        let mut cur = std::io::Cursor::new(wire);
+        let mut fr = FrameReader::new();
+        assert!(fr.poll_line(&mut cur).is_err());
+    }
+
+    #[test]
+    fn eof_mid_header_is_an_error_not_a_clean_close() {
+        let mut cur = std::io::Cursor::new(b"EDGE w=2".to_vec());
+        let mut fr = FrameReader::new();
+        assert!(fr.poll_line(&mut cur).is_err());
+    }
+
+    #[test]
+    fn ok_field_parse() {
+        let f = parse_ok_fields("OK w=3 h=4 latency_us=120");
+        assert_eq!(f[0], ("w".into(), "3".into()));
+        assert_eq!(f[2], ("latency_us".into(), "120".into()));
+    }
+}

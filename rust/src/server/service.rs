@@ -1,0 +1,517 @@
+//! The serving front-end: a `std::net` TCP listener translating wire
+//! frames ([`super::protocol`]) into coordinator submissions.
+//!
+//! Shape: one non-blocking accept loop feeds accepted sockets into a
+//! bounded connection queue drained by a fixed pool of handler threads
+//! (connection-per-worker — a handler owns its connection for the
+//! connection's whole life, so a streaming client gets stable
+//! server-side buffers). When every handler is busy and the pending
+//! queue is full, new connections are refused with `ERR busy` instead
+//! of queueing unboundedly — admission control starts at accept time.
+//!
+//! Per frame, the handler: reads the header line (poll-style, so the
+//! stop flag is observed between frames), sniffs HTTP, reads the
+//! payload *before* the admission check (a denied frame must not desync
+//! the stream), consults [`super::limits::Admission`], submits to the
+//! coordinator, waits, replies. Job results are returned on the same
+//! connection in submission order.
+//!
+//! Shutdown ([`Server::stop`]) is drain-first: the accept loop closes,
+//! handlers finish the frame in flight (in-flight jobs complete against
+//! the still-running coordinator), idle streaming connections are
+//! closed politely, then the threads join. Stopping the server never
+//! stops the coordinator — that stays with the owner, so the CLI can
+//! print a final fleet snapshot after the listener is gone.
+
+use crate::coordinator::Coordinator;
+use crate::image::Image;
+use crate::nn::MatI8;
+use crate::util::pool::{bounded, Receiver, Sender, TrySendError};
+use std::io::Write;
+use std::net::{IpAddr, Ipv4Addr, SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+use super::http;
+use super::limits::{Admission, AdmissionConfig, Deny};
+use super::protocol::{self, ErrCode, FrameReader, LineRead, Request};
+
+/// Tuning for [`Server::start`].
+#[derive(Debug, Clone)]
+pub struct ServerConfig {
+    /// Listen address, e.g. `"127.0.0.1:7878"`; port 0 picks a free one
+    /// (read it back via [`Server::local_addr`]).
+    pub addr: String,
+    /// Handler threads — the maximum number of concurrently served
+    /// connections.
+    pub conn_workers: usize,
+    /// Accepted-but-unhandled connections allowed to wait for a free
+    /// handler before new arrivals are refused.
+    pub pending_conns: usize,
+    /// Global in-flight job bound (see [`AdmissionConfig`]); 0 = off.
+    pub max_inflight: usize,
+    /// Per-client sustained job rate; <= 0 disables quotas.
+    pub quota_rps: f64,
+    /// Per-client burst allowance above the sustained rate.
+    pub quota_burst: f64,
+}
+
+impl Default for ServerConfig {
+    fn default() -> Self {
+        Self {
+            addr: "127.0.0.1:0".into(),
+            conn_workers: 8,
+            pending_conns: 32,
+            max_inflight: 64,
+            quota_rps: 0.0,
+            quota_burst: 8.0,
+        }
+    }
+}
+
+/// Live server counters (all monotonic except `connections_open`).
+#[derive(Default)]
+struct ServerStats {
+    connections_total: AtomicU64,
+    connections_open: AtomicUsize,
+    requests_ok: AtomicU64,
+    rejected_busy: AtomicU64,
+    rejected_quota: AtomicU64,
+    protocol_errors: AtomicU64,
+    http_requests: AtomicU64,
+}
+
+/// Point-in-time copy of the server gauges, rendered by `/metrics` and
+/// the `serve` stdout report.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct ServerStatsSnapshot {
+    pub connections_total: u64,
+    pub connections_open: usize,
+    pub requests_ok: u64,
+    /// Frames denied by the in-flight bound, plus connections refused at
+    /// accept time with a full pending queue.
+    pub rejected_busy: u64,
+    pub rejected_quota: u64,
+    pub protocol_errors: u64,
+    pub http_requests: u64,
+}
+
+impl ServerStats {
+    fn snapshot(&self) -> ServerStatsSnapshot {
+        ServerStatsSnapshot {
+            connections_total: self.connections_total.load(Ordering::Relaxed),
+            connections_open: self.connections_open.load(Ordering::Relaxed),
+            requests_ok: self.requests_ok.load(Ordering::Relaxed),
+            rejected_busy: self.rejected_busy.load(Ordering::Relaxed),
+            rejected_quota: self.rejected_quota.load(Ordering::Relaxed),
+            protocol_errors: self.protocol_errors.load(Ordering::Relaxed),
+            http_requests: self.http_requests.load(Ordering::Relaxed),
+        }
+    }
+}
+
+/// State shared by the accept loop and every handler thread.
+struct ServerShared {
+    coord: Arc<Coordinator>,
+    admission: Admission,
+    stats: ServerStats,
+    /// Per-instance stop flag (NOT the process-global
+    /// [`super::shutdown`] flag — parallel tests each run their own
+    /// server and must not observe each other's shutdowns).
+    stop: AtomicBool,
+}
+
+/// A running serving front-end. Stop it with [`Server::stop`] (drains
+/// and joins) or just drop it (same drain path).
+pub struct Server {
+    shared: Arc<ServerShared>,
+    local_addr: SocketAddr,
+    accept_thread: Option<JoinHandle<()>>,
+    handler_threads: Vec<JoinHandle<()>>,
+}
+
+/// Socket read timeout on handler connections: the poll tick at which
+/// idle streaming connections observe the stop flag.
+const READ_TICK: Duration = Duration::from_millis(100);
+/// Longest a client may stall mid-payload before the frame errors out.
+const PAYLOAD_IDLE_LIMIT: Duration = Duration::from_secs(60);
+/// Accept-loop sleep when no connection is pending.
+const ACCEPT_IDLE: Duration = Duration::from_millis(10);
+
+impl Server {
+    /// Bind `cfg.addr` and start the accept loop plus handler pool. The
+    /// server borrows the coordinator via `Arc` and never shuts it down.
+    pub fn start(coord: Arc<Coordinator>, cfg: ServerConfig) -> crate::Result<Self> {
+        assert!(cfg.conn_workers >= 1 && cfg.pending_conns >= 1);
+        let listener = TcpListener::bind(&cfg.addr)
+            .map_err(|e| crate::util::error::Error::msg(format!("bind {}: {e}", cfg.addr)))?;
+        let local_addr = listener
+            .local_addr()
+            .map_err(|e| crate::util::error::Error::msg(format!("local_addr: {e}")))?;
+        listener
+            .set_nonblocking(true)
+            .map_err(|e| crate::util::error::Error::msg(format!("set_nonblocking: {e}")))?;
+        let shared = Arc::new(ServerShared {
+            coord,
+            admission: Admission::new(AdmissionConfig {
+                max_inflight: cfg.max_inflight,
+                quota_rps: cfg.quota_rps,
+                quota_burst: cfg.quota_burst,
+            }),
+            stats: ServerStats::default(),
+            stop: AtomicBool::new(false),
+        });
+        let (conn_tx, conn_rx) = bounded::<TcpStream>(cfg.pending_conns);
+        let handler_threads = (0..cfg.conn_workers)
+            .map(|i| {
+                let rx = conn_rx.clone();
+                let shared = shared.clone();
+                std::thread::Builder::new()
+                    .name(format!("sfcmul-conn-{i}"))
+                    .spawn(move || handler_loop(rx, shared))
+                    .expect("spawn connection handler")
+            })
+            .collect();
+        let accept_thread = {
+            let shared = shared.clone();
+            std::thread::Builder::new()
+                .name("sfcmul-accept".into())
+                .spawn(move || accept_loop(listener, conn_tx, shared))
+                .expect("spawn accept loop")
+        };
+        Ok(Self { shared, local_addr, accept_thread: Some(accept_thread), handler_threads })
+    }
+
+    /// The bound address (resolves port 0).
+    pub fn local_addr(&self) -> SocketAddr {
+        self.local_addr
+    }
+
+    /// Point-in-time server gauges.
+    pub fn stats(&self) -> ServerStatsSnapshot {
+        self.shared.stats.snapshot()
+    }
+
+    /// Raise the stop flag without blocking (the drain happens in
+    /// [`Server::stop`] / drop).
+    pub fn request_stop(&self) {
+        self.shared.stop.store(true, Ordering::SeqCst);
+    }
+
+    /// Graceful shutdown: stop accepting, let handlers finish their
+    /// in-flight frames, join all threads. Returns the final gauges.
+    pub fn stop(mut self) -> ServerStatsSnapshot {
+        self.stop_inner();
+        self.shared.stats.snapshot()
+    }
+
+    fn stop_inner(&mut self) {
+        self.shared.stop.store(true, Ordering::SeqCst);
+        if let Some(t) = self.accept_thread.take() {
+            // Joining the accept thread drops the connection sender,
+            // which closes the queue once handlers drain it.
+            let _ = t.join();
+        }
+        for t in self.handler_threads.drain(..) {
+            let _ = t.join();
+        }
+    }
+}
+
+impl Drop for Server {
+    fn drop(&mut self) {
+        self.stop_inner();
+    }
+}
+
+fn accept_loop(listener: TcpListener, conn_tx: Sender<TcpStream>, shared: Arc<ServerShared>) {
+    while !shared.stop.load(Ordering::SeqCst) {
+        match listener.accept() {
+            Ok((sock, _peer)) => {
+                let _ = sock.set_nodelay(true);
+                let _ = sock.set_read_timeout(Some(READ_TICK));
+                match conn_tx.try_send(sock) {
+                    Ok(()) => {}
+                    Err(TrySendError::Full(mut sock)) => {
+                        // Every handler busy and the pending queue full:
+                        // refuse at the door rather than queue unboundedly.
+                        shared.stats.rejected_busy.fetch_add(1, Ordering::Relaxed);
+                        let _ = sock.write_all(
+                            format!("ERR {} server at connection capacity\n", ErrCode::Busy)
+                                .as_bytes(),
+                        );
+                    }
+                    Err(TrySendError::Closed(_)) => return,
+                }
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                std::thread::sleep(ACCEPT_IDLE);
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => {}
+            Err(_) => std::thread::sleep(ACCEPT_IDLE),
+        }
+    }
+    // conn_tx drops here; handlers drain the pending queue then exit.
+}
+
+fn handler_loop(rx: Receiver<TcpStream>, shared: Arc<ServerShared>) {
+    while let Some(sock) = rx.recv() {
+        shared.stats.connections_total.fetch_add(1, Ordering::Relaxed);
+        shared.stats.connections_open.fetch_add(1, Ordering::Relaxed);
+        handle_conn(sock, &shared);
+        shared.stats.connections_open.fetch_sub(1, Ordering::Relaxed);
+    }
+}
+
+/// Why the connection ended — purely informational; errors writing the
+/// goodbye are ignored (the peer may already be gone).
+fn handle_conn(mut sock: TcpStream, shared: &ServerShared) {
+    let peer_ip =
+        sock.peer_addr().map(|a| a.ip()).unwrap_or(IpAddr::V4(Ipv4Addr::LOCALHOST));
+    let mut reader = FrameReader::new();
+    // Receive buffer reused across every frame of this connection (the
+    // streaming/video story: per-frame allocation is one payload clone,
+    // not a fresh read buffer).
+    let mut payload: Vec<u8> = Vec::new();
+    loop {
+        let line = match reader.poll_line(&mut sock) {
+            Ok(LineRead::Line(l)) => l,
+            Ok(LineRead::Eof) => return,
+            Ok(LineRead::Idle { partial }) => {
+                if shared.stop.load(Ordering::SeqCst) && !partial {
+                    // Idle streaming connection during drain: close
+                    // politely at a frame boundary.
+                    let _ = sock.write_all(
+                        format!("ERR {} server draining\n", ErrCode::ShuttingDown).as_bytes(),
+                    );
+                    return;
+                }
+                continue;
+            }
+            Err(_) => {
+                shared.stats.protocol_errors.fetch_add(1, Ordering::Relaxed);
+                return;
+            }
+        };
+        if line.is_empty() {
+            continue; // stray blank line between frames
+        }
+        if http::is_http(&line) {
+            shared.stats.http_requests.fetch_add(1, Ordering::Relaxed);
+            serve_http(&mut sock, &mut reader, &line, shared);
+            return; // HTTP exchanges are one-shot (Connection: close)
+        }
+        let req = match protocol::parse_request(&line) {
+            Ok(r) => r,
+            Err(msg) => {
+                shared.stats.protocol_errors.fetch_add(1, Ordering::Relaxed);
+                if write_err(&mut sock, ErrCode::BadRequest, &msg).is_err() {
+                    return;
+                }
+                continue;
+            }
+        };
+        // Read the payload BEFORE any admission decision: a denied frame
+        // must consume its bytes or the stream desyncs.
+        let need = req.payload_len();
+        payload.clear();
+        payload.resize(need, 0);
+        if need > 0
+            && reader
+                .read_exact_payload(&mut sock, &mut payload, PAYLOAD_IDLE_LIMIT)
+                .is_err()
+        {
+            shared.stats.protocol_errors.fetch_add(1, Ordering::Relaxed);
+            return;
+        }
+        let keep_going = match req {
+            Request::Ping => sock.write_all(b"OK pong\n").is_ok(),
+            Request::Quit => {
+                let _ = sock.write_all(b"OK bye\n");
+                false
+            }
+            Request::Metrics => {
+                let text = http::render_metrics(
+                    &shared.coord.metrics(),
+                    &shared.stats.snapshot(),
+                );
+                sock.write_all(format!("OK bytes={}\n", text.len()).as_bytes()).is_ok()
+                    && sock.write_all(text.as_bytes()).is_ok()
+            }
+            Request::Edge { w, h, ref engine, op } => {
+                serve_edge(&mut sock, shared, peer_ip, w, h, engine.as_deref(), op, &payload)
+            }
+            Request::Gemm { m, k, n, ref engine } => {
+                serve_gemm(&mut sock, shared, peer_ip, m, k, n, engine.as_deref(), &payload)
+            }
+        };
+        if !keep_going {
+            return;
+        }
+    }
+}
+
+/// Run one job frame's admission check; on denial, answer the client
+/// and report `None`. `Some(guard)` holds the in-flight slot.
+fn admit<'a>(
+    sock: &mut TcpStream,
+    shared: &'a ServerShared,
+    peer_ip: IpAddr,
+) -> Option<Result<super::limits::InflightGuard<'a>, ()>> {
+    if shared.stop.load(Ordering::SeqCst) {
+        let ok = write_err(sock, ErrCode::ShuttingDown, "server draining").is_ok();
+        return if ok { Some(Err(())) } else { None };
+    }
+    match shared.admission.try_admit(peer_ip) {
+        Ok(guard) => Some(Ok(guard)),
+        Err(Deny::Busy { inflight, bound }) => {
+            shared.stats.rejected_busy.fetch_add(1, Ordering::Relaxed);
+            let ok = write_err(
+                sock,
+                ErrCode::Busy,
+                &format!("{inflight}/{bound} jobs in flight, retry later"),
+            )
+            .is_ok();
+            if ok {
+                Some(Err(()))
+            } else {
+                None
+            }
+        }
+        Err(Deny::Quota) => {
+            shared.stats.rejected_quota.fetch_add(1, Ordering::Relaxed);
+            let ok = write_err(sock, ErrCode::Quota, "client rate quota exhausted").is_ok();
+            if ok {
+                Some(Err(()))
+            } else {
+                None
+            }
+        }
+    }
+}
+
+/// Returns false when the connection should close.
+#[allow(clippy::too_many_arguments)]
+fn serve_edge(
+    sock: &mut TcpStream,
+    shared: &ServerShared,
+    peer_ip: IpAddr,
+    w: usize,
+    h: usize,
+    engine: Option<&str>,
+    op: crate::image::ops::Operator,
+    payload: &[u8],
+) -> bool {
+    let guard = match admit(sock, shared, peer_ip) {
+        None => return false,
+        Some(Err(())) => return true, // denied but answered; stream continues
+        Some(Ok(g)) => g,
+    };
+    let img = Image { width: w, height: h, data: payload.to_vec() };
+    let res = match shared.coord.submit_to(img, engine, op) {
+        Ok(handle) => handle.wait(),
+        Err(e) => {
+            drop(guard);
+            return write_err(sock, classify(&e), &format!("{e}")).is_ok();
+        }
+    };
+    drop(guard); // job complete: release the in-flight slot before I/O
+    shared.stats.requests_ok.fetch_add(1, Ordering::Relaxed);
+    let header = format!(
+        "OK w={} h={} latency_us={}\n",
+        res.edges.width,
+        res.edges.height,
+        res.latency.as_micros()
+    );
+    sock.write_all(header.as_bytes()).is_ok() && sock.write_all(&res.edges.data).is_ok()
+}
+
+/// Returns false when the connection should close.
+#[allow(clippy::too_many_arguments)]
+fn serve_gemm(
+    sock: &mut TcpStream,
+    shared: &ServerShared,
+    peer_ip: IpAddr,
+    m: usize,
+    k: usize,
+    n: usize,
+    engine: Option<&str>,
+    payload: &[u8],
+) -> bool {
+    let guard = match admit(sock, shared, peer_ip) {
+        None => return false,
+        Some(Err(())) => return true,
+        Some(Ok(g)) => g,
+    };
+    let mut a = MatI8::new(m, k);
+    let mut b = MatI8::new(k, n);
+    for (dst, src) in a.data.iter_mut().zip(&payload[..m * k]) {
+        *dst = *src as i8;
+    }
+    for (dst, src) in b.data.iter_mut().zip(&payload[m * k..]) {
+        *dst = *src as i8;
+    }
+    let res = match shared.coord.submit_gemm(a, b, engine) {
+        Ok(handle) => handle.wait(),
+        Err(e) => {
+            drop(guard);
+            return write_err(sock, classify(&e), &format!("{e}")).is_ok();
+        }
+    };
+    drop(guard);
+    shared.stats.requests_ok.fetch_add(1, Ordering::Relaxed);
+    let header = format!(
+        "OK m={} n={} latency_us={}\n",
+        res.out.rows,
+        res.out.cols,
+        res.latency.as_micros()
+    );
+    if sock.write_all(header.as_bytes()).is_err() {
+        return false;
+    }
+    let mut bytes = Vec::with_capacity(res.out.data.len() * 4);
+    for v in &res.out.data {
+        bytes.extend_from_slice(&v.to_le_bytes());
+    }
+    sock.write_all(&bytes).is_ok()
+}
+
+/// Map a coordinator validation error to its wire code.
+fn classify(e: &crate::util::error::Error) -> ErrCode {
+    let msg = format!("{e}");
+    if msg.contains("unknown engine") {
+        ErrCode::UnknownEngine
+    } else if msg.contains("does not support") || msg.contains("does not serve") {
+        ErrCode::Unsupported
+    } else {
+        ErrCode::BadRequest
+    }
+}
+
+fn write_err(sock: &mut TcpStream, code: ErrCode, msg: &str) -> std::io::Result<()> {
+    // Keep the message single-line: the protocol is line-framed.
+    let msg = msg.replace('\n', " ");
+    sock.write_all(format!("ERR {code} {msg}\n").as_bytes())
+}
+
+/// Serve one HTTP exchange on a connection whose request line was
+/// already read. Remaining request headers are drained (until the blank
+/// line or idle) purely to be polite to the peer's write path.
+fn serve_http(sock: &mut TcpStream, reader: &mut FrameReader, request_line: &str, shared: &ServerShared) {
+    loop {
+        match reader.poll_line(sock) {
+            Ok(LineRead::Line(l)) if l.is_empty() => break,
+            Ok(LineRead::Line(_)) => continue,
+            _ => break, // EOF/idle/garbage: answer with what we have
+        }
+    }
+    let resp = match http::parse_request_line(request_line) {
+        Some((method, path)) => http::route(method, path, || {
+            http::render_metrics(&shared.coord.metrics(), &shared.stats.snapshot())
+        }),
+        None => http::response(400, "Bad Request", "text/plain", "bad request line\n"),
+    };
+    let _ = sock.write_all(resp.as_bytes());
+}

@@ -1,0 +1,345 @@
+//! E2E socket tests for the network serving front-end (ISSUE 6
+//! acceptance): concurrent clients stream ≥100 mixed conv/GEMM jobs
+//! over real TCP connections into a multi-design fleet; results must be
+//! byte-identical to direct in-process submission, over-limit clients
+//! must get clean protocol errors (never hangs), `GET /metrics` must
+//! render parseable per-engine quantiles, and shutdown must drain.
+//!
+//! Every server binds 127.0.0.1:0, so parallel tests never collide.
+
+use sfcmul::coordinator::{
+    Coordinator, CoordinatorConfig, LutTileEngine, Tile, TileEngine, TileOut,
+};
+use sfcmul::image::ops::apply_operator;
+use sfcmul::image::{synthetic_scene, Operator};
+use sfcmul::multipliers::{lut::product_table, registry};
+use sfcmul::nn::{gemm_tiled, MatI8};
+use sfcmul::server::{http_get, Client, ClientError, Server, ServerConfig};
+use sfcmul::util::prng::Xoshiro256;
+use std::io::{Read, Write};
+use std::sync::Arc;
+use std::time::Duration;
+
+const DESIGNS: [&str; 2] = ["proposed@8", "exact@8"];
+
+fn two_design_fleet(workers: usize) -> Coordinator {
+    let named: Vec<(String, Arc<dyn TileEngine>)> = DESIGNS
+        .iter()
+        .map(|d| {
+            let model = registry().build_str(d).expect("registered design");
+            (d.to_string(), Arc::new(LutTileEngine::new(model.as_ref())) as _)
+        })
+        .collect();
+    Coordinator::start_named(
+        named,
+        CoordinatorConfig { workers, queue_capacity: 256, max_batch: 8 },
+    )
+}
+
+fn start(coord: Coordinator, cfg: ServerConfig) -> (Arc<Coordinator>, Server) {
+    let coord = Arc::new(coord);
+    let server = Server::start(coord.clone(), cfg).expect("server start");
+    (coord, server)
+}
+
+/// The acceptance soak: 4 client threads × 26 jobs = 104 ≥ 100 mixed
+/// edge (3 operators) + GEMM jobs, round-robin across both designs,
+/// all streamed over per-client persistent connections. Every reply
+/// must be byte-identical to the equivalent in-process computation,
+/// and `/metrics` must expose parseable per-engine p50/p99 rows.
+#[test]
+fn concurrent_mixed_load_is_bit_identical_to_in_process() {
+    const CLIENTS: usize = 4;
+    const JOBS: usize = 26;
+    let (coord, server) = start(
+        two_design_fleet(4),
+        ServerConfig { conn_workers: CLIENTS, max_inflight: 64, ..ServerConfig::default() },
+    );
+    let addr = server.local_addr();
+    let ops = [Operator::Laplacian, Operator::Sobel, Operator::Roberts];
+    std::thread::scope(|scope| {
+        for id in 0..CLIENTS {
+            scope.spawn(move || {
+                let mut client = Client::connect(addr).expect("connect");
+                let mut rng = Xoshiro256::seeded(0xc11e47 + id as u64);
+                for j in 0..JOBS {
+                    let design = DESIGNS[(id + j) % DESIGNS.len()];
+                    let model = registry().build_str(design).unwrap();
+                    if j % 4 == 3 {
+                        // Every 4th job: a quantized GEMM frame.
+                        let a = MatI8::random(17, 11, &mut rng);
+                        let b = MatI8::random(11, 13, &mut rng);
+                        let want = gemm_tiled(&a, &b, &product_table(model.as_ref()));
+                        let got = client.gemm(&a, &b, Some(design)).expect("gemm reply");
+                        assert_eq!(got.out, want, "client {id} job {j} ({design})");
+                    } else {
+                        let img =
+                            synthetic_scene(64 + 8 * (j % 3), 48, (id * JOBS + j) as u64);
+                        let op = ops[j % ops.len()];
+                        let want = apply_operator(&img, op, model.as_ref());
+                        let got = client.edge(&img, Some(design), op).expect("edge reply");
+                        assert_eq!(got.edges, want, "client {id} job {j} ({design} {op})");
+                    }
+                }
+                client.quit().expect("clean goodbye");
+            });
+        }
+    });
+
+    // 104 jobs served; counters agree across server and coordinator.
+    let stats = server.stats();
+    assert_eq!(stats.requests_ok, (CLIENTS * JOBS) as u64);
+    assert_eq!(stats.connections_total, CLIENTS as u64);
+    assert_eq!(stats.rejected_busy + stats.rejected_quota, 0);
+    let m = coord.metrics();
+    assert_eq!(m.jobs_accepted, (CLIENTS * JOBS) as u64);
+    assert_eq!(m.jobs_completed, (CLIENTS * JOBS) as u64);
+    assert_eq!(m.jobs_rejected, 0);
+
+    // GET /metrics on the same listener: parseable per-engine quantiles.
+    let (code, body) = http_get(addr, "/metrics").expect("http get");
+    assert_eq!(code, 200);
+    for design in DESIGNS {
+        for q in ["0.5", "0.99"] {
+            let needle =
+                format!("sfcmul_engine_job_latency_ms{{engine=\"{design}\",quantile=\"{q}\"}} ");
+            let line = body
+                .lines()
+                .find(|l| l.starts_with(&needle))
+                .unwrap_or_else(|| panic!("missing {needle:?} in:\n{body}"));
+            let value: f64 = line[needle.len()..].trim().parse().expect("parseable quantile");
+            assert!(value >= 0.0);
+        }
+    }
+    assert!(body.contains(&format!("sfcmul_jobs_completed_total {}", CLIENTS * JOBS)));
+
+    server.stop();
+    match Arc::try_unwrap(coord) {
+        Ok(c) => {
+            c.shutdown();
+        }
+        Err(_) => panic!("server.stop() must release every coordinator handle"),
+    }
+}
+
+/// Over-quota clients get a clean `ERR quota` reply — the connection
+/// stays framed and usable, and a fresh client (distinct bucket per
+/// address would need distinct IPs, so we verify recovery instead:
+/// waiting lets the bucket refill).
+#[test]
+fn over_quota_clients_get_clean_errors_not_hangs() {
+    let (coord, server) = start(
+        two_design_fleet(2),
+        ServerConfig {
+            max_inflight: 0,
+            // Slow refill (needs 200ms/token) so quick post-burst
+            // submissions reliably see denial even on a loaded machine,
+            // yet the recovery probe only waits 400ms.
+            quota_rps: 5.0,
+            quota_burst: 2.0,
+            ..ServerConfig::default()
+        },
+    );
+    let mut client = Client::connect(server.local_addr()).expect("connect");
+    let img = synthetic_scene(32, 32, 1);
+    // Burst of 2 admitted...
+    for _ in 0..2 {
+        client.edge(&img, None, Operator::Laplacian).expect("within burst");
+    }
+    // ...then immediate submissions are denied with the quota code.
+    let mut saw_quota = false;
+    for _ in 0..3 {
+        match client.edge(&img, None, Operator::Laplacian) {
+            Err(ClientError::Server { code, .. }) if code == "quota" => saw_quota = true,
+            Ok(_) => {} // a token may trickle in; fine
+            Err(e) => panic!("expected a clean quota denial, got {e}"),
+        }
+    }
+    assert!(saw_quota, "draining the burst must surface ERR quota");
+    assert!(server.stats().rejected_quota >= 1);
+    // The connection survived every denial: wait for a refill, resubmit.
+    std::thread::sleep(Duration::from_millis(400));
+    client.edge(&img, None, Operator::Laplacian).expect("bucket refilled");
+    client.quit().expect("clean goodbye");
+    server.stop();
+    drop(coord);
+}
+
+/// Engine that stalls each batch, keeping jobs in flight long enough to
+/// observably saturate a max_inflight=1 admission bound.
+struct SlowEngine(LutTileEngine);
+
+impl TileEngine for SlowEngine {
+    fn name(&self) -> String {
+        "slow".into()
+    }
+
+    fn process_batch(&self, tiles: &[Tile]) -> Vec<TileOut> {
+        std::thread::sleep(Duration::from_millis(150));
+        self.0.process_batch(tiles)
+    }
+}
+
+/// With max_inflight=1 and a slow engine, a second concurrent client is
+/// observably backpressured (`ERR busy`), and succeeds on retry once
+/// the slot frees.
+#[test]
+fn admission_bound_backpressures_and_recovers() {
+    let model = registry().build_str("proposed@8").unwrap();
+    let coord = Coordinator::start(
+        Arc::new(SlowEngine(LutTileEngine::new(model.as_ref()))),
+        CoordinatorConfig { workers: 2, queue_capacity: 64, max_batch: 8 },
+    );
+    let (coord, server) = start(
+        coord,
+        ServerConfig { conn_workers: 4, max_inflight: 1, ..ServerConfig::default() },
+    );
+    let addr = server.local_addr();
+    let img = synthetic_scene(64, 64, 3);
+    let occupant = std::thread::spawn({
+        let img = img.clone();
+        move || {
+            let mut c = Client::connect(addr).expect("connect");
+            // The occupant may lose the admission race to the hammer
+            // below — retry until it holds the slot once.
+            loop {
+                match c.edge(&img, None, Operator::Laplacian) {
+                    Ok(r) => return r,
+                    Err(ClientError::Server { code, .. }) if code == "busy" => continue,
+                    Err(e) => panic!("occupant: {e}"),
+                }
+            }
+        }
+    });
+    // While the occupant's job crawls through the slow engine, hammer
+    // the one-slot bound until we observe a busy rejection.
+    let mut client = Client::connect(addr).expect("connect");
+    let mut saw_busy = false;
+    for _ in 0..50 {
+        match client.edge(&img, None, Operator::Laplacian) {
+            Err(ClientError::Server { code, message }) if code == "busy" => {
+                assert!(message.contains("in flight"), "diagnostic message: {message}");
+                saw_busy = true;
+                break;
+            }
+            Ok(_) | Err(ClientError::Server { .. }) => {} // raced the slot; try again
+            Err(e) => panic!("expected busy denial or success, got {e}"),
+        }
+    }
+    assert!(saw_busy, "a 150ms/batch engine behind max_inflight=1 must surface ERR busy");
+    assert!(server.stats().rejected_busy >= 1);
+    occupant.join().expect("occupant thread");
+    // The denied connection recovers: retry until the slot frees.
+    let mut recovered = false;
+    for _ in 0..50 {
+        match client.edge(&img, None, Operator::Laplacian) {
+            Ok(_) => {
+                recovered = true;
+                break;
+            }
+            Err(ClientError::Server { code, .. }) if code == "busy" => {
+                std::thread::sleep(Duration::from_millis(50));
+            }
+            Err(e) => panic!("unexpected error during recovery: {e}"),
+        }
+    }
+    assert!(recovered, "ERR busy must be retryable, not terminal");
+    server.stop();
+    drop(coord);
+}
+
+/// Graceful stop: a job in flight when stop() is called completes and
+/// its reply is delivered; afterwards the listener is gone.
+#[test]
+fn graceful_stop_drains_inflight_jobs() {
+    let model = registry().build_str("proposed@8").unwrap();
+    let coord = Coordinator::start(
+        Arc::new(SlowEngine(LutTileEngine::new(model.as_ref()))),
+        CoordinatorConfig { workers: 2, queue_capacity: 64, max_batch: 8 },
+    );
+    let (coord, server) = start(coord, ServerConfig::default());
+    let addr = server.local_addr();
+    let img = synthetic_scene(64, 64, 9);
+    let want = {
+        let model = registry().build_str("proposed@8").unwrap();
+        apply_operator(&img, Operator::Laplacian, model.as_ref())
+    };
+    let inflight = std::thread::spawn({
+        let img = img.clone();
+        move || {
+            let mut c = Client::connect(addr).expect("connect");
+            c.edge(&img, None, Operator::Laplacian).expect("job survives the drain")
+        }
+    });
+    // Wait until the job is demonstrably admitted (accepted counter),
+    // then stop the server while it crawls through the slow engine.
+    let mut waited = 0u64;
+    while coord.metrics().jobs_accepted == 0 {
+        std::thread::sleep(Duration::from_millis(5));
+        waited += 5;
+        assert!(waited < 5_000, "job never reached the coordinator");
+    }
+    let stats = server.stop();
+    let got = inflight.join().expect("client thread");
+    assert_eq!(got.edges, want, "drained job is still bit-exact");
+    assert_eq!(stats.requests_ok, 1);
+    assert_eq!(stats.connections_open, 0, "all handlers joined");
+    // The listener is gone: new connections are refused (or reset).
+    assert!(
+        std::net::TcpStream::connect_timeout(&addr, Duration::from_millis(500)).is_err(),
+        "stopped server must not accept new connections"
+    );
+    // The coordinator outlives the server and still serves in-process.
+    assert_eq!(coord.metrics().jobs_completed, 1);
+    match Arc::try_unwrap(coord) {
+        Ok(c) => {
+            c.shutdown();
+        }
+        Err(_) => panic!("no coordinator handles may leak past stop()"),
+    }
+}
+
+/// The HTTP surface on the shared listener: /healthz, 404, 405.
+#[test]
+fn http_endpoints_route_correctly() {
+    let (coord, server) = start(two_design_fleet(2), ServerConfig::default());
+    let addr = server.local_addr();
+    let (code, body) = http_get(addr, "/healthz").expect("healthz");
+    assert_eq!((code, body.as_str()), (200, "ok\n"));
+    let (code, _) = http_get(addr, "/nope").expect("404 route");
+    assert_eq!(code, 404);
+    // Non-GET methods are 405 — raw socket, since the helper only GETs.
+    let mut sock = std::net::TcpStream::connect(addr).expect("connect");
+    sock.write_all(b"POST /metrics HTTP/1.1\r\nHost: x\r\n\r\n").expect("write");
+    let mut raw = String::new();
+    sock.read_to_string(&mut raw).expect("read");
+    assert!(raw.starts_with("HTTP/1.1 405"), "got: {raw}");
+    assert!(server.stats().http_requests >= 3);
+    server.stop();
+    drop(coord);
+}
+
+/// Protocol garbage gets `ERR bad-request` and the connection remains
+/// usable; the METRICS frame works over the job protocol too.
+#[test]
+fn protocol_errors_are_clean_and_non_fatal() {
+    let (coord, server) = start(two_design_fleet(2), ServerConfig::default());
+    let addr = server.local_addr();
+    let mut sock = std::net::TcpStream::connect(addr).expect("connect");
+    sock.write_all(b"FROBNICATE x=1\n").expect("write");
+    let mut buf = [0u8; 256];
+    let n = sock.read(&mut buf).expect("read");
+    let reply = String::from_utf8_lossy(&buf[..n]);
+    assert!(reply.starts_with("ERR bad-request"), "got: {reply}");
+    drop(sock);
+
+    // A well-formed client on a fresh connection still works, including
+    // METRICS over the job protocol.
+    let mut client = Client::connect(addr).expect("connect");
+    client.ping().expect("ping after garbage");
+    let text = client.metrics_text().expect("METRICS frame");
+    assert!(text.contains("sfcmul_server_protocol_errors_total 1"), "in:\n{text}");
+    client.quit().expect("clean goodbye");
+    server.stop();
+    drop(coord);
+}
