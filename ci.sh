@@ -27,6 +27,14 @@
 #   lock is only real once those rows are committed — a post-test
 #   `git diff` on the file is the gate. Until the blessed rows land in a
 #   commit, CI stays red and uploads them as the golden-pipeline artifact.
+# * Gate-stats lock: after the test leg, `sfcmul tables --id gates`
+#   renders the per-design netlist cost table (raw vs optimized) into
+#   out/gates.tsv. rust/tests/golden/gates.tsv is the committed baseline
+#   (blessed like pipeline.tsv: first toolchain run copies the table in,
+#   CI stays red until the file is committed). Once the baseline is live,
+#   the leg fails if any design's *optimized* gate count exceeds the
+#   committed figure — the optimization pipeline must never regress.
+#   Hosted CI uploads both files as the gate-stats artifact.
 # * `--bench-json`: after a green gate, additionally run the bench_conv,
 #   bench_nn, and bench_coordinator groups in quick mode with
 #   SFCMUL_BENCH_JSON pointing at BENCH_conv.json / BENCH_nn.json /
@@ -105,6 +113,67 @@ else
         fi
     else
         echo "golden file carries blessed rows (not a git checkout; commit check skipped)"
+    fi
+
+    echo "== gate stats (tables --id gates vs committed baseline) =="
+    gates_golden=rust/tests/golden/gates.tsv
+    mkdir -p out
+    if ! target/release/sfcmul tables --id gates --seed 42 > out/gates.tsv; then
+        echo "FAIL: sfcmul tables --id gates"
+        status=1
+    elif ! [ -f "$gates_golden" ] \
+        || ! grep -q -v -e '^#' -e '^design' -e '^[[:space:]]*$' "$gates_golden"; then
+        # Bootstrap: bless the measured table; the lock is real only once
+        # the file is committed (same contract as the pipeline golden).
+        cp out/gates.tsv "$gates_golden"
+        echo "FAIL: $gates_golden had no blessed rows; blessed this run's table —"
+        echo "      commit the file to activate the gate-count regression lock"
+        echo "      (hosted CI uploads it as the gate-stats artifact)"
+        status=1
+    elif ! awk -F'\t' '
+            FNR == NR {
+                if ($0 !~ /^#/ && $1 != "design" && NF > 3) base[$1] = $4
+                next
+            }
+            $0 !~ /^#/ && $1 != "design" && NF > 3 {
+                seen[$1] = 1
+                if (!($1 in base)) {
+                    printf "  new design %s has no baseline row — rebless gates.tsv\n", $1
+                    bad = 1
+                } else if ($4 + 0 > base[$1] + 0) {
+                    printf "  REGRESSION: %s optimized gate count %d > committed baseline %d\n", $1, $4, base[$1]
+                    bad = 1
+                }
+            }
+            END {
+                for (d in base) if (!(d in seen)) {
+                    printf "  stale baseline row %s — rebless gates.tsv\n", d
+                    bad = 1
+                }
+                exit bad
+            }
+        ' "$gates_golden" out/gates.tsv; then
+        echo "FAIL: optimized gate counts regressed against $gates_golden"
+        echo "      (if the growth is intentional, copy out/gates.tsv over the baseline and commit)"
+        status=1
+    else
+        echo "gate counts at or below the committed baseline"
+    fi
+
+    # The netlist_opt_equiv test blesses the proposed@8 Verilog golden on
+    # its first run; like the other goldens, the byte-for-byte lock is
+    # only real once the blessed file is committed.
+    vgolden=rust/tests/golden/proposed8.v
+    if ! [ -f "$vgolden" ] || ! grep -q -v -e '^[[:space:]]*//' -e '^[[:space:]]*$' "$vgolden"; then
+        echo "FAIL: $vgolden has no blessed Verilog body after the test leg"
+        status=1
+    elif git rev-parse --is-inside-work-tree >/dev/null 2>&1 \
+        && [ -n "$(git status --porcelain -- "$vgolden")" ]; then
+        echo "FAIL: $vgolden was (re)blessed by this run but not committed;"
+        echo "      commit the file to lock the Verilog export byte-for-byte"
+        status=1
+    else
+        echo "Verilog golden is blessed — export locked"
     fi
 fi
 

@@ -2,7 +2,7 @@
 //! sweeps and packed netlist simulation throughput per design.
 
 use sfcmul::compressors::{abc1_stats, abcd1_stats, all_abc1_designs, all_abcd1_designs};
-use sfcmul::netlist::{sim::PackedSim, Netlist};
+use sfcmul::netlist::prelude::{Netlist, PackedSim};
 use sfcmul::util::bench::Bench;
 
 fn main() {

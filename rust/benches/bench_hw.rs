@@ -5,9 +5,7 @@
 use sfcmul::hwmodel::raw_hw;
 use sfcmul::multipliers::verify::{bitsim_multiply_batch, netlist_multiply_all};
 use sfcmul::multipliers::{all_designs_hw, registry};
-use sfcmul::netlist::bitslice::BitSim;
-use sfcmul::netlist::sim::eval_outputs_bool;
-use sfcmul::netlist::{power, timing};
+use sfcmul::netlist::prelude::{eval_outputs_bool, power, timing, BitSim};
 use sfcmul::util::bench::Bench;
 
 fn main() {

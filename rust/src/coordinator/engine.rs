@@ -17,7 +17,7 @@ use crate::image::ops::{combine_magnitude, OpProgram, Operator};
 use crate::image::Image;
 use crate::multipliers::verify::netlist_multiply_all;
 use crate::multipliers::MultiplierModel;
-use crate::netlist::Netlist;
+use crate::netlist::prelude::Netlist;
 use std::collections::BTreeSet;
 use std::sync::{Arc, OnceLock};
 

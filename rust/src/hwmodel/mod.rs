@@ -14,7 +14,7 @@
 //! absolute numbers are the paper's own scale reflected back.
 
 use crate::multipliers::MultiplierModel;
-use crate::netlist::{power, timing};
+use crate::netlist::prelude::{power, timing};
 
 /// Paper Table 5, "Exact" row — the calibration anchor.
 pub const PAPER_EXACT_AREA_UM2: f64 = 2204.75;

@@ -11,11 +11,17 @@
 //!   thread pool) built from scratch because the build environment is
 //!   fully offline.
 //! * [`netlist`] — a miniature gate-level EDA toolkit: netlist construction,
-//!   functional simulation (scalar reference, word-level packed, and the
+//!   the mutable graph core with its optimization pass pipeline
+//!   ([`netlist::graph`]/[`netlist::opt`]: constant folding, structural
+//!   CSE, dead-gate elimination — run on every registry design per the
+//!   `:opt=` spec knob), structural Verilog export
+//!   ([`netlist::export_verilog`], `sfcmul export`), functional
+//!   simulation (scalar reference, word-level packed, and the
 //!   bitsliced 64-lane batch engine [`netlist::bitslice::BitSim`] with its
 //!   bit-matrix transposition layer — the substrate of every operand-space
 //!   sweep), static timing, unit-gate area and switching-activity power
 //!   models. This substitutes for the paper's Synopsys DC + UMC 90nm flow.
+//!   `use sfcmul::netlist::prelude::*` is the one-stop import.
 //! * [`circuits`] — generic adder/compressor building blocks (HA, FA, the
 //!   3:2 compressor of paper ref. [8], exact 4:2, ripple/carry-save adders,
 //!   Dadda-style column reduction).
@@ -25,8 +31,9 @@
 //!   (paper Tables 2 and 3), with probabilistic error statistics.
 //! * [`multipliers`] — the construction layer. [`multipliers::spec`]
 //!   defines the declarative [`multipliers::DesignSpec`] (compressor
-//!   family × bitwidth × truncation × compensation, round-tripping a
-//!   compact string form such as `proposed@16:comp=const`) and the
+//!   family × bitwidth × truncation × compensation × optimization level,
+//!   round-tripping a compact string form such as
+//!   `proposed@16:comp=const` or `exact@8:opt=none`) and the
 //!   [`multipliers::Registry`] that maps design names to factories —
 //!   every multiplier in the system is built through it. The paper's
 //!   comparison set (Tables 4/5) is registered out of the box;

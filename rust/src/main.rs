@@ -1,7 +1,7 @@
 //! `sfcmul` — CLI for the approximate signed multiplier reproduction.
 //!
 //! Subcommands:
-//!   tables   --id <t1|t2|t3|t4|t5|f9|f10|ops|nn|all> [--seed S] [--out out/]
+//!   tables   --id <t1|...|gates|all> [--seed S] [--out out/]  (ids from tables::TABLES)
 //!   edge     --input img.pgm --output edges.pgm [--design SPEC] [--engine SPEC] [--op OP]
 //!   serve    --demo [--jobs N] [--workers W] [--designs SPEC,SPEC,...] [--engine SPEC] [--op OP]
 //!   serve    --listen ADDR [--conn-workers C] [--max-inflight J] [--quota-rps R] [--quota-burst B]
@@ -13,12 +13,13 @@
 //!   designs                                  (list the design registry)
 //!   ops                                      (list the operator registry)
 //!   dump-lut --design proposed@8 --out artifacts/proposed_lut_rust.i32
+//!   export   --design proposed@8 [--out design.v]   (structural Verilog)
 //!   hw       [--seed S]                      (raw unit-gate figures)
 //!   help
 //!
 //! Design specs (`--design` / `--designs`) follow the grammar of
-//! `multipliers::spec`: `family[@bits][:trunc=...][:comp=...]`, e.g.
-//! `proposed@8`, `proposed@16:comp=const`, `d2@8:trunc=none`. Engine
+//! `multipliers::spec`: `family[@bits][:trunc=...][:comp=...][:opt=...]`,
+//! e.g. `proposed@8`, `proposed@16:comp=const`, `d2@8:opt=none`. Engine
 //! specs (`--engine`) are one of `lut | model | rowbuf | bitsim | pjrt`,
 //! resolved through `coordinator::engines::resolve`. Operators (`--op`)
 //! are the registry of `image::ops` (`laplacian` default, `sobel`,
@@ -40,9 +41,12 @@ sfcmul — Approximate Signed Multiplier with Sign-Focused Compressors (CS.AR 20
 
 USAGE: sfcmul <subcommand> [options]
 
-  tables   --id t1|t2|t3|t4|t5|f9|f10|ops|nn|all [--seed S] [--out DIR]
-           regenerate a paper table/figure (ops = design x operator PSNR
-           matrix, nn = design x quantized-inference accuracy matrix)
+  tables   --id t1|t2|t3|t4|t5|f9|f10|ops|nn|sweep|ablation|gates|all
+           [--seed S] [--out DIR]
+           regenerate a paper table/figure or an extension study (ops =
+           design x operator PSNR, nn = quantized-inference accuracy,
+           gates = netlist stats pre/post optimization; `sfcmul tables`
+           with a bad id lists every registered table)
   edge     --input in.pgm --output out.pgm [--design SPEC] [--engine SPEC] [--op OP]
            run an operator on an image (or --demo for the synthetic scene)
   serve    --demo [--jobs N] [--workers W] [--batch B] [--designs SPEC,SPEC,...]
@@ -68,12 +72,15 @@ USAGE: sfcmul <subcommand> [options]
   ops      list every registered operator (kernels, post rule, fast path)
   dump-lut [--design SPEC] [--out FILE]
            export an 8-bit design's 256x256 product table (cross-check with python)
+  export   [--design SPEC] [--out FILE]
+           emit the design's gate-level netlist as structural Verilog
+           (after the spec's :opt= pass pipeline; stdout without --out)
   hw       [--seed S]
            raw unit-gate hardware figures per design
 
-design SPEC grammar:  family[@bits][:trunc=paper|none|K][:comp=paper|none|const]
+design SPEC grammar:  family[@bits][:trunc=paper|none|K][:comp=paper|none|const][:opt=none|fold|full]
   families: exact, proposed, d1, d2, d4, d5, d7, d12   (default bits: 8)
-  examples: proposed@8   proposed@16:comp=const   d2@8:trunc=none   exact@16
+  examples: proposed@8   proposed@16:comp=const   d2@8:trunc=none   exact@8:opt=none
 engine SPEC: lut (8-bit table, default) | model (any width) | rowbuf
              | bitsim (gate-level netlist via bitsliced sim, widths 8..=31) | pjrt
 operator OP: laplacian (default) | sobel | prewitt | scharr | roberts
@@ -97,6 +104,7 @@ fn main() {
         Some("designs") => cmd_designs(),
         Some("ops") => cmd_ops(),
         Some("dump-lut") => cmd_dump_lut(&args),
+        Some("export") => cmd_export(&args),
         Some("hw") => cmd_hw(&args),
         Some("help") | None => {
             print!("{USAGE}");
@@ -541,7 +549,7 @@ fn cmd_designs() -> i32 {
             wide
         );
     }
-    println!("options: :trunc=paper|none|K  :comp=paper|none|const");
+    println!("options: :trunc=paper|none|K  :comp=paper|none|const  :opt=none|fold|full");
     0
 }
 
@@ -618,6 +626,52 @@ fn cmd_dump_lut(args: &Args) -> i32 {
             1
         }
     }
+}
+
+/// Emit a design's netlist as structural Verilog (`sfcmul export`): the
+/// spec's `:opt=` level decides what the external flow sees — `:opt=none`
+/// exports the raw generator output, the default exports the optimized
+/// netlist.
+fn cmd_export(args: &Args) -> i32 {
+    let spec = match design_spec_of(args) {
+        Ok(s) => s,
+        Err(code) => return code,
+    };
+    let model = match registry().build(&spec) {
+        Ok(m) => m,
+        Err(e) => {
+            eprintln!("error: {e}");
+            return 1;
+        }
+    };
+    let nl = model.build_netlist();
+    let module = spec.to_string().replace(['@', ':', '='], "_");
+    let text = sfcmul::netlist::export_verilog(&nl, &module);
+    match args.get("out") {
+        Some(path) => {
+            let out = PathBuf::from(path);
+            if let Some(dir) = out.parent() {
+                if !dir.as_os_str().is_empty() {
+                    if let Err(e) = std::fs::create_dir_all(dir) {
+                        eprintln!("cannot create {}: {e}", dir.display());
+                        return 1;
+                    }
+                }
+            }
+            if let Err(e) = std::fs::write(&out, &text) {
+                eprintln!("cannot write {}: {e}", out.display());
+                return 1;
+            }
+            println!(
+                "wrote {} (module {module}, {} gates, {:.1} GE)",
+                out.display(),
+                nl.logic_gate_count(),
+                nl.area()
+            );
+        }
+        None => print!("{text}"),
+    }
+    0
 }
 
 fn cmd_hw(args: &Args) -> i32 {

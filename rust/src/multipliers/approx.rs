@@ -421,8 +421,9 @@ impl MultiplierModel for ApproxSignedMultiplier {
         // bus, so just take it (bits for empty low columns are const0 by
         // construction of the final ripple stage).
         nl.output_bus("p", &out);
-        nl.fold_constants();
-        nl.prune_dead();
+        // Raw generator output: constant columns, speculative reduction
+        // carries and duplicate cells stay in. The registry's `:opt=`
+        // wrapper (default full pipeline) shrinks it — see netlist::opt.
         nl
     }
 }
@@ -533,12 +534,17 @@ mod tests {
 
     #[test]
     fn netlist_structure_sane() {
-        let nl = proposed(8).build_netlist();
-        assert_eq!(nl.inputs().len(), 16);
-        assert_eq!(nl.outputs().len(), 16);
-        nl.validate().unwrap();
+        use crate::netlist::{optimize_netlist, OptLevel};
+        let raw = proposed(8).build_netlist();
+        assert_eq!(raw.inputs().len(), 16);
+        assert_eq!(raw.outputs().len(), 16);
+        raw.validate().unwrap();
+        // Compare optimized against optimized — the generator now emits
+        // raw structure, the pass pipeline does the shrinking.
+        let nl = optimize_netlist(&raw, OptLevel::Full).0;
+        let exact_raw = crate::multipliers::exact::ExactBaughWooley::new(8).build_netlist();
+        let exact = optimize_netlist(&exact_raw, OptLevel::Full).0;
         // The proposed multiplier must be substantially smaller than exact.
-        let exact = crate::multipliers::exact::ExactBaughWooley::new(8).build_netlist();
         assert!(
             nl.area() < 0.8 * exact.area(),
             "approx area {} vs exact {}",

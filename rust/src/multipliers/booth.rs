@@ -110,8 +110,8 @@ impl MultiplierModel for BoothRadix4 {
         }
         let product = reduce_columns(&mut nl, cols);
         nl.output_bus("p", &product[..2 * n]);
-        nl.fold_constants();
-        nl.prune_dead();
+        // Raw generator output; optimize through netlist::opt (the
+        // registry wrapper does this for registered designs).
         nl
     }
 }
@@ -165,8 +165,14 @@ mod tests {
     /// and report the ratio rather than a winner (documented in DESIGN.md).
     #[test]
     fn booth_vs_bw_areas_are_comparable() {
-        let booth = BoothRadix4::new(8).build_netlist();
-        let bw = crate::multipliers::ExactBaughWooley::new(8).build_netlist();
+        use crate::netlist::{optimize_netlist, OptLevel};
+        let booth =
+            optimize_netlist(&BoothRadix4::new(8).build_netlist(), OptLevel::Full).0;
+        let bw = optimize_netlist(
+            &crate::multipliers::ExactBaughWooley::new(8).build_netlist(),
+            OptLevel::Full,
+        )
+        .0;
         let ratio = booth.area() / bw.area();
         assert!((0.5..2.5).contains(&ratio), "area ratio {ratio}");
     }

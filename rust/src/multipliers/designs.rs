@@ -15,8 +15,9 @@
 
 use super::approx::{ApproxMulConfig, ApproxSignedMultiplier, Compensation, LspMode, Sf3Mode};
 use super::exact::ExactBaughWooley;
-use super::spec::{registry, CompressorChoice, DesignSpec};
+use super::spec::{registry, CompressorChoice, DesignSpec, Optimized};
 use super::traits::MultiplierModel;
+use crate::netlist::prelude::OptLevel;
 use crate::compressors::baselines::*;
 use crate::compressors::exact::{ExactAbc1, ExactAbcd1};
 use std::sync::Arc;
@@ -141,6 +142,10 @@ pub fn all_designs(n: usize) -> Vec<(DesignId, Arc<dyn MultiplierModel>)> {
 /// * Design [1] — dual-quality cells with the accurate path active: full
 ///   exact LSP plus per-cell mux overhead.
 pub fn build_design_hw(id: DesignId, n: usize) -> Arc<dyn MultiplierModel> {
+    // These variants bypass the registry, so they wrap themselves in the
+    // full optimization pipeline — the synthesis sweep the paper's DC flow
+    // would apply; Proposed routes through the registry and is wrapped
+    // there.
     let with = |id: DesignId, f: &dyn Fn(&mut ApproxMulConfig)| -> Arc<dyn MultiplierModel> {
         let mut cfg = ApproxMulConfig::paper_default(
             id.paper_name(),
@@ -150,10 +155,16 @@ pub fn build_design_hw(id: DesignId, n: usize) -> Arc<dyn MultiplierModel> {
             false,
         );
         f(&mut cfg);
-        Arc::new(ApproxSignedMultiplier::new(cfg))
+        Arc::new(Optimized::new(
+            Arc::new(ApproxSignedMultiplier::new(cfg)),
+            OptLevel::Full,
+        ))
     };
     match id {
-        DesignId::Exact => Arc::new(ExactBaughWooley::new(n)),
+        DesignId::Exact => Arc::new(Optimized::new(
+            Arc::new(ExactBaughWooley::new(n)),
+            OptLevel::Full,
+        )),
         DesignId::Proposed => build_design(DesignId::Proposed, n),
         DesignId::D2 => with(id, &|c| {
             c.abc1 = Arc::new(Ac5Du2);

@@ -63,8 +63,9 @@ impl MultiplierModel for ExactBaughWooley {
         cols.push(2 * n - 1, k2);
         let product = reduce_columns(&mut nl, cols);
         nl.output_bus("p", &product[..2 * n]);
-        nl.fold_constants();
-        nl.prune_dead();
+        // Raw generator output; the registry's `:opt=` wrapper (default
+        // full pipeline) folds the constant injections and sweeps the
+        // speculative reduction carries — see netlist::opt.
         nl
     }
 }
@@ -120,10 +121,16 @@ mod tests {
     }
 
     #[test]
-    fn structure_has_no_dead_logic() {
-        let nl = ExactBaughWooley::new(8).build_netlist();
-        assert_eq!(nl.validate().unwrap(), 0);
-        assert_eq!(nl.inputs().len(), 16);
-        assert_eq!(nl.outputs().len(), 16);
+    fn optimized_structure_has_no_dead_logic() {
+        use crate::netlist::{optimize_netlist, OptLevel};
+        let raw = ExactBaughWooley::new(8).build_netlist();
+        assert_eq!(raw.inputs().len(), 16);
+        assert_eq!(raw.outputs().len(), 16);
+        let (nl, report) = optimize_netlist(&raw, OptLevel::Full);
+        assert_eq!(nl.validate().unwrap(), 0, "pipeline leaves no dead logic");
+        assert!(
+            report.logic_after < report.logic_before,
+            "pipeline strictly shrinks the raw exact netlist ({report:?})"
+        );
     }
 }

@@ -20,9 +20,13 @@
 //!   the CSP slots — instantiating it with each baseline compressor
 //!   reproduces the paper's Table 4/5 comparison set (§5.1).
 //! * [`spec`] — the construction API: [`DesignSpec`] (compressor family ×
-//!   bitwidth × truncation × compensation, round-tripping a compact
-//!   string form) and the name → factory [`Registry`] every multiplier is
-//!   built through.
+//!   bitwidth × truncation × compensation × netlist-optimization level,
+//!   round-tripping a compact string form) and the name → factory
+//!   [`Registry`] every multiplier is built through. Factories emit the
+//!   raw generator netlist; [`Registry::build`] wraps each model in
+//!   [`spec::Optimized`] per the spec's `:opt=` knob (default: the full
+//!   graph pass pipeline), so downstream consumers simulate and cost the
+//!   optimized gate program.
 //! * [`designs`] — the named paper configurations (Proposed, [12], [5],
 //!   [4], [1], [7], [2]) as thin [`DesignId`] aliases over canonical
 //!   specs, plus the Table-5 hardware variants.
@@ -43,5 +47,5 @@ pub use approx::{ApproxMulConfig, ApproxSignedMultiplier, Compensation, LspMode,
 pub use designs::{all_designs, all_designs_hw, build_design, build_design_hw, design_by_name, DesignId};
 pub use booth::BoothRadix4;
 pub use exact::ExactBaughWooley;
-pub use spec::{registry, CompressorChoice, DesignSpec, Registry, TruncMode};
+pub use spec::{registry, CompressorChoice, DesignSpec, Optimized, Registry, TruncMode};
 pub use traits::MultiplierModel;

@@ -17,6 +17,7 @@
 //! bits    := integer in 2..=32 (approximate families: 4..=32); default 8
 //! option  := 'trunc=' ( 'paper' | 'none' | COLS )   -- truncated LSP columns
 //!          | 'comp='  ( 'paper' | 'none' | 'const' )-- error compensation
+//!          | 'opt='   ( 'none' | 'fold' | 'full' )  -- netlist optimization
 //! ```
 //!
 //! `trunc=paper` (default) truncates the paper's `N-1` low columns;
@@ -26,11 +27,18 @@
 //! since the constant it injects exists only to cancel truncation loss;
 //! `comp=const` additionally places the literal §3.3 constant bit at
 //! column `N-2` ([`Compensation::Literal`]); `comp=none` disables
-//! compensation. Options at their defaults are omitted from the canonical
-//! string form, so `Display` → `FromStr` round-trips exactly.
+//! compensation. `opt=full` (default) runs the whole graph pass pipeline
+//! ([`OptLevel::Full`]: constant folding ↔ CSE to a fixpoint + dead-gate
+//! sweep) over the built netlist; `opt=fold` stops after one folding
+//! round (the legacy builder behaviour); `opt=none` keeps the raw
+//! generator output — the functional model is identical at every level,
+//! only the gate-level structure differs. Options at their defaults are
+//! omitted from the canonical string form, so `Display` → `FromStr`
+//! round-trips exactly.
 //!
 //! Examples: `proposed@8`, `exact@16`, `d2@8:trunc=none`,
-//! `proposed@16:comp=const`, `exact@8:trunc=7:comp=none`.
+//! `proposed@16:comp=const`, `exact@8:trunc=7:comp=none`,
+//! `proposed@8:opt=none`.
 //!
 //! The `exact` family is special-cased: at its canonical spec it builds
 //! the plain [`ExactBaughWooley`] multiplier; with non-default options it
@@ -45,6 +53,7 @@ use crate::compressors::baselines::{
 };
 use crate::compressors::exact::{ExactAbc1, ExactAbcd1};
 use crate::compressors::proposed::{ProposedApproxAbc1, ProposedApproxAbcd1};
+use crate::netlist::prelude::{optimize_netlist, Netlist, OptLevel};
 use crate::util::error::Error;
 use std::collections::BTreeMap;
 use std::fmt;
@@ -182,6 +191,8 @@ pub struct DesignSpec {
     pub truncation: TruncMode,
     /// Error-compensation scheme (paper Eq. (5) ablation knob).
     pub compensation: Compensation,
+    /// Netlist optimization pipeline applied after construction.
+    pub opt: OptLevel,
 }
 
 impl DesignSpec {
@@ -192,13 +203,16 @@ impl DesignSpec {
             compressors,
             truncation: TruncMode::Paper,
             compensation: Compensation::Paper,
+            opt: OptLevel::Full,
         }
     }
 
     /// True when every option is at its paper default — such specs build
     /// the exact Table-4/5 configurations and carry the paper row names.
     pub fn is_canonical(&self) -> bool {
-        self.truncation == TruncMode::Paper && self.compensation == Compensation::Paper
+        self.truncation == TruncMode::Paper
+            && self.compensation == Compensation::Paper
+            && self.opt == OptLevel::Full
     }
 
     /// Model display name: the paper's row name for canonical specs, the
@@ -224,6 +238,9 @@ impl fmt::Display for DesignSpec {
             Compensation::Paper => {}
             Compensation::None => write!(f, ":comp=none")?,
             Compensation::Literal => write!(f, ":comp=const")?,
+        }
+        if self.opt != OptLevel::Full {
+            write!(f, ":opt={}", self.opt)?;
         }
         Ok(())
     }
@@ -298,9 +315,14 @@ impl std::str::FromStr for DesignSpec {
                         }
                     };
                 }
+                "opt" => {
+                    spec.opt = value
+                        .parse::<OptLevel>()
+                        .map_err(|e| Error::msg(format!("{e} in spec {s:?}")))?;
+                }
                 _ => {
                     return Err(Error::msg(format!(
-                        "unknown option {key:?} in spec {s:?} (trunc, comp)"
+                        "unknown option {key:?} in spec {s:?} (trunc, comp, opt)"
                     )))
                 }
             }
@@ -413,7 +435,14 @@ impl Registry {
                 self.names().join(", ")
             ))
         })?;
-        (self.entries[*idx].factory)(spec)
+        let model = (self.entries[*idx].factory)(spec)?;
+        // Factories build the raw generator netlist; the spec's `:opt=`
+        // knob decides how much the graph pass pipeline shrinks it. The
+        // wrapper is transparent to the functional model.
+        Ok(match spec.opt {
+            OptLevel::None => model,
+            level => Arc::new(Optimized::new(model, level)),
+        })
     }
 
     /// Parse a spec string and build it in one step.
@@ -520,6 +549,51 @@ fn build_builtin(
     Ok(Arc::new(ApproxSignedMultiplier::new(cfg)))
 }
 
+/// Transparent optimization wrapper: delegates the functional model and
+/// identity to the inner design, and runs the inner netlist through the
+/// graph pass pipeline ([`optimize_netlist`]) at the chosen level.
+/// [`Registry::build`] wraps every factory-built model with this per the
+/// spec's `:opt=` knob (`:opt=none` skips the wrapper entirely), so every
+/// registry consumer — the bitsim engines, the hardware models, the
+/// Verilog exporter — sees the optimized gate program by default.
+pub struct Optimized {
+    inner: Arc<dyn MultiplierModel>,
+    level: OptLevel,
+}
+
+impl Optimized {
+    pub fn new(inner: Arc<dyn MultiplierModel>, level: OptLevel) -> Self {
+        Self { inner, level }
+    }
+
+    pub fn level(&self) -> OptLevel {
+        self.level
+    }
+
+    /// The wrapped (raw-netlist) model.
+    pub fn inner(&self) -> &Arc<dyn MultiplierModel> {
+        &self.inner
+    }
+}
+
+impl MultiplierModel for Optimized {
+    fn name(&self) -> String {
+        self.inner.name()
+    }
+
+    fn bits(&self) -> usize {
+        self.inner.bits()
+    }
+
+    fn multiply(&self, a: i64, b: i64) -> i64 {
+        self.inner.multiply(a, b)
+    }
+
+    fn build_netlist(&self) -> Netlist {
+        optimize_netlist(&self.inner.build_netlist(), self.level).0
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -564,6 +638,7 @@ mod tests {
             "d2@8:trunc=nope",
             "d2@8:comp=wat",
             "d2@8:frob=1",
+            "d2@8:opt=wat",
             "d2@8:trunc",
             "proposed@8:trunc=16", // beyond the LSP region
             "proposed@8:trunc=8",  // == bits: would alias trunc=7
@@ -582,6 +657,8 @@ mod tests {
             "proposed@16:comp=const",
             "d5@12:trunc=3:comp=none",
             "exact@8:trunc=7",
+            "proposed@8:opt=none",
+            "exact@8:trunc=none:opt=fold",
         ];
         for s in variants {
             let spec = parse(s);
@@ -664,5 +741,32 @@ mod tests {
         // an explicit comp=const is honoured as written
         let lit = registry().build_str("proposed@8:trunc=none:comp=const").unwrap();
         assert_ne!(lit.multiply(1, 1), 1, "literal constant stays by request");
+    }
+
+    /// The `:opt=` knob: default is `full` (omitted from the canonical
+    /// string form), every level parses, and the built models share one
+    /// functional behaviour while their netlists shrink monotonically.
+    #[test]
+    fn opt_knob_parses_and_defaults_to_full() {
+        assert_eq!(parse("proposed@8").opt, OptLevel::Full);
+        assert_eq!(parse("proposed@8:opt=full"), parse("proposed@8"));
+        assert_eq!(parse("proposed@8:opt=none").opt, OptLevel::None);
+        assert_eq!(parse("proposed@8:opt=fold").opt, OptLevel::Fold);
+        assert_eq!(parse("proposed@8:opt=none").to_string(), "proposed@8:opt=none");
+    }
+
+    #[test]
+    fn opt_levels_shrink_netlists_monotonically() {
+        let raw = registry().build_str("proposed@8:opt=none").unwrap().build_netlist();
+        let folded = registry().build_str("proposed@8:opt=fold").unwrap().build_netlist();
+        let full = registry().build_str("proposed@8").unwrap().build_netlist();
+        assert!(folded.logic_gate_count() < raw.logic_gate_count(), "fold shrinks raw");
+        assert!(full.logic_gate_count() <= folded.logic_gate_count(), "full ≤ fold");
+        // the functional model is level-independent
+        let m_raw = registry().build_str("proposed@8:opt=none").unwrap();
+        let m_full = registry().build_str("proposed@8").unwrap();
+        for (a, b) in [(0i64, 0), (3, 5), (-7, 9), (127, -128), (-128, -128)] {
+            assert_eq!(m_raw.multiply(a, b), m_full.multiply(a, b), "{a}*{b}");
+        }
     }
 }

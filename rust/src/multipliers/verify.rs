@@ -10,8 +10,7 @@
 //! ~160 passes.
 
 use super::traits::{from_bits, mask, to_bits, MultiplierModel};
-use crate::netlist::bitslice::BitSim;
-use crate::netlist::Netlist;
+use crate::netlist::prelude::{BitSim, Netlist};
 use crate::util::prng::Xoshiro256;
 
 /// Concatenated input code of an operand pair for an N-bit multiplier

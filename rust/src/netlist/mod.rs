@@ -8,6 +8,19 @@
 //! * [`builder`] — [`Netlist`] construction: a netlist is an append-only DAG
 //!   of gates; construction order is a topological order by design, so
 //!   simulation and timing are single linear passes.
+//! * [`graph`] — the mutable [`Graph`] netlist core: stable [`NodeId`]s,
+//!   insert/replace/remove editing, fanout/DFS/topological traversal and
+//!   structural hashing. Netlists convert losslessly
+//!   (`Graph::from(&Netlist)` / [`Graph::compile`]); the optimizer works
+//!   here.
+//! * [`opt`] — the optimization pass pipeline over the graph:
+//!   [`opt::ConstFold`], [`opt::Cse`], [`opt::DeadGateElim`], sequenced by
+//!   [`opt::optimize`] per [`opt::OptLevel`] (the `:opt=` spec knob).
+//!   Every registry design runs through it by default, so simulation and
+//!   the hardware models see strictly fewer gates.
+//! * [`verilog`] — [`verilog::export_verilog`]: deterministic,
+//!   synthesizable structural Verilog for any netlist (`sfcmul export`),
+//!   closing the loop back to an external synthesis flow.
 //! * [`sim`] — functional simulation: a scalar reference evaluator plus
 //!   the word-level 64-lane [`sim::PackedSim`].
 //! * [`bitslice`] — the bitsliced *batch* engine ([`bitslice::BitSim`]):
@@ -27,6 +40,9 @@
 
 pub mod gate;
 pub mod builder;
+pub mod graph;
+pub mod opt;
+pub mod verilog;
 pub mod sim;
 pub mod bitslice;
 pub mod timing;
@@ -35,3 +51,23 @@ pub mod power;
 pub use bitslice::BitSim;
 pub use builder::{Netlist, SigId};
 pub use gate::GateKind;
+pub use graph::{Graph, Node, NodeId};
+pub use opt::{optimize, optimize_netlist, OptLevel, OptReport, Pass};
+pub use verilog::export_verilog;
+
+/// One-stop import for netlist consumers:
+/// `use sfcmul::netlist::prelude::*;` brings in construction
+/// ([`Netlist`]), the mutable core ([`Graph`]/[`NodeId`]), the pass
+/// pipeline, the Verilog exporter, and both simulation entry points.
+pub mod prelude {
+    pub use super::bitslice::BitSim;
+    pub use super::builder::{Gate, Netlist, SigId};
+    pub use super::gate::GateKind;
+    pub use super::graph::{Graph, Node, NodeId};
+    pub use super::opt::{
+        optimize, optimize_netlist, ConstFold, Cse, DeadGateElim, OptLevel, OptReport, Pass,
+    };
+    pub use super::sim::{eval_outputs_bool, PackedSim};
+    pub use super::verilog::export_verilog;
+    pub use super::{power, timing};
+}

@@ -1,0 +1,779 @@
+//! Optimization passes over the mutable [`Graph`] netlist core.
+//!
+//! Three synthesis-style passes, each a [`Pass`] over a [`Graph`]:
+//!
+//! * [`ConstFold`] — constant propagation and local identity rewriting
+//!   (generalises the folding the append-only builder used to do inline:
+//!   `AND(x,0)→0`, `XOR(x,1)→NOT x`, residual truth-table synthesis for
+//!   three-input gates with constant operands, plus equal-operand
+//!   identities like `XOR(x,x)→0` and `MAJ(x,x,c)→x` and double-negation
+//!   elimination that only a graph view can express).
+//! * [`Cse`] — common-subexpression sharing: structurally identical gates
+//!   (operand order canonicalised for symmetric kinds) merge into one.
+//! * [`DeadGateElim`] — backward sweep from the outputs; unreachable
+//!   gates are tombstoned (primary inputs always survive — interface
+//!   stability).
+//!
+//! [`optimize`] sequences them per [`OptLevel`] (the `:opt=` knob of
+//! [`DesignSpec`](crate::multipliers::DesignSpec)): `none` leaves the
+//! circuit as constructed, `fold` is one fold + dead sweep (the legacy
+//! builder behaviour), `full` iterates fold ↔ CSE to a fixpoint. Every
+//! pass is function-preserving by construction, and
+//! `rust/tests/netlist_opt_equiv.rs` proves it exhaustively at 8 bit for
+//! every registered design.
+
+use super::builder::Netlist;
+use super::gate::GateKind;
+use super::graph::{kind_is_symmetric, Graph, NodeId};
+use crate::util::error::Error;
+use std::collections::HashMap;
+use std::fmt;
+
+/// How hard to optimize a netlist (the `:opt=` spec knob).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, Default)]
+pub enum OptLevel {
+    /// The circuit exactly as the generator constructed it.
+    None,
+    /// One constant-folding pass + dead-gate sweep (the legacy inline
+    /// builder behaviour).
+    Fold,
+    /// Fold ↔ CSE to a fixpoint, then the dead-gate sweep.
+    #[default]
+    Full,
+}
+
+impl OptLevel {
+    /// Canonical spec-string key.
+    pub fn key(self) -> &'static str {
+        match self {
+            OptLevel::None => "none",
+            OptLevel::Fold => "fold",
+            OptLevel::Full => "full",
+        }
+    }
+
+    pub fn all() -> [OptLevel; 3] {
+        [OptLevel::None, OptLevel::Fold, OptLevel::Full]
+    }
+}
+
+impl fmt::Display for OptLevel {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.key())
+    }
+}
+
+impl std::str::FromStr for OptLevel {
+    type Err = Error;
+
+    fn from_str(s: &str) -> Result<Self, Error> {
+        match s.trim().to_lowercase().as_str() {
+            "none" => Ok(OptLevel::None),
+            "fold" => Ok(OptLevel::Fold),
+            "full" => Ok(OptLevel::Full),
+            other => Err(Error::msg(format!(
+                "invalid optimization level {other:?} (none | fold | full)"
+            ))),
+        }
+    }
+}
+
+/// A function-preserving rewrite over a [`Graph`]. `run` returns the
+/// number of rewrites applied (0 means the pass found nothing — the
+/// fixpoint signal).
+pub trait Pass {
+    fn name(&self) -> &'static str;
+    fn run(&self, g: &mut Graph) -> usize;
+}
+
+/// Per-pass accounting inside an [`OptReport`].
+#[derive(Debug, Clone)]
+pub struct PassStat {
+    pub pass: &'static str,
+    pub rewrites: usize,
+}
+
+/// What [`optimize`] did to a graph.
+#[derive(Debug, Clone)]
+pub struct OptReport {
+    pub level: OptLevel,
+    /// Live logic gates (inputs/constants excluded) before / after.
+    pub logic_before: usize,
+    pub logic_after: usize,
+    /// Area in gate equivalents before / after.
+    pub area_before: f64,
+    pub area_after: f64,
+    pub passes: Vec<PassStat>,
+}
+
+impl OptReport {
+    pub fn gates_removed(&self) -> usize {
+        self.logic_before.saturating_sub(self.logic_after)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Constant folding
+// ---------------------------------------------------------------------------
+
+/// Constant propagation + local identity rewriting (see module docs).
+pub struct ConstFold;
+
+/// Lattice value a node may resolve to during folding.
+#[derive(Clone, Copy, PartialEq)]
+enum Val {
+    Unknown,
+    /// Node is redundant: every use may be redirected to the target.
+    Alias(NodeId),
+}
+
+struct Folder {
+    val: Vec<Val>,
+    k0: Option<NodeId>,
+    k1: Option<NodeId>,
+}
+
+impl Folder {
+    /// Follow alias links to the representative node.
+    fn resolve(&self, mut id: NodeId) -> NodeId {
+        loop {
+            match self.val.get(id.index()) {
+                Some(Val::Alias(t)) => id = *t,
+                _ => return id,
+            }
+        }
+    }
+
+    /// Constant value of a resolved node, if it is one.
+    fn const_of(&self, g: &Graph, id: NodeId) -> Option<bool> {
+        match g.node(id).map(|n| n.kind) {
+            Some(GateKind::Const0) => Some(false),
+            Some(GateKind::Const1) => Some(true),
+            _ => None,
+        }
+    }
+
+    fn const_node(&mut self, g: &mut Graph, v: bool) -> NodeId {
+        let slot = if v { &mut self.k1 } else { &mut self.k0 };
+        *slot.get_or_insert_with(|| {
+            if v {
+                g.const1()
+            } else {
+                g.const0()
+            }
+        })
+    }
+
+    fn set_alias(&mut self, id: NodeId, to: NodeId) {
+        self.val[id.index()] = Val::Alias(to);
+    }
+}
+
+impl Pass for ConstFold {
+    fn name(&self) -> &'static str {
+        "const-fold"
+    }
+
+    fn run(&self, g: &mut Graph) -> usize {
+        use GateKind::*;
+        let order = g.topo_order();
+        let mut f = Folder { val: vec![Val::Unknown; g.id_bound()], k0: None, k1: None };
+        // Adopt the lowest pre-existing constant nodes as canonical.
+        for (id, n) in g.iter_live() {
+            match n.kind {
+                Const0 => f.k0 = f.k0.or(Some(id)),
+                Const1 => f.k1 = f.k1.or(Some(id)),
+                _ => {}
+            }
+        }
+        let mut changed = 0usize;
+
+        for id in order {
+            let node = *g.node(id).expect("topo order yields live nodes");
+            let arity = node.kind.arity();
+            if arity == 0 {
+                continue; // inputs and constants drive themselves
+            }
+            // Resolve operands through the alias map and rewrite the edges
+            // in place, so every later decision sees representatives only.
+            let mut ops = [NodeId(0); 3];
+            let mut konst = [None::<bool>; 3];
+            for slot in 0..arity {
+                let rid = f.resolve(node.ins[slot]);
+                ops[slot] = rid;
+                konst[slot] = f.const_of(g, rid);
+                g.node_mut(id).unwrap().ins[slot] = rid;
+            }
+
+            // Fully constant gate → becomes a constant.
+            if (0..arity).all(|s| konst[s].is_some()) {
+                let v = node.kind.eval_bool(
+                    konst[0].unwrap_or(false),
+                    konst[1].unwrap_or(false),
+                    konst[2].unwrap_or(false),
+                );
+                let canon = f.const_node(g, v);
+                if canon == id {
+                    continue; // it *is* the canonical constant already
+                }
+                f.set_alias(id, canon);
+                changed += 1;
+                continue;
+            }
+
+            match node.kind {
+                Buf => {
+                    f.set_alias(id, ops[0]);
+                    changed += 1;
+                }
+                Not => {
+                    // Double negation: NOT(NOT(x)) → x.
+                    let inner = g.node(ops[0]).unwrap();
+                    if inner.kind == Not {
+                        let x = f.resolve(inner.ins[0]);
+                        f.set_alias(id, x);
+                        changed += 1;
+                    }
+                }
+                And2 | Or2 | Nand2 | Nor2 | Xor2 | Xnor2 => {
+                    if let Some((ki, kv)) =
+                        (0..2).find_map(|s| konst[s].map(|v| (s, v)))
+                    {
+                        // One constant operand: 2-input identity table.
+                        let x = ops[1 - ki];
+                        match (node.kind, kv) {
+                            (And2, false) | (Nor2, true) => {
+                                let c = f.const_node(g, false);
+                                f.set_alias(id, c);
+                            }
+                            (Or2, true) | (Nand2, false) => {
+                                let c = f.const_node(g, true);
+                                f.set_alias(id, c);
+                            }
+                            (And2, true) | (Or2, false) | (Xor2, false) | (Xnor2, true) => {
+                                f.set_alias(id, x);
+                            }
+                            (Nand2, true) | (Nor2, false) | (Xor2, true) | (Xnor2, false) => {
+                                let n = g.node_mut(id).unwrap();
+                                n.kind = Not;
+                                n.ins[0] = x;
+                            }
+                            _ => unreachable!("2-input kinds only"),
+                        }
+                        changed += 1;
+                    } else if ops[0] == ops[1] {
+                        // Equal operands.
+                        match node.kind {
+                            And2 | Or2 => f.set_alias(id, ops[0]),
+                            Xor2 => {
+                                let c = f.const_node(g, false);
+                                f.set_alias(id, c);
+                            }
+                            Xnor2 => {
+                                let c = f.const_node(g, true);
+                                f.set_alias(id, c);
+                            }
+                            Nand2 | Nor2 => {
+                                let x = ops[0];
+                                let n = g.node_mut(id).unwrap();
+                                n.kind = Not;
+                                n.ins[0] = x;
+                            }
+                            _ => unreachable!("2-input kinds only"),
+                        }
+                        changed += 1;
+                    } else {
+                        // Complementary operands: one is NOT of the other.
+                        let is_compl = |g: &Graph, f: &Folder, x: NodeId, y: NodeId| {
+                            g.node(y)
+                                .map(|n| n.kind == Not && f.resolve(n.ins[0]) == x)
+                                .unwrap_or(false)
+                        };
+                        if is_compl(g, &f, ops[0], ops[1]) || is_compl(g, &f, ops[1], ops[0]) {
+                            let v = match node.kind {
+                                And2 | Nor2 | Xnor2 => false,
+                                Or2 | Nand2 | Xor2 => true,
+                                _ => unreachable!("2-input kinds only"),
+                            };
+                            let c = f.const_node(g, v);
+                            f.set_alias(id, c);
+                            changed += 1;
+                        }
+                    }
+                }
+                And3 | Or3 | Nand3 | Nor3 | Maj3 | Aoi21 | Oai21 | Mux2 => {
+                    if let Some((ki, kv)) =
+                        (0..3).find_map(|s| konst[s].map(|v| (s, v)))
+                    {
+                        // ≥1 constant operand: synthesise the residual
+                        // function of the two remaining operands from its
+                        // truth table (all 16 cases covered).
+                        let rest: Vec<NodeId> =
+                            (0..3).filter(|&s| s != ki).map(|s| ops[s]).collect();
+                        let eval = |p: bool, q: bool| {
+                            let mut abc = [false; 3];
+                            abc[ki] = kv;
+                            let mut it = [p, q].into_iter();
+                            for (s, slot) in abc.iter_mut().enumerate() {
+                                if s != ki {
+                                    *slot = it.next().unwrap();
+                                }
+                            }
+                            node.kind.eval_bool(abc[0], abc[1], abc[2])
+                        };
+                        let tt = (
+                            eval(false, false),
+                            eval(false, true),
+                            eval(true, false),
+                            eval(true, true),
+                        );
+                        let (p, q) = (rest[0], rest[1]);
+                        let mut mutate = |g: &mut Graph, kind: GateKind, a: NodeId, b: NodeId| {
+                            let n = g.node_mut(id).unwrap();
+                            n.kind = kind;
+                            n.ins[0] = a;
+                            n.ins[1] = b;
+                        };
+                        match tt {
+                            (false, false, false, false) => {
+                                let c = f.const_node(g, false);
+                                f.set_alias(id, c);
+                            }
+                            (true, true, true, true) => {
+                                let c = f.const_node(g, true);
+                                f.set_alias(id, c);
+                            }
+                            (false, false, true, true) => f.set_alias(id, p),
+                            (false, true, false, true) => f.set_alias(id, q),
+                            (true, true, false, false) => {
+                                let n = g.node_mut(id).unwrap();
+                                n.kind = Not;
+                                n.ins[0] = p;
+                            }
+                            (true, false, true, false) => {
+                                let n = g.node_mut(id).unwrap();
+                                n.kind = Not;
+                                n.ins[0] = q;
+                            }
+                            (false, false, false, true) => mutate(g, And2, p, q),
+                            (false, true, true, true) => mutate(g, Or2, p, q),
+                            (true, true, true, false) => mutate(g, Nand2, p, q),
+                            (true, false, false, false) => mutate(g, Nor2, p, q),
+                            (false, true, true, false) => mutate(g, Xor2, p, q),
+                            (true, false, false, true) => mutate(g, Xnor2, p, q),
+                            (false, false, true, false) => {
+                                // p & !q
+                                let nq = g.add(Not, &[q]);
+                                mutate(g, And2, p, nq);
+                            }
+                            (false, true, false, false) => {
+                                // !p & q
+                                let np = g.add(Not, &[p]);
+                                mutate(g, And2, np, q);
+                            }
+                            (true, true, false, true) => {
+                                // !p | q
+                                let np = g.add(Not, &[p]);
+                                mutate(g, Or2, np, q);
+                            }
+                            (true, false, true, true) => {
+                                // p | !q
+                                let nq = g.add(Not, &[q]);
+                                mutate(g, Or2, p, nq);
+                            }
+                        }
+                        changed += 1;
+                    } else {
+                        // No constants: equal-operand identities.
+                        let (a, b, c) = (ops[0], ops[1], ops[2]);
+                        let mut mutate2 =
+                            |g: &mut Graph, kind: GateKind, x: NodeId, y: NodeId| {
+                                let n = g.node_mut(id).unwrap();
+                                n.kind = kind;
+                                n.ins[0] = x;
+                                n.ins[1] = y;
+                            };
+                        let dup = if a == b {
+                            Some((a, c))
+                        } else if a == c {
+                            Some((a, b))
+                        } else if b == c {
+                            Some((b, a))
+                        } else {
+                            None
+                        };
+                        match (node.kind, dup) {
+                            (And3, Some((x, y))) => {
+                                mutate2(g, And2, x, y);
+                                changed += 1;
+                            }
+                            (Or3, Some((x, y))) => {
+                                mutate2(g, Or2, x, y);
+                                changed += 1;
+                            }
+                            (Nand3, Some((x, y))) => {
+                                mutate2(g, Nand2, x, y);
+                                changed += 1;
+                            }
+                            (Nor3, Some((x, y))) => {
+                                mutate2(g, Nor2, x, y);
+                                changed += 1;
+                            }
+                            (Maj3, Some((x, _))) => {
+                                // Two equal votes decide the majority.
+                                f.set_alias(id, x);
+                                changed += 1;
+                            }
+                            (Aoi21, _) if a == b => {
+                                // !((x & x) | c) = !(x | c)
+                                mutate2(g, Nor2, a, c);
+                                changed += 1;
+                            }
+                            (Oai21, _) if a == b => {
+                                // !((x | x) & c) = !(x & c)
+                                mutate2(g, Nand2, a, c);
+                                changed += 1;
+                            }
+                            (Mux2, _) if b == c => {
+                                // Equal branches: sel is irrelevant.
+                                f.set_alias(id, b);
+                                changed += 1;
+                            }
+                            (Mux2, _) if a == b => {
+                                // sel ? c : sel  ==  sel & c
+                                mutate2(g, And2, a, c);
+                                changed += 1;
+                            }
+                            (Mux2, _) if a == c => {
+                                // sel ? sel : b  ==  sel | b
+                                mutate2(g, Or2, a, b);
+                                changed += 1;
+                            }
+                            _ => {}
+                        }
+                    }
+                }
+                Input | Const0 | Const1 | Buf | Not => unreachable!("handled above"),
+            }
+        }
+
+        // Rewire outputs through the alias map.
+        for i in 0..g.outputs().len() {
+            let driver = g.outputs()[i].1;
+            let rid = f.resolve(driver);
+            if rid != driver {
+                g.set_output_driver(i, rid);
+            }
+        }
+        changed
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Common-subexpression elimination
+// ---------------------------------------------------------------------------
+
+/// Merge structurally identical gates (same kind, same operands up to
+/// commutation). Constants of the same polarity merge; primary inputs
+/// never do.
+pub struct Cse;
+
+impl Pass for Cse {
+    fn name(&self) -> &'static str {
+        "cse"
+    }
+
+    fn run(&self, g: &mut Graph) -> usize {
+        let order = g.topo_order();
+        let mut repr: Vec<Option<NodeId>> = vec![None; g.id_bound()];
+        let mut table: HashMap<(GateKind, [u32; 3]), NodeId> = HashMap::new();
+        let mut merged = 0usize;
+        for id in order {
+            let node = *g.node(id).expect("topo order yields live nodes");
+            if node.kind == GateKind::Input {
+                continue;
+            }
+            let arity = node.kind.arity();
+            // Rewrite operands through earlier merges.
+            let mut ops = [0u32; 3];
+            for slot in 0..arity {
+                let mut op = node.ins[slot];
+                while let Some(r) = repr[op.index()] {
+                    op = r;
+                }
+                g.node_mut(id).unwrap().ins[slot] = op;
+                ops[slot] = op.0;
+            }
+            // Canonical operand order for the hash key.
+            if kind_is_symmetric(node.kind) {
+                ops[..arity].sort_unstable();
+            } else if matches!(node.kind, GateKind::Aoi21 | GateKind::Oai21) {
+                ops[..2].sort_unstable();
+            }
+            match table.entry((node.kind, ops)) {
+                std::collections::hash_map::Entry::Occupied(e) => {
+                    repr[id.index()] = Some(*e.get());
+                    merged += 1;
+                }
+                std::collections::hash_map::Entry::Vacant(e) => {
+                    e.insert(id);
+                }
+            }
+        }
+        for i in 0..g.outputs().len() {
+            let mut driver = g.outputs()[i].1;
+            let mut moved = false;
+            while let Some(r) = repr[driver.index()] {
+                driver = r;
+                moved = true;
+            }
+            if moved {
+                g.set_output_driver(i, driver);
+            }
+        }
+        merged
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Dead-gate elimination
+// ---------------------------------------------------------------------------
+
+/// Tombstone every gate not reachable from an output (primary inputs
+/// always survive).
+pub struct DeadGateElim;
+
+impl Pass for DeadGateElim {
+    fn name(&self) -> &'static str {
+        "dead-gate-elim"
+    }
+
+    fn run(&self, g: &mut Graph) -> usize {
+        let reach = g.reachable_from_outputs();
+        let dead: Vec<NodeId> = g
+            .iter_live()
+            .filter(|(id, n)| !reach[id.index()] && n.kind != GateKind::Input)
+            .map(|(id, _)| id)
+            .collect();
+        g.remove_unchecked(&dead)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// The pipeline
+// ---------------------------------------------------------------------------
+
+/// Fixpoint cap for `full`: each productive fold↔CSE round strictly
+/// shrinks the live logic, so this is never reached in practice — it
+/// bounds the loop against pathological pass interactions.
+const MAX_ROUNDS: usize = 8;
+
+/// Run the pipeline the level asks for. Function-preserving at every
+/// level.
+pub fn optimize(g: &mut Graph, level: OptLevel) -> OptReport {
+    let logic_before = g.logic_gate_count();
+    let area_before = g.area();
+    let mut passes = Vec::new();
+    match level {
+        OptLevel::None => {}
+        OptLevel::Fold => {
+            passes.push(PassStat { pass: ConstFold.name(), rewrites: ConstFold.run(g) });
+            passes
+                .push(PassStat { pass: DeadGateElim.name(), rewrites: DeadGateElim.run(g) });
+        }
+        OptLevel::Full => {
+            for _ in 0..MAX_ROUNDS {
+                let folds = ConstFold.run(g);
+                passes.push(PassStat { pass: ConstFold.name(), rewrites: folds });
+                let merges = Cse.run(g);
+                passes.push(PassStat { pass: Cse.name(), rewrites: merges });
+                if folds + merges == 0 {
+                    break;
+                }
+            }
+            passes
+                .push(PassStat { pass: DeadGateElim.name(), rewrites: DeadGateElim.run(g) });
+        }
+    }
+    OptReport {
+        level,
+        logic_before,
+        logic_after: g.logic_gate_count(),
+        area_before,
+        area_after: g.area(),
+        passes,
+    }
+}
+
+/// Optimize an append-only [`Netlist`] through the graph core and
+/// re-linearise: `Netlist → Graph → passes → compile`. `OptLevel::None`
+/// returns the input unchanged (not even re-linearised), so `:opt=none`
+/// really is the raw generator output.
+pub fn optimize_netlist(nl: &Netlist, level: OptLevel) -> (Netlist, OptReport) {
+    if level == OptLevel::None {
+        let mut g = Graph::from(nl);
+        let report = optimize(&mut g, level);
+        return (nl.clone(), report);
+    }
+    let mut g = Graph::from(nl);
+    let report = optimize(&mut g, level);
+    (g.compile(), report)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::netlist::sim::eval_outputs_bool;
+    use crate::util::prng::Xoshiro256;
+
+    /// Random 4-input DAG with sprinkled constants (mirrors the legacy
+    /// builder fold test's generator).
+    fn random_graph(rng: &mut Xoshiro256) -> Graph {
+        let mut g = Graph::new("r");
+        let mut sigs: Vec<NodeId> = (0..4).map(|i| g.input(&format!("i{i}"))).collect();
+        sigs.push(g.const0());
+        sigs.push(g.const1());
+        for _ in 0..40 {
+            let pick = |rng: &mut Xoshiro256, sigs: &[NodeId]| {
+                sigs[rng.below(sigs.len() as u64) as usize]
+            };
+            let a = pick(rng, &sigs);
+            let b = pick(rng, &sigs);
+            let c = pick(rng, &sigs);
+            let s = match rng.below(12) {
+                0 => g.add(GateKind::And2, &[a, b]),
+                1 => g.add(GateKind::Or2, &[a, b]),
+                2 => g.add(GateKind::Nand2, &[a, b]),
+                3 => g.add(GateKind::Nor2, &[a, b]),
+                4 => g.add(GateKind::Xor2, &[a, b]),
+                5 => g.add(GateKind::Xnor2, &[a, b]),
+                6 => g.add(GateKind::Maj3, &[a, b, c]),
+                7 => g.add(GateKind::Mux2, &[a, b, c]),
+                8 => g.add(GateKind::Aoi21, &[a, b, c]),
+                9 => g.add(GateKind::Oai21, &[a, b, c]),
+                10 => g.add(GateKind::And3, &[a, b, c]),
+                _ => g.add(GateKind::Not, &[a]),
+            };
+            sigs.push(s);
+        }
+        for (i, &s) in sigs.iter().rev().take(4).enumerate() {
+            g.output(&format!("o{i}"), s);
+        }
+        g
+    }
+
+    fn truth_table(nl: &crate::netlist::Netlist) -> Vec<Vec<bool>> {
+        (0..16)
+            .map(|bits| {
+                eval_outputs_bool(
+                    nl,
+                    &[(bits & 1) != 0, (bits & 2) != 0, (bits & 4) != 0, (bits & 8) != 0],
+                )
+            })
+            .collect()
+    }
+
+    #[test]
+    fn every_level_preserves_function_on_random_dags() {
+        let mut rng = Xoshiro256::seeded(7);
+        for trial in 0..40 {
+            let g = random_graph(&mut rng);
+            let raw = g.compile();
+            let reference = truth_table(&raw);
+            for level in OptLevel::all() {
+                let (opt, report) = optimize_netlist(&raw, level);
+                assert_eq!(truth_table(&opt), reference, "trial {trial} level {level}");
+                assert!(
+                    report.logic_after <= report.logic_before,
+                    "trial {trial} level {level}: optimization must never grow the circuit"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn full_subsumes_fold() {
+        let mut rng = Xoshiro256::seeded(99);
+        for _ in 0..20 {
+            let g = random_graph(&mut rng);
+            let raw = g.compile();
+            let (folded, _) = optimize_netlist(&raw, OptLevel::Fold);
+            let (full, _) = optimize_netlist(&raw, OptLevel::Full);
+            assert!(full.logic_gate_count() <= folded.logic_gate_count());
+        }
+    }
+
+    #[test]
+    fn cse_merges_structural_duplicates_across_commutation() {
+        let mut g = Graph::new("c");
+        let a = g.input("a");
+        let b = g.input("b");
+        let x = g.add(GateKind::And2, &[a, b]);
+        let y = g.add(GateKind::And2, &[b, a]); // same gate, swapped operands
+        let z = g.add(GateKind::Xor2, &[x, y]); // = 0 once x and y merge
+        g.output("z", z);
+        let report = optimize(&mut g, OptLevel::Full);
+        assert!(report.passes.iter().any(|p| p.pass == "cse" && p.rewrites > 0));
+        let nl = g.compile();
+        // XOR(x, x) folds to constant 0 after the merge
+        assert_eq!(nl.logic_gate_count(), 0, "{:?}", nl.kind_histogram());
+        assert!(!eval_outputs_bool(&nl, &[true, true])[0]);
+        assert!(!eval_outputs_bool(&nl, &[true, false])[0]);
+    }
+
+    #[test]
+    fn const_fold_handles_equal_operand_identities() {
+        let mut g = Graph::new("e");
+        let a = g.input("a");
+        let b = g.input("b");
+        let xor_aa = g.add(GateKind::Xor2, &[a, a]); // → 0
+        let maj_aab = g.add(GateKind::Maj3, &[a, a, b]); // → a
+        let mux_same = g.add(GateKind::Mux2, &[b, maj_aab, maj_aab]); // → a
+        let or_ = g.add(GateKind::Or2, &[xor_aa, mux_same]); // → a
+        g.output("o", or_);
+        let report = optimize(&mut g, OptLevel::Full);
+        assert!(report.logic_after == 0, "all identities fold: {report:?}");
+        let nl = g.compile();
+        assert!(eval_outputs_bool(&nl, &[true, false])[0]);
+        assert!(!eval_outputs_bool(&nl, &[false, true])[0]);
+    }
+
+    #[test]
+    fn double_negation_is_eliminated() {
+        let mut g = Graph::new("nn");
+        let a = g.input("a");
+        let n1 = g.add(GateKind::Not, &[a]);
+        let n2 = g.add(GateKind::Not, &[n1]);
+        let n3 = g.add(GateKind::Not, &[n2]);
+        g.output("o", n3); // !!!a = !a
+        optimize(&mut g, OptLevel::Full);
+        assert_eq!(g.logic_gate_count(), 1);
+        let nl = g.compile();
+        assert!(!eval_outputs_bool(&nl, &[true])[0]);
+        assert!(eval_outputs_bool(&nl, &[false])[0]);
+    }
+
+    #[test]
+    fn constant_outputs_materialise() {
+        let mut g = Graph::new("k");
+        let a = g.input("a");
+        let na = g.add(GateKind::Not, &[a]);
+        let always0 = g.add(GateKind::And2, &[a, na]); // a & !a = 0
+        g.output("o", always0);
+        optimize(&mut g, OptLevel::Full);
+        let nl = g.compile();
+        assert_eq!(nl.logic_gate_count(), 0);
+        assert!(!eval_outputs_bool(&nl, &[true])[0]);
+        assert!(!eval_outputs_bool(&nl, &[false])[0]);
+    }
+
+    #[test]
+    fn opt_level_parses_and_displays() {
+        for level in OptLevel::all() {
+            let s = level.to_string();
+            assert_eq!(s.parse::<OptLevel>().unwrap(), level);
+        }
+        assert!("aggressive".parse::<OptLevel>().is_err());
+        assert_eq!(OptLevel::default(), OptLevel::Full);
+    }
+}

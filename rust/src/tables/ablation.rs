@@ -9,6 +9,7 @@ use crate::error::error_metrics;
 use crate::multipliers::{
     ApproxMulConfig, ApproxSignedMultiplier, Compensation, MultiplierModel, Sf3Mode,
 };
+use crate::netlist::prelude::{optimize_netlist, OptLevel};
 use std::sync::Arc;
 
 fn base() -> ApproxMulConfig {
@@ -26,7 +27,9 @@ fn base() -> ApproxMulConfig {
 fn line(name: &str, cfg: ApproxMulConfig) -> String {
     let m = ApproxSignedMultiplier::new(cfg);
     let e = error_metrics(&m);
-    let nl = m.build_netlist();
+    // Area figures after the full pass pipeline — same treatment every
+    // registry design gets, so the axes compare like with like.
+    let (nl, _) = optimize_netlist(&m.build_netlist(), OptLevel::Full);
     format!(
         "  {:<34} NMED {:>6.3}%  MRED {:>6.2}%  ME {:>+8.2}  max|ED| {:>5}  area {:>5.1} GE\n",
         name,

@@ -1,0 +1,126 @@
+//! Gate statistics table (`sfcmul tables --id gates`): per-design netlist
+//! cost pre vs post the optimization pass pipeline at N = 8.
+//!
+//! One TSV row per registered design family: raw generator-output gate
+//! count / logic depth / unit-gate area / switched capacitance, the same
+//! figures after `opt::optimize` at [`OptLevel::Full`], and the resulting
+//! gate reduction. The output is deterministic (seeded activity vectors,
+//! fixed formatting), so CI pins it as a golden baseline
+//! (`rust/tests/golden/gates.tsv`) and fails any change that regresses an
+//! optimized gate count.
+
+use crate::multipliers::registry;
+use crate::netlist::prelude::{optimize_netlist, power, timing, Netlist, OptLevel};
+
+/// Power-estimate vector budget; enough for toggle rates to settle while
+/// keeping `tables --id gates` instant.
+const POWER_VECTORS: usize = 4096;
+
+struct Row {
+    design: String,
+    raw: Stats,
+    opt: Stats,
+}
+
+struct Stats {
+    gates: usize,
+    depth: usize,
+    area: f64,
+    swcap: f64,
+}
+
+fn stats(nl: &Netlist, seed: u64) -> Stats {
+    Stats {
+        gates: nl.logic_gate_count(),
+        depth: timing::analyze(nl).depth,
+        area: nl.area(),
+        swcap: power::estimate(nl, POWER_VECTORS, seed).switched_cap,
+    }
+}
+
+fn rows(bits: usize, seed: u64) -> crate::Result<Vec<Row>> {
+    registry()
+        .specs(bits)
+        .into_iter()
+        .map(|mut spec| {
+            spec.opt = OptLevel::None;
+            let raw_nl = registry().build(&spec)?.build_netlist();
+            let (opt_nl, _report) = optimize_netlist(&raw_nl, OptLevel::Full);
+            Ok(Row {
+                design: spec.compressors.key().to_string(),
+                raw: stats(&raw_nl, seed),
+                opt: stats(&opt_nl, seed),
+            })
+        })
+        .collect()
+}
+
+/// Render the gate-statistics TSV for every registered design at N = 8.
+pub fn render(seed: u64) -> crate::Result<String> {
+    let mut s = String::new();
+    s.push_str("# Gate statistics per design at N=8: raw generator netlist vs\n");
+    s.push_str("# the full optimization pipeline (const-fold + CSE + DCE).\n");
+    s.push_str(
+        "design\tbits\tgates_raw\tgates_opt\tdepth_raw\tdepth_opt\t\
+         area_raw\tarea_opt\tswcap_raw\tswcap_opt\treduction_pct\n",
+    );
+    for r in rows(8, seed)? {
+        let reduction =
+            100.0 * (r.raw.gates.saturating_sub(r.opt.gates)) as f64 / r.raw.gates.max(1) as f64;
+        s.push_str(&format!(
+            "{}\t8\t{}\t{}\t{}\t{}\t{:.1}\t{:.1}\t{:.1}\t{:.1}\t{:.1}\n",
+            r.design,
+            r.raw.gates,
+            r.opt.gates,
+            r.raw.depth,
+            r.opt.depth,
+            r.raw.area,
+            r.opt.area,
+            r.raw.swcap,
+            r.opt.swcap,
+            reduction
+        ));
+    }
+    Ok(s)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table_is_deterministic_and_tsv_shaped() {
+        let a = render(42).unwrap();
+        let b = render(42).unwrap();
+        assert_eq!(a, b);
+        let data: Vec<&str> =
+            a.lines().filter(|l| !l.starts_with('#') && !l.is_empty()).collect();
+        assert!(data.len() >= 2, "header + at least one design row");
+        let cols = data[0].split('\t').count();
+        for line in &data {
+            assert_eq!(line.split('\t').count(), cols, "ragged row: {line}");
+        }
+    }
+
+    /// The acceptance bar for the pass pipeline: strictly fewer gates for
+    /// the paper's proposed design and the exact baseline at N = 8.
+    #[test]
+    fn pipeline_strictly_reduces_proposed_and_exact() {
+        for r in rows(8, 42).unwrap() {
+            assert!(
+                r.opt.gates <= r.raw.gates,
+                "{}: optimization grew the netlist",
+                r.design
+            );
+            if r.design == "proposed" || r.design == "exact" {
+                assert!(
+                    r.opt.gates < r.raw.gates,
+                    "{}: expected a strict gate reduction ({} vs {})",
+                    r.design,
+                    r.opt.gates,
+                    r.raw.gates
+                );
+            }
+        }
+    }
+}

@@ -2,10 +2,16 @@
 //!
 //! Every table and figure of the paper's evaluation has a generator here
 //! that prints the same rows/series the paper reports and returns the
-//! data for tests/benches, plus the beyond-paper [`opmatrix`] (design ×
-//! operator PSNR) and [`nnmatrix`] (design × quantized-inference layer
-//! accuracy). `sfcmul tables --id
-//! <t1|t2|t3|t4|t5|f9|f10|ops|nn|all>` is the CLI entry.
+//! data for tests/benches, plus the beyond-paper extensions ([`opmatrix`],
+//! [`nnmatrix`], [`sweep`], [`ablation`], [`gates`]). `sfcmul tables --id
+//! <ID>` is the CLI entry.
+//!
+//! Dispatch is data-driven: each generator registers itself as a
+//! [`TableSpec`] in the [`TABLES`] slice (id, title, whether `--id all`
+//! includes it, and a uniform `fn(seed, out_dir) -> Result<String>`
+//! runner). Adding a table is one slice entry — no `match` to extend, and
+//! the CLI usage line, the `all` bundle, and the unknown-id error message
+//! all derive from the same slice.
 
 pub mod t1;
 pub mod t2t3;
@@ -14,35 +20,155 @@ pub mod t5;
 pub mod f9;
 pub mod f10;
 pub mod ablation;
+pub mod gates;
 pub mod nnmatrix;
 pub mod opmatrix;
 pub mod sweep;
 
 pub use ablation::report as ablation_report;
 
-/// Generate a table/figure by id; returns its printable text.
+/// One table/figure generator: a self-describing registry entry.
+pub struct TableSpec {
+    /// CLI id (`tables --id <id>`).
+    pub id: &'static str,
+    /// One-line description, shown by the CLI usage text.
+    pub title: &'static str,
+    /// Whether `--id all` includes this table (paper tables/figures yes;
+    /// the long-running extension studies opt out and run by id).
+    pub in_all: bool,
+    /// Uniform runner: `(seed, out_dir)` → printable text. Generators
+    /// that need neither simply ignore them.
+    pub run: fn(u64, &std::path::Path) -> crate::Result<String>,
+}
+
+/// Every generator, in presentation order (paper artifacts first, then
+/// the beyond-paper extensions).
+pub const TABLES: &[TableSpec] = &[
+    TableSpec {
+        id: "t1",
+        title: "Table 1: Baugh-Wooley worked example (N=4)",
+        in_all: true,
+        run: |_seed, _out| Ok(t1::render()),
+    },
+    TableSpec {
+        id: "t2",
+        title: "Table 2: A+B+C+D+1 compressor truth table & errors",
+        in_all: true,
+        run: |_seed, _out| Ok(t2t3::render_t2()),
+    },
+    TableSpec {
+        id: "t3",
+        title: "Table 3: A+B+C+1 compressor truth table & errors",
+        in_all: true,
+        run: |_seed, _out| Ok(t2t3::render_t3()),
+    },
+    TableSpec {
+        id: "t4",
+        title: "Table 4: ER/NMED/MRED per design, exhaustive at N=8",
+        in_all: true,
+        run: |_seed, _out| Ok(t4::render()),
+    },
+    TableSpec {
+        id: "t5",
+        title: "Table 5: area/power/delay/PDP per design (calibrated)",
+        in_all: true,
+        run: |seed, _out| Ok(t5::render(seed)),
+    },
+    TableSpec {
+        id: "f9",
+        title: "Fig. 9: edge-detection outputs + PSNR per design",
+        in_all: true,
+        run: f9::render,
+    },
+    TableSpec {
+        id: "f10",
+        title: "Fig. 10: PDP vs MRED scatter",
+        in_all: true,
+        run: |seed, _out| Ok(f10::render(seed)),
+    },
+    TableSpec {
+        id: "ops",
+        title: "Extension: design x operator PSNR matrix",
+        in_all: true,
+        run: |seed, _out| Ok(opmatrix::render(seed)),
+    },
+    TableSpec {
+        id: "nn",
+        title: "Extension: design x quantized-inference accuracy",
+        in_all: true,
+        run: |seed, _out| Ok(nnmatrix::render(seed)),
+    },
+    TableSpec {
+        id: "sweep",
+        title: "Extension: width scaling N=4..16",
+        in_all: false,
+        run: |_seed, _out| Ok(sweep::render()),
+    },
+    TableSpec {
+        id: "ablation",
+        title: "Extension: reconstruction design-space ablation",
+        in_all: false,
+        run: |seed, _out| Ok(ablation::report(seed)),
+    },
+    TableSpec {
+        id: "gates",
+        title: "Netlist gate stats pre/post optimization (TSV, CI-gated)",
+        in_all: false,
+        run: |seed, _out| gates::render(seed),
+    },
+];
+
+/// Look up a generator by CLI id.
+pub fn spec(id: &str) -> Option<&'static TableSpec> {
+    TABLES.iter().find(|t| t.id == id)
+}
+
+/// All CLI ids in presentation order (drives usage text and errors).
+pub fn ids() -> Vec<&'static str> {
+    TABLES.iter().map(|t| t.id).collect()
+}
+
+/// Generate a table/figure by id (or the `all` bundle); returns its
+/// printable text.
 pub fn generate(id: &str, seed: u64, out_dir: &std::path::Path) -> crate::Result<String> {
-    match id {
-        "t1" => Ok(t1::render()),
-        "t2" => Ok(t2t3::render_t2()),
-        "t3" => Ok(t2t3::render_t3()),
-        "t4" => Ok(t4::render()),
-        "t5" => Ok(t5::render(seed)),
-        "f9" => f9::render(seed, out_dir),
-        "f10" => Ok(f10::render(seed)),
-        "ops" => Ok(opmatrix::render(seed)),
-        "nn" => Ok(nnmatrix::render(seed)),
-        "sweep" => Ok(sweep::render()),
-        "all" => {
-            let mut s = String::new();
-            for id in ["t1", "t2", "t3", "t4", "t5", "f9", "f10", "ops", "nn"] {
-                s.push_str(&generate(id, seed, out_dir)?);
-                s.push('\n');
-            }
-            Ok(s)
+    if id == "all" {
+        let mut s = String::new();
+        for t in TABLES.iter().filter(|t| t.in_all) {
+            s.push_str(&(t.run)(seed, out_dir)?);
+            s.push('\n');
         }
-        other => Err(crate::util::error::Error::msg(format!(
-            "unknown table id {other:?} (t1..t5, f9, f10, ops, nn, sweep, all)"
+        return Ok(s);
+    }
+    match spec(id) {
+        Some(t) => (t.run)(seed, out_dir),
+        None => Err(crate::util::error::Error::msg(format!(
+            "unknown table id {id:?} ({}, all)",
+            ids().join(", ")
         ))),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn registry_ids_are_unique_and_stable() {
+        let ids = ids();
+        let mut sorted = ids.clone();
+        sorted.sort_unstable();
+        sorted.dedup();
+        assert_eq!(sorted.len(), ids.len(), "duplicate table id");
+        for must in ["t1", "t2", "t3", "t4", "t5", "f9", "f10", "ops", "nn", "sweep", "ablation", "gates"] {
+            assert!(ids.contains(&must), "{must} missing from TABLES");
+        }
+        assert!(spec("all").is_none(), "'all' is a bundle, not an entry");
+    }
+
+    #[test]
+    fn unknown_id_error_lists_registry() {
+        let err = generate("nope", 1, std::path::Path::new(".")).unwrap_err();
+        let msg = err.to_string();
+        assert!(msg.contains("gates") && msg.contains("t5"), "{msg}");
     }
 }

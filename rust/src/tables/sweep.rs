@@ -5,7 +5,9 @@
 
 use crate::error::{error_metrics_netlist, error_metrics_sampled};
 use crate::hwmodel::raw_hw;
-use crate::multipliers::{registry, BoothRadix4, MultiplierModel};
+use crate::multipliers::{registry, BoothRadix4, MultiplierModel, Optimized};
+use crate::netlist::OptLevel;
+use std::sync::Arc;
 
 pub struct SweepRow {
     pub n: usize,
@@ -60,8 +62,13 @@ pub fn render() -> String {
          dominates the product (NMED ~19%); from N=8 the paper's regime holds.\n",
     );
     s.push_str("\n== Extension: signed-multiplication substrates at N = 8 (paper §1) ==\n");
-    let bw = crate::multipliers::ExactBaughWooley::new(8);
-    let booth = BoothRadix4::new(8);
+    // Direct constructions bypass the registry, so optimize here to match
+    // the synthesis treatment registry designs get by default.
+    let bw = Optimized::new(
+        Arc::new(crate::multipliers::ExactBaughWooley::new(8)),
+        OptLevel::Full,
+    );
+    let booth = Optimized::new(Arc::new(BoothRadix4::new(8)), OptLevel::Full);
     for m in [&bw as &dyn MultiplierModel, &booth as &dyn MultiplierModel] {
         let hw = raw_hw(m, 42);
         s.push_str(&format!(

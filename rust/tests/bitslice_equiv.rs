@@ -8,9 +8,7 @@ use sfcmul::multipliers::verify::{
     bitsim_multiply_batch, netlist_multiply_all, netlist_multiply_batch, netlist_multiply_one,
 };
 use sfcmul::multipliers::registry;
-use sfcmul::netlist::bitslice::BitSim;
-use sfcmul::netlist::sim::eval_outputs_bool;
-use sfcmul::netlist::Netlist;
+use sfcmul::netlist::prelude::{eval_outputs_bool, BitSim, Netlist};
 
 /// One product through the scalar (one-vector-at-a-time) simulator.
 fn scalar_multiply(nl: &Netlist, n: usize, a: i64, b: i64) -> i64 {

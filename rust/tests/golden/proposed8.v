@@ -1,0 +1,6 @@
+// Golden Verilog export of the optimized proposed@8 netlist.
+// Header-only until first blessed: rust/tests/netlist_opt_equiv.rs writes
+// the deterministic `sfcmul export --design proposed@8` text here on its
+// first toolchain run (SFCMUL_GOLDEN_REBLESS=1 refreshes after an
+// intentional netlist change). Commit the populated file to lock the
+// export byte-for-byte.

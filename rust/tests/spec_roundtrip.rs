@@ -5,6 +5,7 @@
 use sfcmul::multipliers::{
     build_design, registry, Compensation, CompressorChoice, DesignId, DesignSpec, TruncMode,
 };
+use sfcmul::netlist::OptLevel;
 use sfcmul::util::prop::{forall, Gen};
 
 #[test]
@@ -38,7 +39,12 @@ fn arbitrary_specs_roundtrip() {
             1 => Compensation::None,
             _ => Compensation::Literal,
         };
-        DesignSpec { bits, compressors: family, truncation, compensation }
+        let opt = match rng.below(3) {
+            0 => OptLevel::None,
+            1 => OptLevel::Fold,
+            _ => OptLevel::Full,
+        };
+        DesignSpec { bits, compressors: family, truncation, compensation, opt }
     });
     forall("spec Display/FromStr roundtrip", 512, spec_gen, |spec| {
         spec.to_string().parse::<DesignSpec>().ok().as_ref() == Some(spec)
@@ -92,7 +98,33 @@ fn registry_names_cover_the_paper_set() {
 #[test]
 fn explicit_defaults_normalise() {
     let a: DesignSpec = "proposed@8".parse().unwrap();
-    let b: DesignSpec = "proposed@8:trunc=paper:comp=paper".parse().unwrap();
+    let b: DesignSpec = "proposed@8:trunc=paper:comp=paper:opt=full".parse().unwrap();
     assert_eq!(a, b);
     assert_eq!(b.to_string(), "proposed@8");
+}
+
+/// The `:opt=` knob round-trips through the string form at every level
+/// and only non-default levels render.
+#[test]
+fn opt_knob_roundtrips_and_renders_non_defaults_only() {
+    for (s, level, canonical) in [
+        ("proposed@8:opt=none", OptLevel::None, false),
+        ("proposed@8:opt=fold", OptLevel::Fold, false),
+        ("proposed@8:opt=full", OptLevel::Full, true),
+        ("exact@8:trunc=none:opt=fold", OptLevel::Fold, false),
+    ] {
+        let spec: DesignSpec = s.parse().unwrap_or_else(|e| panic!("{s:?}: {e}"));
+        assert_eq!(spec.opt, level, "{s}");
+        assert_eq!(spec.is_canonical(), canonical, "{s}");
+        let rendered = spec.to_string();
+        let back: DesignSpec = rendered.parse().unwrap();
+        assert_eq!(back, spec, "{s} -> {rendered}");
+        if level == OptLevel::Full {
+            assert!(!rendered.contains(":opt="), "default level renders: {rendered}");
+        } else {
+            assert!(rendered.ends_with(&format!(":opt={level}")), "{rendered}");
+        }
+        registry().build(&spec).unwrap_or_else(|e| panic!("{s}: {e}"));
+    }
+    assert!("proposed@8:opt=aggressive".parse::<DesignSpec>().is_err());
 }
