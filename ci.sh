@@ -8,7 +8,13 @@
 #   enforcement and carries hand-aligned tables/diagrams; drift is printed
 #   so it stays visible without blocking merges.
 # * clippy runs with -D warnings plus a small documented allow-list of
-#   style lints the codebase deliberately does not follow:
+#   style lints the codebase deliberately does not follow. The serving
+#   path additionally carries an in-source scoped gate: coordinator/ and
+#   server/ deny clippy::unwrap_used / clippy::expect_used in non-test
+#   code (inner attributes in their mod.rs), so a stray `.unwrap()` on
+#   the fault-tolerant path fails this leg — recoverable errors must
+#   travel as JobError/ErrCode, not panics.
+#   Style allow-list:
 #     - needless_range_loop: index loops mirror the hardware column/lane
 #       structure and are clearer than iterator chains there;
 #     - too_many_arguments: netlist builder helpers take per-signal args;
@@ -86,6 +92,17 @@ else
     echo "== cargo test (tier-1) =="
     if ! cargo test -q; then
         echo "FAIL: tests"
+        status=1
+    fi
+
+    echo "== chaos soak (fault-injected fleet, release) =="
+    # The chaos_soak target also runs under the tier-1 leg above; this
+    # release-mode rerun is the robustness gate proper — panicking
+    # FaultEngine tiles, an open circuit breaker, fallback rerouting and
+    # socket clients under optimized timing, where lost-wakeup/teardown
+    # races actually surface.
+    if ! cargo test --release --test chaos_soak -q; then
+        echo "FAIL: chaos soak"
         status=1
     fi
 

@@ -93,7 +93,7 @@ fn main() {
                 .collect();
             let coord = Arc::new(Coordinator::start_named(
                 named,
-                CoordinatorConfig { workers: 4, queue_capacity: 256, max_batch: 8 },
+                CoordinatorConfig { workers: 4, queue_capacity: 256, max_batch: 8, ..Default::default() },
             ));
             let server = Server::start(
                 coord.clone(),

@@ -29,7 +29,7 @@ fn main() {
     }
     let coord = Coordinator::start_named(
         named,
-        CoordinatorConfig { workers: 4, queue_capacity: 256, max_batch: 8 },
+        CoordinatorConfig { workers: 4, queue_capacity: 256, max_batch: 8, ..Default::default() },
     );
 
     const JOBS: usize = 64;
@@ -46,7 +46,7 @@ fn main() {
         .collect();
     let mut results = Vec::new();
     for h in handles {
-        results.push(h.wait());
+        results.push(h.wait().expect("healthy fleet completes every job"));
     }
     let wall = t0.elapsed();
 

@@ -23,11 +23,11 @@ fn main() {
         let engine = Arc::new(LutTileEngine::from_table("p", lut.clone()));
         let coord = Coordinator::start(
             engine,
-            CoordinatorConfig { workers, queue_capacity: 256, max_batch: 8 },
+            CoordinatorConfig { workers, queue_capacity: 256, max_batch: 8, ..Default::default() },
         );
         let name = format!("job_roundtrip_256_w{workers}");
         b.throughput(pixels).bench(&name, || {
-            let r = coord.run(img.clone());
+            let r = coord.run(img.clone()).expect("bench job");
             r.tiles
         });
         drop(coord);
@@ -39,11 +39,12 @@ fn main() {
     let engine = Arc::new(LutTileEngine::from_table("p16", lut.clone()));
     let coord = Coordinator::start(
         engine,
-        CoordinatorConfig { workers: 4, queue_capacity: 256, max_batch: 8 },
+        CoordinatorConfig { workers: 4, queue_capacity: 256, max_batch: 8, ..Default::default() },
     );
     b.throughput(pixels * 16).bench("jobs_16_inflight_w4", || {
-        let handles: Vec<_> = (0..16).map(|_| coord.submit(img.clone())).collect();
-        handles.into_iter().map(|h| h.wait().tiles).sum::<usize>()
+        let handles: Vec<_> =
+            (0..16).map(|_| coord.submit(img.clone()).expect("bench submit")).collect();
+        handles.into_iter().map(|h| h.wait().expect("bench job").tiles).sum::<usize>()
     });
     drop(coord);
 
@@ -58,7 +59,7 @@ fn main() {
     let engine = Arc::new(LutTileEngine::from_table("p", lut.clone()));
     let coord = Arc::new(Coordinator::start(
         engine,
-        CoordinatorConfig { workers: 4, queue_capacity: 256, max_batch: 8 },
+        CoordinatorConfig { workers: 4, queue_capacity: 256, max_batch: 8, ..Default::default() },
     ));
     let server = Server::start(
         coord.clone(),
@@ -91,8 +92,9 @@ fn main() {
         });
     }
     b.throughput(sat_pixels * 8).bench("inprocess_equivalent_64", || {
-        let handles: Vec<_> = (0..8).map(|_| coord.submit(sat_img.clone())).collect();
-        handles.into_iter().map(|h| h.wait().tiles).sum::<usize>()
+        let handles: Vec<_> =
+            (0..8).map(|_| coord.submit(sat_img.clone()).expect("bench submit")).collect();
+        handles.into_iter().map(|h| h.wait().expect("bench job").tiles).sum::<usize>()
     });
     server.stop();
     drop(coord);

@@ -57,7 +57,7 @@ fn main() {
     });
     let coord = Coordinator::start(
         Arc::new(LutTileEngine::from_table("proposed", lut.clone())),
-        CoordinatorConfig { workers: 2, queue_capacity: 64, max_batch: 8 },
+        CoordinatorConfig { workers: 2, queue_capacity: 64, max_batch: 8, ..Default::default() },
     );
     b.throughput(pixels).bench("network_served_64", || {
         net.run_served(&coord, None, &x).expect("nn-capable engine").data[0]

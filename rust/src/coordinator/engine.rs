@@ -107,7 +107,12 @@ impl OpSet {
     /// the zero-padded source the program cores expect, so edge tiles
     /// need no special-casing.
     fn conv_tile(&self, tile: &Tile) -> TileOut {
-        let op = Operator::from_id(tile.op).expect("valid operator id on tile");
+        // Operator ids are validated at submit time; a bad one here is an
+        // engine-contract violation the worker's catch_unwind converts
+        // into a clean per-job failure.
+        let Some(op) = Operator::from_id(tile.op) else {
+            panic!("invalid operator id {} on tile", tile.op)
+        };
         let mut data = vec![0u8; tile.core_w * tile.core_h];
         self.programs[op.id() as usize].run_window(
             &tile.data,
@@ -156,7 +161,9 @@ pub fn conv_tile_taps(tile: &Tile, tc: &[i64; 256], tr: &[i64; 256]) -> TileOut 
 /// components combined with the saturating magnitude sum. The slow path
 /// the table-backed engines are validated against.
 fn conv_tile_model(tile: &Tile, product: &dyn Fn(u8, i8) -> i64) -> TileOut {
-    let op = Operator::from_id(tile.op).expect("valid operator id on tile");
+    let Some(op) = Operator::from_id(tile.op) else {
+        panic!("invalid operator id {} on tile", tile.op)
+    };
     let mut data = vec![0u8; tile.core_w * tile.core_h];
     let mut component = vec![0u8; tile.core_w * tile.core_h];
     for (pi, pass) in op.passes().iter().enumerate() {
@@ -271,7 +278,10 @@ impl TileEngine for DualModeTileEngine {
                 } else {
                     &self.approx
                 };
-                engine.process_batch(std::slice::from_ref(t)).pop().unwrap()
+                match engine.process_batch(std::slice::from_ref(t)).pop() {
+                    Some(out) => out,
+                    None => panic!("lut engine returned empty batch for one tile"),
+                }
             })
             .collect()
     }
@@ -303,7 +313,9 @@ impl TileEngine for RowbufTileEngine {
         tiles
             .iter()
             .map(|t| {
-                let op = Operator::from_id(t.op).expect("valid operator id on tile");
+                let Some(op) = Operator::from_id(t.op) else {
+                    panic!("invalid operator id {} on tile", t.op)
+                };
                 let window = Image {
                     width: TILE_IN,
                     height: TILE_IN,
@@ -380,7 +392,10 @@ impl BitsimTileEngine {
             .collect();
         let products = crate::multipliers::verify::netlist_multiply_batch(&nl, n, &pairs);
         let prod = move |a: u8, b: i8| {
-            let ki = ks.binary_search(&b).expect("coefficient swept at construction");
+            let ki = match ks.binary_search(&b) {
+                Ok(i) => i,
+                Err(_) => panic!("coefficient {b} not swept at construction"),
+            };
             products[ki * dom + a as usize]
         };
         let ops = OpSet::build(&prod);

@@ -6,6 +6,7 @@
 //!
 //! ```text
 //! engine := 'lut' | 'model' | 'rowbuf' | 'bitsim' | 'pjrt'
+//!         | 'fault/' plan '/' engine
 //! ```
 //!
 //! * `lut` — in-process 256×256 product-table engine (8-bit designs only;
@@ -18,6 +19,10 @@
 //!   (widths 8..=31) — batch jobs observe hardware truth.
 //! * `pjrt` — the AOT-compiled JAX/Pallas executable via PJRT (8-bit
 //!   designs; requires artifacts and the `pjrt` cargo feature).
+//! * `fault/<plan>/<engine>` — the inner engine wrapped in the
+//!   deterministic fault injector ([`super::fault::FaultEngine`]), e.g.
+//!   `fault/panic@4/lut` panics on every 4th tile. Soak/chaos testing
+//!   only — never a production backend.
 //!
 //! Every resolved in-process engine serves the **whole operator
 //! registry** ([`crate::image::ops::Operator`]) — tap tables are built
@@ -35,6 +40,7 @@
 use super::engine::{
     BitsimTileEngine, LutTileEngine, ModelTileEngine, RowbufTileEngine, TileEngine,
 };
+use super::fault::{FaultEngine, FaultPlan};
 use crate::multipliers::spec::{registry, DesignSpec};
 use crate::multipliers::lut::product_table;
 use crate::runtime::{artifacts_available, artifacts_dir, pjrt_enabled, PjrtTileEngine};
@@ -43,8 +49,9 @@ use std::fmt;
 use std::str::FromStr;
 use std::sync::Arc;
 
-/// Which tile-engine backend serves a design.
-#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+/// Which tile-engine backend serves a design. (Not `Copy`: the fault
+/// wrapper carries its plan and inner spec.)
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
 pub enum EngineSpec {
     /// In-process product-table engine.
     Lut,
@@ -57,19 +64,27 @@ pub enum EngineSpec {
     Bitsim,
     /// AOT JAX/Pallas executable via PJRT.
     Pjrt,
+    /// The inner engine wrapped in the deterministic fault injector —
+    /// soak/chaos testing only.
+    Fault {
+        inner: Box<EngineSpec>,
+        plan: FaultPlan,
+    },
 }
 
 impl EngineSpec {
-    pub fn key(self) -> &'static str {
+    pub fn key(&self) -> String {
         match self {
-            EngineSpec::Lut => "lut",
-            EngineSpec::Model => "model",
-            EngineSpec::Rowbuf => "rowbuf",
-            EngineSpec::Bitsim => "bitsim",
-            EngineSpec::Pjrt => "pjrt",
+            EngineSpec::Lut => "lut".to_string(),
+            EngineSpec::Model => "model".to_string(),
+            EngineSpec::Rowbuf => "rowbuf".to_string(),
+            EngineSpec::Bitsim => "bitsim".to_string(),
+            EngineSpec::Pjrt => "pjrt".to_string(),
+            EngineSpec::Fault { inner, plan } => format!("fault/{plan}/{}", inner.key()),
         }
     }
 
+    /// The base (non-wrapper) backends.
     pub fn all() -> [EngineSpec; 5] {
         [
             EngineSpec::Lut,
@@ -83,7 +98,7 @@ impl EngineSpec {
 
 impl fmt::Display for EngineSpec {
     fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
-        f.write_str(self.key())
+        f.write_str(&self.key())
     }
 }
 
@@ -91,14 +106,23 @@ impl FromStr for EngineSpec {
     type Err = Error;
 
     fn from_str(s: &str) -> Result<Self, Error> {
-        match s.trim().to_lowercase().as_str() {
+        let s = s.trim();
+        if let Some(rest) = s.strip_prefix("fault/").or_else(|| s.strip_prefix("FAULT/")) {
+            let (plan_s, inner_s) = rest.split_once('/').ok_or_else(|| {
+                Error::msg(format!("bad fault engine spec {s:?}: expected fault/<plan>/<engine>"))
+            })?;
+            let plan: FaultPlan = plan_s.parse().map_err(Error::msg)?;
+            let inner: EngineSpec = inner_s.parse()?;
+            return Ok(EngineSpec::Fault { inner: Box::new(inner), plan });
+        }
+        match s.to_lowercase().as_str() {
             "lut" => Ok(EngineSpec::Lut),
             "model" => Ok(EngineSpec::Model),
             "rowbuf" => Ok(EngineSpec::Rowbuf),
             "bitsim" => Ok(EngineSpec::Bitsim),
             "pjrt" => Ok(EngineSpec::Pjrt),
             other => Err(Error::msg(format!(
-                "unknown engine {other:?} (lut | model | rowbuf | bitsim | pjrt)"
+                "unknown engine {other:?} (lut | model | rowbuf | bitsim | pjrt | fault/<plan>/<engine>)"
             ))),
         }
     }
@@ -107,6 +131,12 @@ impl FromStr for EngineSpec {
 /// Build the design a spec describes (through the global registry) and
 /// wrap it in the requested engine backend.
 pub fn resolve(engine: EngineSpec, design: &DesignSpec) -> crate::Result<Arc<dyn TileEngine>> {
+    // The fault wrapper resolves its inner engine recursively, then
+    // injects on top — no model of its own.
+    if let EngineSpec::Fault { inner, plan } = engine {
+        let inner_engine = resolve(*inner, design)?;
+        return Ok(Arc::new(FaultEngine::new(inner_engine, plan)));
+    }
     let model = registry().build(design)?;
     match engine {
         EngineSpec::Lut => {
@@ -137,6 +167,7 @@ pub fn resolve(engine: EngineSpec, design: &DesignSpec) -> crate::Result<Arc<dyn
             let engine = PjrtTileEngine::new(&artifacts_dir(), &model.name(), table)?;
             Ok(Arc::new(engine))
         }
+        EngineSpec::Fault { .. } => unreachable!("fault specs resolved above"),
     }
 }
 
@@ -160,7 +191,7 @@ pub fn resolve_with_fallback(
     design: &DesignSpec,
 ) -> crate::Result<(Arc<dyn TileEngine>, EngineSpec)> {
     let pjrt_unavailable = !pjrt_enabled() || !artifacts_available(&artifacts_dir());
-    match resolve(engine, design) {
+    match resolve(engine.clone(), design) {
         Ok(e) => Ok((e, engine)),
         Err(err) if engine == EngineSpec::Pjrt && pjrt_unavailable => {
             eprintln!("pjrt engine unavailable for {design} ({err}); falling back to lut");
@@ -182,6 +213,38 @@ mod tests {
             assert_eq!(e.key().parse::<EngineSpec>().unwrap(), e);
         }
         assert!("turbo".parse::<EngineSpec>().is_err());
+    }
+
+    #[test]
+    fn fault_spec_parses_and_roundtrips() {
+        let spec: EngineSpec = "fault/panic@4,limit=8/lut".parse().unwrap();
+        let EngineSpec::Fault { ref inner, ref plan } = spec else {
+            panic!("expected fault spec, got {spec:?}");
+        };
+        assert_eq!(**inner, EngineSpec::Lut);
+        assert_eq!(plan.every, 4);
+        assert_eq!(plan.limit, Some(8));
+        assert_eq!(spec.key().parse::<EngineSpec>().unwrap(), spec);
+        // Nested wrapping parses too (delay outside, panic inside).
+        let nested: EngineSpec = "fault/delay@2,ms=1/fault/panic@9/model".parse().unwrap();
+        assert_eq!(nested.key().parse::<EngineSpec>().unwrap(), nested);
+        assert!("fault/panic@4".parse::<EngineSpec>().is_err(), "missing inner engine");
+        assert!("fault/zap@4/lut".parse::<EngineSpec>().is_err(), "bad kind");
+    }
+
+    #[test]
+    fn resolve_wraps_fault_engine_around_inner() {
+        let design: DesignSpec = "proposed@8".parse().unwrap();
+        let spec: EngineSpec = "fault/wrong@2/lut".parse().unwrap();
+        let faulty = resolve(spec, &design).unwrap();
+        assert!(faulty.name().starts_with("fault["), "{}", faulty.name());
+        let clean = resolve(EngineSpec::Lut, &design).unwrap();
+        let img = synthetic_scene(96, 64, 2);
+        let tiles = tile_image(0, &img);
+        let a = faulty.process_batch(&tiles);
+        let b = clean.process_batch(&tiles);
+        let differing = a.iter().zip(b.iter()).filter(|(x, y)| x.data != y.data).count();
+        assert_eq!(differing, tiles.len() / 2, "every 2nd tile corrupted");
     }
 
     #[test]

@@ -1,0 +1,329 @@
+//! Deterministic fault injection for soak-testing the fleet.
+//!
+//! [`FaultEngine`] wraps any [`TileEngine`] and misbehaves on a fixed
+//! schedule — panic, stall, or corrupt the output of every Nth tile —
+//! so the coordinator's panic isolation, deadline watchdog, and circuit
+//! breaker can be exercised reproducibly (no randomness: the schedule
+//! is a counter, so a failing soak run replays exactly). Select it from
+//! the CLI with `--fault panic@4` (see [`FaultPlan`]'s grammar) or from
+//! an engine spec string like `fault/panic@4,limit=8/lut`.
+
+use super::engine::{NnBackend, TileEngine};
+use super::tiler::{Tile, TileOut};
+use crate::image::ops::Operator;
+use std::fmt;
+use std::str::FromStr;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, OnceLock};
+use std::time::Duration;
+
+/// What the injected fault does to the victim tile.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum FaultKind {
+    /// Panic inside `process_batch` — exercises `catch_unwind` isolation
+    /// and the breaker.
+    Panic,
+    /// Sleep before computing the tile — exercises the deadline watchdog.
+    Delay,
+    /// Compute the tile, then flip bits in its output — exercises
+    /// result-integrity checks downstream (the soak test's byte-compare).
+    Wrong,
+}
+
+impl fmt::Display for FaultKind {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(match self {
+            FaultKind::Panic => "panic",
+            FaultKind::Delay => "delay",
+            FaultKind::Wrong => "wrong",
+        })
+    }
+}
+
+/// A deterministic fault schedule: fault every `every`-th tile, at most
+/// `limit` times.
+///
+/// Text grammar (the `--fault` knob): `<kind>@<every>[,ms=<delay>][,limit=<n>]`
+/// where `<kind>` is `panic` | `delay` | `wrong`, e.g. `panic@4`,
+/// `delay@3,ms=50`, `wrong@2,limit=10`.
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+pub struct FaultPlan {
+    pub kind: FaultKind,
+    /// Fault every Nth tile (1 = every tile). Must be ≥ 1.
+    pub every: u64,
+    /// Stall duration for [`FaultKind::Delay`] faults.
+    pub delay_ms: u64,
+    /// Stop injecting after this many faults (`None` = forever) — lets a
+    /// soak scenario fault an engine K times, then recover so the
+    /// half-open probe can close the breaker again.
+    pub limit: Option<u64>,
+}
+
+impl FaultPlan {
+    pub fn new(kind: FaultKind, every: u64) -> Self {
+        assert!(every >= 1, "fault period must be >= 1");
+        Self { kind, every, delay_ms: 5, limit: None }
+    }
+
+    /// Whether tick number `tick` (1-based) is a fault tick.
+    fn fires(&self, tick: u64) -> bool {
+        if tick % self.every != 0 {
+            return false;
+        }
+        match self.limit {
+            Some(limit) => tick / self.every <= limit,
+            None => true,
+        }
+    }
+}
+
+impl fmt::Display for FaultPlan {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}@{}", self.kind, self.every)?;
+        if self.kind == FaultKind::Delay {
+            write!(f, ",ms={}", self.delay_ms)?;
+        }
+        if let Some(limit) = self.limit {
+            write!(f, ",limit={limit}")?;
+        }
+        Ok(())
+    }
+}
+
+impl FromStr for FaultPlan {
+    type Err = String;
+
+    fn from_str(s: &str) -> Result<Self, String> {
+        let usage = "expected <panic|delay|wrong>@<every>[,ms=<delay>][,limit=<n>]";
+        let mut parts = s.split(',');
+        let head = parts.next().unwrap_or_default();
+        let (kind_s, every_s) = head
+            .split_once('@')
+            .ok_or_else(|| format!("bad fault plan {s:?}: {usage}"))?;
+        let kind = match kind_s {
+            "panic" => FaultKind::Panic,
+            "delay" => FaultKind::Delay,
+            "wrong" => FaultKind::Wrong,
+            other => return Err(format!("unknown fault kind {other:?}: {usage}")),
+        };
+        let every: u64 = every_s
+            .parse()
+            .map_err(|_| format!("bad fault period {every_s:?}: {usage}"))?;
+        if every == 0 {
+            return Err(format!("fault period must be >= 1: {usage}"));
+        }
+        let mut plan = FaultPlan::new(kind, every);
+        for part in parts {
+            match part.split_once('=') {
+                Some(("ms", v)) => {
+                    plan.delay_ms = v
+                        .parse()
+                        .map_err(|_| format!("bad fault delay {v:?}: {usage}"))?;
+                }
+                Some(("limit", v)) => {
+                    let n: u64 = v
+                        .parse()
+                        .map_err(|_| format!("bad fault limit {v:?}: {usage}"))?;
+                    plan.limit = Some(n);
+                }
+                _ => return Err(format!("bad fault option {part:?}: {usage}")),
+            }
+        }
+        Ok(plan)
+    }
+}
+
+/// A [`TileEngine`] wrapper that misbehaves on its [`FaultPlan`]'s
+/// schedule. Tiles are processed one at a time through the inner engine
+/// so a panic fault takes down exactly the scheduled tile's batch call.
+///
+/// Faults apply to the conv-tile datapath; the nn backend is delegated
+/// untouched (GEMM fault paths are exercised with a panicking
+/// [`crate::multipliers::MultiplierModel`] in tests).
+pub struct FaultEngine {
+    inner: Arc<dyn TileEngine>,
+    plan: FaultPlan,
+    /// Global tile tick — monotonically increasing across batches and
+    /// threads, making the schedule deterministic per engine instance.
+    ticks: AtomicU64,
+}
+
+impl FaultEngine {
+    pub fn new(inner: Arc<dyn TileEngine>, plan: FaultPlan) -> Self {
+        Self { inner, plan, ticks: AtomicU64::new(0) }
+    }
+
+    /// Faults injected so far (diagnostic).
+    pub fn faults_fired(&self) -> u64 {
+        let ticks = self.ticks.load(Ordering::Relaxed);
+        let fired = ticks / self.plan.every;
+        match self.plan.limit {
+            Some(limit) => fired.min(limit),
+            None => fired,
+        }
+    }
+}
+
+impl TileEngine for FaultEngine {
+    fn name(&self) -> String {
+        format!("fault[{}]:{}", self.plan, self.inner.name())
+    }
+
+    fn process_batch(&self, tiles: &[Tile]) -> Vec<TileOut> {
+        let mut out = Vec::with_capacity(tiles.len());
+        for tile in tiles {
+            let tick = self.ticks.fetch_add(1, Ordering::Relaxed) + 1;
+            if self.plan.fires(tick) {
+                match self.plan.kind {
+                    FaultKind::Panic => {
+                        panic!("injected fault: {} at tile tick {tick}", self.plan)
+                    }
+                    FaultKind::Delay => {
+                        std::thread::sleep(Duration::from_millis(self.plan.delay_ms));
+                    }
+                    FaultKind::Wrong => {
+                        let mut o = self
+                            .inner
+                            .process_batch(std::slice::from_ref(tile))
+                            .pop()
+                            .unwrap_or_else(|| {
+                                panic!("inner engine returned empty batch for one tile")
+                            });
+                        for b in o.data.iter_mut() {
+                            *b ^= 0x55;
+                        }
+                        out.push(o);
+                        continue;
+                    }
+                }
+            }
+            match self.inner.process_batch(std::slice::from_ref(tile)).pop() {
+                Some(o) => out.push(o),
+                None => panic!("inner engine returned empty batch for one tile"),
+            }
+        }
+        out
+    }
+
+    fn preferred_batch(&self) -> usize {
+        self.inner.preferred_batch()
+    }
+
+    fn supports_op(&self, op: Operator) -> bool {
+        self.inner.supports_op(op)
+    }
+
+    fn nn_backend(&self) -> Option<NnBackend> {
+        self.inner.nn_backend()
+    }
+}
+
+/// Install a process-wide panic hook that suppresses the default
+/// stderr backtrace for panics on the crate's own worker threads
+/// (names starting with `sfcmul-`). Injected faults are *expected* to
+/// panic there; without this, a soak run floods the console with noise
+/// that looks like real crashes. Panics on any other thread still print
+/// normally. Idempotent.
+pub fn silence_worker_panics() {
+    static INSTALLED: OnceLock<()> = OnceLock::new();
+    INSTALLED.get_or_init(|| {
+        let prev = std::panic::take_hook();
+        std::panic::set_hook(Box::new(move |info| {
+            let on_worker = std::thread::current()
+                .name()
+                .is_some_and(|n| n.starts_with("sfcmul-"));
+            if !on_worker {
+                prev(info);
+            }
+        }));
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::engine::LutTileEngine;
+    use crate::coordinator::tiler::tile_image;
+    use crate::image::synthetic_scene;
+    use crate::multipliers::{build_design, DesignId};
+
+    fn lut_engine() -> Arc<dyn TileEngine> {
+        let model = build_design(DesignId::Proposed, 8);
+        Arc::new(LutTileEngine::new(model.as_ref()))
+    }
+
+    #[test]
+    fn plan_parse_roundtrip() {
+        for s in ["panic@4", "delay@3,ms=50", "wrong@2,limit=10", "delay@1,ms=5,limit=2"] {
+            let plan: FaultPlan = s.parse().unwrap();
+            assert_eq!(plan.to_string().parse::<FaultPlan>().unwrap(), plan, "{s}");
+        }
+        let p: FaultPlan = "panic@4".parse().unwrap();
+        assert_eq!(p.kind, FaultKind::Panic);
+        assert_eq!(p.every, 4);
+        assert_eq!(p.limit, None);
+        let d: FaultPlan = "delay@3,ms=50".parse().unwrap();
+        assert_eq!(d.delay_ms, 50);
+    }
+
+    #[test]
+    fn plan_parse_rejects_garbage() {
+        for s in ["", "panic", "panic@0", "panic@x", "zap@2", "panic@2,bogus=1", "panic@2,ms=x"] {
+            assert!(s.parse::<FaultPlan>().is_err(), "{s:?} should not parse");
+        }
+    }
+
+    #[test]
+    fn schedule_is_deterministic_counter() {
+        let plan = FaultPlan::new(FaultKind::Panic, 3);
+        let fired: Vec<u64> = (1..=10).filter(|&t| plan.fires(t)).collect();
+        assert_eq!(fired, vec![3, 6, 9]);
+        let limited = FaultPlan { limit: Some(2), ..plan };
+        let fired: Vec<u64> = (1..=20).filter(|&t| limited.fires(t)).collect();
+        assert_eq!(fired, vec![3, 6], "limit caps total injections");
+    }
+
+    #[test]
+    fn panic_fault_panics_on_schedule_only() {
+        let img = synthetic_scene(64, 64, 3);
+        let tiles = tile_image(1, &img);
+        assert!(tiles.len() >= 4, "need enough tiles to hit the schedule");
+        let eng = FaultEngine::new(lut_engine(), FaultPlan::new(FaultKind::Panic, tiles.len() as u64 + 1));
+        // Under the period, no panic:
+        assert_eq!(eng.process_batch(&tiles).len(), tiles.len());
+        // The next batch crosses the period boundary and must panic:
+        let caught = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            eng.process_batch(&tiles)
+        }));
+        assert!(caught.is_err(), "scheduled fault must panic");
+        assert!(eng.faults_fired() >= 1);
+    }
+
+    #[test]
+    fn wrong_fault_corrupts_exactly_the_scheduled_tiles() {
+        let img = synthetic_scene(96, 64, 9);
+        let tiles = tile_image(2, &img);
+        let clean = lut_engine().process_batch(&tiles);
+        let eng = FaultEngine::new(lut_engine(), FaultPlan::new(FaultKind::Wrong, 2));
+        let out = eng.process_batch(&tiles);
+        assert_eq!(out.len(), clean.len());
+        for (i, (got, want)) in out.iter().zip(clean.iter()).enumerate() {
+            let tick = i as u64 + 1;
+            if tick % 2 == 0 {
+                assert_ne!(got.data, want.data, "tile {i} should be corrupted");
+            } else {
+                assert_eq!(got.data, want.data, "tile {i} should be clean");
+            }
+        }
+    }
+
+    #[test]
+    fn delegates_capabilities_to_inner() {
+        let inner = lut_engine();
+        let eng = FaultEngine::new(inner.clone(), FaultPlan::new(FaultKind::Delay, 7));
+        assert_eq!(eng.preferred_batch(), inner.preferred_batch());
+        assert!(eng.nn_backend().is_some(), "nn capability passes through");
+        assert!(eng.name().contains("delay@7"));
+        assert!(eng.name().contains(&inner.name()));
+    }
+}

@@ -1,7 +1,9 @@
-//! Job types exchanged with the coordinator.
+//! Job types exchanged with the coordinator, including the failure
+//! taxonomy every `wait()` can surface.
 
 use crate::image::Image;
 use crate::nn::MatI32;
+use std::fmt;
 use std::time::Duration;
 
 /// An edge-detection request.
@@ -9,6 +11,58 @@ use std::time::Duration;
 pub struct EdgeJob {
     pub id: u64,
     pub image: Image,
+}
+
+/// Why a job failed. Every submit/wait path returns one of these instead
+/// of panicking or hanging; the server maps each variant to a distinct
+/// SFC/1 `ERR` code.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum JobError {
+    /// The request was rejected at submit time (unknown engine,
+    /// unsupported operator, shape mismatch, ...). Carries the
+    /// human-readable reason.
+    Invalid(String),
+    /// The engine panicked or violated its output contract while
+    /// processing this job, or its circuit breaker is open.
+    EngineFailed { engine: String, detail: String },
+    /// The job exceeded its deadline and was failed by the watchdog, or
+    /// `wait_timeout` elapsed.
+    Deadline { limit_ms: u64 },
+    /// The coordinator's intake was closed before the job could be
+    /// enqueued (submit after `shutdown`).
+    Shutdown,
+    /// The reply channel closed without delivering a result (the
+    /// coordinator was dropped mid-job).
+    QueueClosed,
+}
+
+impl fmt::Display for JobError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            // Submit-time rejections keep their raw message so existing
+            // "unknown engine ..." / "does not support ..." diagnostics
+            // (and their server-side classification) are unchanged.
+            JobError::Invalid(msg) => write!(f, "{msg}"),
+            JobError::EngineFailed { engine, detail } => {
+                write!(f, "engine {engine:?} failed: {detail}")
+            }
+            JobError::Deadline { limit_ms } => {
+                write!(f, "job exceeded its {limit_ms} ms deadline")
+            }
+            JobError::Shutdown => write!(f, "coordinator is shut down; job not accepted"),
+            JobError::QueueClosed => {
+                write!(f, "coordinator dropped before completing the job")
+            }
+        }
+    }
+}
+
+impl std::error::Error for JobError {}
+
+impl From<JobError> for crate::util::error::Error {
+    fn from(e: JobError) -> Self {
+        crate::util::error::Error::msg(e.to_string())
+    }
 }
 
 /// A completed job.
@@ -20,6 +74,13 @@ pub struct JobResult {
     pub latency: Duration,
     /// Number of tiles the job was split into.
     pub tiles: usize,
+    /// Name of the engine that actually served the job (differs from the
+    /// requested engine when the breaker rerouted it to a fallback).
+    pub engine: String,
+    /// `true` when the circuit breaker rerouted this job to a fallback
+    /// engine — the result may use a different multiplier design than
+    /// requested (exactness annotation).
+    pub rerouted: bool,
 }
 
 /// A completed quantized-inference (GEMM/conv2d) job: the raw i32
@@ -34,4 +95,41 @@ pub struct GemmResult {
     pub latency: Duration,
     /// Number of row-block tasks the GEMM was split into.
     pub blocks: usize,
+    /// Name of the engine that actually served the job.
+    pub engine: String,
+    /// `true` when the breaker rerouted this job to a fallback engine.
+    pub rerouted: bool,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn invalid_displays_raw_message() {
+        let e = JobError::Invalid("unknown engine \"zap\"".into());
+        assert_eq!(e.to_string(), "unknown engine \"zap\"");
+    }
+
+    #[test]
+    fn variants_render_distinct_messages() {
+        let msgs = [
+            JobError::EngineFailed { engine: "bitsim".into(), detail: "boom".into() }.to_string(),
+            JobError::Deadline { limit_ms: 250 }.to_string(),
+            JobError::Shutdown.to_string(),
+            JobError::QueueClosed.to_string(),
+        ];
+        assert!(msgs[0].contains("bitsim") && msgs[0].contains("boom"));
+        assert!(msgs[1].contains("250 ms"));
+        assert!(msgs[2].contains("shut down"));
+        assert!(msgs[3].contains("dropped"));
+        let uniq: std::collections::HashSet<_> = msgs.iter().collect();
+        assert_eq!(uniq.len(), msgs.len());
+    }
+
+    #[test]
+    fn converts_into_crate_error() {
+        let e: crate::util::error::Error = JobError::Shutdown.into();
+        assert!(e.to_string().contains("shut down"));
+    }
 }

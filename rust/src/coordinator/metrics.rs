@@ -13,9 +13,11 @@
 
 use crate::util::prng::Xoshiro256;
 use crate::util::stats;
+use crate::util::sync::lock;
+use std::fmt;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Mutex;
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 /// Latency samples retained per engine. 512 samples bound the p99
 /// estimate's standard error near 1.5 percentile points while the whole
@@ -50,10 +52,83 @@ impl Reservoir {
     }
 }
 
+/// What kind of failure is being recorded against an engine. Each kind
+/// feeds its own counter; all of them feed the circuit breaker.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FailKind {
+    /// The engine panicked (caught by the worker's `catch_unwind`) or
+    /// violated its output contract.
+    Panic,
+    /// The watchdog failed the job for exceeding its deadline.
+    Deadline,
+    /// Any other engine-attributed failure.
+    Error,
+}
+
+/// Public view of an engine's circuit-breaker state.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum BreakerState {
+    /// Healthy: jobs route normally.
+    Closed,
+    /// Cooling down after the probe window opened: exactly one probe job
+    /// is allowed through; everything else is denied/rerouted.
+    HalfOpen,
+    /// Tripped: jobs are denied (or rerouted to a fallback) until the
+    /// cooldown elapses.
+    Open,
+}
+
+impl BreakerState {
+    /// Stable numeric encoding for the Prometheus gauge
+    /// (0 = closed, 1 = half-open, 2 = open).
+    pub fn code(self) -> u64 {
+        match self {
+            BreakerState::Closed => 0,
+            BreakerState::HalfOpen => 1,
+            BreakerState::Open => 2,
+        }
+    }
+}
+
+impl fmt::Display for BreakerState {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(match self {
+            BreakerState::Closed => "closed",
+            BreakerState::HalfOpen => "half-open",
+            BreakerState::Open => "open",
+        })
+    }
+}
+
+/// Routing decision from [`Metrics::breaker_allow`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum BreakerDecision {
+    /// Breaker closed: route normally.
+    Allow,
+    /// Breaker just transitioned open → half-open: this job is the probe.
+    Probe,
+    /// Breaker open (or a probe is already in flight): do not route here.
+    Deny,
+}
+
+/// Internal breaker state machine; `Open` remembers when the cooldown
+/// elapses so `breaker_allow` can promote it to a half-open probe.
+enum Breaker {
+    Closed,
+    Open { until: Instant },
+    HalfOpen,
+}
+
 /// Live metrics of a running coordinator. One row per named engine;
 /// the aggregate view sums/merges across rows.
 pub struct Metrics {
     inner: Mutex<Vec<EngineInner>>,
+    /// Consecutive failures that trip an engine's breaker; `0` disables
+    /// the breaker entirely.
+    breaker_threshold: u32,
+    /// How long a tripped breaker stays open before allowing a half-open
+    /// probe.
+    breaker_cooldown: Duration,
     /// Jobs admitted at submit time (conv + GEMM, including empty GEMMs
     /// that complete without dispatching any task). Lock-free: recorded
     /// on the submit path, outside the per-engine rows.
@@ -68,6 +143,11 @@ pub struct Metrics {
 struct EngineInner {
     name: String,
     jobs_completed: u64,
+    jobs_failed: u64,
+    panics_caught: u64,
+    deadline_misses: u64,
+    consecutive_failures: u32,
+    breaker: Breaker,
     tiles_processed: u64,
     batches: u64,
     latencies_ms: Reservoir,
@@ -79,6 +159,11 @@ impl EngineInner {
         Self {
             name,
             jobs_completed: 0,
+            jobs_failed: 0,
+            panics_caught: 0,
+            deadline_misses: 0,
+            consecutive_failures: 0,
+            breaker: Breaker::Closed,
             tiles_processed: 0,
             batches: 0,
             latencies_ms: Reservoir::new(seed),
@@ -93,6 +178,15 @@ pub struct EngineMetricsSnapshot {
     /// The engine's registered name (the design/engine key jobs select).
     pub name: String,
     pub jobs_completed: u64,
+    /// Jobs that ended in a [`super::JobError`] attributed to this engine
+    /// (panics, contract violations, deadline misses, open breaker).
+    pub jobs_failed: u64,
+    /// Engine panics caught by the worker's `catch_unwind`.
+    pub panics_caught: u64,
+    /// Jobs failed by the watchdog for exceeding their deadline.
+    pub deadline_misses: u64,
+    /// Circuit-breaker state at snapshot time.
+    pub breaker: BreakerState,
     /// Work units processed: conv tiles plus GEMM row-blocks.
     pub tiles_processed: u64,
     pub batches: u64,
@@ -119,6 +213,8 @@ pub struct MetricsSnapshot {
     /// reports 0 — the queue belongs to the coordinator).
     pub queue_depth: usize,
     pub jobs_completed: u64,
+    /// Cumulative failed jobs across all engines.
+    pub jobs_failed: u64,
     pub tiles_processed: u64,
     pub batches: u64,
     pub mean_batch_size: f64,
@@ -130,9 +226,21 @@ pub struct MetricsSnapshot {
     pub per_engine: Vec<EngineMetricsSnapshot>,
 }
 
+/// Default consecutive-failure count that trips a breaker.
+pub const DEFAULT_BREAKER_THRESHOLD: u32 = 5;
+/// Default open-state cooldown before a half-open probe is allowed.
+pub const DEFAULT_BREAKER_COOLDOWN: Duration = Duration::from_millis(500);
+
 impl Metrics {
-    /// Metrics tracking one row per engine name.
+    /// Metrics tracking one row per engine name, with the default
+    /// circuit-breaker tuning.
     pub fn new(engine_names: Vec<String>) -> Self {
+        Self::with_breaker(engine_names, DEFAULT_BREAKER_THRESHOLD, DEFAULT_BREAKER_COOLDOWN)
+    }
+
+    /// Metrics with explicit breaker tuning (`threshold == 0` disables
+    /// the breaker: `breaker_allow` always answers `Allow`).
+    pub fn with_breaker(engine_names: Vec<String>, threshold: u32, cooldown: Duration) -> Self {
         assert!(!engine_names.is_empty());
         Self {
             inner: Mutex::new(
@@ -144,6 +252,8 @@ impl Metrics {
                     .map(|(i, n)| EngineInner::new(n, 0x5fc0_0db5 ^ i as u64))
                     .collect(),
             ),
+            breaker_threshold: threshold,
+            breaker_cooldown: cooldown,
             accepted: AtomicU64::new(0),
             rejected: AtomicU64::new(0),
         }
@@ -160,7 +270,7 @@ impl Metrics {
     }
 
     pub fn record_batch(&self, engine: usize, size: usize, busy: Duration) {
-        let mut rows = self.inner.lock().unwrap();
+        let mut rows = lock(&self.inner);
         let m = &mut rows[engine];
         m.batches += 1;
         m.tiles_processed += size as u64;
@@ -168,14 +278,82 @@ impl Metrics {
     }
 
     pub fn record_job(&self, engine: usize, latency: Duration) {
-        let mut rows = self.inner.lock().unwrap();
+        let mut rows = lock(&self.inner);
         let m = &mut rows[engine];
         m.jobs_completed += 1;
         m.latencies_ms.record(latency.as_secs_f64() * 1e3);
+        // A success heals the breaker: a completed probe (or any
+        // completion racing the trip) closes it and resets the streak.
+        m.consecutive_failures = 0;
+        m.breaker = Breaker::Closed;
+    }
+
+    /// Count one failed job against `engine` and advance its breaker
+    /// state machine. O(1) like every other recorder.
+    pub fn record_failure(&self, engine: usize, kind: FailKind) {
+        let mut rows = lock(&self.inner);
+        let m = &mut rows[engine];
+        m.jobs_failed += 1;
+        match kind {
+            FailKind::Panic => m.panics_caught += 1,
+            FailKind::Deadline => m.deadline_misses += 1,
+            FailKind::Error => {}
+        }
+        if self.breaker_threshold == 0 {
+            return;
+        }
+        m.consecutive_failures = m.consecutive_failures.saturating_add(1);
+        match m.breaker {
+            // A failed half-open probe re-opens for a full cooldown.
+            Breaker::HalfOpen => {
+                m.breaker = Breaker::Open { until: Instant::now() + self.breaker_cooldown };
+            }
+            Breaker::Closed if m.consecutive_failures >= self.breaker_threshold => {
+                m.breaker = Breaker::Open { until: Instant::now() + self.breaker_cooldown };
+            }
+            _ => {}
+        }
+    }
+
+    /// Consult `engine`'s breaker before routing a job to it. Promotes
+    /// an expired `Open` to `HalfOpen` and nominates the caller's job as
+    /// the probe; while half-open, everything but the probe is denied.
+    pub fn breaker_allow(&self, engine: usize) -> BreakerDecision {
+        if self.breaker_threshold == 0 {
+            return BreakerDecision::Allow;
+        }
+        let mut rows = lock(&self.inner);
+        let m = &mut rows[engine];
+        match m.breaker {
+            Breaker::Closed => BreakerDecision::Allow,
+            Breaker::Open { until } if Instant::now() >= until => {
+                m.breaker = Breaker::HalfOpen;
+                BreakerDecision::Probe
+            }
+            Breaker::Open { .. } => BreakerDecision::Deny,
+            Breaker::HalfOpen => BreakerDecision::Deny,
+        }
+    }
+
+    /// `engine`'s breaker state as of now (for health endpoints).
+    pub fn breaker_state(&self, engine: usize) -> BreakerState {
+        let rows = lock(&self.inner);
+        match rows[engine].breaker {
+            Breaker::Closed => BreakerState::Closed,
+            Breaker::Open { .. } => BreakerState::Open,
+            Breaker::HalfOpen => BreakerState::HalfOpen,
+        }
+    }
+
+    /// `true` when any engine's breaker is open or half-open — the
+    /// `/healthz` degraded condition.
+    pub fn any_breaker_open(&self) -> bool {
+        let rows = lock(&self.inner);
+        rows.iter().any(|m| !matches!(m.breaker, Breaker::Closed))
     }
 
     pub fn snapshot(&self) -> MetricsSnapshot {
-        let rows = self.inner.lock().unwrap();
+        let rows = lock(&self.inner);
         let mean_batch = |tiles: u64, batches: u64| {
             if batches == 0 {
                 0.0
@@ -190,6 +368,14 @@ impl Metrics {
                 EngineMetricsSnapshot {
                     name: m.name.clone(),
                     jobs_completed: m.jobs_completed,
+                    jobs_failed: m.jobs_failed,
+                    panics_caught: m.panics_caught,
+                    deadline_misses: m.deadline_misses,
+                    breaker: match m.breaker {
+                        Breaker::Closed => BreakerState::Closed,
+                        Breaker::Open { .. } => BreakerState::Open,
+                        Breaker::HalfOpen => BreakerState::HalfOpen,
+                    },
                     tiles_processed: m.tiles_processed,
                     batches: m.batches,
                     mean_batch_size: mean_batch(m.tiles_processed, m.batches),
@@ -213,6 +399,7 @@ impl Metrics {
             jobs_rejected: self.rejected.load(Ordering::Relaxed),
             queue_depth: 0,
             jobs_completed: rows.iter().map(|m| m.jobs_completed).sum(),
+            jobs_failed: rows.iter().map(|m| m.jobs_failed).sum(),
             tiles_processed: tiles,
             batches,
             mean_batch_size: mean_batch(tiles, batches),
@@ -325,6 +512,80 @@ mod tests {
         assert_eq!(s.jobs_rejected, 1);
         assert_eq!(s.queue_depth, 0);
         assert_eq!(s.jobs_completed, 0, "accept/reject do not touch completion");
+    }
+
+    #[test]
+    fn failure_counters_split_by_kind() {
+        let m = Metrics::new(vec!["e".into()]);
+        m.record_failure(0, FailKind::Panic);
+        m.record_failure(0, FailKind::Deadline);
+        m.record_failure(0, FailKind::Error);
+        let s = m.snapshot();
+        assert_eq!(s.jobs_failed, 3);
+        assert_eq!(s.per_engine[0].jobs_failed, 3);
+        assert_eq!(s.per_engine[0].panics_caught, 1);
+        assert_eq!(s.per_engine[0].deadline_misses, 1);
+        assert_eq!(s.jobs_completed, 0, "failures are not completions");
+    }
+
+    #[test]
+    fn breaker_trips_after_threshold_consecutive_failures() {
+        let m = Metrics::with_breaker(vec!["e".into()], 3, Duration::from_secs(60));
+        m.record_failure(0, FailKind::Panic);
+        m.record_failure(0, FailKind::Panic);
+        assert_eq!(m.breaker_state(0), BreakerState::Closed);
+        assert_eq!(m.breaker_allow(0), BreakerDecision::Allow);
+        m.record_failure(0, FailKind::Panic);
+        assert_eq!(m.breaker_state(0), BreakerState::Open);
+        assert_eq!(m.breaker_allow(0), BreakerDecision::Deny);
+        assert!(m.any_breaker_open());
+    }
+
+    #[test]
+    fn success_resets_streak_and_closes_breaker() {
+        let m = Metrics::with_breaker(vec!["e".into()], 2, Duration::from_secs(60));
+        m.record_failure(0, FailKind::Error);
+        m.record_job(0, Duration::from_millis(1));
+        m.record_failure(0, FailKind::Error);
+        assert_eq!(m.breaker_state(0), BreakerState::Closed, "streak was reset");
+        m.record_failure(0, FailKind::Error);
+        assert_eq!(m.breaker_state(0), BreakerState::Open);
+        m.record_job(0, Duration::from_millis(1));
+        assert_eq!(m.breaker_state(0), BreakerState::Closed, "success heals");
+        assert!(!m.any_breaker_open());
+    }
+
+    #[test]
+    fn half_open_allows_one_probe_then_denies() {
+        let m = Metrics::with_breaker(vec!["e".into()], 1, Duration::from_millis(1));
+        m.record_failure(0, FailKind::Panic);
+        assert_eq!(m.breaker_state(0), BreakerState::Open);
+        std::thread::sleep(Duration::from_millis(5));
+        assert_eq!(m.breaker_allow(0), BreakerDecision::Probe, "cooldown elapsed");
+        assert_eq!(m.breaker_state(0), BreakerState::HalfOpen);
+        assert_eq!(m.breaker_allow(0), BreakerDecision::Deny, "one probe at a time");
+        // Probe fails → reopen for a fresh cooldown.
+        m.record_failure(0, FailKind::Error);
+        assert_eq!(m.breaker_state(0), BreakerState::Open);
+    }
+
+    #[test]
+    fn zero_threshold_disables_breaker() {
+        let m = Metrics::with_breaker(vec!["e".into()], 0, Duration::from_secs(1));
+        for _ in 0..50 {
+            m.record_failure(0, FailKind::Panic);
+        }
+        assert_eq!(m.breaker_state(0), BreakerState::Closed);
+        assert_eq!(m.breaker_allow(0), BreakerDecision::Allow);
+        assert_eq!(m.snapshot().per_engine[0].panics_caught, 50, "counters still count");
+    }
+
+    #[test]
+    fn breaker_state_codes_are_stable() {
+        assert_eq!(BreakerState::Closed.code(), 0);
+        assert_eq!(BreakerState::HalfOpen.code(), 1);
+        assert_eq!(BreakerState::Open.code(), 2);
+        assert_eq!(BreakerState::HalfOpen.to_string(), "half-open");
     }
 
     #[test]

@@ -27,14 +27,26 @@
 //! engines and the functional-model reference; rowbuf/PJRT are
 //! conv-datapath-only and reject nn jobs at submit time).
 //!
+//! The pipeline is fault tolerant end-to-end: worker batches run under
+//! `catch_unwind` (a panicking engine fails only its own jobs, as
+//! [`job::JobError`]s delivered on the reply channel — `wait()` never
+//! hangs), an optional watchdog enforces per-job deadlines, per-engine
+//! circuit breakers trip after consecutive failures and either reject or
+//! reroute to a configured fallback engine, and [`fault::FaultEngine`]
+//! injects deterministic panic/delay/wrong-output faults
+//! (`fault/<plan>/<engine>` spec strings) to drive chaos tests.
+//!
 //! ```text
 //!  submit(img, key?) ─┬─ tiler ─▶ [bounded tile queue] ─▶ batcher ─▶ engine[key] ─┐
-//!                     │                                   (worker × W)            │
-//!                     └──────────────── reassembly ◀─────────────────────────────┘
+//!                     │ (breaker/fallback route)          (worker × W,            │
+//!                     │                                    catch_unwind)          │
+//!                     └────────── reassembly ◀── watchdog deadline sweep ────────┘
 //! ```
+#![cfg_attr(not(test), deny(clippy::unwrap_used, clippy::expect_used))]
 
 pub mod engine;
 pub mod engines;
+pub mod fault;
 pub mod job;
 pub mod metrics;
 pub mod service;
@@ -45,7 +57,10 @@ pub use engine::{
     RowbufTileEngine, TileEngine,
 };
 pub use engines::{resolve, resolve_str, resolve_with_fallback, EngineSpec};
-pub use job::{EdgeJob, GemmResult, JobResult};
-pub use metrics::{EngineMetricsSnapshot, Metrics, MetricsSnapshot};
+pub use fault::{silence_worker_panics, FaultEngine, FaultKind, FaultPlan};
+pub use job::{EdgeJob, GemmResult, JobError, JobResult};
+pub use metrics::{
+    BreakerDecision, BreakerState, EngineMetricsSnapshot, FailKind, Metrics, MetricsSnapshot,
+};
 pub use service::{Coordinator, CoordinatorConfig, GemmHandle, JobHandle};
 pub use tiler::{reassemble, tile_image, Tile, TileOut, TILE_CORE, TILE_HALO, TILE_IN};

@@ -25,7 +25,10 @@
 //! are the registry of `image::ops` (`laplacian` default, `sobel`,
 //! `prewitt`, `scharr`, `roberts`, `sharpen`, `gaussian3`).
 
-use sfcmul::coordinator::{engines, Coordinator, CoordinatorConfig, EngineSpec, TileEngine};
+use sfcmul::coordinator::{
+    engines, silence_worker_panics, Coordinator, CoordinatorConfig, EngineSpec, FaultEngine,
+    FaultPlan, TileEngine,
+};
 use sfcmul::image::ops::{apply_operator, OpProgram, Operator};
 use sfcmul::image::{synthetic_scene, Image};
 use sfcmul::multipliers::{lut, registry, DesignSpec};
@@ -54,6 +57,18 @@ USAGE: sfcmul <subcommand> [options]
            run the streaming coordinator on a synthetic job stream, round-robin
            across the listed designs, print aggregate + per-design metrics
            (default designs: proposed@8,exact@8 — an exact-vs-approximate A/B)
+           fault-tolerance knobs (both serve modes):
+           --fault PLAN            wrap every engine in a deterministic fault
+                                   injector; PLAN = <panic|delay|wrong>@<every>
+                                   [,ms=<delay>][,limit=<n>], e.g. panic@7 or
+                                   delay@3,ms=20,limit=50
+           --deadline-ms D         watchdog: fail jobs older than D ms
+           --breaker-threshold K   consecutive failures tripping an engine's
+                                   circuit breaker (0 disables; default 5)
+           --breaker-cooldown-ms C open-breaker cooldown before a half-open
+                                   probe (default 500)
+           --fallback FROM=TO,..   serve FROM's jobs on TO while FROM's
+                                   breaker is open (names from --designs)
   serve    --listen ADDR [--workers W] [--batch B] [--designs SPEC,SPEC,...]
            [--conn-workers C] [--max-inflight J] [--quota-rps R] [--quota-burst B]
            network mode: serve the fleet over TCP (line-delimited SFC/1 job
@@ -83,6 +98,8 @@ design SPEC grammar:  family[@bits][:trunc=paper|none|K][:comp=paper|none|const]
   examples: proposed@8   proposed@16:comp=const   d2@8:trunc=none   exact@8:opt=none
 engine SPEC: lut (8-bit table, default) | model (any width) | rowbuf
              | bitsim (gate-level netlist via bitsliced sim, widths 8..=31) | pjrt
+             | fault/<plan>/<engine> (deterministic fault injector, e.g.
+               fault/panic@7/lut — same plan grammar as --fault)
 operator OP: laplacian (default) | sobel | prewitt | scharr | roberts
              | sharpen | gaussian3
 ";
@@ -209,6 +226,10 @@ fn cmd_edge(args: &Args) -> i32 {
     let coord = Coordinator::start(engine, CoordinatorConfig::default());
     let result = match coord.submit_to(img.clone(), None, op) {
         Ok(handle) => handle.wait(),
+        Err(e) => Err(e),
+    };
+    let result = match result {
+        Ok(r) => r,
         Err(e) => {
             eprintln!("error: {e}");
             return 1;
@@ -253,6 +274,19 @@ fn cmd_serve(args: &Args) -> i32 {
         Ok(o) => o,
         Err(code) => return code,
     };
+    // --fault wraps every resolved engine in a deterministic injector;
+    // per-engine plans are also reachable through the engine spec
+    // grammar (fault/<plan>/<engine>).
+    let fault_plan: Option<FaultPlan> = match args.get("fault") {
+        None => None,
+        Some(raw) => match raw.parse::<FaultPlan>() {
+            Ok(p) => Some(p),
+            Err(e) => {
+                eprintln!("invalid --fault: {e}");
+                return 2;
+            }
+        },
+    };
     // --designs a,b,c; a lone --design is honoured; the default A/Bs the
     // proposed approximate design against the exact multiplier.
     let designs_raw = args
@@ -274,7 +308,7 @@ fn cmd_serve(args: &Args) -> i32 {
         if named.iter().any(|(n, _)| *n == key) {
             continue; // duplicate spec in the list
         }
-        match engine_for(engine_spec, &spec) {
+        match engine_for(engine_spec.clone(), &spec) {
             Ok((engine, actual)) => {
                 if !engine.supports_op(op) {
                     eprintln!(
@@ -284,6 +318,12 @@ fn cmd_serve(args: &Args) -> i32 {
                     return 2;
                 }
                 backends.push(actual);
+                let engine = match &fault_plan {
+                    Some(plan) => {
+                        Arc::new(FaultEngine::new(engine, plan.clone())) as Arc<dyn TileEngine>
+                    }
+                    None => engine,
+                };
                 named.push((key, engine));
             }
             Err(e) => {
@@ -297,12 +337,49 @@ fn cmd_serve(args: &Args) -> i32 {
         return 2;
     }
     let keys: Vec<String> = named.iter().map(|(n, _)| n.clone()).collect();
+    // --fallback FROM=TO pairs, validated here so a typo is a clean CLI
+    // error rather than a coordinator panic.
+    let mut fallbacks: Vec<(String, String)> = Vec::new();
+    if let Some(raw) = args.get("fallback") {
+        for pair in raw.split(',').map(str::trim).filter(|s| !s.is_empty()) {
+            let Some((from, to)) = pair.split_once('=') else {
+                eprintln!("invalid --fallback {pair:?} (expected FROM=TO)");
+                return 2;
+            };
+            let (from, to) = (from.trim().to_string(), to.trim().to_string());
+            if !keys.contains(&from) || !keys.contains(&to) || from == to {
+                eprintln!(
+                    "--fallback {pair:?} must name two distinct designs from [{}]",
+                    keys.join(", ")
+                );
+                return 2;
+            }
+            fallbacks.push((from, to));
+        }
+    }
     let workers = args.get_parse("workers", 4usize).unwrap_or(4);
     let batch = args.get_parse("batch", 8usize).unwrap_or(8);
-    let coord = Coordinator::start_named(
-        named,
-        CoordinatorConfig { workers, queue_capacity: 256, max_batch: batch },
-    );
+    let dflt = CoordinatorConfig::default();
+    let deadline_ms = args.get_parse("deadline-ms", 0u64).unwrap_or(0);
+    let cfg = CoordinatorConfig {
+        workers,
+        queue_capacity: 256,
+        max_batch: batch,
+        deadline: (deadline_ms > 0).then(|| std::time::Duration::from_millis(deadline_ms)),
+        breaker_threshold: args
+            .get_parse("breaker-threshold", dflt.breaker_threshold)
+            .unwrap_or(dflt.breaker_threshold),
+        breaker_cooldown: std::time::Duration::from_millis(
+            args.get_parse("breaker-cooldown-ms", dflt.breaker_cooldown.as_millis() as u64)
+                .unwrap_or(dflt.breaker_cooldown.as_millis() as u64),
+        ),
+    };
+    if fault_plan.is_some() {
+        // Injected panics are caught and counted by the workers; keep
+        // the default hook from spraying backtraces over the report.
+        silence_worker_panics();
+    }
+    let coord = Coordinator::start_named_with_fallbacks(named, cfg, fallbacks);
     backends.sort_by_key(|e| e.key());
     backends.dedup();
     let backend_list =
@@ -326,26 +403,34 @@ fn cmd_serve(args: &Args) -> i32 {
             break;
         }
         let key = keys[i % keys.len()].as_str();
-        handles.push(
-            coord
-                .submit_to(synthetic_scene(256, 256, i as u64), Some(key), op)
-                .expect("registered engine serving the requested operator"),
-        );
+        // Under fault injection a submit may bounce off an open breaker;
+        // report it and keep the stream going — degraded, not dead.
+        match coord.submit_to(synthetic_scene(256, 256, i as u64), Some(key), op) {
+            Ok(h) => handles.push(h),
+            Err(e) => eprintln!("job {i} rejected: {e}"),
+        }
     }
     let mut px_total = 0usize;
+    let mut failed = 0usize;
     for h in handles {
-        let r = h.wait();
-        px_total += r.edges.width * r.edges.height;
+        match h.wait() {
+            Ok(r) => px_total += r.edges.width * r.edges.height,
+            Err(e) => {
+                failed += 1;
+                eprintln!("job failed: {e}");
+            }
+        }
     }
     let wall = t0.elapsed();
     let m = coord.shutdown();
     println!(
-        "completed {} jobs / {} tiles in {:.2} s  ({:.1} Mpix/s, mean batch {:.2})",
+        "completed {} jobs / {} tiles in {:.2} s  ({:.1} Mpix/s, mean batch {:.2}{})",
         m.jobs_completed,
         m.tiles_processed,
         wall.as_secs_f64(),
         px_total as f64 / wall.as_secs_f64() / 1e6,
-        m.mean_batch_size
+        m.mean_batch_size,
+        if failed > 0 { format!(", {failed} failed") } else { String::new() }
     );
     print_snapshot(&m);
     0
@@ -355,8 +440,8 @@ fn cmd_serve(args: &Args) -> i32 {
 /// the per-design metric rows.
 fn print_snapshot(m: &sfcmul::coordinator::MetricsSnapshot) {
     println!(
-        "jobs accepted/rejected/completed = {}/{}/{}; queue depth {}",
-        m.jobs_accepted, m.jobs_rejected, m.jobs_completed, m.queue_depth
+        "jobs accepted/rejected/completed/failed = {}/{}/{}/{}; queue depth {}",
+        m.jobs_accepted, m.jobs_rejected, m.jobs_completed, m.jobs_failed, m.queue_depth
     );
     println!(
         "latency p50/p90/p99 = {:.1} / {:.1} / {:.1} ms; engine busy {:.2} s",
@@ -367,8 +452,18 @@ fn print_snapshot(m: &sfcmul::coordinator::MetricsSnapshot) {
     );
     println!("per-design metrics:");
     for row in &m.per_engine {
+        let health = if row.jobs_failed > 0
+            || row.breaker != sfcmul::coordinator::BreakerState::Closed
+        {
+            format!(
+                "  failed {} (panics {}, deadline {})  breaker {}",
+                row.jobs_failed, row.panics_caught, row.deadline_misses, row.breaker
+            )
+        } else {
+            String::new()
+        };
         println!(
-            "  {:<24} jobs {:>4}  tiles {:>6}  p50/p99 {:>6.1}/{:>6.1} ms  busy {:.2} s",
+            "  {:<24} jobs {:>4}  tiles {:>6}  p50/p99 {:>6.1}/{:>6.1} ms  busy {:.2} s{health}",
             row.name,
             row.jobs_completed,
             row.tiles_processed,

@@ -349,7 +349,7 @@ impl Network {
         let mut cur = x.clone();
         for layer in &self.layers {
             let (oh, ow) = layer.out_dims(cur.h, cur.w);
-            let res = coord.submit_conv2d(&cur, layer, engine)?.wait();
+            let res = coord.submit_conv2d(&cur, layer, engine)?.wait()?;
             cur = layer.epilogue(&res.out, oh, ow);
         }
         Ok(cur)

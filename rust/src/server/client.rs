@@ -50,6 +50,78 @@ impl From<std::io::Error> for ClientError {
     }
 }
 
+impl ClientError {
+    /// Is this failure worth retrying? `ERR` codes that reflect a
+    /// momentary server condition — load shedding (`busy`, `quota`) or a
+    /// fault-tolerance outcome (`engine-failed`: a caught panic or open
+    /// breaker; `deadline`: a watchdog miss) — can succeed on a later
+    /// attempt against the same healthy protocol stream. Validation
+    /// errors, shutdown, transport and protocol failures are not
+    /// retried.
+    pub fn is_transient(&self) -> bool {
+        match self {
+            ClientError::Server { code, .. } => {
+                matches!(code.as_str(), "busy" | "quota" | "engine-failed" | "deadline")
+            }
+            _ => false,
+        }
+    }
+}
+
+/// Deterministic exponential backoff for transient server errors: the
+/// delay before attempt `i` (of `attempts` total) is `base << (i - 1)`,
+/// capped at `max` — no jitter, so tests and soak runs are exactly
+/// reproducible.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct RetryPolicy {
+    /// Total attempts, including the first one (0 behaves like 1).
+    pub attempts: u32,
+    /// Delay before the first retry.
+    pub base: Duration,
+    /// Upper bound on any single delay.
+    pub max: Duration,
+}
+
+impl Default for RetryPolicy {
+    fn default() -> Self {
+        Self { attempts: 4, base: Duration::from_millis(10), max: Duration::from_millis(200) }
+    }
+}
+
+impl RetryPolicy {
+    /// The backoff delay before retry number `retry` (1-based).
+    pub fn delay(&self, retry: u32) -> Duration {
+        let shift = retry.saturating_sub(1).min(20);
+        let d = self.base.saturating_mul(1u32 << shift);
+        d.min(self.max)
+    }
+
+    /// Run `op` under this policy: retry on
+    /// [transient](ClientError::is_transient) errors with backoff,
+    /// return the first success or the last error.
+    pub fn run<T>(
+        &self,
+        mut op: impl FnMut() -> Result<T, ClientError>,
+    ) -> Result<T, ClientError> {
+        let attempts = self.attempts.max(1);
+        let mut last_err = None;
+        for attempt in 1..=attempts {
+            match op() {
+                Ok(v) => return Ok(v),
+                Err(e) if e.is_transient() && attempt < attempts => {
+                    std::thread::sleep(self.delay(attempt));
+                    last_err = Some(e);
+                }
+                Err(e) => return Err(e),
+            }
+        }
+        // Unreachable in practice (the loop always returns), but keep a
+        // sane value rather than a panic.
+        Err(last_err
+            .unwrap_or_else(|| ClientError::Protocol("retry loop made no attempt".into())))
+    }
+}
+
 /// The result of one served edge frame.
 pub struct EdgeReply {
     pub edges: Image,
@@ -168,6 +240,33 @@ impl Client {
         Ok(GemmReply { out, latency_us })
     }
 
+    /// [`edge`](Self::edge) under a [`RetryPolicy`]: transient `ERR`
+    /// replies (`busy`, `quota`, `engine-failed`, `deadline`) are
+    /// retried with backoff on the same connection — the protocol
+    /// guarantees an `ERR` frame never desyncs the stream, so the next
+    /// attempt reuses it safely.
+    pub fn edge_with_retry(
+        &mut self,
+        img: &Image,
+        engine: Option<&str>,
+        op: Operator,
+        policy: RetryPolicy,
+    ) -> Result<EdgeReply, ClientError> {
+        policy.run(|| self.edge(img, engine, op))
+    }
+
+    /// [`gemm`](Self::gemm) under a [`RetryPolicy`] (see
+    /// [`edge_with_retry`](Self::edge_with_retry)).
+    pub fn gemm_with_retry(
+        &mut self,
+        a: &MatI8,
+        b: &MatI8,
+        engine: Option<&str>,
+        policy: RetryPolicy,
+    ) -> Result<GemmReply, ClientError> {
+        policy.run(|| self.gemm(a, b, engine))
+    }
+
     /// Fetch the metrics text over the job protocol (`METRICS` frame).
     pub fn metrics_text(&mut self) -> Result<String, ClientError> {
         self.sock.write_all(b"METRICS\n")?;
@@ -204,4 +303,84 @@ pub fn http_get(addr: SocketAddr, path: &str) -> std::io::Result<(u16, String)> 
             std::io::Error::new(std::io::ErrorKind::InvalidData, "malformed status line")
         })?;
     Ok((status, body))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn server_err(code: &str) -> ClientError {
+        ClientError::Server { code: code.into(), message: "m".into() }
+    }
+
+    #[test]
+    fn transient_codes_are_exactly_the_retryable_ones() {
+        for code in ["busy", "quota", "engine-failed", "deadline"] {
+            assert!(server_err(code).is_transient(), "{code}");
+        }
+        for code in ["bad-request", "unknown-engine", "unsupported", "shutting-down", "internal"]
+        {
+            assert!(!server_err(code).is_transient(), "{code}");
+        }
+        assert!(!ClientError::Protocol("x".into()).is_transient());
+        assert!(!ClientError::Io(std::io::Error::new(std::io::ErrorKind::Other, "x"))
+            .is_transient());
+    }
+
+    #[test]
+    fn backoff_doubles_and_caps_deterministically() {
+        let p = RetryPolicy {
+            attempts: 5,
+            base: Duration::from_millis(10),
+            max: Duration::from_millis(35),
+        };
+        assert_eq!(p.delay(1), Duration::from_millis(10));
+        assert_eq!(p.delay(2), Duration::from_millis(20));
+        assert_eq!(p.delay(3), Duration::from_millis(35), "capped");
+        assert_eq!(p.delay(4), Duration::from_millis(35));
+    }
+
+    #[test]
+    fn run_retries_transient_until_success() {
+        let p = RetryPolicy {
+            attempts: 4,
+            base: Duration::from_millis(1),
+            max: Duration::from_millis(1),
+        };
+        let mut calls = 0u32;
+        let r = p.run(|| {
+            calls += 1;
+            if calls < 3 {
+                Err(server_err("engine-failed"))
+            } else {
+                Ok(7)
+            }
+        });
+        assert_eq!(r.unwrap(), 7);
+        assert_eq!(calls, 3);
+    }
+
+    #[test]
+    fn run_fails_fast_on_fatal_and_gives_up_after_attempts() {
+        let p = RetryPolicy {
+            attempts: 4,
+            base: Duration::from_millis(1),
+            max: Duration::from_millis(1),
+        };
+        let mut calls = 0u32;
+        let r: Result<(), _> = p.run(|| {
+            calls += 1;
+            Err(server_err("unknown-engine"))
+        });
+        assert!(matches!(r, Err(ClientError::Server { ref code, .. }) if code == "unknown-engine"));
+        assert_eq!(calls, 1, "fatal errors are not retried");
+
+        let mut calls = 0u32;
+        let r: Result<(), _> = p.run(|| {
+            calls += 1;
+            Err(server_err("busy"))
+        });
+        assert!(matches!(r, Err(ClientError::Server { ref code, .. }) if code == "busy"));
+        assert_eq!(calls, 4, "transient errors exhaust the attempt budget");
+    }
 }

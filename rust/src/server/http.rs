@@ -6,8 +6,12 @@
 //! protocol. Supported routes:
 //!
 //! * `GET /metrics` — Prometheus-style text exposition of the
-//!   coordinator [`MetricsSnapshot`] plus server gauges.
-//! * `GET /healthz` — liveness probe, `200 ok`.
+//!   coordinator [`MetricsSnapshot`] plus server gauges (including
+//!   per-engine failure counters and circuit-breaker state).
+//! * `GET /healthz` — health probe: `200 ok` while every engine's
+//!   circuit breaker is closed, `503 degraded` otherwise — load
+//!   balancers can steer traffic away from a degraded instance while
+//!   its fallback routing keeps in-flight clients served.
 //!
 //! Everything else is `404`; non-GET/HEAD methods are `405`. This is
 //! deliberately not a general HTTP server — no keep-alive, chunking, or
@@ -43,13 +47,18 @@ pub fn response(status: u16, reason: &str, content_type: &str, body: &str) -> St
     )
 }
 
-/// Route one HTTP request to its response text.
-pub fn route(method: &str, path: &str, metrics: impl FnOnce() -> String) -> String {
+/// Route one HTTP request to its response text. `degraded` is the
+/// coordinator's circuit-breaker signal: it turns the `/healthz` probe
+/// into `503 degraded` without touching any other route.
+pub fn route(method: &str, path: &str, degraded: bool, metrics: impl FnOnce() -> String) -> String {
     if method != "GET" && method != "HEAD" {
         return response(405, "Method Not Allowed", "text/plain", "method not allowed\n");
     }
     match path {
         "/metrics" => response(200, "OK", "text/plain; version=0.0.4", &metrics()),
+        "/healthz" if degraded => {
+            response(503, "Service Unavailable", "text/plain", "degraded\n")
+        }
         "/healthz" => response(200, "OK", "text/plain", "ok\n"),
         _ => response(404, "Not Found", "text/plain", "not found\n"),
     }
@@ -73,6 +82,7 @@ pub fn render_metrics(m: &MetricsSnapshot, s: &ServerStatsSnapshot) -> String {
     let _ = writeln!(w, "sfcmul_jobs_accepted_total {}", m.jobs_accepted);
     let _ = writeln!(w, "sfcmul_jobs_rejected_total {}", m.jobs_rejected);
     let _ = writeln!(w, "sfcmul_jobs_completed_total {}", m.jobs_completed);
+    let _ = writeln!(w, "sfcmul_jobs_failed_total {}", m.jobs_failed);
     let _ = writeln!(w, "sfcmul_tiles_processed_total {}", m.tiles_processed);
     let _ = writeln!(w, "sfcmul_batches_total {}", m.batches);
     let _ = writeln!(w, "sfcmul_queue_depth {}", m.queue_depth);
@@ -81,6 +91,11 @@ pub fn render_metrics(m: &MetricsSnapshot, s: &ServerStatsSnapshot) -> String {
     for e in &m.per_engine {
         let labels = format!("engine=\"{}\"", e.name);
         let _ = writeln!(w, "sfcmul_engine_jobs_completed_total{{{labels}}} {}", e.jobs_completed);
+        let _ = writeln!(w, "sfcmul_engine_jobs_failed_total{{{labels}}} {}", e.jobs_failed);
+        let _ = writeln!(w, "sfcmul_engine_panics_caught_total{{{labels}}} {}", e.panics_caught);
+        let _ = writeln!(w, "sfcmul_engine_deadline_misses_total{{{labels}}} {}", e.deadline_misses);
+        // Breaker state as a gauge: 0 = closed, 1 = half-open, 2 = open.
+        let _ = writeln!(w, "sfcmul_engine_breaker_state{{{labels}}} {}", e.breaker.code());
         let _ = writeln!(w, "sfcmul_engine_tiles_processed_total{{{labels}}} {}", e.tiles_processed);
         let _ = writeln!(w, "sfcmul_engine_batches_total{{{labels}}} {}", e.batches);
         let _ = writeln!(w, "sfcmul_engine_busy_seconds{{{labels}}} {:.6}", e.engine_busy.as_secs_f64());
@@ -127,14 +142,26 @@ mod tests {
 
     #[test]
     fn routes_and_statuses() {
-        let r = route("GET", "/healthz", String::new);
+        let r = route("GET", "/healthz", false, String::new);
         assert!(r.starts_with("HTTP/1.1 200 OK"));
         assert!(r.ends_with("ok\n"));
-        assert!(route("GET", "/nope", String::new).starts_with("HTTP/1.1 404"));
-        assert!(route("POST", "/metrics", String::new).starts_with("HTTP/1.1 405"));
-        let r = route("GET", "/metrics", || "x 1\n".to_string());
+        assert!(route("GET", "/nope", false, String::new).starts_with("HTTP/1.1 404"));
+        assert!(route("POST", "/metrics", false, String::new).starts_with("HTTP/1.1 405"));
+        let r = route("GET", "/metrics", false, || "x 1\n".to_string());
         assert!(r.contains("Content-Length: 4"));
         assert!(r.ends_with("x 1\n"));
+    }
+
+    /// An open circuit breaker flips only `/healthz` — to `503 degraded`
+    /// — while `/metrics` keeps answering `200` (operators need the
+    /// counters most exactly when the instance is degraded).
+    #[test]
+    fn healthz_reports_degraded_when_breaker_open() {
+        let r = route("GET", "/healthz", true, String::new);
+        assert!(r.starts_with("HTTP/1.1 503 Service Unavailable"));
+        assert!(r.ends_with("degraded\n"));
+        assert!(route("GET", "/metrics", true, || "x 1\n".into()).starts_with("HTTP/1.1 200"));
+        assert!(route("GET", "/nope", true, String::new).starts_with("HTTP/1.1 404"));
     }
 
     #[test]
@@ -155,6 +182,11 @@ mod tests {
         };
         let text = render_metrics(&m, &s);
         assert!(text.contains("sfcmul_jobs_accepted_total 1"));
+        assert!(text.contains("sfcmul_jobs_failed_total 0"));
+        assert!(text.contains("sfcmul_engine_jobs_failed_total{engine=\"proposed@8\"} 0"));
+        assert!(text.contains("sfcmul_engine_panics_caught_total{engine=\"proposed@8\"} 0"));
+        assert!(text.contains("sfcmul_engine_deadline_misses_total{engine=\"exact@8\"} 0"));
+        assert!(text.contains("sfcmul_engine_breaker_state{engine=\"proposed@8\"} 0"));
         assert!(text.contains("sfcmul_engine_job_latency_ms{engine=\"proposed@8\",quantile=\"0.5\"}"));
         assert!(text.contains("sfcmul_engine_job_latency_ms{engine=\"exact@8\",quantile=\"0.99\"}"));
         assert!(text.contains("sfcmul_server_rejected_total{reason=\"quota\"} 2"));

@@ -101,7 +101,7 @@ impl Admission {
 
     fn take_token(&self, client: IpAddr) -> bool {
         let now = Instant::now();
-        let mut map = self.buckets.lock().unwrap();
+        let mut map = crate::util::sync::lock(&self.buckets);
         if !map.contains_key(&client) && map.len() >= MAX_TRACKED_CLIENTS {
             map.retain(|_, b| now.duration_since(b.last).as_secs() < 60);
         }

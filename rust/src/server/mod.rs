@@ -22,6 +22,13 @@
 //! Everything is hand-rolled on `std` — no tokio, hyper, or signal
 //! crates — matching the crate's offline, auditable-substrate rule
 //! (see [`crate::util`]).
+//!
+//! Fault tolerance rides the same wire: job failures surface as `ERR
+//! engine-failed` / `ERR deadline` lines that never desync the stream,
+//! `/healthz` turns `503 degraded` while any engine's circuit breaker
+//! is open, and [`client::RetryPolicy`] gives callers deterministic
+//! bounded retry with backoff on exactly the transient codes.
+#![cfg_attr(not(test), deny(clippy::unwrap_used, clippy::expect_used))]
 
 pub mod client;
 pub mod http;
@@ -30,7 +37,7 @@ pub mod protocol;
 pub mod service;
 pub mod shutdown;
 
-pub use client::{http_get, Client, ClientError, EdgeReply, GemmReply};
+pub use client::{http_get, Client, ClientError, EdgeReply, GemmReply, RetryPolicy};
 pub use limits::{Admission, AdmissionConfig, Deny};
 pub use protocol::{ErrCode, Request};
 pub use service::{Server, ServerConfig, ServerStatsSnapshot};

@@ -30,10 +30,14 @@
 //!
 //! Error codes ([`ErrCode`]): `bad-request`, `unknown-engine`,
 //! `unsupported`, `busy` (in-flight bound reached — the 429 analogue),
-//! `quota` (per-client token bucket empty), `shutting-down`, `internal`.
-//! A denied job frame consumes its payload first, so the connection
-//! stays framed and usable — over-limit clients get a clean error line,
-//! never a hang or a desync.
+//! `quota` (per-client token bucket empty), `engine-failed` (the serving
+//! engine panicked or its circuit breaker is open — transient, worth a
+//! retry), `deadline` (the job exceeded the server's per-job deadline),
+//! `shutting-down`, `internal`. A denied job frame consumes its payload
+//! first, and a job that fails *after* admission sends a bare `ERR` line
+//! in place of its `OK` + payload — either way the connection stays
+//! framed and usable: clients get a clean error line, never a hang or a
+//! desync.
 
 use crate::image::ops::Operator;
 use std::io::Read;
@@ -78,6 +82,13 @@ pub enum ErrCode {
     Unsupported,
     Busy,
     Quota,
+    /// The serving engine failed the job (panic caught by the worker, or
+    /// an open circuit breaker with no usable fallback). Transient from
+    /// the client's point of view: a retry may land on a healthy engine
+    /// or a recovered breaker.
+    EngineFailed,
+    /// The job exceeded the server-side per-job deadline.
+    Deadline,
     ShuttingDown,
     Internal,
 }
@@ -90,6 +101,8 @@ impl ErrCode {
             ErrCode::Unsupported => "unsupported",
             ErrCode::Busy => "busy",
             ErrCode::Quota => "quota",
+            ErrCode::EngineFailed => "engine-failed",
+            ErrCode::Deadline => "deadline",
             ErrCode::ShuttingDown => "shutting-down",
             ErrCode::Internal => "internal",
         }

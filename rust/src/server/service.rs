@@ -23,7 +23,7 @@
 //! stops the coordinator — that stays with the owner, so the CLI can
 //! print a final fleet snapshot after the listener is gone.
 
-use crate::coordinator::Coordinator;
+use crate::coordinator::{Coordinator, JobError};
 use crate::image::Image;
 use crate::nn::MatI8;
 use crate::util::pool::{bounded, Receiver, Sender, TrySendError};
@@ -139,6 +139,10 @@ const READ_TICK: Duration = Duration::from_millis(100);
 const PAYLOAD_IDLE_LIMIT: Duration = Duration::from_secs(60);
 /// Accept-loop sleep when no connection is pending.
 const ACCEPT_IDLE: Duration = Duration::from_millis(10);
+/// Socket write deadline on handler connections: a peer that stops
+/// reading while a reply payload is in flight errors the connection out
+/// instead of pinning the handler thread forever.
+const WRITE_LIMIT: Duration = Duration::from_secs(30);
 
 impl Server {
     /// Bind `cfg.addr` and start the accept loop plus handler pool. The
@@ -171,7 +175,7 @@ impl Server {
                 std::thread::Builder::new()
                     .name(format!("sfcmul-conn-{i}"))
                     .spawn(move || handler_loop(rx, shared))
-                    .expect("spawn connection handler")
+                    .unwrap_or_else(|e| panic!("spawn connection handler: {e}"))
             })
             .collect();
         let accept_thread = {
@@ -179,7 +183,7 @@ impl Server {
             std::thread::Builder::new()
                 .name("sfcmul-accept".into())
                 .spawn(move || accept_loop(listener, conn_tx, shared))
-                .expect("spawn accept loop")
+                .unwrap_or_else(|e| panic!("spawn accept loop: {e}"))
         };
         Ok(Self { shared, local_addr, accept_thread: Some(accept_thread), handler_threads })
     }
@@ -232,6 +236,7 @@ fn accept_loop(listener: TcpListener, conn_tx: Sender<TcpStream>, shared: Arc<Se
             Ok((sock, _peer)) => {
                 let _ = sock.set_nodelay(true);
                 let _ = sock.set_read_timeout(Some(READ_TICK));
+                let _ = sock.set_write_timeout(Some(WRITE_LIMIT));
                 match conn_tx.try_send(sock) {
                     Ok(()) => {}
                     Err(TrySendError::Full(mut sock)) => {
@@ -410,14 +415,19 @@ fn serve_edge(
         Some(Ok(g)) => g,
     };
     let img = Image { width: w, height: h, data: payload.to_vec() };
+    // A failure *after* admission (engine panic, open breaker, deadline)
+    // answers with a bare ERR line in place of the OK + payload — the
+    // stream stays framed, and the client can retry on the same
+    // connection.
     let res = match shared.coord.submit_to(img, engine, op) {
         Ok(handle) => handle.wait(),
-        Err(e) => {
-            drop(guard);
-            return write_err(sock, classify(&e), &format!("{e}")).is_ok();
-        }
+        Err(e) => Err(e),
     };
-    drop(guard); // job complete: release the in-flight slot before I/O
+    drop(guard); // job settled: release the in-flight slot before I/O
+    let res = match res {
+        Ok(r) => r,
+        Err(e) => return write_err(sock, classify(&e), &format!("{e}")).is_ok(),
+    };
     shared.stats.requests_ok.fetch_add(1, Ordering::Relaxed);
     let header = format!(
         "OK w={} h={} latency_us={}\n",
@@ -455,12 +465,13 @@ fn serve_gemm(
     }
     let res = match shared.coord.submit_gemm(a, b, engine) {
         Ok(handle) => handle.wait(),
-        Err(e) => {
-            drop(guard);
-            return write_err(sock, classify(&e), &format!("{e}")).is_ok();
-        }
+        Err(e) => Err(e),
     };
     drop(guard);
+    let res = match res {
+        Ok(r) => r,
+        Err(e) => return write_err(sock, classify(&e), &format!("{e}")).is_ok(),
+    };
     shared.stats.requests_ok.fetch_add(1, Ordering::Relaxed);
     let header = format!(
         "OK m={} n={} latency_us={}\n",
@@ -478,15 +489,24 @@ fn serve_gemm(
     sock.write_all(&bytes).is_ok()
 }
 
-/// Map a coordinator validation error to its wire code.
-fn classify(e: &crate::util::error::Error) -> ErrCode {
-    let msg = format!("{e}");
-    if msg.contains("unknown engine") {
-        ErrCode::UnknownEngine
-    } else if msg.contains("does not support") || msg.contains("does not serve") {
-        ErrCode::Unsupported
-    } else {
-        ErrCode::BadRequest
+/// Map a coordinator job error to its wire code.
+fn classify(e: &JobError) -> ErrCode {
+    match e {
+        JobError::Invalid(msg) => {
+            if msg.contains("unknown engine") {
+                ErrCode::UnknownEngine
+            } else if msg.contains("does not support") || msg.contains("does not serve") {
+                ErrCode::Unsupported
+            } else {
+                ErrCode::BadRequest
+            }
+        }
+        JobError::EngineFailed { .. } => ErrCode::EngineFailed,
+        JobError::Deadline { .. } => ErrCode::Deadline,
+        JobError::Shutdown => ErrCode::ShuttingDown,
+        // A vanished reply channel is a server-side invariant breach,
+        // not something the client can fix.
+        JobError::QueueClosed => ErrCode::Internal,
     }
 }
 
@@ -508,7 +528,7 @@ fn serve_http(sock: &mut TcpStream, reader: &mut FrameReader, request_line: &str
         }
     }
     let resp = match http::parse_request_line(request_line) {
-        Some((method, path)) => http::route(method, path, || {
+        Some((method, path)) => http::route(method, path, shared.coord.degraded(), || {
             http::render_metrics(&shared.coord.metrics(), &shared.stats.snapshot())
         }),
         None => http::response(400, "Bad Request", "text/plain", "bad request line\n"),

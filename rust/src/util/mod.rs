@@ -17,6 +17,8 @@
 //! * [`pool`] — a bounded-queue thread pool plus MPMC channel used by the
 //!   L3 coordinator (stands in for tokio).
 //! * [`stats`] — mean/percentile/stddev helpers shared by bench + metrics.
+//! * [`sync`] — poison-tolerant `Mutex` locking used by the fault-isolated
+//!   coordinator and server paths.
 
 pub mod error;
 pub mod prng;
@@ -26,3 +28,4 @@ pub mod cli;
 pub mod json;
 pub mod pool;
 pub mod stats;
+pub mod sync;

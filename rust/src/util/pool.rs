@@ -9,6 +9,7 @@
 use std::collections::VecDeque;
 use std::sync::{Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
 
 struct ChannelInner<T> {
     queue: VecDeque<T>,
@@ -43,6 +44,17 @@ pub enum SendError<T> {
 pub enum TrySendError<T> {
     Full(T),
     Closed(T),
+}
+
+/// Outcome of [`Receiver::recv_timeout`].
+#[derive(Debug, PartialEq, Eq)]
+pub enum RecvTimeout<T> {
+    /// An item arrived within the deadline.
+    Value(T),
+    /// Channel closed (or all senders dropped) and drained.
+    Closed,
+    /// Deadline elapsed with the channel still open and empty.
+    TimedOut,
 }
 
 /// Create a bounded channel with the given capacity (≥ 1).
@@ -152,6 +164,33 @@ impl<T> Receiver<T> {
                 return None;
             }
             inner = self.shared.not_empty.wait(inner).unwrap();
+        }
+    }
+
+    /// Receive with a deadline. Distinguishes a drained-and-closed channel
+    /// from a timeout so callers can map the two to different errors.
+    pub fn recv_timeout(&self, timeout: Duration) -> RecvTimeout<T> {
+        let deadline = Instant::now() + timeout;
+        let mut inner = self.shared.inner.lock().unwrap();
+        loop {
+            if let Some(v) = inner.queue.pop_front() {
+                drop(inner);
+                self.shared.not_full.notify_one();
+                return RecvTimeout::Value(v);
+            }
+            if inner.closed || inner.senders == 0 {
+                return RecvTimeout::Closed;
+            }
+            let now = Instant::now();
+            if now >= deadline {
+                return RecvTimeout::TimedOut;
+            }
+            let (guard, _res) = self
+                .shared
+                .not_empty
+                .wait_timeout(inner, deadline - now)
+                .unwrap();
+            inner = guard;
         }
     }
 
@@ -338,6 +377,25 @@ mod tests {
         assert_eq!(rx.recv(), Some(1));
         assert_eq!(rx.recv(), Some(2));
         assert_eq!(rx.recv(), None);
+    }
+
+    #[test]
+    fn recv_timeout_distinguishes_value_closed_timeout() {
+        let (tx, rx) = bounded(2);
+        tx.send(7).unwrap();
+        assert_eq!(rx.recv_timeout(Duration::from_millis(50)), RecvTimeout::Value(7));
+        assert_eq!(rx.recv_timeout(Duration::from_millis(10)), RecvTimeout::TimedOut);
+        tx.close();
+        assert_eq!(rx.recv_timeout(Duration::from_millis(10)), RecvTimeout::<i32>::Closed);
+    }
+
+    #[test]
+    fn recv_timeout_wakes_on_late_send() {
+        let (tx, rx) = bounded(1);
+        let t = std::thread::spawn(move || rx.recv_timeout(Duration::from_secs(5)));
+        std::thread::sleep(Duration::from_millis(20));
+        tx.send(42).unwrap();
+        assert_eq!(t.join().unwrap(), RecvTimeout::Value(42));
     }
 
     #[test]

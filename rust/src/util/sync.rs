@@ -1,0 +1,35 @@
+//! Poison-tolerant locking.
+//!
+//! A `Mutex` is poisoned when a thread panics while holding it. The
+//! coordinator isolates engine panics with `catch_unwind`, so a poisoned
+//! lock means "a panic happened nearby", not "the data is torn" — every
+//! guarded section in this crate either completes its mutation before any
+//! fallible call or only reads. Recovering the guard keeps the fleet
+//! serving instead of cascading the panic into every other worker, which
+//! is the whole point of the fault-tolerance layer.
+
+use std::sync::{Mutex, MutexGuard, PoisonError};
+
+/// Lock `m`, recovering the guard if a previous holder panicked.
+pub fn lock<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(PoisonError::into_inner)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+
+    #[test]
+    fn lock_recovers_from_poison() {
+        let m = Arc::new(Mutex::new(5usize));
+        let m2 = m.clone();
+        let _ = std::thread::spawn(move || {
+            let _guard = m2.lock().unwrap();
+            panic!("poison the mutex");
+        })
+        .join();
+        assert!(m.lock().is_err(), "mutex should be poisoned");
+        assert_eq!(*lock(&m), 5);
+    }
+}

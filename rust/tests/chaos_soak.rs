@@ -1,0 +1,194 @@
+//! Chaos soak: a fault-injected fleet under concurrent mixed load.
+//!
+//! The scenario the fault-tolerance layer exists for, end to end: a
+//! two-engine fleet where every tile on the `flaky` engine panics
+//! (`FaultEngine`, plan `panic@1`) behind a circuit breaker with a
+//! `flaky -> stable` fallback route, serving in-process conv jobs,
+//! GEMM jobs, and real socket clients at the same time. The run must
+//! show:
+//!
+//! * no hangs — every `wait()`/reply returns, panics fail only their
+//!   own jobs;
+//! * clean errors — wire failures are `ERR engine-failed` frames that
+//!   never desync the stream;
+//! * degraded mode — the breaker opens after the failure streak and is
+//!   visible as `/healthz` 503 and the `/metrics` breaker gauge, while
+//!   flaky-routed jobs reroute to the fallback (annotated, and
+//!   byte-identical to the stable engine's direct path);
+//! * balanced books — accepted == completed + failed, exactly.
+
+use sfcmul::coordinator::{
+    silence_worker_panics, BreakerState, Coordinator, CoordinatorConfig, FaultEngine, FaultPlan,
+    LutTileEngine, TileEngine,
+};
+use sfcmul::image::{edge_detect, synthetic_scene, Operator};
+use sfcmul::multipliers::{lut::product_table, registry};
+use sfcmul::nn::{gemm_tiled, MatI8};
+use sfcmul::server::{http_get, Client, ClientError, RetryPolicy, Server, ServerConfig};
+use sfcmul::util::prng::Xoshiro256;
+use std::sync::Arc;
+use std::time::Duration;
+
+const CONV_THREADS: usize = 2;
+const WIRE_THREADS: usize = 2;
+const JOBS_PER_THREAD: usize = 8;
+const GEMM_JOBS: usize = 8;
+
+#[test]
+fn chaos_soak_faulted_fleet_degrades_cleanly() {
+    silence_worker_panics();
+    let stable_model = registry().build_str("exact@8").unwrap();
+    let stable_lut = product_table(stable_model.as_ref());
+    let flaky_model = registry().build_str("proposed@8").unwrap();
+    let plan: FaultPlan = "panic@1".parse().unwrap();
+    let named: Vec<(String, Arc<dyn TileEngine>)> = vec![
+        ("stable".into(), Arc::new(LutTileEngine::from_table("stable", stable_lut.clone())) as _),
+        (
+            "flaky".into(),
+            Arc::new(FaultEngine::new(
+                Arc::new(LutTileEngine::new(flaky_model.as_ref())),
+                plan,
+            )) as _,
+        ),
+    ];
+    // Cooldown far past the test horizon: once open, the breaker stays
+    // open (no half-open probe races), so phase 3 is deterministic.
+    let coord = Arc::new(Coordinator::start_named_with_fallbacks(
+        named,
+        CoordinatorConfig {
+            workers: 4,
+            queue_capacity: 256,
+            max_batch: 8,
+            breaker_threshold: 3,
+            breaker_cooldown: Duration::from_secs(600),
+            ..Default::default()
+        },
+        vec![("flaky".into(), "stable".into())],
+    ));
+    let server = Server::start(
+        coord.clone(),
+        ServerConfig { conn_workers: 8, max_inflight: 256, ..ServerConfig::default() },
+    )
+    .expect("soak server");
+    let addr = server.local_addr();
+    let img = synthetic_scene(64, 64, 9);
+    let baseline = edge_detect(&img, stable_model.as_ref());
+
+    // Phase 1 — trip the breaker through the wire: every flaky tile
+    // panics, each job comes back as a clean `ERR engine-failed` frame,
+    // and the connection stays framed (PING still round-trips).
+    let mut client = Client::connect(addr).expect("connect");
+    for i in 0..3 {
+        match client.edge(&img, Some("flaky"), Operator::Laplacian) {
+            Err(ClientError::Server { code, message }) => {
+                assert_eq!(code, "engine-failed", "job {i}: {message}");
+                assert!(message.contains("injected fault"), "job {i}: {message}");
+            }
+            other => panic!("job {i}: expected ERR engine-failed, got {other:?}"),
+        }
+        client.ping().expect("ERR never desyncs the stream");
+    }
+    assert!(coord.degraded(), "three consecutive panics must open the breaker");
+    client.quit().expect("clean goodbye");
+
+    // Phase 2 — degraded mode is visible on the HTTP surface.
+    let (code, body) = http_get(addr, "/healthz").expect("healthz");
+    assert_eq!(code, 503, "open breaker must flip healthz to 503");
+    assert!(body.contains("degraded"), "healthz body: {body:?}");
+    let (code, metrics) = http_get(addr, "/metrics").expect("metrics");
+    assert_eq!(code, 200);
+    assert!(
+        metrics.contains("sfcmul_engine_breaker_state{engine=\"flaky\"} 2"),
+        "breaker gauge missing or not open:\n{metrics}"
+    );
+    assert!(metrics.contains("sfcmul_jobs_failed_total 3"), "failed counter:\n{metrics}");
+    assert!(
+        metrics.contains("sfcmul_engine_panics_caught_total{engine=\"flaky\"} 3"),
+        "panic counter:\n{metrics}"
+    );
+
+    // Phase 3 — chaos mix against the degraded fleet: concurrent
+    // in-process conv threads (alternating flaky/stable targets), a
+    // GEMM thread, and socket clients under the retry policy. Flaky
+    // jobs reroute to the stable fallback; every result is
+    // byte-identical to the stable engine's direct path.
+    let mut rng = Xoshiro256::seeded(0xC4A0);
+    let a = MatI8::random(24, 16, &mut rng);
+    let bm = MatI8::random(16, 24, &mut rng);
+    let gemm_want = gemm_tiled(&a, &bm, &stable_lut);
+    std::thread::scope(|scope| {
+        let mut handles = Vec::new();
+        for t in 0..CONV_THREADS {
+            let coord = coord.clone();
+            let img = img.clone();
+            let baseline = baseline.clone();
+            handles.push(scope.spawn(move || {
+                for j in 0..JOBS_PER_THREAD {
+                    let to = if (t + j) % 2 == 0 { "flaky" } else { "stable" };
+                    let r = coord
+                        .submit_to(img.clone(), Some(to), Operator::Laplacian)
+                        .expect("degraded fleet still accepts")
+                        .wait_timeout(Duration::from_secs(60))
+                        .expect("job completes; no hangs");
+                    assert_eq!(r.edges, baseline, "conv thread {t} job {j} via {to}");
+                    assert_eq!(r.engine, "stable", "conv thread {t} job {j} via {to}");
+                    assert_eq!(r.rerouted, to == "flaky", "conv thread {t} job {j}");
+                }
+            }));
+        }
+        {
+            let coord = coord.clone();
+            let (a, bm, want) = (a.clone(), bm.clone(), gemm_want.clone());
+            handles.push(scope.spawn(move || {
+                for j in 0..GEMM_JOBS {
+                    let r = coord
+                        .submit_gemm(a.clone(), bm.clone(), Some("stable"))
+                        .expect("gemm accepted")
+                        .wait_timeout(Duration::from_secs(60))
+                        .expect("gemm completes; no hangs");
+                    assert_eq!(r.out, want, "gemm job {j}");
+                    assert!(!r.rerouted, "gemm job {j} ran on its own engine");
+                }
+            }));
+        }
+        for c in 0..WIRE_THREADS {
+            let img = img.clone();
+            let baseline = baseline.clone();
+            handles.push(scope.spawn(move || {
+                let mut client = Client::connect(addr).expect("connect");
+                let policy = RetryPolicy::default();
+                for j in 0..JOBS_PER_THREAD {
+                    let to = if j % 2 == 0 { "flaky" } else { "stable" };
+                    let r = client
+                        .edge_with_retry(&img, Some(to), Operator::Laplacian, policy)
+                        .expect("wire job completes under retry policy");
+                    assert_eq!(r.edges, baseline, "wire client {c} job {j} via {to}");
+                }
+                client.quit().expect("clean goodbye");
+            }));
+        }
+        for h in handles {
+            h.join().expect("soak thread panicked");
+        }
+    });
+
+    // The books balance exactly: 3 failed wire jobs from phase 1, and
+    // every phase-3 job completed on the stable engine.
+    let completed = (CONV_THREADS + WIRE_THREADS) * JOBS_PER_THREAD + GEMM_JOBS;
+    let m = coord.metrics();
+    assert_eq!(
+        m.jobs_accepted,
+        m.jobs_completed + m.jobs_failed,
+        "accepted must equal completed + failed: {m:?}"
+    );
+    assert_eq!(m.jobs_failed, 3, "exactly the three breaker-tripping jobs failed");
+    assert_eq!(m.jobs_completed, completed as u64);
+    let flaky = m.per_engine.iter().find(|e| e.name == "flaky").expect("flaky row");
+    assert_eq!(flaky.panics_caught, 3);
+    assert_eq!(flaky.breaker, BreakerState::Open, "breaker still open at teardown");
+    let stable = m.per_engine.iter().find(|e| e.name == "stable").expect("stable row");
+    assert_eq!(stable.jobs_completed, completed as u64, "all completions landed on the fallback");
+
+    server.stop();
+    drop(coord);
+}

@@ -98,16 +98,16 @@ fn golden_pipeline_every_design_operator_pair() {
         let lut = product_table(model.as_ref());
         let coord = Coordinator::start(
             Arc::new(LutTileEngine::from_table(&design, lut.clone())),
-            CoordinatorConfig { workers: 3, queue_capacity: 64, max_batch: 8 },
+            CoordinatorConfig { workers: 3, queue_capacity: 64, max_batch: 8, ..Default::default() },
         );
         let bitsim_coord = Coordinator::start(
             Arc::new(BitsimTileEngine::new(model.as_ref())),
-            CoordinatorConfig { workers: 2, queue_capacity: 64, max_batch: 8 },
+            CoordinatorConfig { workers: 2, queue_capacity: 64, max_batch: 8, ..Default::default() },
         );
         for op in Operator::all() {
-            let served = coord.submit_to(img.clone(), None, op).unwrap().wait().edges;
+            let served = coord.submit_to(img.clone(), None, op).unwrap().wait().unwrap().edges;
             let served_gates =
-                bitsim_coord.submit_to(img.clone(), None, op).unwrap().wait().edges;
+                bitsim_coord.submit_to(img.clone(), None, op).unwrap().wait().unwrap().edges;
             let direct = apply_operator_lut(&img, op, &lut);
             let reference = apply_operator(&img, op, model.as_ref());
             let sum = fnv1a(&served);

@@ -152,7 +152,7 @@ fn demo_network_served_equals_direct_per_design() {
         let lut = product_table(model.as_ref());
         let coord = Coordinator::start(
             Arc::new(LutTileEngine::from_table(key, lut.clone())),
-            CoordinatorConfig { workers: 2, queue_capacity: 32, max_batch: 8 },
+            CoordinatorConfig { workers: 2, queue_capacity: 32, max_batch: 8, ..Default::default() },
         );
         let served = net.run_served(&coord, None, &x).unwrap();
         assert_eq!(served, net.run_tiled(&x, &lut), "{key}: served vs direct");

@@ -38,7 +38,7 @@ fn coordinator_equals_direct_path_for_any_geometry() {
     let engine = Arc::new(LutTileEngine::new(model.as_ref()));
     let coord = Coordinator::start(
         engine,
-        CoordinatorConfig { workers: 3, queue_capacity: 64, max_batch: 8 },
+        CoordinatorConfig { workers: 3, queue_capacity: 64, max_batch: 8, ..Default::default() },
     );
     forall(
         "coordinator == direct",
@@ -49,7 +49,7 @@ fn coordinator_equals_direct_path_for_any_geometry() {
         |&(w, h, seed)| {
             let img = synthetic_scene(w, h, seed);
             let expect = edge_detect(&img, model.as_ref());
-            coord.run(img).edges == expect
+            coord.run(img).unwrap().edges == expect
         },
     );
 }
@@ -65,7 +65,7 @@ fn concurrent_jobs_with_different_operators_on_one_engine() {
     let engine = Arc::new(LutTileEngine::new(model.as_ref()));
     let coord = Coordinator::start(
         engine,
-        CoordinatorConfig { workers: 4, queue_capacity: 64, max_batch: 8 },
+        CoordinatorConfig { workers: 4, queue_capacity: 64, max_batch: 8, ..Default::default() },
     );
     let img = synthetic_scene(150, 100, 77);
     let expected: Vec<_> = Operator::all()
@@ -80,7 +80,7 @@ fn concurrent_jobs_with_different_operators_on_one_engine() {
             .map(|&op| (op, coord.submit_to(img.clone(), None, op).unwrap()))
             .collect();
         for ((op, h), want) in handles.into_iter().zip(&expected) {
-            assert_eq!(h.wait().edges, *want, "round {round}, operator {op}");
+            assert_eq!(h.wait().unwrap().edges, *want, "round {round}, operator {op}");
         }
     }
     assert_eq!(coord.shutdown().jobs_completed, 3 * Operator::all().len() as u64);
@@ -99,7 +99,7 @@ fn design_by_operator_matrix_routes_correctly() {
     ];
     let coord = Coordinator::start_named(
         engines,
-        CoordinatorConfig { workers: 3, queue_capacity: 64, max_batch: 8 },
+        CoordinatorConfig { workers: 3, queue_capacity: 64, max_batch: 8, ..Default::default() },
     );
     let img = synthetic_scene(130, 70, 5);
     let mut handles = Vec::new();
@@ -111,6 +111,6 @@ fn design_by_operator_matrix_routes_correctly() {
         }
     }
     for (name, op, h, want) in handles {
-        assert_eq!(h.wait().edges, want, "{name} {op}");
+        assert_eq!(h.wait().unwrap().edges, want, "{name} {op}");
     }
 }

@@ -78,11 +78,11 @@ fn coordinator_over_pjrt_end_to_end() {
     let engine = Arc::new(PjrtTileEngine::new(&dir, "proposed", lut).unwrap());
     let coord = Coordinator::start(
         engine,
-        CoordinatorConfig { workers: 2, queue_capacity: 64, max_batch: 8 },
+        CoordinatorConfig { workers: 2, queue_capacity: 64, max_batch: 8, ..Default::default() },
     );
     let img = synthetic_scene(256, 192, 12);
     let expect = edge_detect(&img, model.as_ref());
-    let res = coord.run(img);
+    let res = coord.run(img).unwrap();
     assert_eq!(res.edges, expect, "PJRT path must equal the direct model path");
     let m = coord.shutdown();
     assert_eq!(m.jobs_completed, 1);

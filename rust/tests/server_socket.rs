@@ -32,7 +32,7 @@ fn two_design_fleet(workers: usize) -> Coordinator {
         .collect();
     Coordinator::start_named(
         named,
-        CoordinatorConfig { workers, queue_capacity: 256, max_batch: 8 },
+        CoordinatorConfig { workers, queue_capacity: 256, max_batch: 8, ..Default::default() },
     )
 }
 
@@ -188,7 +188,7 @@ fn admission_bound_backpressures_and_recovers() {
     let model = registry().build_str("proposed@8").unwrap();
     let coord = Coordinator::start(
         Arc::new(SlowEngine(LutTileEngine::new(model.as_ref()))),
-        CoordinatorConfig { workers: 2, queue_capacity: 64, max_batch: 8 },
+        CoordinatorConfig { workers: 2, queue_capacity: 64, max_batch: 8, ..Default::default() },
     );
     let (coord, server) = start(
         coord,
@@ -255,7 +255,7 @@ fn graceful_stop_drains_inflight_jobs() {
     let model = registry().build_str("proposed@8").unwrap();
     let coord = Coordinator::start(
         Arc::new(SlowEngine(LutTileEngine::new(model.as_ref()))),
-        CoordinatorConfig { workers: 2, queue_capacity: 64, max_batch: 8 },
+        CoordinatorConfig { workers: 2, queue_capacity: 64, max_batch: 8, ..Default::default() },
     );
     let (coord, server) = start(coord, ServerConfig::default());
     let addr = server.local_addr();
