@@ -219,10 +219,14 @@ impl TileEngine for FaultEngine {
 }
 
 /// Install a process-wide panic hook that suppresses the default
-/// stderr backtrace for panics on the crate's own worker threads
-/// (names starting with `sfcmul-`). Injected faults are *expected* to
-/// panic there; without this, a soak run floods the console with noise
-/// that looks like real crashes. Panics on any other thread still print
+/// stderr backtrace for panics on the coordinator's worker threads
+/// (names starting with `sfcmul-coord-`) — the only threads where
+/// engine code runs under `catch_unwind`, so injected faults are
+/// *expected* to panic there; without this, a soak run floods the
+/// console with noise that looks like real crashes. Panics on every
+/// other thread — including the crate's own `sfcmul-conn-*` /
+/// `sfcmul-accept` / `sfcmul-watchdog` threads, which have no
+/// `catch_unwind` and where a panic is a genuine bug — still print
 /// normally. Idempotent.
 pub fn silence_worker_panics() {
     static INSTALLED: OnceLock<()> = OnceLock::new();
@@ -231,7 +235,7 @@ pub fn silence_worker_panics() {
         std::panic::set_hook(Box::new(move |info| {
             let on_worker = std::thread::current()
                 .name()
-                .is_some_and(|n| n.starts_with("sfcmul-"));
+                .is_some_and(|n| n.starts_with("sfcmul-coord-"));
             if !on_worker {
                 prev(info);
             }

@@ -288,6 +288,18 @@ impl Metrics {
         m.breaker = Breaker::Closed;
     }
 
+    /// Count a job that completed without dispatching any work unit to
+    /// the engine (an empty-output GEMM). Books it as completed so
+    /// `accepted == completed + failed` stays exact, but leaves the
+    /// breaker and failure streak alone: the engine was never
+    /// exercised, so the completion is no evidence of health.
+    pub fn record_trivial_job(&self, engine: usize) {
+        let mut rows = lock(&self.inner);
+        let m = &mut rows[engine];
+        m.jobs_completed += 1;
+        m.latencies_ms.record(0.0);
+    }
+
     /// Count one failed job against `engine` and advance its breaker
     /// state machine. O(1) like every other recorder.
     pub fn record_failure(&self, engine: usize, kind: FailKind) {
@@ -332,6 +344,24 @@ impl Metrics {
             }
             Breaker::Open { .. } => BreakerDecision::Deny,
             Breaker::HalfOpen => BreakerDecision::Deny,
+        }
+    }
+
+    /// Give back a half-open probe nomination whose job never reached
+    /// the engine (the nominated submit failed to enqueue, e.g. intake
+    /// closed mid-submit). `HalfOpen` has no timeout of its own — if
+    /// the nomination leaked, the breaker would deny that engine
+    /// forever — so revert to `Open` with a fresh cooldown and let a
+    /// later submit re-probe. No-op unless the breaker is still
+    /// half-open (a racing completion may already have closed it).
+    pub fn probe_aborted(&self, engine: usize) {
+        if self.breaker_threshold == 0 {
+            return;
+        }
+        let mut rows = lock(&self.inner);
+        let m = &mut rows[engine];
+        if matches!(m.breaker, Breaker::HalfOpen) {
+            m.breaker = Breaker::Open { until: Instant::now() + self.breaker_cooldown };
         }
     }
 
@@ -567,6 +597,38 @@ mod tests {
         // Probe fails → reopen for a fresh cooldown.
         m.record_failure(0, FailKind::Error);
         assert_eq!(m.breaker_state(0), BreakerState::Open);
+    }
+
+    #[test]
+    fn aborted_probe_reopens_for_a_fresh_cooldown() {
+        let m = Metrics::with_breaker(vec!["e".into()], 1, Duration::from_millis(1));
+        m.record_failure(0, FailKind::Panic);
+        std::thread::sleep(Duration::from_millis(5));
+        assert_eq!(m.breaker_allow(0), BreakerDecision::Probe);
+        assert_eq!(m.breaker_state(0), BreakerState::HalfOpen);
+        // The nominated probe never made it to the engine: the
+        // nomination is given back instead of leaking a forever-denied
+        // half-open state.
+        m.probe_aborted(0);
+        assert_eq!(m.breaker_state(0), BreakerState::Open);
+        std::thread::sleep(Duration::from_millis(5));
+        assert_eq!(m.breaker_allow(0), BreakerDecision::Probe, "re-probes after the cooldown");
+        // A racing success already closed the breaker: probe_aborted
+        // must not reopen it.
+        m.record_job(0, Duration::from_millis(1));
+        m.probe_aborted(0);
+        assert_eq!(m.breaker_state(0), BreakerState::Closed);
+    }
+
+    #[test]
+    fn trivial_job_counts_completion_without_healing_breaker() {
+        let m = Metrics::with_breaker(vec!["e".into()], 1, Duration::from_secs(60));
+        m.record_failure(0, FailKind::Error);
+        assert_eq!(m.breaker_state(0), BreakerState::Open);
+        m.record_trivial_job(0);
+        let s = m.snapshot();
+        assert_eq!(s.jobs_completed, 1, "trivial jobs keep the books balanced");
+        assert_eq!(m.breaker_state(0), BreakerState::Open, "no spurious heal");
     }
 
     #[test]

@@ -52,6 +52,7 @@ use crate::nn::{gemm_block_lut, gemm_block_mul, Conv2d, MatI32, MatI8, TensorI8}
 use crate::util::pool::{bounded, Receiver, RecvTimeout, Sender};
 use crate::util::sync::lock;
 use std::collections::{BTreeSet, HashMap};
+use std::fmt;
 use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
@@ -230,6 +231,14 @@ impl JobHandle {
     }
 }
 
+// The reply receiver is opaque; the id is what identifies the job in
+// logs and assertions (`Result<JobHandle, _>::unwrap_err` needs Debug).
+impl fmt::Debug for JobHandle {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.debug_struct("JobHandle").field("id", &self.id).finish_non_exhaustive()
+    }
+}
+
 /// Handle for one submitted quantized-inference (GEMM/conv2d) job.
 pub struct GemmHandle {
     pub id: u64,
@@ -255,6 +264,12 @@ impl GemmHandle {
                 Err(JobError::Deadline { limit_ms: timeout.as_millis() as u64 })
             }
         }
+    }
+}
+
+impl fmt::Debug for GemmHandle {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.debug_struct("GemmHandle").field("id", &self.id).finish_non_exhaustive()
     }
 }
 
@@ -454,15 +469,22 @@ impl Coordinator {
         &self,
         idx: usize,
         fallback_ok: impl Fn(usize) -> bool,
-    ) -> Result<(usize, bool), JobError> {
+    ) -> Result<Route, JobError> {
         match self.shared.metrics.breaker_allow(idx) {
-            BreakerDecision::Allow | BreakerDecision::Probe => Ok((idx, false)),
+            BreakerDecision::Allow => Ok(Route { idx, rerouted: false, probe: false }),
+            BreakerDecision::Probe => Ok(Route { idx, rerouted: false, probe: true }),
             BreakerDecision::Deny => {
                 if let Some(fb) = self.fallbacks[idx] {
-                    if fallback_ok(fb)
-                        && self.shared.metrics.breaker_allow(fb) != BreakerDecision::Deny
-                    {
-                        return Ok((fb, true));
+                    if fallback_ok(fb) {
+                        match self.shared.metrics.breaker_allow(fb) {
+                            BreakerDecision::Allow => {
+                                return Ok(Route { idx: fb, rerouted: true, probe: false });
+                            }
+                            BreakerDecision::Probe => {
+                                return Ok(Route { idx: fb, rerouted: true, probe: true });
+                            }
+                            BreakerDecision::Deny => {}
+                        }
                     }
                 }
                 Err(JobError::EngineFailed {
@@ -530,24 +552,30 @@ impl Coordinator {
                 self.engine_names[requested]
             )));
         }
-        let (idx, rerouted) = self.route(requested, |fb| self.fleet[fb].nn_backend().is_some())?;
-        let id = self.next_job.fetch_add(1, Ordering::Relaxed);
-        let (reply_tx, reply_rx) = bounded::<Result<GemmResult, JobError>>(1);
         if a.rows == 0 || b.cols == 0 {
-            // Empty output: no tasks to dispatch, complete immediately
-            // (still a completed job so accepted = completed + failed
-            // balances).
-            self.shared.metrics.record_job(idx, Duration::ZERO);
+            // Empty output: no work unit ever reaches an engine, so
+            // complete immediately WITHOUT consulting the breaker — a
+            // zero-unit job is no evidence of engine health, so it must
+            // neither consume a half-open probe nomination nor heal an
+            // open breaker. record_trivial_job still books a completion
+            // so accepted = completed + failed balances.
+            let id = self.next_job.fetch_add(1, Ordering::Relaxed);
+            let (reply_tx, reply_rx) = bounded::<Result<GemmResult, JobError>>(1);
+            self.shared.metrics.record_trivial_job(requested);
             let _ = reply_tx.send(Ok(GemmResult {
                 id,
                 out: MatI32::new(a.rows, b.cols),
                 latency: Duration::ZERO,
                 blocks: 0,
-                engine: self.engine_names[idx].clone(),
-                rerouted,
+                engine: self.engine_names[requested].clone(),
+                rerouted: false,
             }));
             return Ok(GemmHandle { id, rx: reply_rx });
         }
+        let Route { idx, rerouted, probe } =
+            self.route(requested, |fb| self.fleet[fb].nn_backend().is_some())?;
+        let id = self.next_job.fetch_add(1, Ordering::Relaxed);
+        let (reply_tx, reply_rx) = bounded::<Result<GemmResult, JobError>>(1);
         let blocks = a.rows.div_ceil(crate::nn::MC) * b.cols.div_ceil(crate::nn::NC);
         let started = Instant::now();
         {
@@ -585,8 +613,12 @@ impl Coordinator {
                 if self.tile_tx.send(Work::Gemm(task)).is_err() {
                     // Intake closed mid-enqueue: withdraw the job; units
                     // already queued arrive as late blocks and are
-                    // dropped.
+                    // dropped. A probe nomination that never reached the
+                    // engine is given back so the breaker can re-probe.
                     lock(self.shared.jobs.shard(id)).remove(&id);
+                    if probe {
+                        self.shared.metrics.probe_aborted(idx);
+                    }
                     return Err(JobError::Shutdown);
                 }
                 col0 += cols;
@@ -635,13 +667,14 @@ impl Coordinator {
         quality: u8,
         op: Operator,
     ) -> Result<JobHandle, JobError> {
-        let (idx, rerouted) = match self.route(engine, |fb| self.fleet[fb].supports_op(op)) {
-            Ok(r) => r,
-            Err(e) => {
-                self.shared.metrics.record_reject();
-                return Err(e);
-            }
-        };
+        let Route { idx, rerouted, probe } =
+            match self.route(engine, |fb| self.fleet[fb].supports_op(op)) {
+                Ok(r) => r,
+                Err(e) => {
+                    self.shared.metrics.record_reject();
+                    return Err(e);
+                }
+            };
         let id = self.next_job.fetch_add(1, Ordering::Relaxed);
         let mut tiles = tile_image(id, &image);
         for t in &mut tiles {
@@ -669,8 +702,13 @@ impl Coordinator {
         for t in tiles {
             if self.tile_tx.send(Work::Conv(t)).is_err() {
                 // Intake closed mid-enqueue: withdraw the job; tiles
-                // already queued arrive late and are dropped.
+                // already queued arrive late and are dropped. A probe
+                // nomination that never reached the engine is given
+                // back so the breaker can re-probe later.
                 lock(self.shared.jobs.shard(id)).remove(&id);
+                if probe {
+                    self.shared.metrics.probe_aborted(idx);
+                }
                 self.shared.metrics.record_reject();
                 return Err(JobError::Shutdown);
             }
@@ -734,6 +772,20 @@ impl Drop for Coordinator {
     fn drop(&mut self) {
         self.shutdown_inner();
     }
+}
+
+/// Outcome of [`Coordinator::route`]: which engine serves the job,
+/// whether it was rerouted to a fallback, and whether this job was
+/// nominated as the serving engine's half-open probe — a nominated
+/// submit that then fails to enqueue must give the nomination back via
+/// [`Metrics::probe_aborted`], or the breaker stays half-open (denying
+/// everything) forever.
+///
+/// [`Metrics::probe_aborted`]: super::metrics::Metrics::probe_aborted
+struct Route {
+    idx: usize,
+    rerouted: bool,
+    probe: bool,
 }
 
 /// Render a `catch_unwind` payload (panic message) for the job error.
@@ -855,11 +907,15 @@ fn worker_loop(
                 // this chunk (via the reply channels) instead of killing
                 // the worker and hanging every wait() in the process.
                 let result = catch_unwind(AssertUnwindSafe(|| engine.process_batch(chunk)));
-                shared
-                    .metrics
-                    .record_batch(engine_idx as usize, chunk.len(), t0.elapsed());
+                let elapsed = t0.elapsed();
                 let outs = match result {
-                    Ok(outs) if outs.len() == chunk.len() => outs,
+                    // Only successful batches count as processed work —
+                    // a panicked or contract-violating batch is recorded
+                    // as a failure below, not in tiles_processed/busy.
+                    Ok(outs) if outs.len() == chunk.len() => {
+                        shared.metrics.record_batch(engine_idx as usize, chunk.len(), elapsed);
+                        outs
+                    }
                     Ok(outs) => {
                         let detail = format!(
                             "returned {} outputs for a {}-tile batch",
@@ -968,9 +1024,12 @@ fn worker_loop(
                     }
                     block
                 }));
-                shared.metrics.record_batch(engine_idx as usize, 1, t0.elapsed());
+                let elapsed = t0.elapsed();
                 let block = match result {
-                    Ok(b) => b,
+                    Ok(b) => {
+                        shared.metrics.record_batch(engine_idx as usize, 1, elapsed);
+                        b
+                    }
                     Err(payload) => {
                         let err = JobError::EngineFailed {
                             engine: engine_name.clone(),
@@ -1839,8 +1898,19 @@ mod fault_tolerance_tests {
             matches!(err, JobError::Deadline { .. }),
             "watchdog must fail the overdue job: {err:?}"
         );
-        // The worker is still stalled on the slow job's tiles; once they
-        // drain (as late, dropped tiles) the healthy engine still serves.
+        // The lone worker is still stalled ~300 ms inside the delayed
+        // engine, and the coordinator-wide 40 ms deadline applies to the
+        // healthy job too — so wait for both late tiles to drain (they
+        // are processed, then dropped on arrival) before submitting it,
+        // or it would sit behind the stall and miss its own deadline.
+        let drained = Instant::now();
+        while coord.metrics().per_engine[0].tiles_processed < 2 {
+            assert!(
+                drained.elapsed() < Duration::from_secs(10),
+                "worker never drained the slow job's late tiles"
+            );
+            std::thread::sleep(Duration::from_millis(10));
+        }
         let good = coord
             .submit_to(synthetic_scene(64, 64, 4), Some("fast"), Operator::Laplacian)
             .unwrap()
@@ -1892,6 +1962,70 @@ mod fault_tolerance_tests {
         let m = coord.shutdown();
         assert_eq!(m.per_engine[0].breaker, BreakerState::Closed);
         assert_eq!(m.jobs_failed, 3);
+        assert_eq!(m.jobs_accepted, m.jobs_completed + m.jobs_failed);
+    }
+
+    /// A half-open probe nomination whose submit then fails to enqueue
+    /// (intake closed mid-submit) is given back: the breaker reverts to
+    /// Open with a fresh cooldown instead of leaking a forever-denied
+    /// HalfOpen state.
+    #[test]
+    fn aborted_probe_submit_reopens_breaker() {
+        silence_worker_panics();
+        let coord = Coordinator::start(
+            faulty_engine("panic@1"),
+            CoordinatorConfig {
+                breaker_threshold: 1,
+                breaker_cooldown: Duration::from_millis(50),
+                ..cfg(1)
+            },
+        );
+        let img = synthetic_scene(64, 64, 9); // single tile per job
+        assert!(coord.submit(img.clone()).unwrap().wait().is_err());
+        assert_eq!(coord.metrics().per_engine[0].breaker, BreakerState::Open);
+        coord.close_intake();
+        std::thread::sleep(Duration::from_millis(80));
+        // Past the cooldown this submit is nominated as the half-open
+        // probe — and then fails to enqueue on the closed intake.
+        assert_eq!(coord.submit(img).unwrap_err(), JobError::Shutdown);
+        assert_eq!(
+            coord.metrics().per_engine[0].breaker,
+            BreakerState::Open,
+            "aborted probe must re-open the breaker, not leak half-open"
+        );
+        coord.shutdown();
+    }
+
+    /// An empty-output GEMM never dispatches a work unit, so it
+    /// completes even while the engine's breaker is open — and must not
+    /// heal the breaker of a still-broken engine it never exercised.
+    #[test]
+    fn empty_gemm_completes_without_healing_breaker() {
+        silence_worker_panics();
+        let coord = Coordinator::start(
+            faulty_engine("panic@1"),
+            CoordinatorConfig {
+                breaker_threshold: 1,
+                breaker_cooldown: Duration::from_secs(60),
+                ..cfg(1)
+            },
+        );
+        assert!(coord.submit(synthetic_scene(64, 64, 9)).unwrap().wait().is_err());
+        assert_eq!(coord.metrics().per_engine[0].breaker, BreakerState::Open);
+        let r = coord
+            .submit_gemm(crate::nn::MatI8::new(0, 3), crate::nn::MatI8::new(3, 2), None)
+            .unwrap()
+            .wait()
+            .unwrap();
+        assert_eq!((r.out.rows, r.out.cols), (0, 2));
+        assert!(!r.rerouted, "a zero-unit job is served in place, not rerouted");
+        assert_eq!(
+            coord.metrics().per_engine[0].breaker,
+            BreakerState::Open,
+            "a job that never touched the engine is no evidence of health"
+        );
+        let m = coord.shutdown();
+        assert_eq!(m.jobs_failed, 1);
         assert_eq!(m.jobs_accepted, m.jobs_completed + m.jobs_failed);
     }
 
