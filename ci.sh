@@ -41,6 +41,13 @@
 #   the leg fails if any design's *optimized* gate count exceeds the
 #   committed figure — the optimization pipeline must never regress.
 #   Hosted CI uploads both files as the gate-stats artifact.
+# * Provenance regression guard (toolchain-independent, runs first): once
+#   a golden file (pipeline.tsv / gates.tsv / proposed8.v) carries
+#   committed blessed rows, or a BENCH_*.json carries committed measured
+#   timings, the working tree must never take them back to the
+#   bootstrap/UNMEASURED placeholder state — that would silently disarm
+#   the locks above. Files still in bootstrap state only warn (the
+#   per-file legs below already gate the first blessing).
 # * `--bench-json`: after a green gate, additionally run the bench_conv,
 #   bench_nn, and bench_coordinator groups in quick mode with
 #   SFCMUL_BENCH_JSON pointing at BENCH_conv.json / BENCH_nn.json /
@@ -62,6 +69,49 @@ for arg in "$@"; do
 done
 
 status=0
+
+echo "== provenance regression guard (blessed/measured files must not regress) =="
+# Blessed-state predicates read from stdin so the same test serves the
+# committed copy (git show) and the working tree (cat).
+has_golden_rows() { grep -q -v -e '^#' -e '^design' -e '^[[:space:]]*$'; }
+has_verilog_body() { grep -q -v -e '^[[:space:]]*//' -e '^[[:space:]]*$'; }
+# Measured = at least one non-null median; the bootstrap placeholder has
+# "median_ns": null in every row.
+measured_bench() { grep -q '"median_ns": [0-9]'; }
+if git rev-parse --is-inside-work-tree >/dev/null 2>&1; then
+    check_regress() {
+        # $1 = file, $2 = predicate returning 0 when the content is
+        # blessed/measured, $3 = human label of the blessed state
+        local f="$1" pred="$2" label="$3"
+        local head_ok=1 work_ok=1 tmp
+        # Stage the committed copy in a temp file: piping `git show`
+        # straight into `grep -q` can die of SIGPIPE under pipefail once
+        # the blessed file outgrows the pipe buffer.
+        tmp=$(mktemp)
+        if git show "HEAD:$f" > "$tmp" 2>/dev/null; then
+            "$pred" < "$tmp" && head_ok=0
+        fi
+        rm -f "$tmp"
+        [ -f "$f" ] && "$pred" < "$f" && work_ok=0
+        if [ "$head_ok" -eq 0 ] && [ "$work_ok" -ne 0 ]; then
+            echo "FAIL: $f regressed from $label back to the bootstrap placeholder state"
+            echo "      (the committed copy is $label; never re-commit the placeholder)"
+            status=1
+        elif [ "$head_ok" -ne 0 ]; then
+            echo "  $f: still bootstrap (first blessing gated by its own leg below)"
+        else
+            echo "  $f: $label and stable"
+        fi
+    }
+    check_regress rust/tests/golden/pipeline.tsv has_golden_rows "blessed"
+    check_regress rust/tests/golden/gates.tsv has_golden_rows "blessed"
+    check_regress rust/tests/golden/proposed8.v has_verilog_body "blessed"
+    check_regress BENCH_conv.json measured_bench "measured"
+    check_regress BENCH_nn.json measured_bench "measured"
+    check_regress BENCH_coordinator.json measured_bench "measured"
+else
+    echo "  (not a git checkout; guard skipped)"
+fi
 
 echo "== cargo fmt --check (advisory) =="
 if ! cargo fmt --check 2>/dev/null; then

@@ -7,7 +7,9 @@
 //! the whole group lands in the committed perf trajectory.
 
 use sfcmul::coordinator::engine::conv_tile_taps;
-use sfcmul::coordinator::{tile_image, LutTileEngine, ModelTileEngine, RowbufTileEngine, TileEngine};
+use sfcmul::coordinator::{
+    tile_image, BitsimLiveTileEngine, LutTileEngine, ModelTileEngine, RowbufTileEngine, TileEngine,
+};
 use sfcmul::image::colsum::laplacian_taps_i64;
 use sfcmul::image::ops::{apply_operator_lut, Operator, Post};
 use sfcmul::image::{conv3x3, conv3x3_lut, conv3x3_lut_9tap, conv3x3_rowbuf, synthetic_scene, LAPLACIAN};
@@ -63,6 +65,15 @@ fn main() {
     b.throughput(pixels).bench("tiles_rowbuf_engine_256", || {
         rowbuf_engine.process_batch(&tiles).len()
     });
+    // Serve-time gate streaming: every MAC through the netlist, 64 lanes
+    // per bitsliced pass (no tables). Orders of magnitude slower than the
+    // table paths by construction — the row documents the cost of live
+    // gate truth next to them (bench_hw has the 64-lane vs scalar
+    // gate-walk ratio this path's ~64× claim rests on).
+    let live_engine = BitsimLiveTileEngine::new(model.as_ref());
+    b.throughput(pixels).bench("tiles_bitsim_live_engine_256", || {
+        live_engine.process_batch(&tiles).len()
+    });
 
     let dir = artifacts_dir();
     if pjrt_enabled() && artifacts_available(&dir) {
@@ -81,6 +92,17 @@ fn main() {
         (median("tiles_lut_engine_256"), median("tiles_lut_9lookup_256"))
     {
         println!("  colsum tile kernel vs 9-lookup baseline: {:.2}x", old_ns / new_ns);
+    }
+    if let (Some(live_ns), Some(lut_ns)) =
+        (median("tiles_bitsim_live_engine_256"), median("tiles_lut_engine_256"))
+    {
+        println!("  live gate streaming vs colsum tables: 1/{:.0}x", live_ns / lut_ns);
+    }
+    // The colsum rows above run the vectorized row primitives when the
+    // host supports them; rerun with SFCMUL_NO_SIMD=1 for the scalar
+    // baseline of the same rows (the dispatch is pinned per process).
+    if std::env::var_os("SFCMUL_NO_SIMD").is_some() {
+        println!("  (SFCMUL_NO_SIMD set: colsum rows above are the scalar row primitives)");
     }
 
     b.finish();

@@ -10,7 +10,7 @@
 use sfcmul::coordinator::{Coordinator, CoordinatorConfig, LutTileEngine};
 use sfcmul::image::synthetic_scene;
 use sfcmul::multipliers::{lut::product_table, registry, MultiplierModel};
-use sfcmul::nn::{gemm_naive, gemm_tiled, lut_product, quantize_image, MatI8, Network};
+use sfcmul::nn::{gemm_bitsim, gemm_naive, gemm_tiled, lut_product, quantize_image, MatI8, Network};
 use sfcmul::util::bench::Bench;
 use sfcmul::util::prng::Xoshiro256;
 use std::sync::Arc;
@@ -45,6 +45,14 @@ fn main() {
     b.throughput(macs64).bench("gemm_naive_model_64", || {
         gemm_naive(&a64, &b64, &|x, y| model.multiply(x as i64, y as i64) as i32).data[0]
     });
+    // Live gate-level GEMM: every MAC streamed through the netlist at
+    // serve time, 64 operand pairs per bitsliced pass (the bitsim-live
+    // serving path; no product table). Slow next to the table rows by
+    // construction — the row prices netlist-true inference.
+    let nl = model.build_netlist();
+    b.throughput(macs64).bench("gemm_bitsim_live_64", || {
+        gemm_bitsim(&a64, &b64, &nl).data[0]
+    });
 
     // The fixed conv→relu→conv network on a 64×64 scene: in-process
     // tiled inference, and the same network served as coordinator GEMM
@@ -76,6 +84,11 @@ fn main() {
         (median("gemm_tiled_lut_64"), median("gemm_naive_model_64"))
     {
         println!("  tiled LUT vs per-element model GEMM (64^3): {:.2}x", model_ns / tiled);
+    }
+    if let (Some(live), Some(tiled)) =
+        (median("gemm_bitsim_live_64"), median("gemm_tiled_lut_64"))
+    {
+        println!("  live gate-streamed vs tiled LUT GEMM (64^3): 1/{:.0}x", live / tiled);
     }
 
     b.finish();

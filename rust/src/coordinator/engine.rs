@@ -13,11 +13,12 @@
 use super::tiler::{Tile, TileOut, TILE_HALO, TILE_IN};
 use crate::image::colsum::postprocess;
 use crate::image::conv::{conv3x3_rowbuf, KERNEL_PRESCALE_SHIFT, PIXEL_SHIFT};
-use crate::image::ops::{combine_magnitude, OpProgram, Operator};
+use crate::image::ops::{combine_magnitude, OpProgram, Operator, Pass};
 use crate::image::Image;
-use crate::multipliers::verify::netlist_multiply_all;
+use crate::multipliers::traits::from_bits;
+use crate::multipliers::verify::{netlist_multiply_all, operand_code};
 use crate::multipliers::MultiplierModel;
-use crate::netlist::prelude::Netlist;
+use crate::netlist::prelude::{BitSim, Netlist};
 use std::collections::BTreeSet;
 use std::sync::{Arc, OnceLock};
 
@@ -35,6 +36,12 @@ pub enum NnBackend {
     /// Per-element calls into the multiplier functional model — the
     /// reference path.
     PerElement(Arc<dyn MultiplierModel>),
+    /// Live gate-level MACs: every product is computed at serve time by
+    /// streaming 64 operand pairs per gate-program pass through the
+    /// design's netlist ([`crate::nn::gemm_block_bitsim`]) — no product
+    /// table, no construction-time sweep. 8-bit designs only (the i8
+    /// datapath).
+    BitsimLive(Arc<Netlist>),
 }
 
 /// A batched tile processor.
@@ -441,6 +448,131 @@ impl TileEngine for BitsimTileEngine {
     }
 }
 
+/// Serve-time gate-level engine (`bitsim-live`): where [`BitsimTileEngine`]
+/// sweeps tap tables out of the gates *at construction* and then serves
+/// from tables, this engine keeps **no tables at all** — every MAC of
+/// every tile is streamed through the design's netlist at serve time,
+/// 64 operand pairs per gate-program pass ([`BitSim::run_codes_into`]).
+/// That is the batched-serving path the bitsliced simulator was built
+/// for: one gate walk retires 64 products, so live gate-level serving
+/// runs at ~64× the scalar `eval_bool` walk instead of being 3–4 orders
+/// of magnitude off the table path. Bit-exact with the `bitsim` and
+/// (at 8 bit) `lut` engines; useful when the operand working set is too
+/// sparse or too wide to justify a sweep, and as the end-to-end witness
+/// that serving truth *is* gate truth.
+pub struct BitsimLiveTileEngine {
+    name: String,
+    /// Shared with [`NnBackend::BitsimLive`] so GEMM workers compile
+    /// their own [`BitSim`] from the same gate program.
+    nl: Arc<Netlist>,
+    bits: usize,
+}
+
+impl BitsimLiveTileEngine {
+    /// Same width bounds as [`BitsimTileEngine::new`]: pre-shifted pixels
+    /// need N ≥ 8, the 2N-bit product bus needs N ≤ 31.
+    pub fn new(model: &dyn MultiplierModel) -> Self {
+        let n = model.bits();
+        assert!((8..=31).contains(&n), "bitsim-live engine supports 8..=31-bit designs");
+        Self {
+            name: format!("bitsim-live:{}", model.name()),
+            nl: Arc::new(model.build_netlist()),
+            bits: n,
+        }
+    }
+
+    /// One live convolution pass over a tile's haloed window: all nine
+    /// taps of every output pixel go through the gates, 64 codes per
+    /// pass, accumulated per pixel exactly like [`conv_tile_model`]'s
+    /// MAC loop (zero-coefficient taps included — hardware multiplies
+    /// them too).
+    fn live_pass(&self, sim: &mut BitSim, pass: &Pass, tile: &Tile, component: &mut [u8]) {
+        let mut ks = [[0i8; 3]; 3];
+        for (ky, row) in pass.kernel.iter().enumerate() {
+            for (kx, &k) in row.iter().enumerate() {
+                ks[ky][kx] = (k << KERNEL_PRESCALE_SHIFT) as i8;
+            }
+        }
+        let n = self.bits;
+        let mut acc = vec![0i64; tile.core_w * tile.core_h];
+        let mut codes = [0u64; 64];
+        let mut prods = [0u64; 64];
+        let mut slots = [0usize; 64];
+        let mut lanes = 0usize;
+        for cy in 0..tile.core_h {
+            for cx in 0..tile.core_w {
+                let slot = cy * tile.core_w + cx;
+                for (ky, krow) in ks.iter().enumerate() {
+                    let srow = &tile.data[(cy + ky) * TILE_IN + cx..(cy + ky) * TILE_IN + cx + 3];
+                    for (&px, &k) in srow.iter().zip(krow) {
+                        codes[lanes] = operand_code((px >> PIXEL_SHIFT) as i64, k as i64, n);
+                        slots[lanes] = slot;
+                        lanes += 1;
+                        if lanes == 64 {
+                            sim.run_codes_into(&codes, &mut prods);
+                            for (&s, &p) in slots.iter().zip(&prods) {
+                                acc[s] += from_bits(p, 2 * n);
+                            }
+                            lanes = 0;
+                        }
+                    }
+                }
+            }
+        }
+        if lanes > 0 {
+            sim.run_codes_into(&codes[..lanes], &mut prods[..lanes]);
+            for (&s, &p) in slots[..lanes].iter().zip(&prods[..lanes]) {
+                acc[s] += from_bits(p, 2 * n);
+            }
+        }
+        for (o, &a) in component.iter_mut().zip(&acc) {
+            *o = pass.post.apply(a);
+        }
+    }
+}
+
+impl TileEngine for BitsimLiveTileEngine {
+    fn name(&self) -> String {
+        self.name.clone()
+    }
+
+    fn process_batch(&self, tiles: &[Tile]) -> Vec<TileOut> {
+        // One compiled gate program per batch, recycled across tiles —
+        // BitSim construction copies the gate list, so per-batch (not
+        // per-tile or per-pass) amortizes it away.
+        let mut sim = BitSim::new(&self.nl);
+        tiles
+            .iter()
+            .map(|t| {
+                let Some(op) = Operator::from_id(t.op) else {
+                    panic!("invalid operator id {} on tile", t.op)
+                };
+                let mut data = vec![0u8; t.core_w * t.core_h];
+                let mut component = vec![0u8; t.core_w * t.core_h];
+                for (pi, pass) in op.passes().iter().enumerate() {
+                    self.live_pass(&mut sim, pass, t, &mut component);
+                    if pi == 0 {
+                        std::mem::swap(&mut data, &mut component);
+                    } else {
+                        combine_magnitude(&mut data, &component);
+                    }
+                }
+                tile_out(t, data)
+            })
+            .collect()
+    }
+
+    /// Live gate-level GEMM ([`crate::nn::gemm_block_bitsim`]): 8-bit
+    /// designs only — the i8 datapath.
+    fn nn_backend(&self) -> Option<NnBackend> {
+        if self.bits == 8 {
+            Some(NnBackend::BitsimLive(self.nl.clone()))
+        } else {
+            None
+        }
+    }
+}
+
 /// Model-backed engine: calls the multiplier functional model directly
 /// per MAC (slow reference; used to validate the LUT and PJRT engines).
 pub struct ModelTileEngine {
@@ -594,6 +726,48 @@ mod tests {
         }
     }
 
+    /// The serve-time gate-streaming engine is bit-exact with the LUT
+    /// engine for every 8-bit registry design and every operator —
+    /// batched 64-lane serving computes exactly what the swept tables
+    /// hold, including on partial edge tiles and ragged final batches.
+    #[test]
+    fn bitsim_live_engine_equals_lut_engine_all_designs() {
+        let img = synthetic_scene(96, 70, 29);
+        for spec in crate::multipliers::registry().specs(8) {
+            let model = crate::multipliers::registry()
+                .build(&spec)
+                .unwrap_or_else(|e| panic!("{spec}: {e}"));
+            let lut = LutTileEngine::new(model.as_ref());
+            let live = BitsimLiveTileEngine::new(model.as_ref());
+            for op in [Operator::Laplacian, Operator::Sobel] {
+                let tiles = tiles_for_op(5, &img, op);
+                let a = lut.process_batch(&tiles);
+                let b = live.process_batch(&tiles);
+                for (x, y) in a.iter().zip(b.iter()) {
+                    assert_eq!(x.data, y.data, "{spec} {op} tile at ({},{})", x.x0, x.y0);
+                }
+            }
+        }
+    }
+
+    /// Wide designs: live gate streaming must agree with the functional
+    /// model (no LUT exists above 8 bit).
+    #[test]
+    fn bitsim_live_engine_equals_model_engine_wide() {
+        let model = crate::multipliers::registry().build_str("proposed@16").unwrap();
+        let img = synthetic_scene(70, 50, 11);
+        let live = BitsimLiveTileEngine::new(model.as_ref());
+        let slow = ModelTileEngine::new(model);
+        for op in [Operator::Laplacian, Operator::Roberts] {
+            let tiles = tiles_for_op(6, &img, op);
+            let a = live.process_batch(&tiles);
+            let b = slow.process_batch(&tiles);
+            for (x, y) in a.iter().zip(b.iter()) {
+                assert_eq!(x.data, y.data, "{op} tile at ({},{})", x.x0, x.y0);
+            }
+        }
+    }
+
     /// The streaming row-buffer engine is bit-exact with the LUT engine,
     /// including on partial edge tiles.
     #[test]
@@ -649,9 +823,12 @@ mod tests {
             ModelTileEngine::new(model.clone()).nn_backend(),
             Some(NnBackend::PerElement(_))
         ));
+        let live = BitsimLiveTileEngine::new(model.as_ref());
+        assert!(matches!(live.nn_backend(), Some(NnBackend::BitsimLive(_))));
         assert!(RowbufTileEngine::new(model).nn_backend().is_none(), "rowbuf is conv-only");
         let wide = crate::multipliers::registry().build_str("proposed@16").unwrap();
         assert!(BitsimTileEngine::new(wide.as_ref()).nn_backend().is_none());
+        assert!(BitsimLiveTileEngine::new(wide.as_ref()).nn_backend().is_none());
         assert!(ModelTileEngine::new(wide).nn_backend().is_none());
     }
 

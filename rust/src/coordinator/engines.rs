@@ -5,7 +5,7 @@
 //! # Engine grammar
 //!
 //! ```text
-//! engine := 'lut' | 'model' | 'rowbuf' | 'bitsim' | 'pjrt'
+//! engine := 'lut' | 'model' | 'rowbuf' | 'bitsim' | 'bitsim-live' | 'pjrt'
 //!         | 'fault/' plan '/' engine
 //! ```
 //!
@@ -17,6 +17,11 @@
 //! * `bitsim` — gate-level serving: tap tables swept out of the design's
 //!   netlist by the bitsliced 64-lane simulator at engine construction
 //!   (widths 8..=31) — batch jobs observe hardware truth.
+//! * `bitsim-live` — serve-time gate streaming: **no tables**; every MAC
+//!   of every tile runs through the netlist at serve time, 64 operand
+//!   pairs per gate-program pass (widths 8..=31). Bit-exact with
+//!   `bitsim`; the batched-serving witness that serving truth is gate
+//!   truth.
 //! * `pjrt` — the AOT-compiled JAX/Pallas executable via PJRT (8-bit
 //!   designs; requires artifacts and the `pjrt` cargo feature).
 //! * `fault/<plan>/<engine>` — the inner engine wrapped in the
@@ -33,12 +38,14 @@
 //! Quantized-inference (GEMM/conv2d) jobs are served by the engines
 //! with an i8 MAC source ([`super::engine::NnBackend`]): `lut` and
 //! `bitsim` via product tables (bitsim sweeps the full operand space
-//! out of the netlist on first nn use), `model` per element — all for
-//! 8-bit designs only. `rowbuf` and `pjrt` are conv-datapath-only and
-//! reject nn jobs at submit time.
+//! out of the netlist on first nn use), `model` per element,
+//! `bitsim-live` by streaming every MAC through the gates 64 lanes per
+//! pass — all for 8-bit designs only. `rowbuf` and `pjrt` are
+//! conv-datapath-only and reject nn jobs at submit time.
 
 use super::engine::{
-    BitsimTileEngine, LutTileEngine, ModelTileEngine, RowbufTileEngine, TileEngine,
+    BitsimLiveTileEngine, BitsimTileEngine, LutTileEngine, ModelTileEngine, RowbufTileEngine,
+    TileEngine,
 };
 use super::fault::{FaultEngine, FaultPlan};
 use crate::multipliers::spec::{registry, DesignSpec};
@@ -62,6 +69,9 @@ pub enum EngineSpec {
     /// Gate-level engine: netlist products swept by the bitsliced
     /// simulator (widths 8..=31).
     Bitsim,
+    /// Serve-time gate streaming: every MAC through the netlist, 64
+    /// lanes per pass, no tables (widths 8..=31).
+    BitsimLive,
     /// AOT JAX/Pallas executable via PJRT.
     Pjrt,
     /// The inner engine wrapped in the deterministic fault injector —
@@ -79,18 +89,20 @@ impl EngineSpec {
             EngineSpec::Model => "model".to_string(),
             EngineSpec::Rowbuf => "rowbuf".to_string(),
             EngineSpec::Bitsim => "bitsim".to_string(),
+            EngineSpec::BitsimLive => "bitsim-live".to_string(),
             EngineSpec::Pjrt => "pjrt".to_string(),
             EngineSpec::Fault { inner, plan } => format!("fault/{plan}/{}", inner.key()),
         }
     }
 
     /// The base (non-wrapper) backends.
-    pub fn all() -> [EngineSpec; 5] {
+    pub fn all() -> [EngineSpec; 6] {
         [
             EngineSpec::Lut,
             EngineSpec::Model,
             EngineSpec::Rowbuf,
             EngineSpec::Bitsim,
+            EngineSpec::BitsimLive,
             EngineSpec::Pjrt,
         ]
     }
@@ -120,9 +132,10 @@ impl FromStr for EngineSpec {
             "model" => Ok(EngineSpec::Model),
             "rowbuf" => Ok(EngineSpec::Rowbuf),
             "bitsim" => Ok(EngineSpec::Bitsim),
+            "bitsim-live" => Ok(EngineSpec::BitsimLive),
             "pjrt" => Ok(EngineSpec::Pjrt),
             other => Err(Error::msg(format!(
-                "unknown engine {other:?} (lut | model | rowbuf | bitsim | pjrt | fault/<plan>/<engine>)"
+                "unknown engine {other:?} (lut | model | rowbuf | bitsim | bitsim-live | pjrt | fault/<plan>/<engine>)"
             ))),
         }
     }
@@ -156,6 +169,14 @@ pub fn resolve(engine: EngineSpec, design: &DesignSpec) -> crate::Result<Arc<dyn
                 )));
             }
             Ok(Arc::new(BitsimTileEngine::new(model.as_ref())))
+        }
+        EngineSpec::BitsimLive => {
+            if !(8..=31).contains(&design.bits) {
+                return Err(Error::msg(format!(
+                    "engine bitsim-live requires an 8..=31-bit design (got {design})"
+                )));
+            }
+            Ok(Arc::new(BitsimLiveTileEngine::new(model.as_ref())))
         }
         EngineSpec::Pjrt => {
             if design.bits != 8 {
@@ -256,14 +277,19 @@ mod tests {
         let model = resolve(EngineSpec::Model, &design).unwrap();
         let rowbuf = resolve(EngineSpec::Rowbuf, &design).unwrap();
         let bitsim = resolve(EngineSpec::Bitsim, &design).unwrap();
+        let live = resolve(EngineSpec::BitsimLive, &design).unwrap();
         let a = lut.process_batch(&tiles);
         let b = model.process_batch(&tiles);
         let c = rowbuf.process_batch(&tiles);
         let d = bitsim.process_batch(&tiles);
-        for (((x, y), z), w) in a.iter().zip(b.iter()).zip(c.iter()).zip(d.iter()) {
+        let e = live.process_batch(&tiles);
+        for ((((x, y), z), w), v) in
+            a.iter().zip(b.iter()).zip(c.iter()).zip(d.iter()).zip(e.iter())
+        {
             assert_eq!(x.data, y.data, "lut vs model");
             assert_eq!(x.data, z.data, "lut vs rowbuf");
             assert_eq!(x.data, w.data, "lut vs bitsim");
+            assert_eq!(x.data, v.data, "lut vs bitsim-live");
         }
     }
 
@@ -305,8 +331,11 @@ mod tests {
         let wide: DesignSpec = "proposed@16".parse().unwrap();
         let engine = resolve(EngineSpec::Bitsim, &wide).unwrap();
         assert!(engine.name().starts_with("bitsim:"));
+        let live = resolve(EngineSpec::BitsimLive, &wide).unwrap();
+        assert!(live.name().starts_with("bitsim-live:"));
         let narrow: DesignSpec = "proposed@4".parse().unwrap();
         assert!(resolve(EngineSpec::Bitsim, &narrow).is_err());
+        assert!(resolve(EngineSpec::BitsimLive, &narrow).is_err());
     }
 
     #[test]

@@ -53,8 +53,8 @@ pub mod service;
 pub mod tiler;
 
 pub use engine::{
-    BitsimTileEngine, DualModeTileEngine, LutTileEngine, ModelTileEngine, NnBackend, Quality,
-    RowbufTileEngine, TileEngine,
+    BitsimLiveTileEngine, BitsimTileEngine, DualModeTileEngine, LutTileEngine, ModelTileEngine,
+    NnBackend, Quality, RowbufTileEngine, TileEngine,
 };
 pub use engines::{resolve, resolve_str, resolve_with_fallback, EngineSpec};
 pub use fault::{silence_worker_panics, FaultEngine, FaultKind, FaultPlan};

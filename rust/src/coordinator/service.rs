@@ -48,7 +48,8 @@ use super::metrics::{BreakerDecision, FailKind, Metrics, MetricsSnapshot};
 use super::tiler::{reassemble, tile_image, Tile};
 use crate::image::ops::Operator;
 use crate::image::Image;
-use crate::nn::{gemm_block_lut, gemm_block_mul, Conv2d, MatI32, MatI8, TensorI8};
+use crate::netlist::prelude::BitSim;
+use crate::nn::{gemm_block_bitsim, gemm_block_lut, gemm_block_mul, Conv2d, MatI32, MatI8, TensorI8};
 use crate::util::pool::{bounded, Receiver, RecvTimeout, Sender};
 use crate::util::sync::lock;
 use std::collections::{BTreeSet, HashMap};
@@ -1021,6 +1022,16 @@ fn worker_loop(
                                 &mut block,
                             );
                         }
+                        NnBackend::BitsimLive(nl) => {
+                            // One compiled gate program per block task —
+                            // construction just copies the gate list; the
+                            // block then streams 64 MACs per pass.
+                            let mut sim = BitSim::new(nl);
+                            gemm_block_bitsim(
+                                &task.a, &task.b, &mut sim, task.row0, task.rows, task.col0,
+                                task.cols, &mut block,
+                            );
+                        }
                     }
                     block
                 }));
@@ -1515,21 +1526,22 @@ mod operator_routing_tests {
 mod nn_job_tests {
     use super::*;
     use crate::coordinator::engine::{
-        BitsimTileEngine, LutTileEngine, ModelTileEngine, RowbufTileEngine,
+        BitsimLiveTileEngine, BitsimTileEngine, LutTileEngine, ModelTileEngine, RowbufTileEngine,
     };
     use crate::image::synthetic_scene;
     use crate::multipliers::{lut::product_table, registry};
     use crate::nn::{gemm_tiled, quantize_image, Network};
     use crate::util::prng::Xoshiro256;
 
-    /// A fleet mixing nn-capable engines (lut, model, bitsim) with a
-    /// conv-only one (rowbuf).
+    /// A fleet mixing nn-capable engines (lut, model, bitsim,
+    /// bitsim-live) with a conv-only one (rowbuf).
     fn nn_coordinator() -> Coordinator {
         let model = registry().build_str("proposed@8").unwrap();
         let engines: Vec<(String, Arc<dyn TileEngine>)> = vec![
             ("lut".into(), Arc::new(LutTileEngine::new(model.as_ref()))),
             ("model".into(), Arc::new(ModelTileEngine::new(model.clone()))),
             ("bitsim".into(), Arc::new(BitsimTileEngine::new(model.as_ref()))),
+            ("bitsim-live".into(), Arc::new(BitsimLiveTileEngine::new(model.as_ref()))),
             ("rowbuf".into(), Arc::new(RowbufTileEngine::new(model))),
         ];
         Coordinator::start_named(
@@ -1555,19 +1567,19 @@ mod nn_job_tests {
         let b = crate::nn::MatI8::random(37, 23, &mut rng);
         let want = gemm_tiled(&a, &b, &lut);
         let coord = nn_coordinator();
-        for key in ["lut", "model", "bitsim"] {
+        for key in ["lut", "model", "bitsim", "bitsim-live"] {
             let res = coord.submit_gemm(a.clone(), b.clone(), Some(key)).unwrap().wait().unwrap();
             assert_eq!(res.out, want, "{key}");
             assert_eq!(res.blocks, 3, "{key}: 69 rows in MC=32 blocks");
             assert_eq!(res.engine, key, "result names its serving engine");
         }
         let m = coord.shutdown();
-        assert_eq!(m.jobs_completed, 3);
-        for row in &m.per_engine[..3] {
+        assert_eq!(m.jobs_completed, 4);
+        for row in &m.per_engine[..4] {
             assert_eq!(row.jobs_completed, 1, "{}", row.name);
             assert_eq!(row.tiles_processed, 3, "{}: one unit per GEMM block", row.name);
         }
-        assert_eq!(m.per_engine[3].jobs_completed, 0, "rowbuf served nothing");
+        assert_eq!(m.per_engine[4].jobs_completed, 0, "rowbuf served nothing");
     }
 
     #[test]

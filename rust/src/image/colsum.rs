@@ -23,8 +23,14 @@
 //!
 //! — amortised ≈2 table lookups + 5 adds per output pixel (one fresh-row
 //! `tap_ring` fill plus the unconditional `Δ` lookup) instead of
-//! 9 lookups + 8 adds. Tap tables are `i32` (1 KiB each, L1-resident,
-//! SIMD-friendly) instead of the historical `i64`; [`MAX_TAP_ABS`] bounds
+//! 9 lookups + 8 adds. The per-row stages are flat `i32`-slice loops
+//! with no per-pixel branch: the column-sum fold and sliding-window sum
+//! dispatch to explicit SSE2/AVX2 kernels on x86-64 (runtime feature
+//! detection, std-only, scalar fallback everywhere else — set
+//! `SFCMUL_NO_SIMD=1` to force scalar), and the output rule runs
+//! row-at-a-time via [`Post::apply_row`]. Tap tables are `i32` (1 KiB
+//! each, L1-resident, SIMD-friendly) instead of the historical `i64`;
+//! [`MAX_TAP_ABS`] bounds
 //! every tap so the widest possible i32 accumulation cannot wrap, keeping
 //! the kernel bit-exact with the i64 reference
 //! ([`crate::coordinator::engine::conv_tile_taps`], retained as the
@@ -32,6 +38,163 @@
 
 use super::conv::{KERNEL_PRESCALE_SHIFT, PIXEL_SHIFT};
 use super::ops::Post;
+
+/// Elementwise three-way add — the column-sum fold `cs[x] = tv0[x] +
+/// tv1[x] + tv2[x]`. The scalar reference the SIMD paths are proved
+/// bit-identical to (i32 wrapping add is associative lane-wise, so the
+/// vector forms cannot diverge; the tests pin it anyway).
+fn sum3_rows_scalar(a: &[i32], b: &[i32], c: &[i32], cs: &mut [i32]) {
+    for (((o, &x), &y), &z) in cs.iter_mut().zip(a).zip(b).zip(c) {
+        *o = x + y + z;
+    }
+}
+
+/// Sliding 3-window sum over the column sums: `acc[x] = cs[x] + cs[x+1]
+/// + cs[x+2]` for `x` in `0..cs.len()-2`. Scalar reference.
+fn window3_scalar(cs: &[i32], acc: &mut [i32]) {
+    debug_assert_eq!(acc.len() + 2, cs.len());
+    for (x, o) in acc.iter_mut().enumerate() {
+        *o = cs[x] + cs[x + 1] + cs[x + 2];
+    }
+}
+
+/// Explicit x86-64 vector forms of the two row primitives, selected at
+/// runtime ([`isa`]) — std-only (`std::arch` + `is_x86_feature_detected!`),
+/// scalar fallback everywhere else. Both loops are pure unaligned
+/// i32-lane loads + adds; tails shorter than one vector run the scalar
+/// form, so every width down to 1 is served.
+#[cfg(target_arch = "x86_64")]
+mod x86 {
+    use std::arch::x86_64::*;
+
+    /// # Safety
+    /// Caller must have verified AVX2 support at runtime.
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn sum3_rows_avx2(a: &[i32], b: &[i32], c: &[i32], cs: &mut [i32]) {
+        let n = cs.len();
+        let mut x = 0usize;
+        while x + 8 <= n {
+            let va = _mm256_loadu_si256(a.as_ptr().add(x) as *const __m256i);
+            let vb = _mm256_loadu_si256(b.as_ptr().add(x) as *const __m256i);
+            let vc = _mm256_loadu_si256(c.as_ptr().add(x) as *const __m256i);
+            let s = _mm256_add_epi32(_mm256_add_epi32(va, vb), vc);
+            _mm256_storeu_si256(cs.as_mut_ptr().add(x) as *mut __m256i, s);
+            x += 8;
+        }
+        super::sum3_rows_scalar(&a[x..n], &b[x..n], &c[x..n], &mut cs[x..n]);
+    }
+
+    /// # Safety
+    /// SSE2 is part of the x86-64 baseline; callers reach this only on
+    /// x86-64, so the target feature is always present.
+    #[target_feature(enable = "sse2")]
+    pub unsafe fn sum3_rows_sse2(a: &[i32], b: &[i32], c: &[i32], cs: &mut [i32]) {
+        let n = cs.len();
+        let mut x = 0usize;
+        while x + 4 <= n {
+            let va = _mm_loadu_si128(a.as_ptr().add(x) as *const __m128i);
+            let vb = _mm_loadu_si128(b.as_ptr().add(x) as *const __m128i);
+            let vc = _mm_loadu_si128(c.as_ptr().add(x) as *const __m128i);
+            let s = _mm_add_epi32(_mm_add_epi32(va, vb), vc);
+            _mm_storeu_si128(cs.as_mut_ptr().add(x) as *mut __m128i, s);
+            x += 4;
+        }
+        super::sum3_rows_scalar(&a[x..n], &b[x..n], &c[x..n], &mut cs[x..n]);
+    }
+
+    /// # Safety
+    /// Caller must have verified AVX2 support at runtime.
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn window3_avx2(cs: &[i32], acc: &mut [i32]) {
+        let n = acc.len(); // cs.len() - 2, so x + 2 + 8 <= cs.len() holds below
+        let mut x = 0usize;
+        while x + 8 <= n {
+            let v0 = _mm256_loadu_si256(cs.as_ptr().add(x) as *const __m256i);
+            let v1 = _mm256_loadu_si256(cs.as_ptr().add(x + 1) as *const __m256i);
+            let v2 = _mm256_loadu_si256(cs.as_ptr().add(x + 2) as *const __m256i);
+            let s = _mm256_add_epi32(_mm256_add_epi32(v0, v1), v2);
+            _mm256_storeu_si256(acc.as_mut_ptr().add(x) as *mut __m256i, s);
+            x += 8;
+        }
+        super::window3_scalar(&cs[x..], &mut acc[x..]);
+    }
+
+    /// # Safety
+    /// SSE2 is part of the x86-64 baseline (see [`sum3_rows_sse2`]).
+    #[target_feature(enable = "sse2")]
+    pub unsafe fn window3_sse2(cs: &[i32], acc: &mut [i32]) {
+        let n = acc.len();
+        let mut x = 0usize;
+        while x + 4 <= n {
+            let v0 = _mm_loadu_si128(cs.as_ptr().add(x) as *const __m128i);
+            let v1 = _mm_loadu_si128(cs.as_ptr().add(x + 1) as *const __m128i);
+            let v2 = _mm_loadu_si128(cs.as_ptr().add(x + 2) as *const __m128i);
+            let s = _mm_add_epi32(_mm_add_epi32(v0, v1), v2);
+            _mm_storeu_si128(acc.as_mut_ptr().add(x) as *mut __m128i, s);
+            x += 4;
+        }
+        super::window3_scalar(&cs[x..], &mut acc[x..]);
+    }
+}
+
+/// Instruction set the row primitives dispatch to, detected once per
+/// process.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum Isa {
+    Scalar,
+    #[cfg(target_arch = "x86_64")]
+    Sse2,
+    #[cfg(target_arch = "x86_64")]
+    Avx2,
+}
+
+fn isa() -> Isa {
+    #[cfg(target_arch = "x86_64")]
+    {
+        use std::sync::OnceLock;
+        static ISA: OnceLock<Isa> = OnceLock::new();
+        *ISA.get_or_init(|| {
+            if std::env::var_os("SFCMUL_NO_SIMD").is_some() {
+                Isa::Scalar
+            } else if std::is_x86_feature_detected!("avx2") {
+                Isa::Avx2
+            } else {
+                // SSE2 is architecturally guaranteed on x86-64.
+                Isa::Sse2
+            }
+        })
+    }
+    #[cfg(not(target_arch = "x86_64"))]
+    {
+        Isa::Scalar
+    }
+}
+
+/// `cs[x] = a[x] + b[x] + c[x]`, dispatched to the widest available ISA.
+fn sum3_rows(a: &[i32], b: &[i32], c: &[i32], cs: &mut [i32]) {
+    assert!(a.len() >= cs.len() && b.len() >= cs.len() && c.len() >= cs.len());
+    match isa() {
+        Isa::Scalar => sum3_rows_scalar(a, b, c, cs),
+        // SAFETY: variant selected only after runtime feature detection.
+        #[cfg(target_arch = "x86_64")]
+        Isa::Sse2 => unsafe { x86::sum3_rows_sse2(a, b, c, cs) },
+        #[cfg(target_arch = "x86_64")]
+        Isa::Avx2 => unsafe { x86::sum3_rows_avx2(a, b, c, cs) },
+    }
+}
+
+/// `acc[x] = cs[x] + cs[x+1] + cs[x+2]`, dispatched like [`sum3_rows`].
+fn window3(cs: &[i32], acc: &mut [i32]) {
+    assert_eq!(acc.len() + 2, cs.len());
+    match isa() {
+        Isa::Scalar => window3_scalar(cs, acc),
+        // SAFETY: variant selected only after runtime feature detection.
+        #[cfg(target_arch = "x86_64")]
+        Isa::Sse2 => unsafe { x86::window3_sse2(cs, acc) },
+        #[cfg(target_arch = "x86_64")]
+        Isa::Avx2 => unsafe { x86::window3_avx2(cs, acc) },
+    }
+}
 
 /// The historical Laplacian output rule, shared by the retained
 /// pre-operator-pipeline baselines (9-lookup kernels, benches): the
@@ -168,24 +331,29 @@ impl ColSumKernel {
             }
         };
         // Rolling per-row tap vectors: rows oy, oy+1, oy+2 of the window.
+        // Every per-row stage below is a flat i32-slice loop with no
+        // per-pixel branch: the column-sum fold and the sliding window
+        // sum dispatch to SSE2/AVX2 on x86-64 (scalar elsewhere), the two
+        // table gathers (`fill`, centre delta) are straight-line scalar
+        // loops, and the output rule is applied row-at-a-time with the
+        // mode branch hoisted ([`Post::apply_row`]).
         let mut tv0 = vec![0i32; w2];
         let mut tv1 = vec![0i32; w2];
         let mut tv2 = vec![0i32; w2];
         let mut cs = vec![0i32; w2];
+        let mut acc = vec![0i32; out_w];
         fill(&mut tv0[..], &src[0..w2]);
         fill(&mut tv1[..], &src[src_stride..src_stride + w2]);
         for oy in 0..out_h {
             let base = (oy + 2) * src_stride;
             fill(&mut tv2[..], &src[base..base + w2]); // the one fresh lookup row
-            for x in 0..w2 {
-                cs[x] = tv0[x] + tv1[x] + tv2[x];
+            sum3_rows(&tv0, &tv1, &tv2, &mut cs);
+            window3(&cs, &mut acc);
+            let mid = &src[(oy + 1) * src_stride + 1..(oy + 1) * src_stride + 1 + out_w];
+            for (a, &p) in acc.iter_mut().zip(mid) {
+                *a += self.center_delta[p as usize];
             }
-            let mid = &src[(oy + 1) * src_stride..(oy + 1) * src_stride + w2];
-            let out_row = &mut out[oy * out_stride..oy * out_stride + out_w];
-            for (x, out_px) in out_row.iter_mut().enumerate() {
-                let acc = cs[x] + cs[x + 1] + cs[x + 2] + self.center_delta[mid[x + 1] as usize];
-                *out_px = self.post.apply(acc as i64);
-            }
+            self.post.apply_row(&acc, &mut out[oy * out_stride..oy * out_stride + out_w]);
             // Slide down one row: tv0 ← tv1, tv1 ← tv2, old tv0 becomes
             // next iteration's scratch.
             std::mem::swap(&mut tv0, &mut tv1);
@@ -241,9 +409,17 @@ mod tests {
             .expect("Laplacian taps fit the i32 bound");
         let (tc, tr) = laplacian_taps_i64(&lut);
         let mut rng = Xoshiro256::seeded(42);
-        for &(out_w, out_h, stride_pad) in
-            &[(1usize, 1usize, 0usize), (1, 7, 3), (7, 1, 0), (5, 4, 2), (64, 64, 0), (63, 2, 5)]
-        {
+        for &(out_w, out_h, stride_pad) in &[
+            (1usize, 1usize, 0usize),
+            (1, 7, 3),
+            (7, 1, 0),
+            (5, 4, 2),
+            (64, 64, 0),
+            (63, 2, 5),
+            (63, 3, 0),
+            (64, 3, 1),
+            (65, 3, 0),
+        ] {
             let stride = out_w + 2 + stride_pad;
             let mut src = vec![0u8; (out_h + 2) * stride];
             for b in src.iter_mut() {
@@ -299,6 +475,51 @@ mod tests {
             }
         }
         assert_eq!(got, want);
+    }
+
+    /// The dispatched row primitives (and, on x86-64, each explicit ISA
+    /// form) are bit-identical to the scalar references on every ragged
+    /// width the vector tails must handle — including widths below one
+    /// vector (1), one lane short of a 64-wide row (63), and one past it
+    /// (65). Values stay within the [`MAX_TAP_ABS`]-derived bound so the
+    /// scalar adds cannot overflow under debug assertions.
+    #[test]
+    fn row_primitives_vector_paths_match_scalar_on_ragged_widths() {
+        let mut rng = Xoshiro256::seeded(2024);
+        let bounded = |rng: &mut Xoshiro256| rng.below(2 * 100_000) as i32 - 100_000;
+        for &out_w in &[1usize, 2, 3, 7, 63, 64, 65, 129] {
+            let w2 = out_w + 2;
+            let a: Vec<i32> = (0..w2).map(|_| bounded(&mut rng)).collect();
+            let b: Vec<i32> = (0..w2).map(|_| bounded(&mut rng)).collect();
+            let c: Vec<i32> = (0..w2).map(|_| bounded(&mut rng)).collect();
+            let mut want_cs = vec![0i32; w2];
+            sum3_rows_scalar(&a, &b, &c, &mut want_cs);
+            let mut got_cs = vec![0i32; w2];
+            sum3_rows(&a, &b, &c, &mut got_cs);
+            assert_eq!(got_cs, want_cs, "sum3 dispatch, width {out_w}");
+            let mut want_acc = vec![0i32; out_w];
+            window3_scalar(&want_cs, &mut want_acc);
+            let mut got_acc = vec![0i32; out_w];
+            window3(&want_cs, &mut got_acc);
+            assert_eq!(got_acc, want_acc, "window3 dispatch, width {out_w}");
+            #[cfg(target_arch = "x86_64")]
+            {
+                // SAFETY: SSE2 is part of the x86-64 baseline.
+                let mut v = vec![0i32; w2];
+                unsafe { x86::sum3_rows_sse2(&a, &b, &c, &mut v) };
+                assert_eq!(v, want_cs, "sum3 sse2, width {out_w}");
+                let mut w = vec![0i32; out_w];
+                unsafe { x86::window3_sse2(&want_cs, &mut w) };
+                assert_eq!(w, want_acc, "window3 sse2, width {out_w}");
+                if std::is_x86_feature_detected!("avx2") {
+                    // SAFETY: AVX2 verified present just above.
+                    unsafe { x86::sum3_rows_avx2(&a, &b, &c, &mut v) };
+                    assert_eq!(v, want_cs, "sum3 avx2, width {out_w}");
+                    unsafe { x86::window3_avx2(&want_cs, &mut w) };
+                    assert_eq!(w, want_acc, "window3 avx2, width {out_w}");
+                }
+            }
+        }
     }
 
     #[test]

@@ -94,6 +94,29 @@ impl Post {
         };
         v.clamp(0, 255) as u8
     }
+
+    /// Row form of [`Post::apply`] for i32 accumulator rows: the mode
+    /// branch is hoisted out of the per-pixel loop so the shift/clamp
+    /// body is a straight-line loop the compiler can vectorize.
+    /// Bit-exact with `apply(acc as i64)` for every i32 (the colsum
+    /// path's [`crate::image::colsum::MAX_TAP_ABS`] bound keeps
+    /// accumulators far from `i32::MIN`, so `abs` cannot overflow).
+    pub fn apply_row(self, acc: &[i32], out: &mut [u8]) {
+        assert_eq!(acc.len(), out.len());
+        let s = KERNEL_PRESCALE_SHIFT - PIXEL_SHIFT + self.norm_shift;
+        match self.mode {
+            PostMode::Magnitude => {
+                for (o, &a) in out.iter_mut().zip(acc) {
+                    *o = (a.abs() >> s).min(255) as u8;
+                }
+            }
+            PostMode::Saturate => {
+                for (o, &a) in out.iter_mut().zip(acc) {
+                    *o = (a >> s).clamp(0, 255) as u8;
+                }
+            }
+        }
+    }
 }
 
 /// One convolution pass of an operator: a 3×3 kernel and its output rule.
@@ -577,6 +600,42 @@ mod tests {
         // saturate floors negatives at black instead of mirroring them
         assert_eq!(Post::saturate(0).apply(-400), 0);
         assert_eq!(Post::magnitude(0).apply(-400), 100);
+    }
+
+    /// The hoisted row form of the output rule is bit-exact with the
+    /// per-pixel form for every registered post rule, across sign,
+    /// clamp-edge, and saturation cases.
+    #[test]
+    fn apply_row_matches_apply_per_pixel() {
+        let mut posts: Vec<Post> = vec![Post::LAPLACIAN];
+        for op in Operator::all() {
+            posts.extend(op.passes().iter().map(|p| p.post));
+        }
+        let acc: Vec<i32> = vec![
+            i32::MIN / 16,
+            -1_000_000,
+            -8192,
+            -8191,
+            -400,
+            -32,
+            -31,
+            -1,
+            0,
+            1,
+            31,
+            32,
+            8191,
+            8192,
+            1_000_000,
+            i32::MAX / 16,
+        ];
+        for post in posts {
+            let mut row = vec![0u8; acc.len()];
+            post.apply_row(&acc, &mut row);
+            for (&a, &got) in acc.iter().zip(&row) {
+                assert_eq!(got, post.apply(a as i64), "{post:?} acc {a}");
+            }
+        }
     }
 
     #[test]

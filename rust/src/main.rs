@@ -7,7 +7,7 @@
 //!   serve    --listen ADDR [--conn-workers C] [--max-inflight J] [--quota-rps R] [--quota-burst B]
 //!            (network mode: the SFC/1 TCP job protocol + GET /metrics HTTP on one
 //!            listener, SIGINT-safe graceful drain — see `sfcmul::server`)
-//!   infer    [--design SPEC] [--engine lut|bitsim|model] [--seed S] [--size N]
+//!   infer    [--design SPEC] [--engine lut|bitsim|bitsim-live|model] [--seed S] [--size N]
 //!            (quantized conv→relu→conv inference through the coordinator)
 //!   ablate   [--seed S]                      (design-space ablation report)
 //!   designs                                  (list the design registry)
@@ -20,7 +20,8 @@
 //! Design specs (`--design` / `--designs`) follow the grammar of
 //! `multipliers::spec`: `family[@bits][:trunc=...][:comp=...][:opt=...]`,
 //! e.g. `proposed@8`, `proposed@16:comp=const`, `d2@8:opt=none`. Engine
-//! specs (`--engine`) are one of `lut | model | rowbuf | bitsim | pjrt`,
+//! specs (`--engine`) are one of `lut | model | rowbuf | bitsim |
+//! bitsim-live | pjrt`,
 //! resolved through `coordinator::engines::resolve`. Operators (`--op`)
 //! are the registry of `image::ops` (`laplacian` default, `sobel`,
 //! `prewitt`, `scharr`, `roberts`, `sharpen`, `gaussian3`).
@@ -77,7 +78,7 @@ USAGE: sfcmul <subcommand> [options]
            concurrent jobs (excess gets ERR busy); --quota-rps/--quota-burst
            set per-client token-bucket quotas (ERR quota). Ctrl-C drains
            in-flight jobs and prints a final metrics snapshot.
-  infer    [--design SPEC] [--engine lut|bitsim|model] [--seed S] [--size N]
+  infer    [--design SPEC] [--engine lut|bitsim|bitsim-live|model] [--seed S] [--size N]
            run the fixed quantized conv->relu->conv network on a synthetic
            scene through the coordinator (i8 im2col + tiled GEMM, every MAC
            through the design; prints final-activation fidelity vs exact)
@@ -97,7 +98,9 @@ design SPEC grammar:  family[@bits][:trunc=paper|none|K][:comp=paper|none|const]
   families: exact, proposed, d1, d2, d4, d5, d7, d12   (default bits: 8)
   examples: proposed@8   proposed@16:comp=const   d2@8:trunc=none   exact@8:opt=none
 engine SPEC: lut (8-bit table, default) | model (any width) | rowbuf
-             | bitsim (gate-level netlist via bitsliced sim, widths 8..=31) | pjrt
+             | bitsim (gate-level netlist via bitsliced sim, widths 8..=31)
+             | bitsim-live (serve-time gate streaming, 64 MACs/pass, no tables)
+             | pjrt
              | fault/<plan>/<engine> (deterministic fault injector, e.g.
                fault/panic@7/lut — same plan grammar as --fault)
 operator OP: laplacian (default) | sobel | prewitt | scharr | roberts
@@ -571,7 +574,7 @@ fn cmd_infer(args: &Args) -> i32 {
         // an engine that cannot carry the i8 GEMM datapath.
         eprintln!(
             "engine {actual} cannot serve quantized-inference jobs \
-             (try --engine lut | bitsim | model)"
+             (try --engine lut | bitsim | bitsim-live | model)"
         );
         return 2;
     }

@@ -141,10 +141,18 @@ impl BitSim {
     /// (batch length not a multiple of 64) are padded internally.
     pub fn run_code_batch(&mut self, codes: &[u64]) -> Vec<u64> {
         let mut out = vec![0u64; codes.len()];
+        self.run_code_batch_into(codes, &mut out);
+        out
+    }
+
+    /// Allocation-free form of [`BitSim::run_code_batch`] for serve-time
+    /// hot loops: writes one output code per input code into `out`
+    /// (same length), 64 lanes per gate-program pass.
+    pub fn run_code_batch_into(&mut self, codes: &[u64], out: &mut [u64]) {
+        assert_eq!(codes.len(), out.len());
         for (ic, oc) in codes.chunks(64).zip(out.chunks_mut(64)) {
             self.run_codes_into(ic, oc);
         }
-        out
     }
 }
 

@@ -10,7 +10,7 @@
 //! is one L1/L2-resident load + add and the *approximate product* of the
 //! design under test is what accumulates, exactly as in hardware.
 //!
-//! Three product sources serve the same GEMM (and are proved equal by
+//! Four product sources serve the same GEMM (and are proved equal by
 //! `rust/tests/nn_gemm_equiv.rs`):
 //!
 //! * the **LUT fast path** ([`gemm_tiled`]) — a table generated from the
@@ -19,6 +19,9 @@
 //!   of the design's gate-level netlist by the bitsliced simulator
 //!   ([`crate::multipliers::verify::netlist_multiply_all`]), giving
 //!   netlist-true GEMM results;
+//! * the **live gate stream** ([`gemm_bitsim`]) — no tables at all:
+//!   every MAC runs through the netlist *at serve time*, 64 operand
+//!   pairs per bitsliced gate-program pass;
 //! * the **per-element reference** ([`gemm_naive`]) — every MAC calls
 //!   the multiplier model directly, no tiling, no tables.
 //!
@@ -27,6 +30,9 @@
 //! [`gemm_naive`]/[`gemm_tiled`] assert `K ≤ 2^15` so accumulators can
 //! never leave i32.
 
+use crate::multipliers::traits::from_bits;
+use crate::multipliers::verify::operand_code;
+use crate::netlist::prelude::{BitSim, Netlist};
 use crate::util::prng::Xoshiro256;
 
 /// Maximum GEMM depth (K) the i32 accumulator provably cannot overflow
@@ -173,16 +179,24 @@ pub fn gemm_block_lut(
         for j0 in (col0..col0 + cols).step_by(NR) {
             let nr = NR.min(col0 + cols - j0);
             for i in 0..rows {
-                let arow = &a.data[(row0 + i) * k..(row0 + i) * k + k];
-                let obase = i * cols + (j0 - col0);
-                let orow = &mut out[obase..obase + nr];
-                for (kk, &av) in arow.iter().enumerate().skip(k0).take(kc) {
+                // Slice the A panel directly at its offset (an
+                // `enumerate().skip(k0)` here re-walks the row from 0 on
+                // every KC panel — O(K²) per row) and accumulate the NR
+                // output columns in a register tile, touching `out` once
+                // per (k0, j0, i) instead of once per MAC.
+                let apanel = &a.data[(row0 + i) * k + k0..(row0 + i) * k + k0 + kc];
+                let mut acc = [0i32; NR];
+                for (kk, &av) in apanel.iter().enumerate() {
                     let base = (av as u8 as usize) << 8;
                     let atab = &table[base..base + 256];
-                    let brow = &b.data[kk * n + j0..kk * n + j0 + nr];
-                    for (o, &bv) in orow.iter_mut().zip(brow) {
+                    let brow = &b.data[(k0 + kk) * n + j0..(k0 + kk) * n + j0 + nr];
+                    for (o, &bv) in acc[..nr].iter_mut().zip(brow) {
                         *o += atab[bv as u8 as usize];
                     }
+                }
+                let obase = i * cols + (j0 - col0);
+                for (o, &v) in out[obase..obase + nr].iter_mut().zip(&acc[..nr]) {
+                    *o += v;
                 }
             }
         }
@@ -216,6 +230,74 @@ pub fn gemm_block_mul(
             }
         }
     }
+}
+
+/// Live gate-level block kernel: the same output block as
+/// [`gemm_block_lut`], but every MAC is computed **at serve time** by the
+/// bitsliced netlist simulator — 64 operand pairs per gate-program pass,
+/// no product table and no construction-time sweep. Each inner row
+/// batches one `a` operand against up to 64 consecutive `b` operands
+/// into one [`BitSim::run_codes_into`] pass, so netlist-true serving
+/// runs at ~64× the scalar gate-walk throughput.
+///
+/// `sim` must be compiled from an 8-bit multiplier netlist (the i8 nn
+/// datapath; its 16-bit products always fit the i32 accumulators).
+pub fn gemm_block_bitsim(
+    a: &MatI8,
+    b: &MatI8,
+    sim: &mut BitSim,
+    row0: usize,
+    rows: usize,
+    col0: usize,
+    cols: usize,
+    out: &mut [i32],
+) {
+    check_shapes(a, b);
+    assert_eq!(sim.num_inputs(), 16, "live GEMM requires an 8-bit multiplier netlist");
+    let (k, n) = (a.cols, b.cols);
+    assert!(row0 + rows <= a.rows && col0 + cols <= n);
+    assert_eq!(out.len(), rows * cols);
+    let mut codes = [0u64; 64];
+    let mut prods = [0u64; 64];
+    for i in 0..rows {
+        let arow = &a.data[(row0 + i) * k..(row0 + i) * k + k];
+        let orow = &mut out[i * cols..(i + 1) * cols];
+        for (kk, &av) in arow.iter().enumerate() {
+            let brow = &b.data[kk * n + col0..kk * n + col0 + cols];
+            let mut j = 0usize;
+            while j < cols {
+                let lanes = (cols - j).min(64);
+                for (c, &bv) in codes[..lanes].iter_mut().zip(&brow[j..j + lanes]) {
+                    *c = operand_code(av as i64, bv as i64, 8);
+                }
+                sim.run_codes_into(&codes[..lanes], &mut prods[..lanes]);
+                for (o, &p) in orow[j..j + lanes].iter_mut().zip(&prods[..lanes]) {
+                    *o += from_bits(p, 16) as i32;
+                }
+                j += lanes;
+            }
+        }
+    }
+}
+
+/// Whole-product convenience over [`gemm_block_bitsim`]: `C = A × B`
+/// with every MAC streamed through `nl`'s gates at serve time (one
+/// simulator instance reused across all blocks).
+pub fn gemm_bitsim(a: &MatI8, b: &MatI8, nl: &Netlist) -> MatI32 {
+    check_shapes(a, b);
+    let mut c = MatI32::new(a.rows, b.cols);
+    if a.rows == 0 || b.cols == 0 {
+        return c;
+    }
+    let mut sim = BitSim::new(nl);
+    let n = b.cols;
+    let mut row0 = 0;
+    while row0 < a.rows {
+        let rows = MC.min(a.rows - row0);
+        gemm_block_bitsim(a, b, &mut sim, row0, rows, 0, n, &mut c.data[row0 * n..(row0 + rows) * n]);
+        row0 += rows;
+    }
+    c
 }
 
 /// Tiled table-backed GEMM: `C = A × B` with every product read from the

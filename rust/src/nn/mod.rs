@@ -36,7 +36,7 @@ pub use conv2d::{
     TensorI8,
 };
 pub use gemm::{
-    gemm_block_lut, gemm_block_mul, gemm_naive, gemm_tiled, lut_product, MatI32, MatI8, KC,
-    MAX_GEMM_DEPTH, MC, NC, NR,
+    gemm_bitsim, gemm_block_bitsim, gemm_block_lut, gemm_block_mul, gemm_naive, gemm_tiled,
+    lut_product, MatI32, MatI8, KC, MAX_GEMM_DEPTH, MC, NC, NR,
 };
 pub use quant::{quantize_symmetric, rounding_shift, QuantParams, Requant};

@@ -68,6 +68,42 @@ fn ragged_batches_match_one_by_one() {
     }
 }
 
+/// The serve-time batched path — [`BitSim::run_code_batch_into`], the
+/// allocation-free kernel under the live GEMM/tile engines — produces
+/// exactly the products [`bitsim_multiply_batch`] reports, for every
+/// registered design at N=8, on ragged batch lengths straddling the
+/// 64-lane pass boundary.
+#[test]
+fn batched_serve_path_equals_bitsim_multiply_batch_every_design() {
+    use sfcmul::multipliers::verify::operand_code;
+    for spec in registry().specs(8) {
+        let model = registry().build(&spec).unwrap_or_else(|e| panic!("{spec}: {e}"));
+        let nl = model.build_netlist();
+        let mut sim = BitSim::new(&nl);
+        for len in [1usize, 63, 64, 65, 130] {
+            let pairs: Vec<(i64, i64)> = (0..len)
+                .map(|i| {
+                    let a = ((i * 53 + 7) % 256) as i64 - 128;
+                    let b = ((i * 111 + 29) % 256) as i64 - 128;
+                    (a, b)
+                })
+                .collect();
+            let want = bitsim_multiply_batch(&mut sim, 8, &pairs);
+            let codes: Vec<u64> =
+                pairs.iter().map(|&(a, b)| operand_code(a, b, 8)).collect();
+            let mut out = vec![0u64; len];
+            sim.run_code_batch_into(&codes, &mut out);
+            for (k, (&oc, &(a, b))) in out.iter().zip(pairs.iter()).enumerate() {
+                assert_eq!(
+                    from_bits(oc, 16),
+                    want[k],
+                    "{spec} len {len} k {k}: {a} * {b}"
+                );
+            }
+        }
+    }
+}
+
 /// A reused simulator must be stateless across batches.
 #[test]
 fn bitsim_reuse_is_stateless_across_batches() {

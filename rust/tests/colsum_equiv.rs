@@ -6,7 +6,9 @@
 //! (`conv3x3_lut`) and tile-engine entry points.
 
 use sfcmul::coordinator::engine::conv_tile_taps;
-use sfcmul::coordinator::{reassemble, tile_image, BitsimTileEngine, LutTileEngine, TileEngine};
+use sfcmul::coordinator::{
+    reassemble, tile_image, BitsimLiveTileEngine, BitsimTileEngine, LutTileEngine, TileEngine,
+};
 use sfcmul::image::colsum::laplacian_taps_i64;
 use sfcmul::image::ops::Post;
 use sfcmul::image::{conv3x3, conv3x3_lut, conv3x3_lut_9tap, synthetic_scene, Image, LAPLACIAN};
@@ -23,6 +25,10 @@ const SIZES: &[(usize, usize)] = &[
     (5, 4),
     (63, 1),
     (1, 65),
+    // Widths 63/64/65 with real row counts straddle the 16/32-byte SIMD
+    // register boundary of the vectorized row primitives — ragged tails
+    // of every length hit both the vector body and the scalar tail.
+    (63, 5),
     (64, 64),
     (65, 63),
     (66, 66),
@@ -83,19 +89,23 @@ fn tile_engine_colsum_matches_model_and_9lookup_for_all_designs() {
 }
 
 /// The gate-level bitsim engine (netlist-swept taps through the colsum
-/// core) stays bit-exact with the LUT engine on ragged tilings.
+/// core) and the serve-time gate-streaming engine (64 MACs per pass, no
+/// tables) both stay bit-exact with the LUT engine on ragged tilings.
 #[test]
-fn bitsim_engine_matches_lut_engine_ragged() {
+fn bitsim_engines_match_lut_engine_ragged() {
     for name in ["exact@8", "proposed@8", "d2@8"] {
         let model = registry().build_str(name).expect("registered design builds");
         let bitsim = BitsimTileEngine::new(model.as_ref());
+        let live = BitsimLiveTileEngine::new(model.as_ref());
         let lut_engine = LutTileEngine::new(model.as_ref());
         let img = synthetic_scene(67, 130, 5);
         let tiles = tile_image(9, &img);
         let a = bitsim.process_batch(&tiles);
         let b = lut_engine.process_batch(&tiles);
-        for (x, y) in a.iter().zip(b.iter()) {
+        let c = live.process_batch(&tiles);
+        for ((x, y), z) in a.iter().zip(b.iter()).zip(c.iter()) {
             assert_eq!(x.data, y.data, "{name} tile at ({},{})", x.x0, x.y0);
+            assert_eq!(y.data, z.data, "{name} live tile at ({},{})", z.x0, z.y0);
         }
     }
 }

@@ -4,8 +4,9 @@
 //! 1. **Exhaustive** i8×i8 coverage for *every registered design*: a
 //!    256×1 × 1×256 outer-product GEMM touches all 65 536 operand pairs
 //!    with no accumulation, so `tiled-LUT == bitsim-swept table ==
-//!    per-element functional model` is a full multiplier equivalence
-//!    proof *through the GEMM path* (not just per-multiplier).
+//!    live 64-lane gate-streamed GEMM == per-element functional model`
+//!    is a full multiplier equivalence proof *through the GEMM path*
+//!    (not just per-multiplier).
 //! 2. **Ragged shapes**: tiled vs naive on shapes straddling every
 //!    MC/KC/NR block boundary, per design.
 //! 3. **conv2d == im2col + gemm**: property-tested against an
@@ -18,8 +19,8 @@
 use sfcmul::multipliers::verify::netlist_multiply_all;
 use sfcmul::multipliers::{lut::product_table, registry, MultiplierModel};
 use sfcmul::nn::{
-    conv2d_direct, gemm_naive, gemm_tiled, lut_product, quantize_image, Conv2d, MatI8, Network,
-    Requant, TensorI8, KC, MC, NR,
+    conv2d_direct, gemm_bitsim, gemm_naive, gemm_tiled, lut_product, quantize_image, Conv2d,
+    MatI8, Network, Requant, TensorI8, KC, MC, NR,
 };
 use sfcmul::util::prng::Xoshiro256;
 
@@ -43,16 +44,17 @@ fn exhaustive_outer_product_lut_equals_bitsim_equals_model() {
     for spec in registry().specs(8) {
         let model = registry().build(&spec).unwrap_or_else(|e| panic!("{spec}: {e}"));
         let lut = product_table(model.as_ref());
-        let bitsim_table: Vec<i32> = netlist_multiply_all(&model.build_netlist(), 8)
-            .into_iter()
-            .map(|p| p as i32)
-            .collect();
+        let nl = model.build_netlist();
+        let bitsim_table: Vec<i32> =
+            netlist_multiply_all(&nl, 8).into_iter().map(|p| p as i32).collect();
         let via_lut = gemm_tiled(&a, &b, &lut);
         let via_bitsim = gemm_tiled(&a, &b, &bitsim_table);
+        let via_live = gemm_bitsim(&a, &b, &nl);
         let via_model =
             gemm_naive(&a, &b, &|x, y| model.multiply(x as i64, y as i64) as i32);
         assert_eq!(via_lut, via_model, "{spec}: lut vs per-element model");
         assert_eq!(via_lut, via_bitsim, "{spec}: lut vs bitsim-swept netlist table");
+        assert_eq!(via_lut, via_live, "{spec}: lut vs live 64-lane gate-streamed GEMM");
         // The outer product covers each pair exactly once: C[i][j] is
         // literally the product of bit patterns i and j.
         assert_eq!(via_lut.get(3, 251), lut_product(&lut, 3, 251u8 as i8), "{spec}");
@@ -86,6 +88,34 @@ fn ragged_shapes_tiled_equals_naive_for_every_design() {
                 gemm_naive(&a, &b, &|x, y| model.multiply(x as i64, y as i64) as i32);
             assert_eq!(tiled, naive_lut, "{spec} {m}x{k}x{n}: tiled vs naive lut");
             assert_eq!(tiled, naive_model, "{spec} {m}x{k}x{n}: tiled vs naive model");
+        }
+    }
+}
+
+/// The serve-time 64-lane gate-streamed GEMM equals the scalar paths on
+/// ragged shapes: panel widths below, at and above the 64-lane batch
+/// (partial final flushes) for every registered design.
+#[test]
+fn live_bitsim_gemm_equals_naive_on_ragged_shapes() {
+    let shapes: &[(usize, usize, usize)] = &[
+        (1, 1, 1),
+        (2, 3, 63),
+        (3, 5, 64),
+        (2, 7, 65),
+        (MC + 1, KC - 1, NR + 1),
+        (5, 17, 2 * NR + 3),
+    ];
+    for spec in registry().specs(8) {
+        let model = registry().build(&spec).unwrap_or_else(|e| panic!("{spec}: {e}"));
+        let nl = model.build_netlist();
+        let mut rng = Xoshiro256::seeded(0xB175_11E ^ spec.to_string().len() as u64);
+        for &(m, k, n) in shapes {
+            let a = MatI8::random(m, k, &mut rng);
+            let b = MatI8::random(k, n, &mut rng);
+            let live = gemm_bitsim(&a, &b, &nl);
+            let naive_model =
+                gemm_naive(&a, &b, &|x, y| model.multiply(x as i64, y as i64) as i32);
+            assert_eq!(live, naive_model, "{spec} {m}x{k}x{n}: live gates vs naive model");
         }
     }
 }
