@@ -26,6 +26,9 @@
 #   harness is `harness = false`, so nothing executes) — benches stay
 #   buildable without spending CI minutes running them.
 # * `cargo test -q` is the second half of the tier-1 gate and must pass.
+# * Trace smoke: a demo serve run with SFCMUL_TRACE set must write a
+#   Chrome trace-event file that `sfcmul trace --input ... --min-events 1`
+#   validates — the observability layer stays wired end to end.
 # * Golden lock: after the test leg, rust/tests/golden/pipeline.tsv must
 #   carry blessed data rows AND match the committed copy. The
 #   golden_pipeline test blesses the working-tree file on its first
@@ -241,6 +244,23 @@ else
         status=1
     else
         echo "Verilog golden is blessed — export locked"
+    fi
+
+    echo "== trace smoke (SFCMUL_TRACE demo serve -> sfcmul trace) =="
+    # End-to-end observability gate: a demo serve run with the tracer on
+    # (via the SFCMUL_TRACE env knob, exercising the same path as
+    # --trace) must leave a Chrome trace-event file that the `trace`
+    # subcommand validates — schema-checked, with at least one real
+    # event recorded. The quality sampler rides along at n=1.
+    if ! SFCMUL_TRACE=out/trace_smoke.json \
+        target/release/sfcmul serve --demo --jobs 8 --quality-sample-n 1; then
+        echo "FAIL: traced demo serve"
+        status=1
+    elif ! target/release/sfcmul trace --input out/trace_smoke.json --min-events 1; then
+        echo "FAIL: demo serve produced no valid trace (out/trace_smoke.json)"
+        status=1
+    else
+        echo "trace smoke OK (out/trace_smoke.json)"
     fi
 fi
 

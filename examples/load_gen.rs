@@ -13,7 +13,14 @@
 //!
 //! Options: `--clients N` (default 4), `--jobs J` per client (default
 //! 32), `--size S` edge frames of SxS (default 128), `--gemm-every K`
-//! (every K-th job is a GEMM, default 4; 0 disables).
+//! (every K-th job is a GEMM, default 4; 0 disables),
+//! `--quality-sample-n N` (self-contained mode only: shadow-sample 1
+//! work unit in N for the live quality gauges, default 16; 0 off).
+//!
+//! The run closes with an observability digest scraped from
+//! `/metrics`: per-engine live approximation quality (NMED, mismatch
+//! rate over the sampled pairs) and per-stage mean latencies from the
+//! `sfcmul_stage_latency_seconds` histograms.
 
 use sfcmul::coordinator::{Coordinator, CoordinatorConfig, LutTileEngine, TileEngine};
 use sfcmul::image::{synthetic_scene, Operator};
@@ -73,12 +80,69 @@ fn drive_client(
     report
 }
 
+/// Value of the first sample line starting with `prefix` in a
+/// Prometheus exposition, if present and numeric.
+fn sample(body: &str, prefix: &str) -> Option<f64> {
+    body.lines()
+        .find(|l| l.starts_with(prefix))
+        .and_then(|l| l.rsplit(' ').next())
+        .and_then(|v| v.parse().ok())
+}
+
+/// End-of-run observability digest: per-engine live approximation
+/// quality and per-stage mean latencies, scraped from the exposition
+/// text (so it works identically against a remote `--addr` server).
+/// Engines are discovered from the `sfcmul_quality_nmed` series.
+fn print_digest(body: &str) {
+    let engines: Vec<&str> = body
+        .lines()
+        .filter_map(|l| l.strip_prefix("sfcmul_quality_nmed{engine=\""))
+        .filter_map(|rest| rest.split('"').next())
+        .collect();
+    if engines.is_empty() {
+        return;
+    }
+    println!("observability digest (per engine, from /metrics):");
+    for engine in engines {
+        let q = |name: &str| sample(body, &format!("{name}{{engine=\"{engine}\"}}"));
+        let st = |name: &str, stage: &str| {
+            sample(body, &format!("{name}{{engine=\"{engine}\",stage=\"{stage}\"}}"))
+        };
+        let pairs = q("sfcmul_quality_sampled_pairs_total").unwrap_or(0.0);
+        if pairs > 0.0 {
+            println!(
+                "  {engine}: NMED {:.6}  mismatch {:.2}% over {pairs} sampled pairs  max|ED| {}",
+                q("sfcmul_quality_nmed").unwrap_or(0.0),
+                q("sfcmul_quality_mismatch_rate").unwrap_or(0.0) * 100.0,
+                q("sfcmul_quality_max_ed").unwrap_or(0.0),
+            );
+        } else {
+            println!(
+                "  {engine}: quality sampler idle (serve with --quality-sample-n to light it up)"
+            );
+        }
+        let mut stages = String::new();
+        for stage in ["queue_wait", "compute", "e2e"] {
+            let count = st("sfcmul_stage_latency_seconds_count", stage).unwrap_or(0.0);
+            if count > 0.0 {
+                let sum = st("sfcmul_stage_latency_seconds_sum", stage).unwrap_or(0.0);
+                stages
+                    .push_str(&format!("{stage} {:.2} ms ({count:.0})  ", sum / count * 1e3));
+            }
+        }
+        if !stages.is_empty() {
+            println!("    stage means: {}", stages.trim_end());
+        }
+    }
+}
+
 fn main() {
     let args = Args::from_env().expect("args");
     let clients = args.get_parse("clients", 4usize).unwrap_or(4);
     let jobs = args.get_parse("jobs", 32usize).unwrap_or(32);
     let size = args.get_parse("size", 128usize).unwrap_or(128);
     let gemm_every = args.get_parse("gemm-every", 4usize).unwrap_or(4);
+    let quality_n = args.get_parse("quality-sample-n", 16u64).unwrap_or(16);
 
     // No --addr: stand up a local fleet + server to drive.
     let local = match args.get("addr") {
@@ -93,7 +157,13 @@ fn main() {
                 .collect();
             let coord = Arc::new(Coordinator::start_named(
                 named,
-                CoordinatorConfig { workers: 4, queue_capacity: 256, max_batch: 8, ..Default::default() },
+                CoordinatorConfig {
+                    workers: 4,
+                    queue_capacity: 256,
+                    max_batch: 8,
+                    quality_sample_n: quality_n,
+                    ..Default::default()
+                },
             ));
             let server = Server::start(
                 coord.clone(),
@@ -155,6 +225,7 @@ fn main() {
             }) {
                 println!("  {line}");
             }
+            print_digest(&body);
         }
         Ok((code, _)) => println!("GET /metrics -> HTTP {code}"),
         Err(e) => println!("GET /metrics failed: {e}"),

@@ -1,6 +1,7 @@
 //! Bench: E2E coordinator machinery — tiling, queue, batching, whole
-//! jobs/second under different worker counts, and socket saturation
-//! through the network front-end (wire overhead vs in-process submits).
+//! jobs/second under different worker counts, tracing overhead
+//! (tracer off vs on), and socket saturation through the network
+//! front-end (wire overhead vs in-process submits).
 
 use sfcmul::coordinator::{tile_image, Coordinator, CoordinatorConfig, LutTileEngine};
 use sfcmul::image::{synthetic_scene, Operator};
@@ -27,6 +28,27 @@ fn main() {
         );
         let name = format!("job_roundtrip_256_w{workers}");
         b.throughput(pixels).bench(&name, || {
+            let r = coord.run(img.clone()).expect("bench job");
+            r.tiles
+        });
+        drop(coord);
+    }
+
+    // Observability overhead: the same job round trip with the tracer
+    // disabled (one relaxed atomic load per event site) vs enabled
+    // (timestamp + ring write per event). The pair prices the tracing
+    // layer; the off row should be indistinguishable from
+    // job_roundtrip_256_w4 above.
+    for (trace_on, name) in
+        [(false, "job_roundtrip_256_trace_off"), (true, "job_roundtrip_256_trace_on")]
+    {
+        let engine = Arc::new(LutTileEngine::from_table("p", lut.clone()));
+        let coord = Coordinator::start(
+            engine,
+            CoordinatorConfig { workers: 4, queue_capacity: 256, max_batch: 8, ..Default::default() },
+        );
+        coord.tracer().set_enabled(trace_on);
+        b.throughput(pixels).bench(name, || {
             let r = coord.run(img.clone()).expect("bench job");
             r.tiles
         });

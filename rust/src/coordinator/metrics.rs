@@ -11,6 +11,8 @@
 //! record tiles, quantized-inference jobs record GEMM blocks — both
 //! land in the same per-engine rows.
 
+use crate::obs::hist::{HistSnapshot, Stage, StageHists};
+use crate::obs::quality::{QualityStats, SampleGate};
 use crate::util::prng::Xoshiro256;
 use crate::util::stats;
 use crate::util::sync::lock;
@@ -138,6 +140,9 @@ pub struct Metrics {
     /// rejections (admission control, quotas) are counted separately by
     /// the server front-end.
     rejected: AtomicU64,
+    /// Live quality sampler window (`0` = off). Read lock-free on the
+    /// worker fast path so disabled sampling costs one relaxed load.
+    quality_sample_n: AtomicU64,
 }
 
 struct EngineInner {
@@ -152,7 +157,17 @@ struct EngineInner {
     batches: u64,
     latencies_ms: Reservoir,
     busy: Duration,
+    /// Per-stage log₂ latency histograms (queue wait / compute / e2e).
+    stages: StageHists,
+    /// Deterministic 1-in-N admission for the quality sampler.
+    quality_gate: SampleGate,
+    /// Running shadow-recompute error totals.
+    quality: QualityStats,
 }
+
+/// Seed base for per-engine quality-sampler gates (xor'd with the row
+/// index, like the reservoir seeds).
+const QUALITY_GATE_SEED: u64 = 0x0b5e_9a7e;
 
 impl EngineInner {
     fn new(name: String, seed: u64) -> Self {
@@ -168,6 +183,9 @@ impl EngineInner {
             batches: 0,
             latencies_ms: Reservoir::new(seed),
             busy: Duration::ZERO,
+            stages: StageHists::new(),
+            quality_gate: SampleGate::new(0, seed ^ QUALITY_GATE_SEED),
+            quality: QualityStats::default(),
         }
     }
 }
@@ -198,6 +216,12 @@ pub struct EngineMetricsSnapshot {
     pub latency_p90_ms: f64,
     pub latency_p99_ms: f64,
     pub engine_busy: Duration,
+    /// Per-stage latency histograms, [`Stage::ALL`] order
+    /// (queue_wait, compute, e2e) — the `/metrics` histogram series.
+    pub stages: [HistSnapshot; 3],
+    /// Live quality-sampler totals; `pairs == 0` when sampling is off
+    /// or the engine has no shadow-evaluable backend.
+    pub quality: QualityStats,
 }
 
 /// Point-in-time copy of the metrics: fleet-wide aggregates plus one
@@ -256,6 +280,58 @@ impl Metrics {
             breaker_cooldown: cooldown,
             accepted: AtomicU64::new(0),
             rejected: AtomicU64::new(0),
+            quality_sample_n: AtomicU64::new(0),
+        }
+    }
+
+    /// Builder: enable the live quality sampler with a 1-in-`n` window
+    /// (`0` leaves it off). Reseeds every engine's gate, so call before
+    /// the metrics are shared.
+    pub fn with_quality(self, n: u64) -> Self {
+        self.set_quality_sample_n(n);
+        self
+    }
+
+    /// (Re)configure the quality sampling window; resets the per-engine
+    /// gates to their deterministic seeds.
+    pub fn set_quality_sample_n(&self, n: u64) {
+        self.quality_sample_n.store(n, Ordering::Relaxed);
+        let mut rows = lock(&self.inner);
+        for (i, m) in rows.iter_mut().enumerate() {
+            m.quality_gate = SampleGate::new(n, (0x5fc0_0db5 ^ i as u64) ^ QUALITY_GATE_SEED);
+        }
+    }
+
+    pub fn quality_sample_n(&self) -> u64 {
+        self.quality_sample_n.load(Ordering::Relaxed)
+    }
+
+    /// Advance `engine`'s sampling gate by one work unit; true when the
+    /// unit should be shadow-recomputed. One relaxed load when sampling
+    /// is disabled (the common case) — no lock is taken.
+    pub fn quality_admit(&self, engine: usize) -> bool {
+        if self.quality_sample_n.load(Ordering::Relaxed) == 0 {
+            return false;
+        }
+        lock(&self.inner)[engine].quality_gate.admit()
+    }
+
+    /// Fold one sampled unit's shadow-recompute delta into `engine`'s
+    /// running quality totals.
+    pub fn record_quality(&self, engine: usize, delta: &QualityStats) {
+        lock(&self.inner)[engine].quality.merge(delta);
+    }
+
+    /// Record queue-wait durations for a batch of work units picked up
+    /// for `engine` (one lock acquisition for the whole batch).
+    pub fn record_queue_waits(&self, engine: usize, waits: &[Duration]) {
+        if waits.is_empty() {
+            return;
+        }
+        let mut rows = lock(&self.inner);
+        let m = &mut rows[engine];
+        for &w in waits {
+            m.stages.record(Stage::QueueWait, w);
         }
     }
 
@@ -275,6 +351,7 @@ impl Metrics {
         m.batches += 1;
         m.tiles_processed += size as u64;
         m.busy += busy;
+        m.stages.record(Stage::Compute, busy);
     }
 
     pub fn record_job(&self, engine: usize, latency: Duration) {
@@ -282,6 +359,7 @@ impl Metrics {
         let m = &mut rows[engine];
         m.jobs_completed += 1;
         m.latencies_ms.record(latency.as_secs_f64() * 1e3);
+        m.stages.record(Stage::E2e, latency);
         // A success heals the breaker: a completed probe (or any
         // completion racing the trip) closes it and resets the streak.
         m.consecutive_failures = 0;
@@ -413,6 +491,8 @@ impl Metrics {
                     latency_p90_ms: p90,
                     latency_p99_ms: p99,
                     engine_busy: m.busy,
+                    stages: m.stages.snapshot(),
+                    quality: m.quality,
                 }
             })
             .collect();
@@ -657,5 +737,61 @@ mod tests {
         let s = m.snapshot();
         assert_eq!(s.per_engine[1].jobs_completed, 0);
         assert_eq!(s.per_engine[1].mean_batch_size, 0.0);
+    }
+
+    /// record_batch feeds the compute histogram, record_job the e2e
+    /// histogram, record_queue_waits the queue-wait histogram — and the
+    /// rows stay per-engine.
+    #[test]
+    fn stage_histograms_populate_from_recorders() {
+        let m = Metrics::new(vec!["a".into(), "b".into()]);
+        m.record_batch(0, 4, Duration::from_millis(2));
+        m.record_job(0, Duration::from_millis(10));
+        m.record_queue_waits(0, &[Duration::from_micros(3), Duration::from_micros(900)]);
+        m.record_queue_waits(0, &[]);
+        let s = m.snapshot();
+        let stages = &s.per_engine[0].stages;
+        assert_eq!(stages[Stage::QueueWait as usize].count, 2);
+        assert_eq!(stages[Stage::Compute as usize].count, 1);
+        assert_eq!(stages[Stage::E2e as usize].count, 1);
+        assert!(stages[Stage::Compute as usize].sum_seconds > 0.0019);
+        let idle = &s.per_engine[1].stages;
+        assert_eq!(idle[Stage::QueueWait as usize].count, 0);
+        assert_eq!(idle[Stage::E2e as usize].count, 0);
+    }
+
+    /// With the sampler off, quality_admit is always false; at n=1 every
+    /// unit is admitted; recorded deltas surface in the snapshot.
+    #[test]
+    fn quality_sampler_gates_and_accumulates() {
+        let m = Metrics::new(vec!["e".into()]);
+        assert_eq!(m.quality_sample_n(), 0);
+        assert!(!m.quality_admit(0), "disabled sampler admits nothing");
+        m.set_quality_sample_n(1);
+        for _ in 0..5 {
+            assert!(m.quality_admit(0), "n=1 admits every unit");
+        }
+        let mut d = QualityStats { units: 1, ..QualityStats::default() };
+        d.record_pair(100, 90);
+        d.record_pair(50, 50);
+        m.record_quality(0, &d);
+        m.record_quality(0, &d);
+        let q = m.snapshot().per_engine[0].quality;
+        assert_eq!(q.units, 2);
+        assert_eq!(q.pairs, 4);
+        assert_eq!(q.mismatches, 2);
+        assert_eq!(q.sum_ed, 20);
+        assert_eq!(q.max_ed, 10);
+        assert_eq!(q.med(), 5.0);
+    }
+
+    /// The builder form wires the window through construction.
+    #[test]
+    fn with_quality_builder_sets_window() {
+        let m = Metrics::new(vec!["e".into()]).with_quality(4);
+        assert_eq!(m.quality_sample_n(), 4);
+        // Exactly one admit per window of 4.
+        let admits: usize = (0..16).filter(|_| m.quality_admit(0)).count();
+        assert_eq!(admits, 4);
     }
 }

@@ -50,6 +50,8 @@ use crate::image::ops::Operator;
 use crate::image::Image;
 use crate::netlist::prelude::BitSim;
 use crate::nn::{gemm_block_bitsim, gemm_block_lut, gemm_block_mul, Conv2d, MatI32, MatI8, TensorI8};
+use crate::obs::quality::{sample_conv_tile, sample_gemm_block};
+use crate::obs::trace::{TraceKind, Tracer, JOB_KIND_CONV, JOB_KIND_GEMM};
 use crate::util::pool::{bounded, Receiver, RecvTimeout, Sender};
 use crate::util::sync::lock;
 use std::collections::{BTreeSet, HashMap};
@@ -81,6 +83,10 @@ pub struct CoordinatorConfig {
     pub breaker_threshold: u32,
     /// How long a tripped breaker stays open before a half-open probe.
     pub breaker_cooldown: Duration,
+    /// Live quality-sampler window: shadow-recompute 1 work unit in `n`
+    /// against the exact product and publish running MED/NMED per engine
+    /// ([`crate::obs::quality`]). `0` (the default) disables sampling.
+    pub quality_sample_n: u64,
 }
 
 impl Default for CoordinatorConfig {
@@ -92,6 +98,7 @@ impl Default for CoordinatorConfig {
             deadline: None,
             breaker_threshold: super::metrics::DEFAULT_BREAKER_THRESHOLD,
             breaker_cooldown: super::metrics::DEFAULT_BREAKER_COOLDOWN,
+            quality_sample_n: 0,
         }
     }
 }
@@ -111,6 +118,23 @@ impl Work {
             Work::Conv(t) => t.engine,
             Work::Gemm(g) => g.engine,
         }
+    }
+}
+
+/// A queued work unit plus its enqueue timestamp: the queue-wait stage
+/// of the per-engine latency histograms is `drain time − enqueued`.
+struct WorkItem {
+    enqueued: Instant,
+    work: Work,
+}
+
+impl WorkItem {
+    fn new(work: Work) -> Self {
+        Self { enqueued: Instant::now(), work }
+    }
+
+    fn engine(&self) -> u8 {
+        self.work.engine()
     }
 }
 
@@ -197,6 +221,9 @@ impl JobTable {
 struct Shared {
     jobs: JobTable,
     metrics: Metrics,
+    /// Span-event recorder ([`crate::obs::trace`]); always wired, starts
+    /// disabled — one relaxed load per event site until enabled.
+    tracer: Tracer,
     /// Registered engine names (result attribution in [`finish_job`]).
     engine_names: Vec<String>,
 }
@@ -278,7 +305,7 @@ impl fmt::Debug for GemmHandle {
 /// (queued work is drained first).
 pub struct Coordinator {
     shared: Arc<Shared>,
-    tile_tx: Sender<Work>,
+    tile_tx: Sender<WorkItem>,
     workers: Vec<JoinHandle<()>>,
     watchdog: Option<JoinHandle<()>>,
     watchdog_stop: Arc<AtomicBool>,
@@ -349,14 +376,16 @@ impl Coordinator {
         }
         let fleet: Arc<Vec<Arc<dyn TileEngine>>> =
             Arc::new(engines.into_iter().map(|(_, e)| e).collect());
-        let (tile_tx, tile_rx) = bounded::<Work>(cfg.queue_capacity);
+        let (tile_tx, tile_rx) = bounded::<WorkItem>(cfg.queue_capacity);
         let shared = Arc::new(Shared {
             jobs: JobTable::new(),
             metrics: Metrics::with_breaker(
                 engine_names.clone(),
                 cfg.breaker_threshold,
                 cfg.breaker_cooldown,
-            ),
+            )
+            .with_quality(cfg.quality_sample_n),
+            tracer: Tracer::new(),
             engine_names: engine_names.clone(),
         });
         // The queue drain bound; each engine's own preferred_batch()
@@ -406,6 +435,13 @@ impl Coordinator {
     /// All registered engine names, in registration order.
     pub fn engine_names(&self) -> &[String] {
         &self.engine_names
+    }
+
+    /// The coordinator's span tracer ([`crate::obs::trace`]): always
+    /// wired, starts disabled. Enable it, run traffic, then export via
+    /// [`Tracer::chrome_trace_json`] or the server's `TRACE` verb.
+    pub fn tracer(&self) -> &Tracer {
+        &self.shared.tracer
     }
 
     /// Submit an image to the default engine with the default operator
@@ -563,6 +599,9 @@ impl Coordinator {
             let id = self.next_job.fetch_add(1, Ordering::Relaxed);
             let (reply_tx, reply_rx) = bounded::<Result<GemmResult, JobError>>(1);
             self.shared.metrics.record_trivial_job(requested);
+            let tr = &self.shared.tracer;
+            tr.record(TraceKind::Submit, id, requested as u8, 0, JOB_KIND_GEMM, 0);
+            tr.record(TraceKind::Completed, id, requested as u8, 0, JOB_KIND_GEMM, 0);
             let _ = reply_tx.send(Ok(GemmResult {
                 id,
                 out: MatI32::new(a.rows, b.cols),
@@ -594,6 +633,11 @@ impl Coordinator {
                 },
             );
         }
+        let tr = &self.shared.tracer;
+        tr.record(TraceKind::Submit, id, idx as u8, 0, JOB_KIND_GEMM, blocks as u32);
+        if rerouted {
+            tr.record(TraceKind::Rerouted, id, idx as u8, 0, JOB_KIND_GEMM, blocks as u32);
+        }
         let (a, b) = (Arc::new(a), Arc::new(b));
         let mut row0 = 0;
         while row0 < a.rows {
@@ -611,7 +655,7 @@ impl Coordinator {
                     a: a.clone(),
                     b: b.clone(),
                 };
-                if self.tile_tx.send(Work::Gemm(task)).is_err() {
+                if self.tile_tx.send(WorkItem::new(Work::Gemm(task))).is_err() {
                     // Intake closed mid-enqueue: withdraw the job; units
                     // already queued arrive as late blocks and are
                     // dropped. A probe nomination that never reached the
@@ -620,12 +664,14 @@ impl Coordinator {
                     if probe {
                         self.shared.metrics.probe_aborted(idx);
                     }
+                    tr.record(TraceKind::FailedError, id, idx as u8, 0, JOB_KIND_GEMM, blocks as u32);
                     return Err(JobError::Shutdown);
                 }
                 col0 += cols;
             }
             row0 += rows;
         }
+        tr.record(TraceKind::Queued, id, idx as u8, 0, JOB_KIND_GEMM, blocks as u32);
         Ok(GemmHandle { id, rx: reply_rx })
     }
 
@@ -700,8 +746,14 @@ impl Coordinator {
                 },
             );
         }
+        let units = tiles.len() as u32;
+        let tr = &self.shared.tracer;
+        tr.record(TraceKind::Submit, id, idx as u8, op.id(), JOB_KIND_CONV, units);
+        if rerouted {
+            tr.record(TraceKind::Rerouted, id, idx as u8, op.id(), JOB_KIND_CONV, units);
+        }
         for t in tiles {
-            if self.tile_tx.send(Work::Conv(t)).is_err() {
+            if self.tile_tx.send(WorkItem::new(Work::Conv(t))).is_err() {
                 // Intake closed mid-enqueue: withdraw the job; tiles
                 // already queued arrive late and are dropped. A probe
                 // nomination that never reached the engine is given
@@ -711,10 +763,12 @@ impl Coordinator {
                     self.shared.metrics.probe_aborted(idx);
                 }
                 self.shared.metrics.record_reject();
+                tr.record(TraceKind::FailedError, id, idx as u8, op.id(), JOB_KIND_CONV, units);
                 return Err(JobError::Shutdown);
             }
         }
         self.shared.metrics.record_accept();
+        tr.record(TraceKind::Queued, id, idx as u8, op.id(), JOB_KIND_CONV, units);
         Ok(JobHandle { id, rx: reply_rx })
     }
 
@@ -800,6 +854,23 @@ fn panic_message(payload: Box<dyn std::any::Any + Send>) -> String {
     }
 }
 
+/// The terminal trace kind for a failure class.
+fn trace_fail_kind(kind: FailKind) -> TraceKind {
+    match kind {
+        FailKind::Panic => TraceKind::FailedPanic,
+        FailKind::Deadline => TraceKind::FailedDeadline,
+        FailKind::Error => TraceKind::FailedError,
+    }
+}
+
+/// Trace job-kind label, derived from the result sink.
+fn sink_job_kind(sink: &Sink) -> u8 {
+    match sink {
+        Sink::Image(..) => JOB_KIND_CONV,
+        Sink::Mat(..) => JOB_KIND_GEMM,
+    }
+}
+
 /// Fail one job: remove its state (first remover wins — a job already
 /// finished or failed is left alone), count the failure against its
 /// engine, and deliver the error on the reply channel. Returns whether
@@ -809,6 +880,14 @@ fn fail_job(shared: &Shared, id: u64, kind: FailKind, err: &JobError) -> bool {
     match st {
         Some(st) => {
             shared.metrics.record_failure(st.engine, kind);
+            shared.tracer.record(
+                trace_fail_kind(kind),
+                id,
+                st.engine as u8,
+                0,
+                sink_job_kind(&st.sink),
+                st.units as u32,
+            );
             st.sink.fail(err.clone());
             true
         }
@@ -840,7 +919,7 @@ fn watchdog_loop(shared: Arc<Shared>, stop: Arc<AtomicBool>, deadline: Duration)
         let now = Instant::now();
         for shard in &shared.jobs.shards {
             // Collect expired states under the lock, deliver outside it.
-            let mut expired: Vec<JobState> = Vec::new();
+            let mut expired: Vec<(u64, JobState)> = Vec::new();
             {
                 let mut jobs = lock(shard);
                 let ids: Vec<u64> = jobs
@@ -850,12 +929,20 @@ fn watchdog_loop(shared: Arc<Shared>, stop: Arc<AtomicBool>, deadline: Duration)
                     .collect();
                 for id in ids {
                     if let Some(st) = jobs.remove(&id) {
-                        expired.push(st);
+                        expired.push((id, st));
                     }
                 }
             }
-            for st in expired {
+            for (id, st) in expired {
                 shared.metrics.record_failure(st.engine, FailKind::Deadline);
+                shared.tracer.record(
+                    TraceKind::FailedDeadline,
+                    id,
+                    st.engine as u8,
+                    0,
+                    sink_job_kind(&st.sink),
+                    st.units as u32,
+                );
                 st.sink.fail(JobError::Deadline { limit_ms });
             }
         }
@@ -863,7 +950,7 @@ fn watchdog_loop(shared: Arc<Shared>, stop: Arc<AtomicBool>, deadline: Duration)
 }
 
 fn worker_loop(
-    rx: Receiver<Work>,
+    rx: Receiver<WorkItem>,
     fleet: Arc<Vec<Arc<dyn TileEngine>>>,
     shared: Arc<Shared>,
     max_batch: usize,
@@ -873,13 +960,16 @@ fn worker_loop(
         if batch.is_empty() {
             return; // queue closed and drained
         }
+        // One timestamp per drain: every unit in the batch shares it as
+        // the end of its queue-wait stage.
+        let drained = Instant::now();
         // Regroup the batch by engine (stable: queue order kept within
         // each group). Concurrent submitters interleave units of
         // different jobs in the shared queue, so coalescing — not
         // run-splitting — keeps engine batches large; batching across
         // designs is never correct, and reassembly is position-keyed so
         // cross-engine reordering is safe.
-        let mut groups: Vec<(u8, Vec<Work>)> = Vec::new();
+        let mut groups: Vec<(u8, Vec<WorkItem>)> = Vec::new();
         for t in batch {
             if let Some(pos) = groups.iter().position(|(e, _)| *e == t.engine()) {
                 groups[pos].1.push(t);
@@ -890,10 +980,27 @@ fn worker_loop(
         for (engine_idx, items) in groups {
             let engine = &fleet[engine_idx as usize];
             let engine_name = &shared.engine_names[engine_idx as usize];
+            let waits: Vec<Duration> =
+                items.iter().map(|it| drained.duration_since(it.enqueued)).collect();
+            shared.metrics.record_queue_waits(engine_idx as usize, &waits);
+            // One `dispatched` breadcrumb per distinct job in the group
+            // (building the distinct set is only worth it when tracing).
+            if shared.tracer.is_enabled() {
+                let mut seen: BTreeSet<u64> = BTreeSet::new();
+                for it in &items {
+                    let (id, op, kind) = match &it.work {
+                        Work::Conv(t) => (t.job_id, t.op, JOB_KIND_CONV),
+                        Work::Gemm(g) => (g.job_id, 0, JOB_KIND_GEMM),
+                    };
+                    if seen.insert(id) {
+                        shared.tracer.record(TraceKind::Dispatched, id, engine_idx, op, kind, 1);
+                    }
+                }
+            }
             let mut tiles: Vec<Tile> = Vec::new();
             let mut gemms: Vec<GemmTask> = Vec::new();
             for it in items {
-                match it {
+                match it.work {
                     Work::Conv(t) => tiles.push(t),
                     Work::Gemm(g) => gemms.push(g),
                 }
@@ -903,18 +1010,37 @@ fn worker_loop(
             // engine in the fleet no longer shrinks everyone's batches.
             let clamp = engine.preferred_batch().clamp(1, max_batch);
             for chunk in tiles.chunks(clamp) {
+                shared.tracer.record(
+                    TraceKind::BatchStart,
+                    chunk[0].job_id,
+                    engine_idx,
+                    chunk[0].op,
+                    JOB_KIND_CONV,
+                    chunk.len() as u32,
+                );
                 let t0 = Instant::now();
                 // Panic isolation: a panicking engine fails the jobs in
                 // this chunk (via the reply channels) instead of killing
                 // the worker and hanging every wait() in the process.
                 let result = catch_unwind(AssertUnwindSafe(|| engine.process_batch(chunk)));
                 let elapsed = t0.elapsed();
+                shared.tracer.record(
+                    TraceKind::BatchEnd,
+                    chunk[0].job_id,
+                    engine_idx,
+                    chunk[0].op,
+                    JOB_KIND_CONV,
+                    chunk.len() as u32,
+                );
                 let outs = match result {
                     // Only successful batches count as processed work —
                     // a panicked or contract-violating batch is recorded
                     // as a failure below, not in tiles_processed/busy.
                     Ok(outs) if outs.len() == chunk.len() => {
                         shared.metrics.record_batch(engine_idx as usize, chunk.len(), elapsed);
+                        if shared.metrics.quality_sample_n() != 0 {
+                            sample_conv_chunk(&shared, engine_idx as usize, engine, chunk);
+                        }
                         outs
                     }
                     Ok(outs) => {
@@ -1000,6 +1126,14 @@ fn worker_loop(
             };
             for task in gemms {
                 let n = task.b.cols;
+                shared.tracer.record(
+                    TraceKind::BatchStart,
+                    task.job_id,
+                    engine_idx,
+                    0,
+                    JOB_KIND_GEMM,
+                    1,
+                );
                 let t0 = Instant::now();
                 let result = catch_unwind(AssertUnwindSafe(|| {
                     let mut block = vec![0i32; task.rows * task.cols];
@@ -1036,9 +1170,25 @@ fn worker_loop(
                     block
                 }));
                 let elapsed = t0.elapsed();
+                shared.tracer.record(
+                    TraceKind::BatchEnd,
+                    task.job_id,
+                    engine_idx,
+                    0,
+                    JOB_KIND_GEMM,
+                    1,
+                );
                 let block = match result {
                     Ok(b) => {
                         shared.metrics.record_batch(engine_idx as usize, 1, elapsed);
+                        if shared.metrics.quality_admit(engine_idx as usize) {
+                            if let Some(d) = sample_gemm_block(
+                                &backend, &task.a, &task.b, task.row0, task.rows, task.col0,
+                                task.cols,
+                            ) {
+                                shared.metrics.record_quality(engine_idx as usize, &d);
+                            }
+                        }
                         b
                     }
                     Err(payload) => {
@@ -1080,12 +1230,47 @@ fn worker_loop(
     }
 }
 
+/// Shadow-recompute the gate-admitted tiles of a successful conv chunk.
+/// Called only when sampling is on (the caller guards on
+/// `quality_sample_n`). `nn_backend()` is resolved lazily, at most once
+/// per chunk — for table-less engines it may build a product LUT on the
+/// first sampled unit; that one-off cost is part of opting into
+/// sampling. Conv-only backends (`nn_backend() == None`) leave the
+/// quality row at zero pairs.
+fn sample_conv_chunk(
+    shared: &Shared,
+    engine_idx: usize,
+    engine: &Arc<dyn TileEngine>,
+    chunk: &[Tile],
+) {
+    let mut backend: Option<Option<NnBackend>> = None;
+    for t in chunk {
+        if !shared.metrics.quality_admit(engine_idx) {
+            continue;
+        }
+        let b = backend.get_or_insert_with(|| engine.nn_backend());
+        if let Some(b) = b {
+            if let Some(d) = sample_conv_tile(b, t) {
+                shared.metrics.record_quality(engine_idx, &d);
+            }
+        }
+    }
+}
+
 /// Record the job's latency and send its result — outside the shard
 /// lock. The sink carries its own reply channel, so the result kind
 /// always matches.
 fn finish_job(shared: &Shared, id: u64, st: JobState) {
     let latency = st.started.elapsed();
     shared.metrics.record_job(st.engine, latency);
+    shared.tracer.record(
+        TraceKind::Completed,
+        id,
+        st.engine as u8,
+        0,
+        sink_job_kind(&st.sink),
+        st.units as u32,
+    );
     let engine = shared.engine_names[st.engine].clone();
     match st.sink {
         Sink::Image(out, tx) => {
@@ -1735,6 +1920,125 @@ mod dual_quality_tests {
         assert_eq!(h3.wait().unwrap().edges, want_approx);
         // the two classes genuinely differ
         assert_ne!(want_approx, want_exact);
+    }
+}
+
+#[cfg(test)]
+mod observability_tests {
+    use super::*;
+    use crate::coordinator::engine::LutTileEngine;
+    use crate::error::error_metrics_for_pairs;
+    use crate::image::synthetic_scene;
+    use crate::multipliers::registry;
+    use crate::obs::hist::Stage;
+    use crate::obs::quality::gemm_block_pairs;
+    use crate::obs::trace::validate_chrome_trace;
+    use crate::util::prng::Xoshiro256;
+
+    fn lut_coordinator(cfg: CoordinatorConfig) -> Coordinator {
+        let model = registry().build_str("proposed@8").unwrap();
+        Coordinator::start(Arc::new(LutTileEngine::new(model.as_ref())), cfg)
+    }
+
+    /// An enabled tracer sees the full lifecycle of a served job —
+    /// submit, queued, dispatched, batch start/end, and exactly one
+    /// terminal event — and the Chrome export schema-checks.
+    #[test]
+    fn traced_job_leaves_a_balanced_span() {
+        let coord = lut_coordinator(CoordinatorConfig {
+            workers: 2,
+            queue_capacity: 32,
+            max_batch: 4,
+            ..CoordinatorConfig::default()
+        });
+        coord.tracer().enable();
+        let res = coord.run(synthetic_scene(128, 128, 3)).unwrap();
+        let evs = coord.tracer().events();
+        let mine: Vec<_> = evs.iter().filter(|e| e.job_id == res.id).collect();
+        for kind in [
+            TraceKind::Submit,
+            TraceKind::Queued,
+            TraceKind::Dispatched,
+            TraceKind::BatchStart,
+            TraceKind::BatchEnd,
+            TraceKind::Completed,
+        ] {
+            assert!(mine.iter().any(|e| e.kind == kind), "missing {kind:?}");
+        }
+        assert_eq!(
+            mine.iter().filter(|e| e.kind.is_terminal()).count(),
+            1,
+            "exactly one terminal event per job"
+        );
+        let json = coord.tracer().chrome_trace_json(coord.engine_names());
+        let s = validate_chrome_trace(&json).expect("live export is schema-valid");
+        assert!(s.begins >= 1 && s.ends >= 1 && s.metadata >= 2);
+        coord.shutdown();
+    }
+
+    /// With the tracer left disabled (the default), serving records no
+    /// events at all — the zero-cost-when-off contract.
+    #[test]
+    fn disabled_tracer_records_nothing_while_serving() {
+        let coord = lut_coordinator(CoordinatorConfig::default());
+        coord.run(synthetic_scene(96, 96, 5)).unwrap();
+        assert_eq!(coord.tracer().recorded(), 0);
+        assert!(!coord.tracer().is_enabled());
+        coord.shutdown();
+    }
+
+    /// The acceptance check of the quality pillar: at `sample_n = 1` the
+    /// live sampler's MED/NMED/max-ED over a served GEMM equal the
+    /// offline `error_metrics_for_pairs` values on the same operand
+    /// multiset — exactly, not approximately (both sides sum integer
+    /// error distances; see `obs::quality` docs). Stage histograms
+    /// populate along the way.
+    #[test]
+    fn live_quality_at_n1_matches_offline_metrics_exactly() {
+        let design = registry().build_str("proposed@8").unwrap();
+        let coord = lut_coordinator(CoordinatorConfig {
+            workers: 2,
+            quality_sample_n: 1,
+            ..CoordinatorConfig::default()
+        });
+        let mut rng = Xoshiro256::seeded(0x0b5e);
+        let a = MatI8::random(8, 6, &mut rng);
+        let b = MatI8::random(6, 10, &mut rng);
+        coord.submit_gemm(a.clone(), b.clone(), None).unwrap().wait().unwrap();
+        let m = coord.shutdown();
+        let q = m.per_engine[0].quality;
+        assert_eq!(q.units, 1, "one block job, one sampled unit");
+        assert_eq!(q.pairs, 8 * 6 * 10);
+        assert!(q.mismatches > 0, "proposed@8 is approximate");
+        let mut pairs: Vec<(i64, i64)> = Vec::new();
+        gemm_block_pairs(&a, &b, 0, 8, 0, 10, |x, y| pairs.push((x as i64, y as i64)));
+        let off = error_metrics_for_pairs(design.as_ref(), pairs.into_iter());
+        assert_eq!(q.pairs as usize, off.pairs);
+        assert_eq!(q.med(), off.med, "live MED == offline MED bit-for-bit");
+        assert_eq!(q.nmed(), off.nmed, "live NMED == offline NMED bit-for-bit");
+        assert_eq!(q.max_ed, off.max_ed);
+        assert_eq!(q.mismatch_rate(), off.er);
+        // Stage histograms saw the job: one queue-wait (one block), one
+        // compute batch, one end-to-end job.
+        let stages = &m.per_engine[0].stages;
+        assert_eq!(stages[Stage::QueueWait as usize].count, 1);
+        assert_eq!(stages[Stage::Compute as usize].count, 1);
+        assert_eq!(stages[Stage::E2e as usize].count, 1);
+    }
+
+    /// Quality sampling off (the default) leaves the quality rows empty
+    /// and costs no shadow recomputation.
+    #[test]
+    fn quality_sampling_is_off_by_default() {
+        let coord = lut_coordinator(CoordinatorConfig::default());
+        let mut rng = Xoshiro256::seeded(7);
+        let a = MatI8::random(4, 3, &mut rng);
+        let b = MatI8::random(3, 5, &mut rng);
+        coord.submit_gemm(a, b, None).unwrap().wait().unwrap();
+        coord.run(synthetic_scene(64, 64, 2)).unwrap();
+        let m = coord.shutdown();
+        assert_eq!(m.per_engine[0].quality.units, 0);
+        assert_eq!(m.per_engine[0].quality.pairs, 0);
     }
 }
 

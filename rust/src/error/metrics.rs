@@ -117,6 +117,25 @@ pub fn error_metrics_netlist(model: &dyn MultiplierModel) -> ErrorMetrics {
     )
 }
 
+/// Metrics over an explicit operand-pair list, evaluated on the
+/// functional model. This is the offline comparator for the live
+/// quality sampler ([`crate::obs::quality`]): feed it the exact operand
+/// multiset a sampled workload pushed through an engine and the result
+/// must equal the sampler's running MED/NMED/max-ED bit-for-bit (both
+/// sides sum integer error distances whose totals stay far below 2^53,
+/// so the f64 divisions agree exactly — asserted by the observability
+/// test suite).
+pub fn error_metrics_for_pairs(
+    model: &dyn MultiplierModel,
+    pairs: impl Iterator<Item = (i64, i64)>,
+) -> ErrorMetrics {
+    accumulate(
+        model.name(),
+        model.bits(),
+        pairs.map(|(a, b)| (a, b, model.multiply(a, b))),
+    )
+}
+
 /// Monte-Carlo metrics over `samples` uniform pairs (wide operands).
 pub fn error_metrics_sampled(model: &dyn MultiplierModel, samples: usize, seed: u64) -> ErrorMetrics {
     let n = model.bits();
@@ -200,6 +219,21 @@ mod tests {
             assert_eq!(via_model.me, via_netlist.me, "{id:?}");
             assert_eq!(via_model.max_ed, via_netlist.max_ed, "{id:?}");
         }
+    }
+
+    /// The pair-list entry point over the full operand grid must equal
+    /// the exhaustive sweep — same accumulator, same order.
+    #[test]
+    fn pair_list_metrics_match_exhaustive_on_full_grid() {
+        let m = build_design(DesignId::Proposed, 8);
+        let full = error_metrics(m.as_ref());
+        let grid = (-128i64..128).flat_map(|a| (-128i64..128).map(move |b| (a, b)));
+        let via_pairs = error_metrics_for_pairs(m.as_ref(), grid);
+        assert_eq!(via_pairs.pairs, full.pairs);
+        assert_eq!(via_pairs.med, full.med);
+        assert_eq!(via_pairs.nmed, full.nmed);
+        assert_eq!(via_pairs.er, full.er);
+        assert_eq!(via_pairs.max_ed, full.max_ed);
     }
 
     #[test]

@@ -2,4 +2,7 @@
 
 pub mod metrics;
 
-pub use metrics::{error_metrics, error_metrics_netlist, error_metrics_sampled, ErrorMetrics};
+pub use metrics::{
+    error_metrics, error_metrics_for_pairs, error_metrics_netlist, error_metrics_sampled,
+    ErrorMetrics,
+};

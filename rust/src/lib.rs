@@ -56,6 +56,11 @@
 //!   per-element reference), and `Conv2d`/`Network` lowered via im2col
 //!   onto that GEMM — served through the coordinator as a second job
 //!   kind next to image tiles (`sfcmul infer`).
+//! * [`obs`] — the observability layer: bounded structured tracing
+//!   (Chrome trace-event export, `sfcmul trace`), per-(engine, stage)
+//!   log₂ latency histograms behind the Prometheus exposition, and the
+//!   live approximation-quality sampler (running MED/NMED/mismatch-rate
+//!   per engine, shadow-recomputed from sampled traffic).
 //! * [`coordinator`] — the L3 serving layer: halo tiling, dynamic batching,
 //!   worker pool with backpressure, latency/throughput metrics (Fig 8).
 //!   A [`coordinator::Coordinator`] now serves a *set of named engines*
@@ -87,6 +92,7 @@ pub mod error;
 pub mod hwmodel;
 pub mod image;
 pub mod nn;
+pub mod obs;
 pub mod coordinator;
 pub mod server;
 pub mod runtime;

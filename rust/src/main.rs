@@ -9,6 +9,8 @@
 //!            listener, SIGINT-safe graceful drain — see `sfcmul::server`)
 //!   infer    [--design SPEC] [--engine lut|bitsim|bitsim-live|model] [--seed S] [--size N]
 //!            (quantized conv→relu→conv inference through the coordinator)
+//!   trace    --input trace.json [--min-events N] | --addr HOST:PORT
+//!            (validate a Chrome trace-event export, or fetch one live)
 //!   ablate   [--seed S]                      (design-space ablation report)
 //!   designs                                  (list the design registry)
 //!   ops                                      (list the operator registry)
@@ -70,6 +72,20 @@ USAGE: sfcmul <subcommand> [options]
                                    probe (default 500)
            --fallback FROM=TO,..   serve FROM's jobs on TO while FROM's
                                    breaker is open (names from --designs)
+           observability knobs (both serve modes):
+           --trace PATH            record structured span events (submit ->
+                                   queued -> dispatched -> batch -> terminal)
+                                   and export them as Chrome trace-event JSON
+                                   on exit; the SFCMUL_TRACE=PATH environment
+                                   variable does the same. Load the file in
+                                   Perfetto or chrome://tracing, or check it
+                                   with `sfcmul trace --input PATH`.
+           --quality-sample-n N    live approximation-quality telemetry:
+                                   shadow-recompute 1 in N served work units
+                                   (conv tiles / GEMM blocks) against the
+                                   exact product and publish running MED /
+                                   NMED / mismatch-rate per engine in the
+                                   snapshot and /metrics (0 = off, default)
   serve    --listen ADDR [--workers W] [--batch B] [--designs SPEC,SPEC,...]
            [--conn-workers C] [--max-inflight J] [--quota-rps R] [--quota-burst B]
            network mode: serve the fleet over TCP (line-delimited SFC/1 job
@@ -82,6 +98,10 @@ USAGE: sfcmul <subcommand> [options]
            run the fixed quantized conv->relu->conv network on a synthetic
            scene through the coordinator (i8 im2col + tiled GEMM, every MAC
            through the design; prints final-activation fidelity vs exact)
+  trace    --input trace.json [--min-events N] | --addr HOST:PORT
+           validate a Chrome trace-event export (JSON schema + span balance
+           + event counts), or fetch the live trace ring from a serving
+           instance over the TRACE frame and validate that
   ablate   [--seed S]
            design-space ablation (compressor candidates, compensation, truncation)
   designs  list every registered design family and example spec strings
@@ -120,6 +140,7 @@ fn main() {
         Some("edge") => cmd_edge(&args),
         Some("serve") => cmd_serve(&args),
         Some("infer") => cmd_infer(&args),
+        Some("trace") => cmd_trace(&args),
         Some("ablate") => cmd_ablate(&args),
         Some("designs") => cmd_designs(),
         Some("ops") => cmd_ops(),
@@ -376,6 +397,7 @@ fn cmd_serve(args: &Args) -> i32 {
             args.get_parse("breaker-cooldown-ms", dflt.breaker_cooldown.as_millis() as u64)
                 .unwrap_or(dflt.breaker_cooldown.as_millis() as u64),
         ),
+        quality_sample_n: args.get_parse("quality-sample-n", 0u64).unwrap_or(0),
     };
     if fault_plan.is_some() {
         // Injected panics are caught and counted by the workers; keep
@@ -383,6 +405,12 @@ fn cmd_serve(args: &Args) -> i32 {
         silence_worker_panics();
     }
     let coord = Coordinator::start_named_with_fallbacks(named, cfg, fallbacks);
+    // --trace / SFCMUL_TRACE: flip the tracer on before the first job so
+    // every span is captured; the export happens right before shutdown.
+    let trace_path = trace_path_of(args);
+    if trace_path.is_some() {
+        coord.tracer().enable();
+    }
     backends.sort_by_key(|e| e.key());
     backends.dedup();
     let backend_list =
@@ -391,7 +419,7 @@ fn cmd_serve(args: &Args) -> i32 {
     // abort mid-batch — both serve modes share the flag.
     shutdown::install();
     if let Some(addr) = args.get("listen") {
-        return serve_listen(args, coord, addr.to_string(), &keys, &backend_list);
+        return serve_listen(args, coord, addr.to_string(), &keys, &backend_list, trace_path);
     }
     let jobs = args.get_parse("jobs", 64usize).unwrap_or(64);
     println!(
@@ -425,6 +453,9 @@ fn cmd_serve(args: &Args) -> i32 {
         }
     }
     let wall = t0.elapsed();
+    if let Some(path) = &trace_path {
+        export_trace(&coord, path);
+    }
     let m = coord.shutdown();
     println!(
         "completed {} jobs / {} tiles in {:.2} s  ({:.1} Mpix/s, mean batch {:.2}{})",
@@ -437,6 +468,48 @@ fn cmd_serve(args: &Args) -> i32 {
     );
     print_snapshot(&m);
     0
+}
+
+/// Resolve the trace export path: `--trace PATH` wins, then the
+/// `SFCMUL_TRACE` environment variable (empty value = off).
+fn trace_path_of(args: &Args) -> Option<PathBuf> {
+    args.get("trace").map(PathBuf::from).or_else(|| {
+        std::env::var("SFCMUL_TRACE").ok().filter(|s| !s.is_empty()).map(PathBuf::from)
+    })
+}
+
+/// Export the coordinator's trace ring as Chrome trace-event JSON.
+fn export_trace(coord: &Coordinator, path: &Path) {
+    let tracer = coord.tracer();
+    let text = tracer.chrome_trace_json(coord.engine_names());
+    if let Some(dir) = path.parent() {
+        if !dir.as_os_str().is_empty() {
+            if let Err(e) = std::fs::create_dir_all(dir) {
+                eprintln!("cannot create {}: {e}", dir.display());
+                return;
+            }
+        }
+    }
+    match std::fs::write(path, &text) {
+        Ok(()) => println!(
+            "trace: wrote {} events to {} ({} dropped by the ring; open in Perfetto \
+             or validate with `sfcmul trace --input {}`)",
+            tracer.recorded().saturating_sub(tracer.dropped()),
+            path.display(),
+            tracer.dropped(),
+            path.display()
+        ),
+        Err(e) => eprintln!("cannot write trace {}: {e}", path.display()),
+    }
+}
+
+/// Mean of one stage histogram in milliseconds (0 when empty).
+fn stage_mean_ms(h: &sfcmul::obs::hist::HistSnapshot) -> f64 {
+    if h.count == 0 {
+        0.0
+    } else {
+        h.sum_seconds / h.count as f64 * 1e3
+    }
 }
 
 /// Shared tail of both serve modes: fleet-wide counters + quantiles and
@@ -474,6 +547,33 @@ fn print_snapshot(m: &sfcmul::coordinator::MetricsSnapshot) {
             row.latency_p99_ms,
             row.engine_busy.as_secs_f64()
         );
+        // Stage means come from the log2 histograms behind /metrics.
+        let [qw, cp, e2] = &row.stages;
+        if qw.count + cp.count + e2.count > 0 {
+            println!(
+                "      stages: queue-wait {:.2} ms ({} obs)  compute {:.2} ms ({})  e2e {:.2} ms ({})",
+                stage_mean_ms(qw),
+                qw.count,
+                stage_mean_ms(cp),
+                cp.count,
+                stage_mean_ms(e2),
+                e2.count
+            );
+        }
+        // Live quality telemetry (only with --quality-sample-n > 0).
+        let q = &row.quality;
+        if q.units > 0 {
+            println!(
+                "      quality: {} units / {} pairs sampled  mismatch {:.2}%  MED {:.3}  \
+                 NMED {:.6}  max|ED| {}",
+                q.units,
+                q.pairs,
+                q.mismatch_rate() * 100.0,
+                q.med(),
+                q.nmed(),
+                q.max_ed
+            );
+        }
     }
 }
 
@@ -486,6 +586,7 @@ fn serve_listen(
     addr: String,
     keys: &[String],
     backend_list: &str,
+    trace_path: Option<PathBuf>,
 ) -> i32 {
     let cfg = ServerConfig {
         addr,
@@ -516,12 +617,17 @@ fn serve_listen(
             String::new()
         }
     );
-    println!("job protocol: EDGE/GEMM/METRICS/PING frames; HTTP: GET /metrics, GET /healthz");
+    println!(
+        "job protocol: EDGE/GEMM/METRICS/TRACE/PING frames; HTTP: GET /metrics, GET /healthz"
+    );
     while !shutdown::signalled() {
         std::thread::sleep(std::time::Duration::from_millis(150));
     }
     println!("signal received: draining connections, then the fleet");
     let stats = server.stop();
+    if let Some(path) = &trace_path {
+        export_trace(&coord, path);
+    }
     let m = match Arc::try_unwrap(coord) {
         Ok(c) => c.shutdown(),
         // A handler leaked an Arc clone (cannot happen after stop(), but
@@ -628,6 +734,64 @@ fn cmd_infer(args: &Args) -> i32 {
         m.engine_busy.as_secs_f64() * 1e3
     );
     0
+}
+
+/// Validate a Chrome trace-event export, either from a file written by
+/// `serve --trace` (`--input`) or fetched live from a serving instance
+/// over the `TRACE` frame (`--addr`). Exits non-zero on schema
+/// violations or (with `--min-events`) an emptier-than-expected trace —
+/// the CI smoke leg keys on that.
+fn cmd_trace(args: &Args) -> i32 {
+    let text = if let Some(path) = args.get("input") {
+        match std::fs::read_to_string(path) {
+            Ok(t) => t,
+            Err(e) => {
+                eprintln!("cannot read {path}: {e}");
+                return 1;
+            }
+        }
+    } else if let Some(addr) = args.get("addr") {
+        let mut client = match sfcmul::server::Client::connect(addr) {
+            Ok(c) => c,
+            Err(e) => {
+                eprintln!("cannot connect to {addr}: {e}");
+                return 1;
+            }
+        };
+        match client.trace_text() {
+            Ok(t) => t,
+            Err(e) => {
+                eprintln!("TRACE fetch from {addr} failed: {e}");
+                return 1;
+            }
+        }
+    } else {
+        eprintln!("trace needs --input FILE or --addr HOST:PORT");
+        return 2;
+    };
+    match sfcmul::obs::trace::validate_chrome_trace(&text) {
+        Ok(s) => {
+            let min = args.get_parse("min-events", 0usize).unwrap_or(0);
+            if s.events < min {
+                eprintln!(
+                    "trace is valid but has {} events (< --min-events {min}) — \
+                     was tracing enabled on the serving side?",
+                    s.events
+                );
+                return 1;
+            }
+            println!(
+                "valid Chrome trace: {} events ({} span begins, {} span ends, \
+                 {} instants, {} metadata)",
+                s.events, s.begins, s.ends, s.instants, s.metadata
+            );
+            0
+        }
+        Err(e) => {
+            eprintln!("invalid trace: {e}");
+            1
+        }
+    }
 }
 
 fn cmd_ablate(args: &Args) -> i32 {

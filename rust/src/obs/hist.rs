@@ -1,0 +1,219 @@
+//! Per-stage latency histograms: fixed log₂ buckets in microseconds.
+//!
+//! The metrics reservoir (p50/p99 for the CLI snapshot) answers "how
+//! slow are jobs?" but not "*where* does the time go?". Each engine row
+//! carries one [`Hist`] per [`Stage`] — queue wait (send → worker
+//! pickup), compute (engine batch wall time), and end-to-end job latency
+//! — so the Prometheus exposition can render proper cumulative
+//! `_bucket`/`_sum`/`_count` series per (engine, stage) and an operator
+//! can see queueing delay and engine time as separate distributions.
+//!
+//! Buckets are powers of two in µs: bucket `i` has upper bound `2^i` µs
+//! for `i` in `0..FINITE_BUCKETS` (1 µs … ~67 s), plus one overflow
+//! bucket that only surfaces in the `+Inf` cumulative count. Recording
+//! is O(1) (a leading-zeros bit trick), storage is a fixed 28-slot
+//! array — no allocation, safe to hold under the metrics mutex.
+
+use std::time::Duration;
+
+/// Finite bucket count; bucket `i` covers values ≤ `2^i` µs.
+pub const FINITE_BUCKETS: usize = 27;
+/// Total slots: finite buckets + one overflow slot.
+pub const BUCKETS: usize = FINITE_BUCKETS + 1;
+
+/// Upper bound of finite bucket `i` in microseconds; `None` for the
+/// overflow slot (rendered as `+Inf`).
+pub fn bucket_le_us(i: usize) -> Option<u64> {
+    if i < FINITE_BUCKETS {
+        Some(1u64 << i)
+    } else {
+        None
+    }
+}
+
+/// Smallest bucket whose upper bound holds `us` (ceil log₂).
+fn bucket_index(us: u64) -> usize {
+    if us <= 1 {
+        0
+    } else {
+        (64 - (us - 1).leading_zeros() as usize).min(BUCKETS - 1)
+    }
+}
+
+/// The latency stages instrumented per engine.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Stage {
+    /// Work-unit time on the bounded queue: send → worker pickup.
+    QueueWait = 0,
+    /// Engine batch wall time (the `process_batch` call).
+    Compute = 1,
+    /// Whole-job latency: accept → result delivered (completed jobs).
+    E2e = 2,
+}
+
+impl Stage {
+    pub const ALL: [Stage; 3] = [Stage::QueueWait, Stage::Compute, Stage::E2e];
+
+    /// Stable label used as the Prometheus `stage` label value.
+    pub fn label(self) -> &'static str {
+        match self {
+            Stage::QueueWait => "queue_wait",
+            Stage::Compute => "compute",
+            Stage::E2e => "e2e",
+        }
+    }
+}
+
+/// One log₂ histogram. Counts are per-bucket (not cumulative); the
+/// exposition layer accumulates for Prometheus' `le` semantics.
+#[derive(Debug, Clone)]
+pub struct Hist {
+    counts: [u64; BUCKETS],
+    sum_us: u64,
+    count: u64,
+}
+
+impl Default for Hist {
+    fn default() -> Self {
+        Self { counts: [0; BUCKETS], sum_us: 0, count: 0 }
+    }
+}
+
+impl Hist {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn record(&mut self, d: Duration) {
+        let us = d.as_micros() as u64;
+        self.counts[bucket_index(us)] += 1;
+        self.sum_us += us;
+        self.count += 1;
+    }
+
+    pub fn snapshot(&self) -> HistSnapshot {
+        HistSnapshot {
+            counts: self.counts,
+            sum_seconds: self.sum_us as f64 / 1e6,
+            count: self.count,
+        }
+    }
+}
+
+/// Point-in-time copy of a [`Hist`] for snapshots and rendering.
+#[derive(Debug, Clone)]
+pub struct HistSnapshot {
+    /// Raw per-bucket counts (index `BUCKETS-1` is the overflow slot).
+    pub counts: [u64; BUCKETS],
+    /// Total observed time in seconds (Prometheus `_sum`).
+    pub sum_seconds: f64,
+    /// Total observations (Prometheus `_count`).
+    pub count: u64,
+}
+
+impl Default for HistSnapshot {
+    fn default() -> Self {
+        Self { counts: [0; BUCKETS], sum_seconds: 0.0, count: 0 }
+    }
+}
+
+impl HistSnapshot {
+    /// Cumulative count at finite bucket `i` (Prometheus `le` value).
+    pub fn cumulative(&self, i: usize) -> u64 {
+        self.counts[..=i.min(BUCKETS - 1)].iter().sum()
+    }
+}
+
+/// One histogram per [`Stage`] — the per-engine bundle.
+#[derive(Debug, Clone, Default)]
+pub struct StageHists {
+    hists: [Hist; 3],
+}
+
+impl StageHists {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn record(&mut self, stage: Stage, d: Duration) {
+        self.hists[stage as usize].record(d);
+    }
+
+    pub fn snapshot(&self) -> [HistSnapshot; 3] {
+        [self.hists[0].snapshot(), self.hists[1].snapshot(), self.hists[2].snapshot()]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bucket_bounds_are_powers_of_two() {
+        assert_eq!(bucket_le_us(0), Some(1));
+        assert_eq!(bucket_le_us(1), Some(2));
+        assert_eq!(bucket_le_us(10), Some(1024));
+        assert_eq!(bucket_le_us(FINITE_BUCKETS - 1), Some(1 << (FINITE_BUCKETS - 1)));
+        assert_eq!(bucket_le_us(FINITE_BUCKETS), None, "overflow slot is +Inf");
+    }
+
+    #[test]
+    fn values_land_in_smallest_covering_bucket() {
+        assert_eq!(bucket_index(0), 0);
+        assert_eq!(bucket_index(1), 0);
+        assert_eq!(bucket_index(2), 1);
+        assert_eq!(bucket_index(3), 2);
+        assert_eq!(bucket_index(4), 2);
+        assert_eq!(bucket_index(5), 3);
+        assert_eq!(bucket_index(1024), 10);
+        assert_eq!(bucket_index(1025), 11);
+        assert_eq!(bucket_index(u64::MAX), BUCKETS - 1);
+        // Every value v in a finite bucket satisfies v <= its le bound.
+        for v in [1u64, 2, 3, 7, 100, 4096, 1 << 26] {
+            let i = bucket_index(v);
+            if let Some(le) = bucket_le_us(i) {
+                assert!(v <= le, "{v} > le {le}");
+                if i > 0 {
+                    assert!(v > bucket_le_us(i - 1).unwrap(), "{v} not minimal at {i}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn record_accumulates_sum_count_and_cumulative() {
+        let mut h = Hist::new();
+        h.record(Duration::from_micros(1));
+        h.record(Duration::from_micros(3));
+        h.record(Duration::from_micros(1000));
+        let s = h.snapshot();
+        assert_eq!(s.count, 3);
+        assert!((s.sum_seconds - 1004e-6).abs() < 1e-12);
+        assert_eq!(s.cumulative(0), 1);
+        assert_eq!(s.cumulative(2), 2);
+        assert_eq!(s.cumulative(BUCKETS - 1), 3, "+Inf covers everything");
+    }
+
+    #[test]
+    fn overflow_values_count_only_in_inf() {
+        let mut h = Hist::new();
+        h.record(Duration::from_secs(1 << 20)); // way past 2^26 µs
+        let s = h.snapshot();
+        assert_eq!(s.cumulative(FINITE_BUCKETS - 1), 0);
+        assert_eq!(s.cumulative(BUCKETS - 1), 1);
+    }
+
+    #[test]
+    fn stage_bundle_routes_by_stage() {
+        let mut sh = StageHists::new();
+        sh.record(Stage::QueueWait, Duration::from_micros(5));
+        sh.record(Stage::Compute, Duration::from_micros(50));
+        sh.record(Stage::Compute, Duration::from_micros(70));
+        sh.record(Stage::E2e, Duration::from_micros(500));
+        let snaps = sh.snapshot();
+        assert_eq!(snaps[Stage::QueueWait as usize].count, 1);
+        assert_eq!(snaps[Stage::Compute as usize].count, 2);
+        assert_eq!(snaps[Stage::E2e as usize].count, 1);
+        assert_eq!(Stage::ALL.map(|s| s.label()), ["queue_wait", "compute", "e2e"]);
+    }
+}

@@ -1,0 +1,39 @@
+//! End-to-end observability: tracing, stage histograms, live quality.
+//!
+//! The serving stack answers *what* it computed; this layer answers
+//! *how* — three pillars, all std-only and zero-dependency like the rest
+//! of the crate, threaded through coordinator, server, and CLI:
+//!
+//! * [`trace`] — structured span tracing. A bounded ring buffer of
+//!   timestamped job events (`submit → queued → dispatched →
+//!   batch_start/end → completed | failed{panic,deadline,error} |
+//!   rerouted`), one relaxed atomic load per event site when disabled,
+//!   exported as Chrome trace-event JSON (Perfetto /
+//!   `chrome://tracing`), dumped over the wire protocol (`TRACE`), and
+//!   schema-checked by the `sfcmul trace` CLI the ci.sh smoke leg runs.
+//! * [`hist`] — per-(engine, stage) log₂ latency histograms (queue wait
+//!   vs engine compute vs end-to-end) feeding proper Prometheus
+//!   `_bucket`/`_sum`/`_count` exposition in `GET /metrics`; the
+//!   bounded reservoir keeps serving p50/p99 for the CLI snapshot.
+//! * [`quality`] — live approximation-quality telemetry. A
+//!   deterministic 1-in-N sampler shadow-recomputes served conv tiles /
+//!   GEMM blocks against the exact product and publishes running
+//!   per-engine MED / NMED / max-ED and a mismatch-rate gauge — the
+//!   paper's Table-4 error metrics, measured on the traffic actually
+//!   being served rather than an offline operand sweep.
+//!
+//! The pieces are deliberately decoupled from the coordinator's types
+//! where possible (histograms and the tracer know nothing about jobs
+//! beyond ids and labels) so they are reusable by future subsystems.
+#![cfg_attr(not(test), deny(clippy::unwrap_used, clippy::expect_used))]
+
+pub mod hist;
+pub mod quality;
+pub mod trace;
+
+pub use hist::{bucket_le_us, Hist, HistSnapshot, Stage, StageHists, BUCKETS, FINITE_BUCKETS};
+pub use quality::{QualityStats, SampleGate, MAX_EXACT_8BIT};
+pub use trace::{
+    validate_chrome_trace, TraceEvent, TraceKind, TraceSummary, Tracer, DEFAULT_TRACE_CAPACITY,
+    JOB_KIND_CONV, JOB_KIND_GEMM,
+};

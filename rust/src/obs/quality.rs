@@ -1,0 +1,326 @@
+//! Live approximation-quality telemetry: deterministic 1-in-N shadow
+//! sampling of served work units.
+//!
+//! The offline harness ([`crate::error::metrics`]) sweeps operand spaces
+//! and reports the paper's Table-4 metrics; this module measures the
+//! same quantities on *live traffic*. A deterministic stratified sampler
+//! ([`SampleGate`], seeded PRNG: exactly one unit per window of N,
+//! `--quality-sample-n`) admits conv tiles / GEMM blocks for shadow
+//! recomputation: every MAC operand pair of the sampled unit is re-run
+//! through the engine's product source ([`NnBackend`]) *and* the exact
+//! product `a·b`, accumulating error distance into integer counters.
+//!
+//! Integer accumulators are the point: |ED| ≤ 2¹⁶ per pair and pair
+//! counts stay far below 2⁵³, so sums are exact in `u64`/`f64` and the
+//! resulting MED/NMED are *order-independent* across worker threads — at
+//! `sample_n = 1` the live NMED equals the offline
+//! [`crate::error::metrics::error_metrics_for_pairs`] value bit-for-bit
+//! on the same operand set, which the test suite asserts exactly.
+//!
+//! Engines without a product source (`nn_backend() == None`: rowbuf,
+//! PJRT) and the gate-streaming [`NnBackend::BitsimLive`] backend (whose
+//! per-pair shadow cost would dwarf the serving cost) are not sampled;
+//! their quality rows stay at zero pairs.
+
+use crate::coordinator::engine::NnBackend;
+use crate::coordinator::tiler::{Tile, TILE_IN};
+use crate::image::conv::{KERNEL_PRESCALE_SHIFT, PIXEL_SHIFT};
+use crate::image::ops::Operator;
+use crate::nn::gemm::{lut_product, MatI8};
+use crate::util::prng::Xoshiro256;
+
+/// `max |exact product|` for the 8-bit signed datapath (`2^(2N-2)`, the
+/// paper Eq. 8 normaliser). Every samplable backend is 8-bit by
+/// construction ([`crate::coordinator::engine::TileEngine::nn_backend`]).
+pub const MAX_EXACT_8BIT: i64 = 1 << 14;
+
+/// Deterministic stratified 1-in-N admission: each consecutive window of
+/// `n` units admits exactly one, at a PRNG-chosen offset — so a run with
+/// fixed seed and unit count samples a reproducible *number* of units
+/// regardless of thread interleaving, and `n == 1` admits everything
+/// (the configuration the exactness test runs under).
+#[derive(Debug)]
+pub struct SampleGate {
+    n: u64,
+    /// Position within the current window.
+    pos: u64,
+    /// Admitted offset for the current window.
+    pick: u64,
+    rng: Xoshiro256,
+}
+
+impl SampleGate {
+    /// `n == 0` disables sampling entirely.
+    pub fn new(n: u64, seed: u64) -> Self {
+        Self { n, pos: 0, pick: 0, rng: Xoshiro256::seeded(seed) }
+    }
+
+    pub fn sample_n(&self) -> u64 {
+        self.n
+    }
+
+    /// Advance one unit; true when this unit is sampled.
+    pub fn admit(&mut self) -> bool {
+        match self.n {
+            0 => false,
+            1 => true,
+            n => {
+                if self.pos == 0 {
+                    self.pick = self.rng.below(n);
+                }
+                let hit = self.pos == self.pick;
+                self.pos = (self.pos + 1) % n;
+                hit
+            }
+        }
+    }
+}
+
+/// Running error-distance accumulators for one engine. All integer, so
+/// merge order never changes the published MED/NMED (see module docs).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct QualityStats {
+    /// Work units (tiles / GEMM blocks) shadow-recomputed.
+    pub units: u64,
+    /// Operand pairs compared.
+    pub pairs: u64,
+    /// Pairs where approx != exact.
+    pub mismatches: u64,
+    /// Σ |approx − exact|.
+    pub sum_ed: u64,
+    /// max |approx − exact|.
+    pub max_ed: i64,
+}
+
+impl QualityStats {
+    pub fn record_pair(&mut self, exact: i64, approx: i64) {
+        let ed = (approx - exact).abs();
+        self.pairs += 1;
+        if ed != 0 {
+            self.mismatches += 1;
+        }
+        self.sum_ed += ed as u64;
+        self.max_ed = self.max_ed.max(ed);
+    }
+
+    /// Fold a per-unit delta into the running totals.
+    pub fn merge(&mut self, d: &QualityStats) {
+        self.units += d.units;
+        self.pairs += d.pairs;
+        self.mismatches += d.mismatches;
+        self.sum_ed += d.sum_ed;
+        self.max_ed = self.max_ed.max(d.max_ed);
+    }
+
+    /// Mean error distance; 0 when nothing sampled.
+    pub fn med(&self) -> f64 {
+        if self.pairs == 0 {
+            0.0
+        } else {
+            self.sum_ed as f64 / self.pairs as f64
+        }
+    }
+
+    /// MED normalised by the 8-bit `max |exact|` (paper Eq. 8).
+    pub fn nmed(&self) -> f64 {
+        self.med() / MAX_EXACT_8BIT as f64
+    }
+
+    /// Fraction of sampled pairs with any error (the live ER gauge).
+    pub fn mismatch_rate(&self) -> f64 {
+        if self.pairs == 0 {
+            0.0
+        } else {
+            self.mismatches as f64 / self.pairs as f64
+        }
+    }
+}
+
+/// The engine-side approximate product for one i8 pair, or `None` when
+/// the backend cannot be shadow-evaluated per pair (see module docs).
+pub fn backend_product(backend: &NnBackend, a: i8, b: i8) -> Option<i64> {
+    match backend {
+        NnBackend::Table(t) => Some(lut_product(t, a, b) as i64),
+        NnBackend::PerElement(m) => Some(m.multiply(a as i64, b as i64)),
+        NnBackend::BitsimLive(_) => None,
+    }
+}
+
+/// Enumerate the MAC operand pairs of a conv tile, exactly as the
+/// engine's datapath sees them: pixels pre-shifted by `PIXEL_SHIFT`
+/// (0..=127, so the `u8 → i8` reinterpretation is value-preserving),
+/// coefficients pre-scaled by `KERNEL_PRESCALE_SHIFT`, every pass of the
+/// tile's operator (mirrors
+/// `coordinator::engine::conv_tile_model`'s loop structure).
+pub fn conv_tile_pairs(tile: &Tile, mut sink: impl FnMut(i8, i8)) {
+    let Some(op) = Operator::from_id(tile.op) else {
+        return;
+    };
+    for pass in op.passes() {
+        for cy in 0..tile.core_h {
+            for cx in 0..tile.core_w {
+                for ky in 0..3 {
+                    for kx in 0..3 {
+                        let px = tile.data[(cy + ky) * TILE_IN + cx + kx] >> PIXEL_SHIFT;
+                        let k = (pass.kernel[ky][kx] << KERNEL_PRESCALE_SHIFT) as i8;
+                        sink(px as i8, k);
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Enumerate the MAC operand pairs of one GEMM block (`rows × depth ×
+/// cols` triples — the multiset `gemm_block_lut` accumulates).
+pub fn gemm_block_pairs(
+    a: &MatI8,
+    b: &MatI8,
+    row0: usize,
+    rows: usize,
+    col0: usize,
+    cols: usize,
+    mut sink: impl FnMut(i8, i8),
+) {
+    for i in 0..rows {
+        for kk in 0..a.cols {
+            for j in 0..cols {
+                sink(a.get(row0 + i, kk), b.get(kk, col0 + j));
+            }
+        }
+    }
+}
+
+/// Shadow-recompute one sampled conv tile; `None` when the backend is
+/// absent or not per-pair evaluable.
+pub fn sample_conv_tile(backend: &NnBackend, tile: &Tile) -> Option<QualityStats> {
+    if matches!(backend, NnBackend::BitsimLive(_)) {
+        return None;
+    }
+    let mut d = QualityStats { units: 1, ..QualityStats::default() };
+    conv_tile_pairs(tile, |a, b| {
+        if let Some(approx) = backend_product(backend, a, b) {
+            d.record_pair(a as i64 * b as i64, approx);
+        }
+    });
+    Some(d)
+}
+
+/// Shadow-recompute one sampled GEMM block.
+pub fn sample_gemm_block(
+    backend: &NnBackend,
+    a: &MatI8,
+    b: &MatI8,
+    row0: usize,
+    rows: usize,
+    col0: usize,
+    cols: usize,
+) -> Option<QualityStats> {
+    if matches!(backend, NnBackend::BitsimLive(_)) {
+        return None;
+    }
+    let mut d = QualityStats { units: 1, ..QualityStats::default() };
+    gemm_block_pairs(a, b, row0, rows, col0, cols, |x, y| {
+        if let Some(approx) = backend_product(backend, x, y) {
+            d.record_pair(x as i64 * y as i64, approx);
+        }
+    });
+    Some(d)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::tiler::tile_image;
+    use crate::image::synth::synthetic_scene;
+    use crate::multipliers::{lut::product_table, registry};
+    use std::sync::Arc;
+
+    #[test]
+    fn gate_disabled_and_always_on_modes() {
+        let mut off = SampleGate::new(0, 1);
+        assert!((0..100).all(|_| !off.admit()));
+        let mut on = SampleGate::new(1, 1);
+        assert!((0..100).all(|_| on.admit()));
+    }
+
+    #[test]
+    fn gate_admits_exactly_one_per_window() {
+        for n in [2u64, 3, 7, 16] {
+            let mut g = SampleGate::new(n, 0xBEEF ^ n);
+            for window in 0..50 {
+                let admitted = (0..n).filter(|_| g.admit()).count();
+                assert_eq!(admitted, 1, "n={n} window={window}");
+            }
+        }
+    }
+
+    #[test]
+    fn gate_is_deterministic_for_fixed_seed() {
+        let run = || {
+            let mut g = SampleGate::new(5, 42);
+            (0..200).map(|_| g.admit()).collect::<Vec<_>>()
+        };
+        assert_eq!(run(), run());
+    }
+
+    #[test]
+    fn stats_accumulate_and_merge_order_independent() {
+        let mut a = QualityStats::default();
+        a.record_pair(10, 10);
+        a.record_pair(10, 13);
+        a.record_pair(-5, -9);
+        assert_eq!(a.pairs, 3);
+        assert_eq!(a.mismatches, 2);
+        assert_eq!(a.sum_ed, 7);
+        assert_eq!(a.max_ed, 4);
+        let mut b = QualityStats::default();
+        b.record_pair(100, 90);
+        let mut ab = a;
+        ab.merge(&b);
+        let mut ba = b;
+        ba.merge(&a);
+        assert_eq!(ab, ba, "integer merge commutes");
+        assert_eq!(ab.max_ed, 10);
+        assert!((ab.med() - 17.0 / 4.0).abs() < 1e-15);
+    }
+
+    #[test]
+    fn exact_backend_samples_with_zero_error() {
+        let model = registry().build_str("exact@8").unwrap();
+        let backend = NnBackend::Table(Arc::new(product_table(model.as_ref())));
+        let img = synthetic_scene(66, 66, 3);
+        let tiles = tile_image(1, &img);
+        let d = sample_conv_tile(&backend, &tiles[0]).expect("table backend samples");
+        assert_eq!(d.units, 1);
+        assert_eq!(d.pairs, (tiles[0].core_w * tiles[0].core_h * 9) as u64);
+        assert_eq!(d.mismatches, 0);
+        assert_eq!(d.sum_ed, 0);
+        assert_eq!(d.nmed(), 0.0);
+    }
+
+    #[test]
+    fn table_and_per_element_backends_agree() {
+        let model = registry().build_str("proposed@8").unwrap();
+        let table = NnBackend::Table(Arc::new(product_table(model.as_ref())));
+        let per = NnBackend::PerElement(Arc::from(model));
+        let mut rng = Xoshiro256::seeded(0x9A11);
+        let a = MatI8::random(7, 5, &mut rng);
+        let b = MatI8::random(5, 9, &mut rng);
+        let via_table = sample_gemm_block(&table, &a, &b, 0, 7, 0, 9).unwrap();
+        let via_model = sample_gemm_block(&per, &a, &b, 0, 7, 0, 9).unwrap();
+        assert_eq!(via_table, via_model);
+        assert_eq!(via_table.pairs, 7 * 5 * 9);
+        assert!(via_table.mismatches > 0, "proposed@8 is approximate");
+    }
+
+    #[test]
+    fn conv_pairs_cover_all_passes() {
+        let img = synthetic_scene(66, 66, 5);
+        let mut tiles = tile_image(0, &img);
+        tiles[0].op = Operator::Sobel.id(); // two-pass operator
+        let mut n = 0u64;
+        conv_tile_pairs(&tiles[0], |_, _| n += 1);
+        assert_eq!(n, (tiles[0].core_w * tiles[0].core_h * 9 * 2) as u64);
+    }
+}

@@ -1,0 +1,436 @@
+//! Structured job tracing: a bounded, lock-light ring buffer of span
+//! events, exported as Chrome trace-event JSON.
+//!
+//! Every job flowing through the coordinator leaves a breadcrumb trail —
+//! `submit → queued → dispatched → batch_start/batch_end →
+//! completed | failed{panic,deadline,error} | rerouted` — keyed by job id
+//! and labelled with engine / operator / job-kind. The [`Tracer`] is
+//! always wired in but starts disabled: the contract (locked by a bench
+//! row, `job_roundtrip_256_trace_{off,on}`) is that a *disabled* tracer
+//! costs exactly one relaxed atomic load per event site — the first
+//! statement of [`Tracer::record`] — so tracing can ship in the hot path
+//! unconditionally.
+//!
+//! When enabled (`sfcmul serve --trace PATH`, `SFCMUL_TRACE=PATH`, or
+//! [`Tracer::enable`] in-process), events land in a fixed-capacity ring
+//! (oldest overwritten first; [`Tracer::dropped`] reports the loss) under
+//! a single short mutex. [`Tracer::chrome_trace_json`] renders the ring
+//! as the Chrome trace-event format — async `b`/`e` spans per job id plus
+//! instant events — loadable in Perfetto (<https://ui.perfetto.dev>) or
+//! `chrome://tracing`. [`validate_chrome_trace`] is the schema check the
+//! tests, the `sfcmul trace` CLI, and the ci.sh smoke leg share.
+
+use crate::util::json::Json;
+use crate::util::sync::lock;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Mutex;
+use std::time::Instant;
+
+/// Default ring capacity (events). At ~40 bytes/event this bounds the
+/// tracer at a few MiB; a 256×256 demo job emits ~20 events.
+pub const DEFAULT_TRACE_CAPACITY: usize = 65_536;
+
+/// Span-event kinds, in lifecycle order. Exactly one *terminal* kind
+/// ([`TraceKind::is_terminal`]) is recorded per accepted job — the
+/// invariant the chaos-soak trace test locks.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TraceKind {
+    /// Job accepted and routed (carries op + unit count).
+    Submit,
+    /// All the job's work units are on the bounded queue.
+    Queued,
+    /// A worker picked up (some of) the job's units.
+    Dispatched,
+    /// An engine batch containing this job's units starts computing.
+    BatchStart,
+    /// That batch finished.
+    BatchEnd,
+    /// Terminal: all units reassembled, result delivered.
+    Completed,
+    /// Terminal: a unit panicked inside the engine (caught).
+    FailedPanic,
+    /// Terminal: the job's deadline expired before completion.
+    FailedDeadline,
+    /// Terminal: engine contract violation or backend error.
+    FailedError,
+    /// The job was rerouted to its fallback engine at submit time
+    /// (annotation, not terminal — the span still completes or fails).
+    Rerouted,
+}
+
+impl TraceKind {
+    pub fn label(self) -> &'static str {
+        match self {
+            TraceKind::Submit => "submit",
+            TraceKind::Queued => "queued",
+            TraceKind::Dispatched => "dispatched",
+            TraceKind::BatchStart => "batch_start",
+            TraceKind::BatchEnd => "batch_end",
+            TraceKind::Completed => "completed",
+            TraceKind::FailedPanic => "failed_panic",
+            TraceKind::FailedDeadline => "failed_deadline",
+            TraceKind::FailedError => "failed_error",
+            TraceKind::Rerouted => "rerouted",
+        }
+    }
+
+    /// True for the kinds that end a job's span.
+    pub fn is_terminal(self) -> bool {
+        matches!(
+            self,
+            TraceKind::Completed
+                | TraceKind::FailedPanic
+                | TraceKind::FailedDeadline
+                | TraceKind::FailedError
+        )
+    }
+}
+
+/// Work-unit kind a trace event belongs to.
+pub const JOB_KIND_CONV: u8 = 0;
+pub const JOB_KIND_GEMM: u8 = 1;
+
+/// One recorded span event. Fixed-size on purpose: the ring is
+/// preallocated and recording never allocates.
+#[derive(Debug, Clone, Copy)]
+pub struct TraceEvent {
+    /// Microseconds since the tracer's epoch (coordinator start).
+    pub ts_us: u64,
+    pub job_id: u64,
+    pub kind: TraceKind,
+    /// Engine index the event happened on (routing index, not name).
+    pub engine: u8,
+    /// Operator id (meaningful on `Submit` for conv jobs; 0 otherwise).
+    pub op: u8,
+    /// [`JOB_KIND_CONV`] or [`JOB_KIND_GEMM`].
+    pub job_kind: u8,
+    /// Work units involved (tiles / GEMM blocks; batch size for
+    /// `BatchStart`/`BatchEnd`).
+    pub units: u32,
+}
+
+/// Fixed-capacity overwrite-oldest ring.
+struct Ring {
+    buf: Vec<TraceEvent>,
+    cap: usize,
+    /// Next write position once `buf` is full.
+    next: usize,
+    /// Total events ever recorded (>= buf.len()).
+    total: u64,
+}
+
+impl Ring {
+    fn push(&mut self, ev: TraceEvent) {
+        if self.buf.len() < self.cap {
+            self.buf.push(ev);
+        } else {
+            self.buf[self.next] = ev;
+        }
+        self.next = (self.next + 1) % self.cap;
+        self.total += 1;
+    }
+
+    /// Events in recording order (oldest first).
+    fn ordered(&self) -> Vec<TraceEvent> {
+        if self.buf.len() < self.cap {
+            self.buf.clone()
+        } else {
+            let mut out = Vec::with_capacity(self.buf.len());
+            out.extend_from_slice(&self.buf[self.next..]);
+            out.extend_from_slice(&self.buf[..self.next]);
+            out
+        }
+    }
+}
+
+/// The bounded span-event recorder. One per coordinator, shared by
+/// submit paths, workers, the watchdog, and the server's `TRACE` verb.
+pub struct Tracer {
+    enabled: AtomicBool,
+    epoch: Instant,
+    ring: Mutex<Ring>,
+}
+
+impl Default for Tracer {
+    fn default() -> Self {
+        Self::with_capacity(DEFAULT_TRACE_CAPACITY)
+    }
+}
+
+impl Tracer {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn with_capacity(cap: usize) -> Self {
+        Self {
+            enabled: AtomicBool::new(false),
+            epoch: Instant::now(),
+            ring: Mutex::new(Ring { buf: Vec::new(), cap: cap.max(1), next: 0, total: 0 }),
+        }
+    }
+
+    pub fn enable(&self) {
+        self.enabled.store(true, Ordering::Relaxed);
+    }
+
+    pub fn set_enabled(&self, on: bool) {
+        self.enabled.store(on, Ordering::Relaxed);
+    }
+
+    /// The cost of every event site when tracing is off is exactly this
+    /// load (checked relaxed — no fence, no lock).
+    pub fn is_enabled(&self) -> bool {
+        self.enabled.load(Ordering::Relaxed)
+    }
+
+    /// Record one span event. First statement is the disabled-path
+    /// early-out — keep it first; the overhead bench row prices it.
+    pub fn record(&self, kind: TraceKind, job_id: u64, engine: u8, op: u8, job_kind: u8, units: u32) {
+        if !self.enabled.load(Ordering::Relaxed) {
+            return;
+        }
+        let ts_us = self.epoch.elapsed().as_micros() as u64;
+        lock(&self.ring).push(TraceEvent { ts_us, job_id, kind, engine, op, job_kind, units });
+    }
+
+    /// Snapshot of the retained events, oldest first.
+    pub fn events(&self) -> Vec<TraceEvent> {
+        lock(&self.ring).ordered()
+    }
+
+    /// Total events recorded since start (including overwritten ones).
+    pub fn recorded(&self) -> u64 {
+        lock(&self.ring).total
+    }
+
+    /// Events lost to ring overwrite.
+    pub fn dropped(&self) -> u64 {
+        let g = lock(&self.ring);
+        g.total - g.buf.len() as u64
+    }
+
+    /// Render the ring as Chrome trace-event JSON (the
+    /// `{"traceEvents": [...]}` object form). Jobs become async spans
+    /// (`ph:"b"` at submit, `ph:"e"` at the terminal event, matched on
+    /// `cat:"job"` + id); intermediate events are instants (`ph:"i"`).
+    /// `engine_names` maps engine indices to thread labels.
+    pub fn chrome_trace_json(&self, engine_names: &[String]) -> String {
+        let events = self.events();
+        let mut out: Vec<Json> = Vec::with_capacity(events.len() + engine_names.len() + 1);
+        // Metadata: name the process and one thread lane per engine.
+        out.push(
+            Json::obj()
+                .set("name", "process_name")
+                .set("ph", "M")
+                .set("pid", 1i64)
+                .set("tid", 0i64)
+                .set("args", Json::obj().set("name", "sfcmul")),
+        );
+        for (i, name) in engine_names.iter().enumerate() {
+            out.push(
+                Json::obj()
+                    .set("name", "thread_name")
+                    .set("ph", "M")
+                    .set("pid", 1i64)
+                    .set("tid", i as i64 + 1)
+                    .set("args", Json::obj().set("name", format!("engine:{name}"))),
+            );
+        }
+        for ev in &events {
+            let engine_name = engine_names
+                .get(ev.engine as usize)
+                .map(String::as_str)
+                .unwrap_or("?");
+            let args = Json::obj()
+                .set("job", Json::Int(ev.job_id as i64))
+                .set("engine", engine_name)
+                .set("op", Json::Int(ev.op as i64))
+                .set("kind", if ev.job_kind == JOB_KIND_GEMM { "gemm" } else { "conv" })
+                .set("units", Json::Int(ev.units as i64));
+            let base = Json::obj()
+                .set("ts", Json::Int(ev.ts_us as i64))
+                .set("pid", 1i64)
+                .set("tid", ev.engine as i64 + 1);
+            let j = if ev.kind == TraceKind::Submit {
+                base.set("name", "job")
+                    .set("cat", "job")
+                    .set("ph", "b")
+                    .set("id", Json::Int(ev.job_id as i64))
+                    .set("args", args)
+            } else if ev.kind.is_terminal() {
+                base.set("name", "job")
+                    .set("cat", "job")
+                    .set("ph", "e")
+                    .set("id", Json::Int(ev.job_id as i64))
+                    .set("args", args.set("outcome", ev.kind.label()))
+            } else {
+                base.set("name", ev.kind.label())
+                    .set("cat", "job")
+                    .set("ph", "i")
+                    .set("s", "t")
+                    .set("args", args)
+            };
+            out.push(j);
+        }
+        Json::obj()
+            .set("traceEvents", Json::Arr(out))
+            .set("displayTimeUnit", "ms")
+            .to_string()
+    }
+}
+
+/// What [`validate_chrome_trace`] found in a trace document.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct TraceSummary {
+    /// Non-metadata events.
+    pub events: usize,
+    /// Async span begins (`ph:"b"`).
+    pub begins: usize,
+    /// Async span ends (`ph:"e"`).
+    pub ends: usize,
+    /// Instant events (`ph:"i"`).
+    pub instants: usize,
+    /// Metadata records (`ph:"M"`).
+    pub metadata: usize,
+}
+
+/// Schema-check a Chrome trace-event JSON document: parses the text,
+/// requires the `traceEvents` array, and checks every event for the
+/// fields the viewers require (`name`/`ph` strings; numeric
+/// `ts`/`pid`/`tid` on non-metadata events; `id` on async `b`/`e`).
+/// Returns per-phase counts on success. Shared by the unit tests, the
+/// `sfcmul trace` CLI, and the ci.sh trace smoke leg.
+pub fn validate_chrome_trace(text: &str) -> Result<TraceSummary, String> {
+    let doc = Json::parse(text)?;
+    let Some(events) = doc.get("traceEvents").and_then(Json::as_arr) else {
+        return Err("missing top-level \"traceEvents\" array".into());
+    };
+    let mut summary = TraceSummary { events: 0, begins: 0, ends: 0, instants: 0, metadata: 0 };
+    for (i, ev) in events.iter().enumerate() {
+        let name = ev.get("name").and_then(Json::as_str);
+        let ph = ev.get("ph").and_then(Json::as_str);
+        let (Some(_), Some(ph)) = (name, ph) else {
+            return Err(format!("event {i}: missing string \"name\"/\"ph\""));
+        };
+        if ph == "M" {
+            summary.metadata += 1;
+            continue;
+        }
+        for field in ["ts", "pid", "tid"] {
+            if ev.get(field).and_then(Json::as_f64).is_none() {
+                return Err(format!("event {i}: missing numeric \"{field}\""));
+            }
+        }
+        match ph {
+            "b" => {
+                summary.begins += 1;
+                if ev.get("id").is_none() {
+                    return Err(format!("event {i}: async begin without \"id\""));
+                }
+            }
+            "e" => {
+                summary.ends += 1;
+                if ev.get("id").is_none() {
+                    return Err(format!("event {i}: async end without \"id\""));
+                }
+            }
+            "i" => summary.instants += 1,
+            other => return Err(format!("event {i}: unsupported phase {other:?}")),
+        }
+        summary.events += 1;
+    }
+    Ok(summary)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn names() -> Vec<String> {
+        vec!["exact".to_string(), "approx".to_string()]
+    }
+
+    #[test]
+    fn disabled_tracer_records_nothing() {
+        let t = Tracer::new();
+        t.record(TraceKind::Submit, 1, 0, 0, JOB_KIND_CONV, 4);
+        assert_eq!(t.recorded(), 0);
+        assert!(t.events().is_empty());
+    }
+
+    #[test]
+    fn enabled_tracer_keeps_order_and_counts() {
+        let t = Tracer::new();
+        t.enable();
+        t.record(TraceKind::Submit, 7, 1, 2, JOB_KIND_CONV, 4);
+        t.record(TraceKind::Queued, 7, 1, 2, JOB_KIND_CONV, 4);
+        t.record(TraceKind::Completed, 7, 1, 0, JOB_KIND_CONV, 4);
+        let evs = t.events();
+        assert_eq!(evs.len(), 3);
+        assert_eq!(evs[0].kind, TraceKind::Submit);
+        assert_eq!(evs[2].kind, TraceKind::Completed);
+        assert!(evs.windows(2).all(|w| w[0].ts_us <= w[1].ts_us));
+        assert_eq!(t.dropped(), 0);
+    }
+
+    #[test]
+    fn ring_overwrites_oldest_past_capacity() {
+        let t = Tracer::with_capacity(4);
+        t.enable();
+        for id in 0..10u64 {
+            t.record(TraceKind::Queued, id, 0, 0, JOB_KIND_CONV, 1);
+        }
+        let evs = t.events();
+        assert_eq!(evs.len(), 4);
+        assert_eq!(evs.iter().map(|e| e.job_id).collect::<Vec<_>>(), vec![6, 7, 8, 9]);
+        assert_eq!(t.recorded(), 10);
+        assert_eq!(t.dropped(), 6);
+    }
+
+    #[test]
+    fn chrome_export_is_schema_valid() {
+        let t = Tracer::new();
+        t.enable();
+        t.record(TraceKind::Submit, 3, 0, 1, JOB_KIND_CONV, 16);
+        t.record(TraceKind::Queued, 3, 0, 1, JOB_KIND_CONV, 16);
+        t.record(TraceKind::BatchStart, 3, 0, 0, JOB_KIND_CONV, 8);
+        t.record(TraceKind::BatchEnd, 3, 0, 0, JOB_KIND_CONV, 8);
+        t.record(TraceKind::Completed, 3, 0, 0, JOB_KIND_CONV, 16);
+        t.record(TraceKind::Submit, 4, 1, 0, JOB_KIND_GEMM, 2);
+        t.record(TraceKind::FailedPanic, 4, 1, 0, JOB_KIND_GEMM, 2);
+        let json = t.chrome_trace_json(&names());
+        let s = validate_chrome_trace(&json).expect("valid trace");
+        assert_eq!(s.begins, 2, "one b per submit");
+        assert_eq!(s.ends, 2, "one e per terminal");
+        assert_eq!(s.instants, 3);
+        assert_eq!(s.metadata, 1 + 2, "process + one lane per engine");
+        assert!(json.contains("\"outcome\":\"failed_panic\""));
+        assert!(json.contains("\"kind\":\"gemm\""));
+    }
+
+    #[test]
+    fn validator_rejects_malformed_documents() {
+        assert!(validate_chrome_trace("not json").is_err());
+        assert!(validate_chrome_trace("{}").is_err());
+        assert!(validate_chrome_trace("{\"traceEvents\": 3}").is_err());
+        // event missing ts
+        let bad = "{\"traceEvents\":[{\"name\":\"x\",\"ph\":\"i\",\"pid\":1,\"tid\":1}]}";
+        assert!(validate_chrome_trace(bad).unwrap_err().contains("ts"));
+        // async begin without id
+        let bad =
+            "{\"traceEvents\":[{\"name\":\"job\",\"ph\":\"b\",\"ts\":1,\"pid\":1,\"tid\":1}]}";
+        assert!(validate_chrome_trace(bad).unwrap_err().contains("id"));
+    }
+
+    #[test]
+    fn terminal_kinds_are_exactly_the_failure_and_completion_set() {
+        use TraceKind::*;
+        for k in [Submit, Queued, Dispatched, BatchStart, BatchEnd, Rerouted] {
+            assert!(!k.is_terminal(), "{k:?}");
+        }
+        for k in [Completed, FailedPanic, FailedDeadline, FailedError] {
+            assert!(k.is_terminal(), "{k:?}");
+        }
+    }
+}

@@ -277,6 +277,18 @@ impl Client {
             .map_err(|_| ClientError::Protocol("metrics text is not UTF-8".into()))
     }
 
+    /// Fetch the coordinator's Chrome trace-event JSON over the job
+    /// protocol (`TRACE` frame). An empty (but valid) document comes
+    /// back when tracing is disabled server-side.
+    pub fn trace_text(&mut self) -> Result<String, ClientError> {
+        self.sock.write_all(b"TRACE\n")?;
+        let line = self.read_ok()?;
+        let len = Self::field(&line, "bytes")? as usize;
+        let bytes = self.read_payload(len)?;
+        String::from_utf8(bytes)
+            .map_err(|_| ClientError::Protocol("trace text is not UTF-8".into()))
+    }
+
     /// Polite goodbye; the server closes the connection after replying.
     pub fn quit(mut self) -> Result<(), ClientError> {
         self.sock.write_all(b"QUIT\n")?;

@@ -5,19 +5,25 @@
 //! (`Connection: close`), otherwise it stays on the streaming job
 //! protocol. Supported routes:
 //!
-//! * `GET /metrics` — Prometheus-style text exposition of the
-//!   coordinator [`MetricsSnapshot`] plus server gauges (including
-//!   per-engine failure counters and circuit-breaker state).
-//! * `GET /healthz` — health probe: `200 ok` while every engine's
-//!   circuit breaker is closed, `503 degraded` otherwise — load
-//!   balancers can steer traffic away from a degraded instance while
-//!   its fallback routing keeps in-flight clients served.
+//! * `GET /metrics` — Prometheus text exposition of the coordinator
+//!   [`MetricsSnapshot`] plus server gauges: every series carries
+//!   `# HELP`/`# TYPE` headers, label values are escaped per the
+//!   exposition format, counters end in `_total`, and the per-(engine,
+//!   stage) log₂ latency histograms ([`crate::obs::hist`]) and live
+//!   approximation-quality gauges ([`crate::obs::quality`]) ride along.
+//! * `GET /healthz` — health probe: a small JSON document (`status`,
+//!   `uptime_s`, `queue_depth`, per-engine breaker states) served with
+//!   `200` while every engine's circuit breaker is closed and `503`
+//!   otherwise — load balancers key on the status code as before, while
+//!   humans and scripts get the *why* in the body.
 //!
 //! Everything else is `404`; non-GET/HEAD methods are `405`. This is
 //! deliberately not a general HTTP server — no keep-alive, chunking, or
 //! header interpretation beyond the request line.
 
 use crate::coordinator::MetricsSnapshot;
+use crate::obs::hist::{bucket_le_us, Stage, BUCKETS};
+use crate::util::json::Json;
 
 use super::service::ServerStatsSnapshot;
 
@@ -48,20 +54,71 @@ pub fn response(status: u16, reason: &str, content_type: &str, body: &str) -> St
 }
 
 /// Route one HTTP request to its response text. `degraded` is the
-/// coordinator's circuit-breaker signal: it turns the `/healthz` probe
-/// into `503 degraded` without touching any other route.
-pub fn route(method: &str, path: &str, degraded: bool, metrics: impl FnOnce() -> String) -> String {
+/// coordinator's circuit-breaker signal: it selects the `/healthz`
+/// status code (`503` when any breaker is open) without touching any
+/// other route; `health` renders the probe's JSON body either way.
+pub fn route(
+    method: &str,
+    path: &str,
+    degraded: bool,
+    metrics: impl FnOnce() -> String,
+    health: impl FnOnce() -> String,
+) -> String {
     if method != "GET" && method != "HEAD" {
         return response(405, "Method Not Allowed", "text/plain", "method not allowed\n");
     }
     match path {
         "/metrics" => response(200, "OK", "text/plain; version=0.0.4", &metrics()),
         "/healthz" if degraded => {
-            response(503, "Service Unavailable", "text/plain", "degraded\n")
+            response(503, "Service Unavailable", "application/json", &health())
         }
-        "/healthz" => response(200, "OK", "text/plain", "ok\n"),
+        "/healthz" => response(200, "OK", "application/json", &health()),
         _ => response(404, "Not Found", "text/plain", "not found\n"),
     }
+}
+
+/// Render the `/healthz` body: machine-readable health context for the
+/// probe. The word `degraded` appears as the `status` value exactly when
+/// the instance serves `503`, so greps against the old plain-text body
+/// keep working.
+pub fn render_healthz(degraded: bool, uptime_s: u64, m: &MetricsSnapshot) -> String {
+    let engines: Vec<Json> = m
+        .per_engine
+        .iter()
+        .map(|e| {
+            Json::obj()
+                .set("name", e.name.as_str())
+                .set("breaker", e.breaker.to_string())
+        })
+        .collect();
+    let doc = Json::obj()
+        .set("status", if degraded { "degraded" } else { "ok" })
+        .set("uptime_s", uptime_s as i64)
+        .set("queue_depth", m.queue_depth)
+        .set("engines", Json::Arr(engines));
+    format!("{doc}\n")
+}
+
+/// Escape a label value per the Prometheus text exposition format:
+/// backslash, double quote, and newline must be backslash-escaped.
+pub fn escape_label(v: &str) -> String {
+    let mut out = String::with_capacity(v.len());
+    for c in v.chars() {
+        match c {
+            '\\' => out.push_str("\\\\"),
+            '"' => out.push_str("\\\""),
+            '\n' => out.push_str("\\n"),
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+/// Emit the `# HELP` / `# TYPE` preamble for one metric family.
+fn family(out: &mut String, name: &str, kind: &str, help: &str) {
+    use std::fmt::Write;
+    let _ = writeln!(out, "# HELP {name} {help}");
+    let _ = writeln!(out, "# TYPE {name} {kind}");
 }
 
 fn quantile_lines(out: &mut String, name: &str, labels: &str, p50: f64, p90: f64, p99: f64) {
@@ -73,48 +130,135 @@ fn quantile_lines(out: &mut String, name: &str, labels: &str, p50: f64, p90: f64
 }
 
 /// Render the coordinator snapshot plus server gauges in the Prometheus
-/// text exposition format (one `name{labels} value` line per sample).
+/// text exposition format. Every family gets `# HELP`/`# TYPE` headers
+/// (emitted once, before all of the family's samples), label values are
+/// escaped, and cumulative series end in `_total`.
 pub fn render_metrics(m: &MetricsSnapshot, s: &ServerStatsSnapshot) -> String {
     use std::fmt::Write;
-    let mut out = String::with_capacity(2048);
+    let mut out = String::with_capacity(8192);
     let w = &mut out;
-    let _ = writeln!(w, "# Fleet-wide coordinator counters.");
-    let _ = writeln!(w, "sfcmul_jobs_accepted_total {}", m.jobs_accepted);
-    let _ = writeln!(w, "sfcmul_jobs_rejected_total {}", m.jobs_rejected);
-    let _ = writeln!(w, "sfcmul_jobs_completed_total {}", m.jobs_completed);
-    let _ = writeln!(w, "sfcmul_jobs_failed_total {}", m.jobs_failed);
-    let _ = writeln!(w, "sfcmul_tiles_processed_total {}", m.tiles_processed);
-    let _ = writeln!(w, "sfcmul_batches_total {}", m.batches);
-    let _ = writeln!(w, "sfcmul_queue_depth {}", m.queue_depth);
-    quantile_lines(w, "sfcmul_job_latency_ms", "", m.latency_p50_ms, m.latency_p90_ms, m.latency_p99_ms);
-    let _ = writeln!(w, "# Per-engine rows.");
-    for e in &m.per_engine {
-        let labels = format!("engine=\"{}\"", e.name);
-        let _ = writeln!(w, "sfcmul_engine_jobs_completed_total{{{labels}}} {}", e.jobs_completed);
-        let _ = writeln!(w, "sfcmul_engine_jobs_failed_total{{{labels}}} {}", e.jobs_failed);
-        let _ = writeln!(w, "sfcmul_engine_panics_caught_total{{{labels}}} {}", e.panics_caught);
-        let _ = writeln!(w, "sfcmul_engine_deadline_misses_total{{{labels}}} {}", e.deadline_misses);
-        // Breaker state as a gauge: 0 = closed, 1 = half-open, 2 = open.
-        let _ = writeln!(w, "sfcmul_engine_breaker_state{{{labels}}} {}", e.breaker.code());
-        let _ = writeln!(w, "sfcmul_engine_tiles_processed_total{{{labels}}} {}", e.tiles_processed);
-        let _ = writeln!(w, "sfcmul_engine_batches_total{{{labels}}} {}", e.batches);
-        let _ = writeln!(w, "sfcmul_engine_busy_seconds{{{labels}}} {:.6}", e.engine_busy.as_secs_f64());
-        quantile_lines(
-            w,
-            "sfcmul_engine_job_latency_ms",
-            &labels,
-            e.latency_p50_ms,
-            e.latency_p90_ms,
-            e.latency_p99_ms,
-        );
+
+    // Fleet-wide coordinator counters.
+    for (name, help, v) in [
+        ("sfcmul_jobs_accepted_total", "Jobs admitted at submit time.", m.jobs_accepted),
+        ("sfcmul_jobs_rejected_total", "Submissions rejected at validation time.", m.jobs_rejected),
+        ("sfcmul_jobs_completed_total", "Jobs finished successfully.", m.jobs_completed),
+        ("sfcmul_jobs_failed_total", "Jobs failed (panic, deadline, or error).", m.jobs_failed),
+        ("sfcmul_tiles_processed_total", "Work units (tiles / GEMM blocks) processed.", m.tiles_processed),
+        ("sfcmul_batches_total", "Worker batches executed.", m.batches),
+    ] {
+        family(w, name, "counter", help);
+        let _ = writeln!(w, "{name} {v}");
     }
-    let _ = writeln!(w, "# Server front-end gauges.");
+    family(w, "sfcmul_queue_depth", "gauge", "Work items waiting in the shared queue.");
+    let _ = writeln!(w, "sfcmul_queue_depth {}", m.queue_depth);
+    family(w, "sfcmul_job_latency_ms", "summary", "End-to-end job latency quantiles (reservoir-sampled), in milliseconds.");
+    quantile_lines(w, "sfcmul_job_latency_ms", "", m.latency_p50_ms, m.latency_p90_ms, m.latency_p99_ms);
+
+    // Per-engine rows: one family header, then one sample per engine.
+    type EngineVal = fn(&crate::coordinator::EngineMetricsSnapshot) -> u64;
+    let engine_counters: [(&str, &str, EngineVal); 6] = [
+        ("sfcmul_engine_jobs_completed_total", "Jobs finished by this engine.", |e| e.jobs_completed),
+        ("sfcmul_engine_jobs_failed_total", "Jobs failed while assigned to this engine.", |e| e.jobs_failed),
+        ("sfcmul_engine_panics_caught_total", "Engine panics caught by the worker's isolation boundary.", |e| e.panics_caught),
+        ("sfcmul_engine_deadline_misses_total", "Jobs failed by the watchdog for exceeding their deadline.", |e| e.deadline_misses),
+        ("sfcmul_engine_tiles_processed_total", "Work units processed by this engine.", |e| e.tiles_processed),
+        ("sfcmul_engine_batches_total", "Batches executed by this engine.", |e| e.batches),
+    ];
+    for (name, help, get) in engine_counters {
+        family(w, name, "counter", help);
+        for e in &m.per_engine {
+            let _ = writeln!(w, "{name}{{engine=\"{}\"}} {}", escape_label(&e.name), get(e));
+        }
+    }
+    family(w, "sfcmul_engine_breaker_state", "gauge", "Circuit-breaker state: 0 = closed, 1 = half-open, 2 = open.");
+    for e in &m.per_engine {
+        let _ = writeln!(w, "sfcmul_engine_breaker_state{{engine=\"{}\"}} {}", escape_label(&e.name), e.breaker.code());
+    }
+    family(w, "sfcmul_engine_busy_seconds", "gauge", "Cumulative engine compute time.");
+    for e in &m.per_engine {
+        let _ = writeln!(w, "sfcmul_engine_busy_seconds{{engine=\"{}\"}} {:.6}", escape_label(&e.name), e.engine_busy.as_secs_f64());
+    }
+    family(w, "sfcmul_engine_job_latency_ms", "summary", "Per-engine job latency quantiles (reservoir-sampled), in milliseconds.");
+    for e in &m.per_engine {
+        let labels = format!("engine=\"{}\"", escape_label(&e.name));
+        quantile_lines(w, "sfcmul_engine_job_latency_ms", &labels, e.latency_p50_ms, e.latency_p90_ms, e.latency_p99_ms);
+    }
+
+    // Per-(engine, stage) log2 latency histograms (the obs layer).
+    family(
+        w,
+        "sfcmul_stage_latency_seconds",
+        "histogram",
+        "Per-stage latency (queue_wait = enqueue to drain, compute = batch execution, e2e = submit to completion) in log2 buckets.",
+    );
+    for e in &m.per_engine {
+        let engine = escape_label(&e.name);
+        for stage in Stage::ALL {
+            let h = &e.stages[stage as usize];
+            let labels = format!("engine=\"{engine}\",stage=\"{}\"", stage.label());
+            for i in 0..BUCKETS {
+                let le = match bucket_le_us(i) {
+                    Some(us) => format!("{}", us as f64 / 1e6),
+                    None => "+Inf".to_string(),
+                };
+                let _ = writeln!(
+                    w,
+                    "sfcmul_stage_latency_seconds_bucket{{{labels},le=\"{le}\"}} {}",
+                    h.cumulative(i)
+                );
+            }
+            let _ = writeln!(w, "sfcmul_stage_latency_seconds_sum{{{labels}}} {:.9}", h.sum_seconds);
+            let _ = writeln!(w, "sfcmul_stage_latency_seconds_count{{{labels}}} {}", h.count);
+        }
+    }
+
+    // Live approximation-quality telemetry (shadow-recomputed samples).
+    for (name, help) in [
+        ("sfcmul_quality_sampled_units_total", "Work units (conv tiles / GEMM blocks) shadow-recomputed by the quality sampler."),
+        ("sfcmul_quality_sampled_pairs_total", "Operand pairs compared against the exact product by the quality sampler."),
+        ("sfcmul_quality_mismatches_total", "Sampled operand pairs whose approximate product differed from exact."),
+    ] {
+        family(w, name, "counter", help);
+        for e in &m.per_engine {
+            let v = match name {
+                "sfcmul_quality_sampled_units_total" => e.quality.units,
+                "sfcmul_quality_sampled_pairs_total" => e.quality.pairs,
+                _ => e.quality.mismatches,
+            };
+            let _ = writeln!(w, "{name}{{engine=\"{}\"}} {v}", escape_label(&e.name));
+        }
+    }
+    family(w, "sfcmul_quality_mismatch_rate", "gauge", "Live error rate over sampled pairs (0 when nothing sampled).");
+    for e in &m.per_engine {
+        let _ = writeln!(w, "sfcmul_quality_mismatch_rate{{engine=\"{}\"}} {}", escape_label(&e.name), e.quality.mismatch_rate());
+    }
+    family(w, "sfcmul_quality_med", "gauge", "Live mean |error distance| over sampled pairs.");
+    for e in &m.per_engine {
+        let _ = writeln!(w, "sfcmul_quality_med{{engine=\"{}\"}} {}", escape_label(&e.name), e.quality.med());
+    }
+    family(w, "sfcmul_quality_nmed", "gauge", "Live NMED (MED / 2^14) over sampled pairs.");
+    for e in &m.per_engine {
+        let _ = writeln!(w, "sfcmul_quality_nmed{{engine=\"{}\"}} {}", escape_label(&e.name), e.quality.nmed());
+    }
+    family(w, "sfcmul_quality_max_ed", "gauge", "Largest |error distance| observed by the quality sampler.");
+    for e in &m.per_engine {
+        let _ = writeln!(w, "sfcmul_quality_max_ed{{engine=\"{}\"}} {}", escape_label(&e.name), e.quality.max_ed);
+    }
+
+    // Server front-end gauges.
+    family(w, "sfcmul_server_connections_open", "gauge", "Connections currently held by handler threads.");
     let _ = writeln!(w, "sfcmul_server_connections_open {}", s.connections_open);
+    family(w, "sfcmul_server_connections_total", "counter", "Connections accepted since start.");
     let _ = writeln!(w, "sfcmul_server_connections_total {}", s.connections_total);
+    family(w, "sfcmul_server_requests_ok_total", "counter", "Frames answered with OK.");
     let _ = writeln!(w, "sfcmul_server_requests_ok_total {}", s.requests_ok);
+    family(w, "sfcmul_server_rejected_total", "counter", "Frames or connections refused by admission control.");
     let _ = writeln!(w, "sfcmul_server_rejected_total{{reason=\"busy\"}} {}", s.rejected_busy);
     let _ = writeln!(w, "sfcmul_server_rejected_total{{reason=\"quota\"}} {}", s.rejected_quota);
+    family(w, "sfcmul_server_protocol_errors_total", "counter", "Connections dropped for malformed frames.");
     let _ = writeln!(w, "sfcmul_server_protocol_errors_total {}", s.protocol_errors);
+    family(w, "sfcmul_server_http_requests_total", "counter", "HTTP exchanges served on the shared listener.");
     let _ = writeln!(w, "sfcmul_server_http_requests_total {}", s.http_requests);
     out
 }
@@ -123,6 +267,7 @@ pub fn render_metrics(m: &MetricsSnapshot, s: &ServerStatsSnapshot) -> String {
 mod tests {
     use super::*;
     use crate::coordinator::Metrics;
+    use std::collections::HashSet;
     use std::time::Duration;
 
     #[test]
@@ -142,26 +287,58 @@ mod tests {
 
     #[test]
     fn routes_and_statuses() {
-        let r = route("GET", "/healthz", false, String::new);
+        let health = || "{\"status\":\"ok\"}\n".to_string();
+        let r = route("GET", "/healthz", false, String::new, health);
         assert!(r.starts_with("HTTP/1.1 200 OK"));
-        assert!(r.ends_with("ok\n"));
-        assert!(route("GET", "/nope", false, String::new).starts_with("HTTP/1.1 404"));
-        assert!(route("POST", "/metrics", false, String::new).starts_with("HTTP/1.1 405"));
-        let r = route("GET", "/metrics", false, || "x 1\n".to_string());
+        assert!(r.contains("Content-Type: application/json"));
+        assert!(r.ends_with("{\"status\":\"ok\"}\n"));
+        assert!(route("GET", "/nope", false, String::new, health).starts_with("HTTP/1.1 404"));
+        assert!(route("POST", "/metrics", false, String::new, health).starts_with("HTTP/1.1 405"));
+        let r = route("GET", "/metrics", false, || "x 1\n".to_string(), health);
         assert!(r.contains("Content-Length: 4"));
         assert!(r.ends_with("x 1\n"));
     }
 
-    /// An open circuit breaker flips only `/healthz` — to `503 degraded`
-    /// — while `/metrics` keeps answering `200` (operators need the
-    /// counters most exactly when the instance is degraded).
+    /// An open circuit breaker flips only `/healthz` — to `503` with a
+    /// `degraded` status body — while `/metrics` keeps answering `200`
+    /// (operators need the counters most exactly when the instance is
+    /// degraded).
     #[test]
     fn healthz_reports_degraded_when_breaker_open() {
-        let r = route("GET", "/healthz", true, String::new);
+        let health = || "{\"status\":\"degraded\"}\n".to_string();
+        let r = route("GET", "/healthz", true, String::new, health);
         assert!(r.starts_with("HTTP/1.1 503 Service Unavailable"));
-        assert!(r.ends_with("degraded\n"));
-        assert!(route("GET", "/metrics", true, || "x 1\n".into()).starts_with("HTTP/1.1 200"));
-        assert!(route("GET", "/nope", true, String::new).starts_with("HTTP/1.1 404"));
+        assert!(r.contains("degraded"));
+        assert!(route("GET", "/metrics", true, || "x 1\n".into(), health)
+            .starts_with("HTTP/1.1 200"));
+        assert!(route("GET", "/nope", true, String::new, health).starts_with("HTTP/1.1 404"));
+    }
+
+    /// The healthz body is a parseable JSON document carrying uptime,
+    /// queue depth, and the per-engine breaker states.
+    #[test]
+    fn healthz_body_is_structured_json() {
+        let metrics = Metrics::new(vec!["proposed@8".into(), "exact@8".into()]);
+        let m = metrics.snapshot();
+        let body = render_healthz(false, 42, &m);
+        let doc = crate::util::json::Json::parse(body.trim_end()).expect("healthz JSON parses");
+        assert_eq!(doc.get("status").and_then(|v| v.as_str()), Some("ok"));
+        assert_eq!(doc.get("uptime_s").and_then(|v| v.as_i64()), Some(42));
+        assert_eq!(doc.get("queue_depth").and_then(|v| v.as_i64()), Some(0));
+        let engines = doc.get("engines").and_then(|v| v.as_arr()).expect("engines array");
+        assert_eq!(engines.len(), 2);
+        assert_eq!(engines[0].get("name").and_then(|v| v.as_str()), Some("proposed@8"));
+        assert_eq!(engines[0].get("breaker").and_then(|v| v.as_str()), Some("closed"));
+        let degraded = render_healthz(true, 7, &m);
+        assert!(degraded.contains("\"status\":\"degraded\""));
+    }
+
+    #[test]
+    fn label_escaping_covers_the_exposition_specials() {
+        assert_eq!(escape_label("plain@8"), "plain@8");
+        assert_eq!(escape_label("a\"b"), "a\\\"b");
+        assert_eq!(escape_label("a\\b"), "a\\\\b");
+        assert_eq!(escape_label("a\nb"), "a\\nb");
     }
 
     #[test]
@@ -191,10 +368,117 @@ mod tests {
         assert!(text.contains("sfcmul_engine_job_latency_ms{engine=\"exact@8\",quantile=\"0.99\"}"));
         assert!(text.contains("sfcmul_server_rejected_total{reason=\"quota\"} 2"));
         assert!(text.contains("sfcmul_server_connections_open 2"));
+        // The compute-stage histogram saw the recorded batch.
+        assert!(text.contains(
+            "sfcmul_stage_latency_seconds_count{engine=\"proposed@8\",stage=\"compute\"} 1"
+        ));
+        assert!(text.contains(
+            "sfcmul_stage_latency_seconds_bucket{engine=\"proposed@8\",stage=\"compute\",le=\"+Inf\"} 1"
+        ));
+        // Quality gauges exist even before anything is sampled.
+        assert!(text.contains("sfcmul_quality_nmed{engine=\"proposed@8\"} 0"));
+        assert!(text.contains("sfcmul_quality_sampled_pairs_total{engine=\"exact@8\"} 0"));
         // Every non-comment line is `name{...} value` with a parseable value.
         for line in text.lines().filter(|l| !l.starts_with('#')) {
             let (_, val) = line.rsplit_once(' ').expect("name value");
             val.parse::<f64>().unwrap_or_else(|_| panic!("unparseable value in {line:?}"));
+        }
+    }
+
+    /// Exposition-format lint: every sample family carries `# HELP` and
+    /// `# TYPE` headers emitted before its first sample, histogram
+    /// children map back to their declared family, label sections parse
+    /// with balanced quotes under escaping, and counter families end in
+    /// `_total`.
+    #[test]
+    fn exposition_format_is_well_formed() {
+        // An engine name exercising the escaping rules end to end.
+        let metrics = Metrics::new(vec!["odd\"na\\me".into(), "exact@8".into()]);
+        metrics.record_job(0, Duration::from_millis(3));
+        metrics.record_batch(1, 2, Duration::from_millis(1));
+        let m = metrics.snapshot();
+        let s = ServerStatsSnapshot::default();
+        let text = render_metrics(&m, &s);
+        assert!(text.contains("engine=\"odd\\\"na\\\\me\""), "label value escaped");
+
+        let mut helped: HashSet<String> = HashSet::new();
+        let mut typed: HashSet<String> = HashSet::new();
+        let mut types: Vec<(String, String)> = Vec::new();
+        for line in text.lines() {
+            if let Some(rest) = line.strip_prefix("# HELP ") {
+                let name = rest.split(' ').next().unwrap_or("");
+                assert!(!name.is_empty(), "HELP without a name: {line:?}");
+                helped.insert(name.to_string());
+                continue;
+            }
+            if let Some(rest) = line.strip_prefix("# TYPE ") {
+                let mut it = rest.split(' ');
+                let name = it.next().unwrap_or("").to_string();
+                let kind = it.next().unwrap_or("").to_string();
+                assert!(
+                    ["counter", "gauge", "histogram", "summary"].contains(&kind.as_str()),
+                    "bad TYPE in {line:?}"
+                );
+                if kind == "counter" {
+                    assert!(name.ends_with("_total"), "counter {name} must end in _total");
+                }
+                typed.insert(name.clone());
+                types.push((name, kind));
+                continue;
+            }
+            assert!(!line.starts_with('#'), "stray comment line {line:?}");
+            // Sample line: name[{labels}] value.
+            let (series, value) = line.rsplit_once(' ').expect("sample has a value");
+            assert!(value.parse::<f64>().is_ok(), "value in {line:?}");
+            let name = match series.find('{') {
+                Some(br) => {
+                    let labels = &series[br..];
+                    assert!(labels.ends_with('}'), "unterminated labels in {line:?}");
+                    // Balanced quotes outside escapes.
+                    let mut quotes = 0usize;
+                    let mut esc = false;
+                    for c in labels.chars() {
+                        if esc {
+                            esc = false;
+                        } else if c == '\\' {
+                            esc = true;
+                        } else if c == '"' {
+                            quotes += 1;
+                        }
+                    }
+                    assert_eq!(quotes % 2, 0, "unbalanced quotes in {line:?}");
+                    &series[..br]
+                }
+                None => series,
+            };
+            // Histogram children resolve to their declared family name;
+            // `_sum`/`_count` only alias a family when one exists (so
+            // `..._total` names are never mis-stripped).
+            let base = name
+                .strip_suffix("_bucket")
+                .or_else(|| name.strip_suffix("_sum").filter(|b| typed.contains(*b)))
+                .or_else(|| name.strip_suffix("_count").filter(|b| typed.contains(*b)))
+                .unwrap_or(name);
+            assert!(helped.contains(base), "sample {name} missing # HELP {base}");
+            assert!(typed.contains(base), "sample {name} missing # TYPE {base}");
+        }
+        // Histogram families expose _bucket, _sum, and _count children,
+        // including the mandatory +Inf bucket.
+        for (name, kind) in &types {
+            if kind == "histogram" {
+                for suffix in ["_bucket{", "_sum{", "_count{"] {
+                    assert!(
+                        text.contains(&format!("{name}{suffix}")),
+                        "histogram {name} missing {suffix} samples"
+                    );
+                }
+                assert!(
+                    text.contains(&format!(
+                        "{name}_bucket{{engine=\"exact@8\",stage=\"compute\",le=\"+Inf\"}}"
+                    )),
+                    "histogram {name} missing the +Inf bucket"
+                );
+            }
         }
     }
 }

@@ -25,9 +25,15 @@
 //!
 //! Fault tolerance rides the same wire: job failures surface as `ERR
 //! engine-failed` / `ERR deadline` lines that never desync the stream,
-//! `/healthz` turns `503 degraded` while any engine's circuit breaker
-//! is open, and [`client::RetryPolicy`] gives callers deterministic
-//! bounded retry with backoff on exactly the transient codes.
+//! `/healthz` turns `503` (with a JSON body naming the open breakers)
+//! while any engine's circuit breaker is open, and
+//! [`client::RetryPolicy`] gives callers deterministic bounded retry
+//! with backoff on exactly the transient codes.
+//!
+//! Observability rides it too: the `TRACE` frame dumps the
+//! coordinator's span ring as Chrome trace-event JSON
+//! ([`crate::obs::trace`]), and `/metrics` carries the per-stage
+//! latency histograms and live quality gauges next to the counters.
 #![cfg_attr(not(test), deny(clippy::unwrap_used, clippy::expect_used))]
 
 pub mod client;

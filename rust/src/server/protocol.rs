@@ -13,6 +13,7 @@
 //! EDGE w=W h=H [engine=NAME] [op=OP]\n   + W*H bytes   (u8 pixels, row-major)
 //! GEMM m=M k=K n=N [engine=NAME]\n       + M*K + K*N bytes (i8 A then i8 B, row-major)
 //! METRICS\n
+//! TRACE\n
 //! PING\n
 //! QUIT\n
 //! ```
@@ -22,7 +23,7 @@
 //! ```text
 //! OK w=W h=H latency_us=L\n   + W*H bytes            (EDGE)
 //! OK m=M n=N latency_us=L\n   + M*N*4 bytes i32 LE   (GEMM)
-//! OK bytes=B\n                + B bytes of text      (METRICS)
+//! OK bytes=B\n                + B bytes of text      (METRICS / TRACE)
 //! OK pong\n                                          (PING)
 //! OK bye\n                                           (QUIT; server closes)
 //! ERR <code> <message>\n                             (any request)
@@ -59,6 +60,9 @@ pub enum Request {
     Ping,
     Quit,
     Metrics,
+    /// Dump the coordinator's trace ring as Chrome trace-event JSON
+    /// (empty document when tracing is disabled).
+    Trace,
     Edge { w: usize, h: usize, engine: Option<String>, op: Operator },
     Gemm { m: usize, k: usize, n: usize, engine: Option<String> },
 }
@@ -138,6 +142,7 @@ pub fn parse_request(line: &str) -> Result<Request, String> {
         "PING" => Ok(Request::Ping),
         "QUIT" => Ok(Request::Quit),
         "METRICS" => Ok(Request::Metrics),
+        "TRACE" => Ok(Request::Trace),
         "EDGE" => {
             let (w, h) = (dim("w")?, dim("h")?);
             if w == 0 || h == 0 {
@@ -359,6 +364,8 @@ mod tests {
         assert_eq!(parse_request("PING").unwrap(), Request::Ping);
         assert_eq!(parse_request("QUIT").unwrap(), Request::Quit);
         assert_eq!(parse_request("METRICS").unwrap(), Request::Metrics);
+        assert_eq!(parse_request("TRACE").unwrap(), Request::Trace);
+        assert_eq!(Request::Trace.payload_len(), 0);
         let e = parse_request("EDGE w=64 h=48 engine=proposed@8 op=sobel").unwrap();
         assert_eq!(
             e,

@@ -32,7 +32,7 @@ use std::net::{IpAddr, Ipv4Addr, SocketAddr, TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::Arc;
 use std::thread::JoinHandle;
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 use super::http;
 use super::limits::{Admission, AdmissionConfig, Deny};
@@ -117,6 +117,8 @@ struct ServerShared {
     coord: Arc<Coordinator>,
     admission: Admission,
     stats: ServerStats,
+    /// Server start time — the `/healthz` uptime reference.
+    started: Instant,
     /// Per-instance stop flag (NOT the process-global
     /// [`super::shutdown`] flag — parallel tests each run their own
     /// server and must not observe each other's shutdowns).
@@ -165,6 +167,7 @@ impl Server {
                 quota_burst: cfg.quota_burst,
             }),
             stats: ServerStats::default(),
+            started: Instant::now(),
             stop: AtomicBool::new(false),
         });
         let (conn_tx, conn_rx) = bounded::<TcpStream>(cfg.pending_conns);
@@ -342,6 +345,12 @@ fn handle_conn(mut sock: TcpStream, shared: &ServerShared) {
                     &shared.coord.metrics(),
                     &shared.stats.snapshot(),
                 );
+                sock.write_all(format!("OK bytes={}\n", text.len()).as_bytes()).is_ok()
+                    && sock.write_all(text.as_bytes()).is_ok()
+            }
+            Request::Trace => {
+                let text =
+                    shared.coord.tracer().chrome_trace_json(shared.coord.engine_names());
                 sock.write_all(format!("OK bytes={}\n", text.len()).as_bytes()).is_ok()
                     && sock.write_all(text.as_bytes()).is_ok()
             }
@@ -528,9 +537,22 @@ fn serve_http(sock: &mut TcpStream, reader: &mut FrameReader, request_line: &str
         }
     }
     let resp = match http::parse_request_line(request_line) {
-        Some((method, path)) => http::route(method, path, shared.coord.degraded(), || {
-            http::render_metrics(&shared.coord.metrics(), &shared.stats.snapshot())
-        }),
+        Some((method, path)) => {
+            let degraded = shared.coord.degraded();
+            http::route(
+                method,
+                path,
+                degraded,
+                || http::render_metrics(&shared.coord.metrics(), &shared.stats.snapshot()),
+                || {
+                    http::render_healthz(
+                        degraded,
+                        shared.started.elapsed().as_secs(),
+                        &shared.coord.metrics(),
+                    )
+                },
+            )
+        }
         None => http::response(400, "Bad Request", "text/plain", "bad request line\n"),
     };
     let _ = sock.write_all(resp.as_bytes());

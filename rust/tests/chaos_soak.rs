@@ -19,13 +19,15 @@
 
 use sfcmul::coordinator::{
     silence_worker_panics, BreakerState, Coordinator, CoordinatorConfig, FaultEngine, FaultPlan,
-    LutTileEngine, TileEngine,
+    JobError, LutTileEngine, TileEngine,
 };
 use sfcmul::image::{edge_detect, synthetic_scene, Operator};
 use sfcmul::multipliers::{lut::product_table, registry};
 use sfcmul::nn::{gemm_tiled, MatI8};
+use sfcmul::obs::trace::TraceKind;
 use sfcmul::server::{http_get, Client, ClientError, RetryPolicy, Server, ServerConfig};
 use sfcmul::util::prng::Xoshiro256;
+use std::collections::HashMap;
 use std::sync::Arc;
 use std::time::Duration;
 
@@ -190,5 +192,164 @@ fn chaos_soak_faulted_fleet_degrades_cleanly() {
     assert_eq!(stable.jobs_completed, completed as u64, "all completions landed on the fallback");
 
     server.stop();
+    drop(coord);
+}
+
+/// Tracing under panic + deadline chaos. With the breaker disabled so
+/// every submit is accepted, each accepted job's span must close with
+/// exactly one terminal event (`Completed`, `FailedPanic`,
+/// `FailedDeadline`, or `FailedError` — `Rerouted` is an annotation,
+/// not a terminal), and the trace must reconcile exactly with the
+/// metrics books: accepted == completed + failed, event by event.
+#[test]
+fn chaos_trace_every_accepted_job_terminates_exactly_once() {
+    silence_worker_panics();
+    let exact = registry().build_str("exact@8").unwrap();
+    let lut = product_table(exact.as_ref());
+    // Every 3rd tile on `panicky` panics its batch; every tile on
+    // `slow` takes ~25 ms against a 20 ms job deadline, so the watchdog
+    // reaps those jobs while the worker is still stuck in the batch.
+    let panic_plan: FaultPlan = "panic@3".parse().unwrap();
+    let delay_plan: FaultPlan = "delay@1,ms=25".parse().unwrap();
+    let named: Vec<(String, Arc<dyn TileEngine>)> = vec![
+        ("stable".into(), Arc::new(LutTileEngine::from_table("stable", lut.clone())) as _),
+        (
+            "panicky".into(),
+            Arc::new(FaultEngine::new(
+                Arc::new(LutTileEngine::from_table("panicky", lut.clone())),
+                panic_plan,
+            )) as _,
+        ),
+        (
+            "slow".into(),
+            Arc::new(FaultEngine::new(
+                Arc::new(LutTileEngine::from_table("slow", lut)),
+                delay_plan,
+            )) as _,
+        ),
+    ];
+    let coord = Arc::new(Coordinator::start_named_with_fallbacks(
+        named,
+        CoordinatorConfig {
+            workers: 4,
+            queue_capacity: 256,
+            max_batch: 4,
+            deadline: Some(Duration::from_millis(20)),
+            // Breaker off: nothing is denied or rerouted, so accepted
+            // covers every submit below.
+            breaker_threshold: 0,
+            ..Default::default()
+        },
+        vec![],
+    ));
+    coord.tracer().enable();
+
+    let img = synthetic_scene(64, 64, 9);
+    let mut rng = Xoshiro256::seeded(0x7ACE);
+    let a = MatI8::random(24, 16, &mut rng);
+    let bm = MatI8::random(16, 24, &mut rng);
+
+    // Phase 1 — healthy baseline spans on the stable engine, conv and
+    // GEMM both, waited out before the chaos so they complete well
+    // inside the deadline.
+    let mut stable_jobs = Vec::new();
+    for _ in 0..4 {
+        stable_jobs.push(
+            coord.submit_to(img.clone(), Some("stable"), Operator::Laplacian).expect("accepted"),
+        );
+    }
+    let mut gemm_jobs = Vec::new();
+    for _ in 0..2 {
+        gemm_jobs
+            .push(coord.submit_gemm(a.clone(), bm.clone(), Some("stable")).expect("accepted"));
+    }
+    for h in stable_jobs {
+        h.wait_timeout(Duration::from_secs(60)).expect("stable conv completes");
+    }
+    for g in gemm_jobs {
+        g.wait_timeout(Duration::from_secs(60)).expect("stable gemm completes");
+    }
+
+    // Phase 2 — chaos. Per-job outcomes are races we deliberately do
+    // not pin down (a panicky job may get lucky, a slow batch may beat
+    // the watchdog); only the books and the trace must reconcile.
+    let mut chaos_jobs = Vec::new();
+    for _ in 0..4 {
+        chaos_jobs.push(
+            coord.submit_to(img.clone(), Some("panicky"), Operator::Laplacian).expect("accepted"),
+        );
+    }
+    for _ in 0..4 {
+        chaos_jobs.push(
+            coord.submit_to(img.clone(), Some("slow"), Operator::Laplacian).expect("accepted"),
+        );
+    }
+    for h in chaos_jobs {
+        // Ok and server-side Err are both fine; the only failure mode
+        // is a hang (which surfaces as the *local* 60 s timeout).
+        match h.wait_timeout(Duration::from_secs(60)) {
+            Ok(_) | Err(JobError::EngineFailed { .. }) => {}
+            Err(JobError::Deadline { limit_ms }) => {
+                assert_ne!(limit_ms, 60_000, "local wait timed out: the fleet hung");
+            }
+            Err(other) => panic!("unexpected chaos outcome: {other:?}"),
+        }
+    }
+
+    // Terminal trace events are recorded before the reply channel fires
+    // (fail_job / finish_job / watchdog all trace first, then send), so
+    // after every wait() above the ring already holds every terminal.
+    let m = coord.metrics();
+    assert_eq!(
+        m.jobs_accepted,
+        m.jobs_completed + m.jobs_failed,
+        "accepted must equal completed + failed: {m:?}"
+    );
+    assert_eq!(m.jobs_accepted, 14, "4 stable conv + 2 gemm + 8 chaos conv");
+    assert!(m.jobs_completed >= 6, "the stable phase alone completes 6 jobs: {m:?}");
+    assert!(m.jobs_failed >= 1, "chaos must fail at least one job: {m:?}");
+
+    let events = coord.tracer().events();
+    assert_eq!(coord.tracer().dropped(), 0, "14 jobs must fit the default ring");
+    let submitted: Vec<u64> = events
+        .iter()
+        .filter(|e| e.kind == TraceKind::Submit)
+        .map(|e| e.job_id)
+        .collect();
+    assert_eq!(
+        submitted.len() as u64,
+        m.jobs_accepted,
+        "one Submit span-open per accepted job"
+    );
+    let mut terminals: HashMap<u64, Vec<TraceKind>> = HashMap::new();
+    for e in events.iter().filter(|e| e.kind.is_terminal()) {
+        terminals.entry(e.job_id).or_default().push(e.kind);
+    }
+    for id in &submitted {
+        let t = terminals.get(id).map(Vec::as_slice).unwrap_or(&[]);
+        assert_eq!(
+            t.len(),
+            1,
+            "job {id} must close with exactly one terminal event, got {t:?}"
+        );
+    }
+    assert_eq!(terminals.len(), submitted.len(), "no terminal without a matching Submit");
+    let completed_spans =
+        terminals.values().filter(|t| t[0] == TraceKind::Completed).count() as u64;
+    let failed_spans = terminals.values().filter(|t| t[0] != TraceKind::Completed).count() as u64;
+    assert_eq!(completed_spans, m.jobs_completed, "trace vs metrics: completions");
+    assert_eq!(failed_spans, m.jobs_failed, "trace vs metrics: failures");
+    // Both chaos modes actually fired: panic@3 across 4 four-tile jobs
+    // guarantees panicked batches, and a 20 ms deadline under ≥100 ms
+    // batches guarantees watchdog reaps.
+    assert!(
+        terminals.values().any(|t| t[0] == TraceKind::FailedPanic),
+        "panic chaos left no FailedPanic terminal: {terminals:?}"
+    );
+    assert!(
+        terminals.values().any(|t| t[0] == TraceKind::FailedDeadline),
+        "deadline chaos left no FailedDeadline terminal: {terminals:?}"
+    );
+
     drop(coord);
 }

@@ -1,0 +1,161 @@
+//! End-to-end observability: the full serving stack (coordinator +
+//! socket server) with tracing enabled and the quality sampler at
+//! n=1 must expose, over the wire:
+//!
+//! * a `TRACE` frame that parses as schema-valid Chrome trace-event
+//!   JSON with balanced async spans (one begin/end pair per job);
+//! * `/metrics` per-stage latency histograms with `# HELP`/`# TYPE`
+//!   lines, cumulative buckets, and live quality gauges fed by the
+//!   shadow sampler;
+//! * `/healthz` as structured JSON carrying uptime, queue depth, and
+//!   per-engine breaker states.
+//!
+//! A second test pins the default: with the tracer left disabled, the
+//! `TRACE` frame is still well-formed but carries metadata only.
+
+use sfcmul::coordinator::{Coordinator, CoordinatorConfig, LutTileEngine, TileEngine};
+use sfcmul::image::{edge_detect, synthetic_scene, Operator};
+use sfcmul::multipliers::{lut::product_table, registry};
+use sfcmul::nn::{gemm_tiled, MatI8};
+use sfcmul::obs::trace::validate_chrome_trace;
+use sfcmul::server::{http_get, Client, Server, ServerConfig};
+use sfcmul::util::json::Json;
+use sfcmul::util::prng::Xoshiro256;
+use std::sync::Arc;
+
+const CONV_JOBS: usize = 3;
+
+/// Pull the value of the unique sample line carrying `prefix` out of a
+/// Prometheus exposition.
+fn sample_value(metrics: &str, prefix: &str) -> f64 {
+    let line = metrics
+        .lines()
+        .find(|l| l.starts_with(prefix))
+        .unwrap_or_else(|| panic!("no sample line starts with {prefix:?}:\n{metrics}"));
+    let val = line.rsplit(' ').next().unwrap_or("");
+    val.parse().unwrap_or_else(|_| panic!("unparseable sample value in {line:?}"))
+}
+
+#[test]
+fn serving_stack_exposes_trace_histograms_quality_and_health() {
+    let approx_model = registry().build_str("proposed@8").unwrap();
+    let exact_model = registry().build_str("exact@8").unwrap();
+    let exact_lut = product_table(exact_model.as_ref());
+    let named: Vec<(String, Arc<dyn TileEngine>)> = vec![
+        ("approx".into(), Arc::new(LutTileEngine::new(approx_model.as_ref())) as _),
+        ("exact".into(), Arc::new(LutTileEngine::from_table("exact", exact_lut.clone())) as _),
+    ];
+    let coord = Arc::new(Coordinator::start_named_with_fallbacks(
+        named,
+        CoordinatorConfig { quality_sample_n: 1, ..Default::default() },
+        vec![],
+    ));
+    coord.tracer().enable();
+    let server = Server::start(coord.clone(), ServerConfig::default()).expect("server");
+    let addr = server.local_addr();
+
+    // Serve real work over the socket: conv on the approximate engine,
+    // GEMM on the exact one.
+    let img = synthetic_scene(48, 48, 5);
+    let want_edges = edge_detect(&img, approx_model.as_ref());
+    let mut rng = Xoshiro256::seeded(0x0B5E);
+    let a = MatI8::random(24, 16, &mut rng);
+    let bm = MatI8::random(16, 24, &mut rng);
+    let want_gemm = gemm_tiled(&a, &bm, &exact_lut);
+    let mut client = Client::connect(addr).expect("connect");
+    for j in 0..CONV_JOBS {
+        let r = client.edge(&img, Some("approx"), Operator::Laplacian).expect("edge reply");
+        assert_eq!(r.edges, want_edges, "conv job {j}");
+    }
+    let g = client.gemm(&a, &bm, Some("exact")).expect("gemm reply");
+    assert_eq!(g.out, want_gemm);
+
+    // TRACE frame: schema-valid Chrome trace, spans balanced — every
+    // job above resolved before its reply frame was written, so each
+    // async span has both its begin and its end.
+    let trace = client.trace_text().expect("TRACE frame");
+    let s = validate_chrome_trace(&trace).expect("schema-valid Chrome trace");
+    assert_eq!(s.begins, CONV_JOBS + 1, "one span begin per accepted job");
+    assert_eq!(s.ends, s.begins, "all spans closed");
+    assert!(s.instants > 0, "queued/dispatched/batch instants present");
+    assert!(s.metadata >= 3, "process + one thread lane per engine");
+    client.quit().expect("clean goodbye");
+
+    // /metrics: histogram exposition with HELP/TYPE, cumulative
+    // buckets, and live quality gauges for the sampled engine.
+    let (code, metrics) = http_get(addr, "/metrics").expect("metrics");
+    assert_eq!(code, 200);
+    assert!(metrics.contains("# TYPE sfcmul_stage_latency_seconds histogram"), "{metrics}");
+    assert!(metrics.contains("# HELP sfcmul_stage_latency_seconds"), "{metrics}");
+    // Observation granularity differs by stage: e2e is per job,
+    // queue_wait per work unit, compute per batch.
+    for stage in ["queue_wait", "compute", "e2e"] {
+        let count = sample_value(
+            &metrics,
+            &format!("sfcmul_stage_latency_seconds_count{{engine=\"approx\",stage=\"{stage}\"}}"),
+        );
+        assert!(count > 0.0, "{stage} histogram saw no observations:\n{metrics}");
+        let inf = sample_value(
+            &metrics,
+            &format!(
+                "sfcmul_stage_latency_seconds_bucket{{engine=\"approx\",stage=\"{stage}\",le=\"+Inf\"}}"
+            ),
+        );
+        assert_eq!(inf, count, "+Inf bucket must equal the count for {stage}");
+    }
+    let e2e = sample_value(
+        &metrics,
+        "sfcmul_stage_latency_seconds_count{engine=\"approx\",stage=\"e2e\"}",
+    );
+    assert_eq!(e2e, CONV_JOBS as f64, "one e2e observation per completed conv job");
+    assert!(metrics.contains("# TYPE sfcmul_quality_nmed gauge"), "{metrics}");
+    let pairs = sample_value(&metrics, "sfcmul_quality_sampled_pairs_total{engine=\"approx\"}");
+    assert!(pairs > 0.0, "n=1 sampler must have shadow-recomputed the approx conv tiles");
+    let nmed = sample_value(&metrics, "sfcmul_quality_nmed{engine=\"approx\"}");
+    assert!(nmed > 0.0, "proposed@8 is approximate: live NMED must be nonzero");
+    let exact_mismatches =
+        sample_value(&metrics, "sfcmul_quality_mismatches_total{engine=\"exact\"}");
+    assert_eq!(exact_mismatches, 0.0, "the exact engine never mismatches its shadow");
+
+    // /healthz: structured JSON with the 200 contract intact.
+    let (code, body) = http_get(addr, "/healthz").expect("healthz");
+    assert_eq!(code, 200);
+    let doc = Json::parse(&body).expect("healthz body is JSON");
+    assert_eq!(doc.get("status").and_then(Json::as_str), Some("ok"));
+    assert!(doc.get("uptime_s").and_then(Json::as_i64).is_some(), "{body}");
+    assert_eq!(doc.get("queue_depth").and_then(Json::as_i64), Some(0), "{body}");
+    let engines = doc.get("engines").and_then(Json::as_arr).expect("engines array");
+    assert_eq!(engines.len(), 2, "{body}");
+    for e in engines {
+        assert!(e.get("name").and_then(Json::as_str).is_some(), "{body}");
+        assert_eq!(e.get("breaker").and_then(Json::as_str), Some("closed"), "{body}");
+    }
+
+    server.stop();
+    drop(coord);
+}
+
+#[test]
+fn trace_frame_is_metadata_only_while_tracer_is_disabled() {
+    let exact_model = registry().build_str("exact@8").unwrap();
+    let named: Vec<(String, Arc<dyn TileEngine>)> =
+        vec![("exact".into(), Arc::new(LutTileEngine::new(exact_model.as_ref())) as _)];
+    let coord = Arc::new(Coordinator::start_named_with_fallbacks(
+        named,
+        CoordinatorConfig::default(),
+        vec![],
+    ));
+    let server = Server::start(coord.clone(), ServerConfig::default()).expect("server");
+    let addr = server.local_addr();
+    let img = synthetic_scene(32, 32, 3);
+    let mut client = Client::connect(addr).expect("connect");
+    client.edge(&img, Some("exact"), Operator::Laplacian).expect("edge reply");
+    let trace = client.trace_text().expect("TRACE frame");
+    client.quit().expect("clean goodbye");
+    let s = validate_chrome_trace(&trace).expect("still schema-valid");
+    assert_eq!(s.events, 0, "tracing is off by default; the ring stays empty");
+    assert!(s.metadata >= 2, "metadata lanes are always emitted");
+
+    server.stop();
+    drop(coord);
+}
